@@ -1,0 +1,138 @@
+//! Bench: hot-path micro-benchmarks (EXPERIMENTS.md §Perf).
+//!
+//! The per-cycle costs of a live deployment: scheduler tick (policy
+//! allocation over N resource views), dispatcher reconciliation, event
+//! queue throughput, Clustor frame encode/decode, and the PJRT chamber
+//! executions the job-wrapper performs (batch-1 and full-batch).
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench dispatch_hotpath
+//! ```
+
+use nimrod_g::dispatcher::plan_actions;
+use nimrod_g::engine::Experiment;
+use nimrod_g::plan::{expand, Plan};
+use nimrod_g::protocol::{read_frame, write_frame, Message};
+use nimrod_g::runtime::ChamberRuntime;
+use nimrod_g::scheduler::{by_name, ResourceView, SchedCtx};
+use nimrod_g::simtime::EventQueue;
+use nimrod_g::types::{ResourceId, HOUR};
+use nimrod_g::util::bench::Bench;
+use nimrod_g::util::rng::Rng;
+
+fn views(n: usize, rng: &mut Rng) -> Vec<ResourceView> {
+    (0..n)
+        .map(|i| ResourceView {
+            id: ResourceId(i as u32),
+            slots: rng.range(1, 16) as u32,
+            planning_speed: rng.uniform(0.4, 2.0),
+            rate: rng.uniform(0.2, 3.0),
+            in_flight: 0,
+            measured_jphps: None,
+            batch_queue: rng.chance(0.4),
+        })
+        .collect()
+}
+
+fn experiment(jobs: usize) -> Experiment {
+    let src = format!(
+        "parameter i integer range from 1 to {jobs}\ntask main\nexecute run $i\nendtask"
+    );
+    let specs = expand(&Plan::parse(&src).unwrap(), 0).unwrap();
+    Experiment::new(specs, 15.0 * HOUR, None, "u", 3)
+}
+
+fn main() {
+    let mut b = Bench::new("dispatch hot path");
+
+    // Scheduler tick at GUSTO and 8x-GUSTO sizes.
+    for n in [70, 280, 560] {
+        let mut rng = Rng::new(1);
+        let vs = views(n, &mut rng);
+        let mut policy = by_name("cost").unwrap();
+        b.iter(&format!("cost-opt allocate ({n} resources)"), || {
+            let mut ctx = SchedCtx {
+                now: 0.0,
+                deadline: 15.0 * HOUR,
+                budget_headroom: Some(1e9),
+                remaining_jobs: 165,
+                job_work_ref_h: 2.0,
+                resources: &vs,
+                rng: &mut rng,
+            };
+            policy.allocate(&mut ctx)
+        });
+    }
+
+    // Dispatcher reconciliation against a 165-job table.
+    {
+        let exp = experiment(165);
+        let mut rng = Rng::new(2);
+        let vs = views(70, &mut rng);
+        let mut policy = by_name("cost").unwrap();
+        let alloc = {
+            let mut ctx = SchedCtx {
+                now: 0.0,
+                deadline: 15.0 * HOUR,
+                budget_headroom: None,
+                remaining_jobs: 165,
+                job_work_ref_h: 2.0,
+                resources: &vs,
+                rng: &mut rng,
+            };
+            policy.allocate(&mut ctx)
+        };
+        b.iter("plan_actions (165 jobs, 70 resources)", || {
+            plan_actions(&alloc, &exp)
+        });
+    }
+
+    // Event queue throughput.
+    b.iter("event queue push+pop x1000", || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u32 {
+            q.schedule_at((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc += e as u64;
+        }
+        acc
+    });
+
+    // Protocol framing.
+    b.iter("protocol frame encode+decode", || {
+        let msg = Message::Status {
+            jobs_total: 165,
+            jobs_completed: 42,
+            jobs_failed: 1,
+            jobs_running: 8,
+            spent: 1234.5,
+            busy_workers: 8,
+            elapsed_s: 77.7,
+        };
+        let mut buf = Vec::with_capacity(256);
+        write_frame(&mut buf, &msg).unwrap();
+        read_frame(&mut &buf[..]).unwrap()
+    });
+
+    // PJRT execution (the job-wrapper's compute call).
+    let dir = ChamberRuntime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = ChamberRuntime::load(&dir).expect("artifacts");
+        let batch = rt.batch_size();
+        b.iter("pjrt chamber execute (batch=1)", || {
+            rt.run(&[[400.0, 1.0, 10.0]]).unwrap()
+        });
+        let params: Vec<[f32; 3]> = (0..batch)
+            .map(|i| [200.0 + i as f32 * 40.0, 1.0, 10.0])
+            .collect();
+        b.iter(&format!("pjrt chamber execute (batch={batch})"), || {
+            rt.run(&params).unwrap()
+        });
+    } else {
+        eprintln!("(skipping PJRT cases: run `make artifacts` first)");
+    }
+
+    b.report();
+}

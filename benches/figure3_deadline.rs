@@ -1,0 +1,81 @@
+//! Bench: paper **Figure 3** — "GUSTO resources usage for 10, 15, and 20
+//! hours of deadline".
+//!
+//! Regenerates the figure's series: number of processors in use over time
+//! for the 165-job ionization-chamber calibration under the
+//! cost-optimizing DBC scheduler on the ~70-machine GUSTO-like testbed.
+//! The paper's qualitative claims to check: tighter deadline ⇒ more
+//! (and costlier) processors; every deadline met; the resource set adapts
+//! over the run. Also wall-times the simulation itself.
+//!
+//! ```bash
+//! cargo bench --bench figure3_deadline
+//! ```
+
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+use nimrod_g::util::bench::Bench;
+
+fn run(deadline_h: f64, seed: u64) -> nimrod_g::metrics::Report {
+    let cfg = ExperimentConfig {
+        deadline: deadline_h * HOUR,
+        policy: "cost".to_string(),
+        seed,
+        ..Default::default()
+    };
+    GridSimulation::gusto_ionization(cfg).run()
+}
+
+fn main() {
+    println!("== Figure 3: processors in use vs time, by deadline ==\n");
+    let seed = 0xF16_3;
+    let mut reports = Vec::new();
+    for deadline_h in [10.0, 15.0, 20.0] {
+        let r = run(deadline_h, seed);
+        println!("deadline {deadline_h:>4.0} h: {}", r.summary());
+        reports.push((deadline_h, r));
+    }
+
+    // The figure's series: hourly processors-in-use per deadline.
+    println!("\nhour, busy@10h, busy@15h, busy@20h");
+    let horizon = reports
+        .iter()
+        .map(|(_, r)| r.makespan_s)
+        .fold(0.0f64, f64::max);
+    let mut t = 0.0;
+    while t <= horizon + 1.0 {
+        print!("{:>4.1}", t / 3600.0);
+        for (_, r) in &reports {
+            print!(", {:>6}", r.busy_cpus.at(t));
+        }
+        println!();
+        t += HOUR;
+    }
+
+    // Qualitative checks the paper's text makes.
+    let avg: Vec<f64> = reports
+        .iter()
+        .map(|(_, r)| r.busy_cpus.average(r.makespan_s.max(1.0)))
+        .collect();
+    println!(
+        "\navg busy cpus: 10h={:.1} 15h={:.1} 20h={:.1}  (paper: tighter ⇒ more)",
+        avg[0], avg[1], avg[2]
+    );
+    let costs: Vec<f64> = reports.iter().map(|(_, r)| r.total_cost).collect();
+    println!(
+        "total cost:    10h={:.0} 15h={:.0} 20h={:.0}  (paper: tighter ⇒ costlier)",
+        costs[0], costs[1], costs[2]
+    );
+    let met = reports.iter().all(|(_, r)| r.deadline_met);
+    println!("all deadlines met: {met}");
+
+    // Wall-clock cost of regenerating the figure (simulator throughput).
+    let mut b = Bench::new("figure3 simulation wall time").fast();
+    for deadline_h in [10.0, 15.0, 20.0] {
+        b.iter(&format!("simulate 165 jobs @ {deadline_h}h deadline"), || {
+            run(deadline_h, seed)
+        });
+    }
+    b.report();
+}

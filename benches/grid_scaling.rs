@@ -1,0 +1,70 @@
+//! Bench: architecture scaling (paper §2/Figure 1-2).
+//!
+//! The component architecture must keep up as the grid grows: this bench
+//! scales the GUSTO-like testbed from ~35 to ~560 machines and measures
+//! (a) end-to-end experiment wall time, (b) simulator event throughput,
+//! and (c) MDS discovery + scheduler tick latency at each size — the
+//! pieces that run on every scheduling cycle in a live deployment.
+//!
+//! ```bash
+//! cargo bench --bench grid_scaling
+//! ```
+
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::grid::dynamics::ResourceDyn;
+use nimrod_g::grid::mds::Mds;
+use nimrod_g::grid::Testbed;
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+use nimrod_g::util::bench::Bench;
+use nimrod_g::util::rng::Rng;
+use nimrod_g::workload::ionization_jobs;
+
+fn main() {
+    println!("== grid scaling: testbed size sweep ==\n");
+    println!(
+        "{:<10} {:>10} {:>8} {:>12} {:>14} {:>12}",
+        "scale", "machines", "cpus", "makespan(h)", "sim events", "wall(ms)"
+    );
+    for scale in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        let cfg = ExperimentConfig {
+            deadline: 15.0 * HOUR,
+            policy: "cost".to_string(),
+            seed: 0x5CA1E,
+            ..Default::default()
+        };
+        let tb = Testbed::gusto(3, scale);
+        let (machines, cpus) = (tb.resources.len(), tb.total_cpus());
+        let specs = ionization_jobs(cfg.seed);
+        let t0 = std::time::Instant::now();
+        let r = GridSimulation::new(tb, specs, cfg).run();
+        let wall = t0.elapsed();
+        println!(
+            "{scale:<10} {machines:>10} {cpus:>8} {:>12.2} {:>14} {:>12.1}",
+            r.makespan_s / HOUR,
+            r.events,
+            wall.as_secs_f64() * 1e3
+        );
+    }
+
+    // Per-cycle costs: MDS refresh + discovery at each testbed size.
+    let mut b = Bench::new("per-cycle component costs");
+    for scale in [1.0, 4.0, 8.0] {
+        let tb = Testbed::gusto(3, scale);
+        let mut rng = Rng::new(1);
+        let dyns: Vec<ResourceDyn> = tb
+            .resources
+            .iter()
+            .map(|s| ResourceDyn::new(s, &mut rng))
+            .collect();
+        let mut mds = Mds::new(&tb, &dyns);
+        let n = tb.resources.len();
+        b.iter(&format!("mds refresh ({n} machines)"), || {
+            mds.refresh(&tb, &dyns, 0.0)
+        });
+        b.iter(&format!("discovery ({n} machines)"), || {
+            mds.discover(&tb, "rajkumar").count()
+        });
+    }
+    b.report();
+}

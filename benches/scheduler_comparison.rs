@@ -1,0 +1,74 @@
+//! Bench: Nimrod/G DBC schedulers vs the related-work baselines (paper §6).
+//!
+//! The paper's qualitative comparison, regenerated quantitatively: AppLeS
+//! (perf-only), REXEC (fixed-rate cap), round-robin and random do not use
+//! the computational economy, so at an equal deadline the economy-aware
+//! cost-optimizer should finish within deadline at distinctly lower cost
+//! than perf-only/round-robin/random, while time-opt should be fastest.
+//!
+//! ```bash
+//! cargo bench --bench scheduler_comparison
+//! ```
+
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::scheduler::ALL_POLICIES;
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+
+fn main() {
+    println!("== scheduler comparison: 165-job calibration, 15 h deadline ==\n");
+    println!(
+        "{:<20} {:>12} {:>12} {:>9} {:>10} {:>6}",
+        "policy", "makespan(h)", "cost(G$)", "peak-cpu", "resources", "met"
+    );
+    let mut results = Vec::new();
+    for policy in ALL_POLICIES {
+        let cfg = ExperimentConfig {
+            deadline: 15.0 * HOUR,
+            policy: policy.to_string(),
+            seed: 0x5C0ED,
+            ..Default::default()
+        };
+        let r = GridSimulation::gusto_ionization(cfg).run();
+        println!(
+            "{policy:<20} {:>12.2} {:>12.0} {:>9} {:>10} {:>6}",
+            r.makespan_s / HOUR,
+            r.total_cost,
+            r.busy_cpus.peak(),
+            r.resources_used,
+            r.deadline_met
+        );
+        results.push((policy, r));
+    }
+
+    let cost_of = |name: &str| {
+        results
+            .iter()
+            .find(|(p, _)| *p == name)
+            .map(|(_, r)| r.total_cost)
+            .unwrap()
+    };
+    println!("\nshape checks (paper §3/§6):");
+    let cost = cost_of("cost");
+    for baseline in ["perf", "round-robin", "random", "deadline-only"] {
+        let b = cost_of(baseline);
+        println!(
+            "  cost-opt {:.0} vs {baseline} {:.0}  -> {:.2}x cheaper: {}",
+            cost,
+            b,
+            b / cost,
+            b > cost
+        );
+    }
+    let makespan_of = |name: &str| {
+        results
+            .iter()
+            .find(|(p, _)| *p == name)
+            .map(|(_, r)| r.makespan_s)
+            .unwrap()
+    };
+    println!(
+        "  time-opt fastest of the DBC family: {}",
+        makespan_of("time") <= makespan_of("cost")
+    );
+}

@@ -1,0 +1,65 @@
+//! Quickstart: parse a plan, expand it, and run it on the simulated GUSTO
+//! testbed with the cost-optimizing deadline/budget scheduler.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::grid::Testbed;
+use nimrod_g::plan::{expand, Plan};
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+
+const PLAN: &str = r#"
+# A small parametric study: 3 voltages x 2 pressures x 2 energies = 12 jobs.
+parameter voltage label "electrode voltage (V)" float range from 200 to 800 step 300
+parameter pressure label "gas pressure (atm)" float select anyof 0.8 1.5
+parameter energy label "beam energy (MeV)" float select anyof 5.0 15.0
+constant chamber text "icc-mk2"
+
+task main
+    copy chamber.cfg node:chamber.cfg
+    execute ./icc_sim -v $voltage -p $pressure -e $energy -c $chamber -o results.dat
+    copy node:results.dat results.$jobname.dat
+endtask
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parse the declarative plan and expand the parameter space.
+    let plan = Plan::parse(PLAN)?;
+    println!(
+        "plan: {} parameters, {} constants, {} task ops -> {} jobs",
+        plan.parameters.len(),
+        plan.constants.len(),
+        plan.task.len(),
+        plan.job_count()
+    );
+    let cfg = ExperimentConfig {
+        deadline: 12.0 * HOUR,
+        budget: Some(200_000.0),
+        policy: "cost".to_string(),
+        seed: 2026,
+        ..Default::default()
+    };
+    let jobs = expand(&plan, cfg.seed)?;
+    for job in jobs.iter().take(3) {
+        println!("  {}: {:?}", job.id, job.bindings);
+    }
+    println!("  ...");
+
+    // 2. Build a small grid (half-scale GUSTO) and run the experiment.
+    let tb = Testbed::gusto(11, 0.5);
+    println!(
+        "\ntestbed: {} machines / {} cpus across {} sites",
+        tb.resources.len(),
+        tb.total_cpus(),
+        tb.sites.len()
+    );
+    let report = GridSimulation::new(tb, jobs, cfg).run();
+
+    // 3. Report.
+    println!("\n{}", report.summary());
+    println!("\nper-resource usage:\n{}", report.per_resource_csv());
+    Ok(())
+}

@@ -1,0 +1,148 @@
+"""AOT lowering: jax model → HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and its README.
+
+GOTCHA (discovered the hard way): the HLO text printer *elides large
+constants* — a baked-in 64x64 DST matrix prints as ``constant({...})``,
+which the XLA 0.5.1 text parser silently reads back as zeros. So the DST
+matrix and eigenvalue grid are **arguments**, not closure constants: they
+are exported as raw little-endian f32 files next to the HLO and fed as
+inputs by the Rust runtime on every call.
+
+Artifacts written (``make artifacts``):
+  * ``chamber.hlo.txt``     — ``chamber_response`` at the AOT batch size.
+  * ``chamber_b1.hlo.txt``  — batch-1 variant for latency-sensitive paths.
+  * ``dst_matrix.f32``      — [N,N] DST-I basis, row-major f32.
+  * ``laplacian.f32``       — [N,N] eigenvalue grid, row-major f32.
+  * ``manifest.json``       — shapes/dtypes/entry metadata + golden probe
+                              outputs the Rust test suite checks numerics
+                              against.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax.jit(...).lower(...) result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_fn(params, s, lam2d):
+    """The AOT entry point: everything is an argument (no big constants)."""
+    return model.chamber_response(params, s, lam2d, interpret=True)
+
+
+def lower_chamber(batch: int) -> str:
+    """Lower chamber_response at a fixed batch size."""
+    specs = (
+        jax.ShapeDtypeStruct((batch, model.N_PARAMS), jnp.float32),
+        jax.ShapeDtypeStruct((model.GRID_N, model.GRID_N), jnp.float32),
+        jax.ShapeDtypeStruct((model.GRID_N, model.GRID_N), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(entry_fn).lower(*specs))
+
+
+def golden_probe():
+    """Fixed probe batch + expected outputs (Rust numeric parity test)."""
+    probe = np.array(
+        [
+            [150.0, 1.0, 10.0],
+            [900.0, 1.0, 10.0],
+            [400.0, 0.7, 4.0],
+        ],
+        dtype=np.float32,
+    )
+    s = jnp.asarray(model.dst_matrix(model.GRID_N))
+    lam = jnp.asarray(model.laplacian_eigenvalues(model.GRID_N))
+    response, dose = entry_fn(jnp.asarray(probe), s, lam)
+    return probe, np.asarray(response), np.asarray(dose)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir", default="../artifacts", help="artifact output directory"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    n = model.GRID_N
+    s = model.dst_matrix(n)
+    lam = model.laplacian_eigenvalues(n)
+    for fname, arr in (("dst_matrix.f32", s), ("laplacian.f32", lam)):
+        path = os.path.join(args.out_dir, fname)
+        arr.astype("<f4").tofile(path)
+        print(f"wrote {path} ({arr.size * 4} bytes)")
+
+    artifacts = {}
+    for name, batch in (
+        ("chamber.hlo.txt", model.AOT_BATCH),
+        ("chamber_b1.hlo.txt", 1),
+    ):
+        text = lower_chamber(batch)
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: HLO printer elided a large constant — it would "
+                "parse as zeros in the Rust loader"
+            )
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "entry": "chamber_response",
+            "batch": batch,
+            "n_params": model.N_PARAMS,
+            "grid_n": n,
+            "inputs": [
+                {"name": "params", "shape": [batch, model.N_PARAMS], "dtype": "f32"},
+                {"name": "dst_matrix", "shape": [n, n], "dtype": "f32", "file": "dst_matrix.f32"},
+                {"name": "laplacian", "shape": [n, n], "dtype": "f32", "file": "laplacian.f32"},
+            ],
+            "outputs": [
+                {"name": "response", "shape": [batch], "dtype": "f32"},
+                {"name": "dose", "shape": [batch], "dtype": "f32"},
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    probe, response, dose = golden_probe()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(
+            {
+                "format": "hlo-text",
+                "grid_n": n,
+                "artifacts": artifacts,
+                "golden": {
+                    "params": probe.tolist(),
+                    "response": response.tolist(),
+                    "dose": dose.tolist(),
+                },
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: batched 2-D sine transform (the model's hot spot).
+
+The chamber model's dominant cost is the spectral Poisson solve, which is two
+batched dense transform pairs ``S @ X_b @ S`` (DST-I is symmetric, so the same
+matrix appears on both sides). Each transform is a chain of two ``N x N``
+matmuls per batch element — exactly MXU-shaped work on TPU.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid over the batch dimension; each program owns one ``[N, N]`` field;
+  * BlockSpec pins ``x`` blocks to ``(1, N, N)`` and broadcasts ``s`` —
+    with N=64/f32 a program touches 3·64·64·4 B ≈ 48 KiB of VMEM, far below
+    the ~16 MiB budget, so the schedule is trivially resident;
+  * the two ``jnp.dot``s inside the kernel hit the MXU systolic array with
+    ``preferred_element_type=float32`` accumulation.
+
+On this CPU-only image the kernel must run with ``interpret=True`` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute); the
+structure above is still what a TPU build would compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dst2d_kernel(x_ref, s_ref, o_ref):
+    """One batch element: ``o = S @ x @ S`` (S symmetric)."""
+    s = s_ref[...]
+    x = x_ref[0, :, :]
+    # Two back-to-back MXU matmuls with f32 accumulation.
+    tmp = jnp.dot(s, x, preferred_element_type=jnp.float32)
+    o_ref[0, :, :] = jnp.dot(tmp, s, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dst2d_batched(x: jnp.ndarray, s: jnp.ndarray, interpret: bool = True):
+    """Batched symmetric 2-D transform ``S @ X_b @ S`` as a Pallas call.
+
+    Args:
+      x: ``[B, N, N]`` batch of fields (any float dtype; accumulation in f32).
+      s: ``[N, N]`` symmetric transform matrix.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``[B, N, N]`` transformed batch, dtype f32.
+    """
+    b, n, _ = x.shape
+    return pl.pallas_call(
+        _dst2d_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+        interpret=interpret,
+    )(x, s)
+
+
+def _spectral_solve_kernel(fh_ref, lam_ref, o_ref):
+    """One batch element: divide coefficients by Laplacian eigenvalues."""
+    o_ref[0, :, :] = fh_ref[0, :, :] / lam_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spectral_solve_batched(
+    f_hat: jnp.ndarray, lam2d: jnp.ndarray, interpret: bool = True
+):
+    """Elementwise spectral Poisson solve ``f_hat / lam2d`` as a Pallas call.
+
+    Kept as a separate tiny kernel (VPU-shaped, not MXU) so the transform and
+    the solve can be fused differently by the scheduler on TPU.
+    """
+    b, n, _ = f_hat.shape
+    return pl.pallas_call(
+        _spectral_solve_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+        interpret=interpret,
+    )(f_hat, lam2d)

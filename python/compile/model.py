@@ -1,0 +1,153 @@
+"""L2: ionization-chamber calibration model (the Nimrod/G job payload).
+
+The paper's Figure-3 experiment farms out an ionization-chamber calibration
+code across design parameters. That code is proprietary, so we substitute a
+physics-flavoured surrogate with the same I/O shape: per job a small set of
+design parameters in, a scalar chamber response out (see DESIGN.md §2).
+
+Per batch element the model computes, on an ``N x N`` chamber cross-section
+with homogeneous Dirichlet walls:
+
+  1. an ionization **source term** ``f`` — depth-wise Bragg-like deposition
+     profile (peak position set by beam energy ``E``) times a Gaussian
+     lateral beam profile, scaled by gas pressure ``P``;
+  2. the **electrode potential** ``phi`` by a spectral Poisson solve
+     (DST-I transform → divide by Laplacian eigenvalues → inverse
+     transform), scaled by the electrode voltage ``V``;
+  3. the **collection efficiency** ``eta = |grad phi| / (|grad phi| + k P)``
+     — a saturation/recombination model: stronger fields collect more of the
+     liberated charge, higher pressure recombines more;
+  4. the **chamber response** ``sum(f * eta)`` and total **dose** ``sum(f)``.
+
+The DST transforms (step 2) dominate the FLOPs and are the L1 Pallas kernel
+(`kernels.dst2d`); everything else is plain jnp that XLA fuses around it.
+
+Parameters (``params[B, 3]`` columns):
+  * ``V``  electrode voltage, volts       (typical range 100 .. 1000)
+  * ``P``  gas pressure, atm              (typical range 0.5 .. 2.0)
+  * ``E``  beam energy, MeV               (typical range 1 .. 20)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import dst2d
+
+# Chamber cross-section resolution. 64 keeps one (N, N) f32 block at 16 KiB —
+# MXU-tile aligned (64 = 8 sublanes x 8) and trivially VMEM resident.
+GRID_N = 64
+# AOT batch size: the Rust job-wrapper executes jobs in batches of up to
+# AOT_BATCH, padding the tail (see rust/src/runtime/).
+AOT_BATCH = 16
+# Number of per-job design parameters (V, P, E).
+N_PARAMS = 3
+# Recombination constant in the collection-efficiency model.
+RECOMB_K = 8.0
+
+
+def dst_matrix(n: int) -> np.ndarray:
+    """DST-I basis matrix ``S[k, i] = sin(pi (k+1)(i+1) / (n+1))``.
+
+    Symmetric, and ``S @ S = (n+1)/2 * I``, so the inverse transform is the
+    same matrix scaled by ``2/(n+1)``.
+    """
+    idx = np.arange(1, n + 1)
+    return np.sin(np.pi * np.outer(idx, idx) / (n + 1)).astype(np.float32)
+
+
+def laplacian_eigenvalues(n: int) -> np.ndarray:
+    """2-D eigenvalue grid ``lam_i + lam_j`` of the Dirichlet Laplacian.
+
+    ``lam_k = 2 - 2 cos(pi (k+1) / (n+1))``, strictly positive, so the
+    spectral solve never divides by zero.
+    """
+    k = np.arange(1, n + 1)
+    lam = 2.0 - 2.0 * np.cos(np.pi * k / (n + 1))
+    return (lam[:, None] + lam[None, :]).astype(np.float32)
+
+
+def source_term(params: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Ionization source ``f[B, N, N]`` from (V, P, E) parameters.
+
+    Depth axis 0 carries a Bragg-like profile peaking at the beam range
+    (deeper for higher energy); axis 1 carries the lateral Gaussian beam
+    profile. Pressure scales deposition density linearly.
+    """
+    p = params[:, 1][:, None]
+    e = params[:, 2][:, None]
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)[None, :]
+    # Beam range grows sub-linearly with energy, clipped inside the chamber.
+    rng = jnp.clip(0.12 * e**0.8, 0.05, 0.92)
+    bragg = jnp.exp(-((x - rng) ** 2) / (2.0 * 0.05**2)) * (0.3 + x / rng)
+    lateral = jnp.exp(-((x - 0.5) ** 2) / (2.0 * 0.12**2))
+    return p[:, :, None] * bragg[:, :, None] * lateral[:, None, :]
+
+
+def chamber_response(
+    params: jnp.ndarray,
+    s: jnp.ndarray,
+    lam2d: jnp.ndarray,
+    interpret: bool = True,
+):
+    """Batched chamber response.
+
+    Args:
+      params: ``[B, 3]`` design parameters (V, P, E) per job.
+      s: ``[N, N]`` DST-I matrix (``dst_matrix(N)``).
+      lam2d: ``[N, N]`` Laplacian eigenvalues (``laplacian_eigenvalues(N)``).
+      interpret: run Pallas kernels in interpret mode (required on CPU).
+
+    Returns:
+      ``(response[B], dose[B])`` — collected charge and total deposited dose.
+    """
+    n = s.shape[0]
+    v = params[:, 0]
+    p = params[:, 1]
+
+    f = source_term(params, n)
+
+    # Spectral Poisson solve; the DST pairs are the L1 Pallas kernel.
+    f_hat = dst2d.dst2d_batched(f, s, interpret=interpret)
+    phi_hat = dst2d.spectral_solve_batched(f_hat, lam2d, interpret=interpret)
+    inv_scale = (2.0 / (n + 1)) ** 2
+    phi = dst2d.dst2d_batched(phi_hat, s, interpret=interpret) * inv_scale
+
+    # Field magnitude from central differences, scaled by electrode voltage.
+    gx = (jnp.roll(phi, -1, axis=1) - jnp.roll(phi, 1, axis=1)) * 0.5 * n
+    gy = (jnp.roll(phi, -1, axis=2) - jnp.roll(phi, 1, axis=2)) * 0.5 * n
+    emag = jnp.sqrt(gx**2 + gy**2 + 1e-12) * v[:, None, None]
+
+    # Saturation/recombination collection efficiency.
+    eta = emag / (emag + RECOMB_K * p[:, None, None])
+
+    response = jnp.sum(f * eta, axis=(1, 2))
+    dose = jnp.sum(f, axis=(1, 2))
+    return response, dose
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chamber_response_jit(params, s, lam2d, interpret: bool = True):
+    """Jitted wrapper used by tests and the AOT lowering."""
+    return chamber_response(params, s, lam2d, interpret=interpret)
+
+
+def chamber_response_ref(params: jnp.ndarray, n: int = GRID_N):
+    """Pure-jnp oracle (no Pallas) used by pytest against the kernel path."""
+    from compile.kernels import ref
+
+    s = jnp.asarray(dst_matrix(n))
+    lam2d = jnp.asarray(laplacian_eigenvalues(n))
+    v = params[:, 0]
+    p = params[:, 1]
+    f = source_term(params, n)
+    f_hat = ref.dst2d_batched_ref(f, s)
+    phi_hat = ref.spectral_solve_batched_ref(f_hat, lam2d)
+    phi = ref.dst2d_batched_ref(phi_hat, s) * (2.0 / (n + 1)) ** 2
+    gx = (jnp.roll(phi, -1, axis=1) - jnp.roll(phi, 1, axis=1)) * 0.5 * n
+    gy = (jnp.roll(phi, -1, axis=2) - jnp.roll(phi, 1, axis=2)) * 0.5 * n
+    emag = jnp.sqrt(gx**2 + gy**2 + 1e-12) * v[:, None, None]
+    eta = emag / (emag + RECOMB_K * p[:, None, None])
+    return jnp.sum(f * eta, axis=(1, 2)), jnp.sum(f, axis=(1, 2))

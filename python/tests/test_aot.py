@@ -1,0 +1,63 @@
+"""AOT artifact pipeline: lowering invariants the Rust loader depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def hlo_b2():
+    return aot.lower_chamber(2)
+
+
+def test_hlo_text_has_entry_and_right_signature(hlo_b2):
+    assert "ENTRY" in hlo_b2
+    # params, dst matrix, laplacian as runtime arguments.
+    assert "f32[2,3]" in hlo_b2
+    assert hlo_b2.count("f32[64,64]") >= 2
+
+
+def test_no_elided_large_constants(hlo_b2):
+    """The HLO text printer elides big constants as `constant({...})`,
+    which xla_extension 0.5.1 silently parses back as zeros — the bug that
+    motivated passing the DST matrix as an argument. Guard it forever."""
+    assert "constant({...})" not in hlo_b2
+
+
+def test_lowering_deterministic():
+    assert aot.lower_chamber(1) == aot.lower_chamber(1)
+
+
+def test_golden_probe_matches_model():
+    probe, response, dose = aot.golden_probe()
+    s = jnp.asarray(model.dst_matrix(model.GRID_N))
+    lam = jnp.asarray(model.laplacian_eigenvalues(model.GRID_N))
+    want_r, want_d = model.chamber_response_jit(jnp.asarray(probe), s, lam)
+    np.testing.assert_allclose(response, np.asarray(want_r), rtol=1e-5)
+    np.testing.assert_allclose(dose, np.asarray(want_d), rtol=1e-5)
+    assert np.isfinite(response).all() and (response > 0).all()
+
+
+def test_entry_fn_jit_roundtrip_executes():
+    """The exact entry signature the artifact freezes must execute in jax."""
+    b = 4
+    params = jnp.asarray(
+        np.stack(
+            [
+                np.linspace(100, 1000, b),
+                np.linspace(0.5, 2.0, b),
+                np.linspace(1, 20, b),
+            ],
+            axis=1,
+        ),
+        dtype=jnp.float32,
+    )
+    s = jnp.asarray(model.dst_matrix(model.GRID_N))
+    lam = jnp.asarray(model.laplacian_eigenvalues(model.GRID_N))
+    response, dose = jax.jit(aot.entry_fn)(params, s, lam)
+    assert response.shape == (b,)
+    assert dose.shape == (b,)
+    assert bool(jnp.all(response <= dose + 1e-4))

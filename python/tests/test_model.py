@@ -1,0 +1,89 @@
+"""L2 correctness: chamber model shapes, physics sanity, kernel-vs-ref path."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def params_batch(b, seed=0):
+    r = np.random.RandomState(seed)
+    v = r.uniform(100.0, 1000.0, size=b)
+    p = r.uniform(0.5, 2.0, size=b)
+    e = r.uniform(1.0, 20.0, size=b)
+    return jnp.asarray(np.stack([v, p, e], axis=1), dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def consts():
+    s = jnp.asarray(model.dst_matrix(model.GRID_N))
+    lam = jnp.asarray(model.laplacian_eigenvalues(model.GRID_N))
+    return s, lam
+
+
+def test_output_shapes(consts):
+    s, lam = consts
+    params = params_batch(model.AOT_BATCH)
+    response, dose = model.chamber_response_jit(params, s, lam)
+    assert response.shape == (model.AOT_BATCH,)
+    assert dose.shape == (model.AOT_BATCH,)
+
+
+@hypothesis.given(
+    b=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_pallas_path_matches_pure_jnp_ref(b, seed):
+    params = params_batch(b, seed)
+    s = jnp.asarray(model.dst_matrix(model.GRID_N))
+    lam = jnp.asarray(model.laplacian_eigenvalues(model.GRID_N))
+    got_r, got_d = model.chamber_response_jit(params, s, lam)
+    want_r, want_d = model.chamber_response_ref(params)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+
+
+def test_outputs_finite_and_physical(consts):
+    s, lam = consts
+    params = params_batch(32, seed=3)
+    response, dose = model.chamber_response_jit(params, s, lam)
+    assert np.isfinite(np.asarray(response)).all()
+    assert np.isfinite(np.asarray(dose)).all()
+    # Collected charge is positive and bounded by total deposited dose
+    # (efficiency eta is in (0, 1)).
+    assert (np.asarray(response) > 0).all()
+    assert (np.asarray(response) <= np.asarray(dose) + 1e-5).all()
+
+
+def test_voltage_increases_response(consts):
+    """Higher electrode voltage collects more charge (saturation curve)."""
+    s, lam = consts
+    base = np.array([[200.0, 1.0, 10.0]], dtype=np.float32)
+    hi = np.array([[800.0, 1.0, 10.0]], dtype=np.float32)
+    r_lo, _ = model.chamber_response_jit(jnp.asarray(base), s, lam)
+    r_hi, _ = model.chamber_response_jit(jnp.asarray(hi), s, lam)
+    assert float(r_hi[0]) > float(r_lo[0])
+
+
+def test_pressure_increases_dose(consts):
+    """Higher gas pressure deposits more dose (linear density scaling)."""
+    s, lam = consts
+    lo = np.array([[400.0, 0.6, 10.0]], dtype=np.float32)
+    hi = np.array([[400.0, 1.8, 10.0]], dtype=np.float32)
+    _, d_lo = model.chamber_response_jit(jnp.asarray(lo), s, lam)
+    _, d_hi = model.chamber_response_jit(jnp.asarray(hi), s, lam)
+    assert float(d_hi[0]) > float(d_lo[0])
+
+
+def test_energy_moves_bragg_peak():
+    """Beam range (argmax of the depth profile) grows with beam energy."""
+    n = model.GRID_N
+    lo = model.source_term(jnp.asarray([[400.0, 1.0, 2.0]]), n)
+    hi = model.source_term(jnp.asarray([[400.0, 1.0, 18.0]]), n)
+    depth_lo = int(np.argmax(np.asarray(lo)[0].sum(axis=1)))
+    depth_hi = int(np.argmax(np.asarray(hi)[0].sum(axis=1)))
+    assert depth_hi > depth_lo

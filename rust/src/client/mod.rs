@@ -1,0 +1,270 @@
+//! Client / user station (paper §2): monitoring console + control channel.
+//!
+//! The engine side runs a [`StatusServer`] (a TCP listener thread serving
+//! the Clustor protocol); any number of [`MonitorClient`]s can connect
+//! concurrently — the paper runs clients at Monash and Argonne against one
+//! experiment — to poll status, adjust deadline/budget, or stop the run.
+
+use crate::protocol::{read_frame, write_frame, Message};
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Shared experiment status the engine keeps current and the server reads.
+#[derive(Debug, Default)]
+pub struct StatusBoard {
+    pub jobs_total: AtomicU32,
+    pub jobs_completed: AtomicU32,
+    pub jobs_failed: AtomicU32,
+    pub jobs_running: AtomicU32,
+    /// Spend in milli-G$ (atomics carry integers).
+    pub spent_milli: AtomicU64,
+    pub busy_workers: AtomicU32,
+    pub elapsed_ms: AtomicU64,
+    /// Control intents raised by clients for the engine to apply.
+    pub stop_requested: AtomicBool,
+    /// New deadline in seconds ×1000 (0 = none pending).
+    pub new_deadline_ms: AtomicU64,
+    /// New budget in milli-G$ (0 = none pending).
+    pub new_budget_milli: AtomicU64,
+}
+
+impl StatusBoard {
+    fn snapshot(&self) -> Message {
+        Message::Status {
+            jobs_total: self.jobs_total.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            jobs_running: self.jobs_running.load(Ordering::Relaxed),
+            spent: self.spent_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+            busy_workers: self.busy_workers.load(Ordering::Relaxed),
+            elapsed_s: self.elapsed_ms.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+}
+
+/// The engine-side status/control server.
+pub struct StatusServer {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Start serving on an ephemeral localhost port.
+    pub fn start(board: Arc<StatusBoard>) -> Result<StatusServer> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("bind status server")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let board = board.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_connection(stream, &board);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(StatusServer {
+            addr,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(mut stream: TcpStream, board: &StatusBoard) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Expect a handshake first.
+    match read_frame(&mut stream)? {
+        Message::Hello { .. } => write_frame(&mut stream, &Message::Ok)?,
+        _ => {
+            write_frame(
+                &mut stream,
+                &Message::Error {
+                    reason: "expected hello".into(),
+                },
+            )?;
+            bail!("bad handshake");
+        }
+    }
+    loop {
+        let msg = match read_frame(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // client hung up
+        };
+        match msg {
+            Message::StatusRequest => {
+                write_frame(&mut stream, &board.snapshot())?;
+            }
+            Message::SetDeadline { deadline_s } => {
+                board
+                    .new_deadline_ms
+                    .store((deadline_s * 1000.0) as u64, Ordering::Relaxed);
+                write_frame(&mut stream, &Message::Ok)?;
+            }
+            Message::SetBudget { budget } => {
+                board
+                    .new_budget_milli
+                    .store((budget * 1000.0) as u64, Ordering::Relaxed);
+                write_frame(&mut stream, &Message::Ok)?;
+            }
+            Message::Stop => {
+                board.stop_requested.store(true, Ordering::Relaxed);
+                write_frame(&mut stream, &Message::Ok)?;
+                return Ok(());
+            }
+            other => {
+                write_frame(
+                    &mut stream,
+                    &Message::Error {
+                        reason: format!("unexpected {other:?}"),
+                    },
+                )?;
+            }
+        }
+    }
+}
+
+/// A monitoring/control client connection.
+pub struct MonitorClient {
+    stream: TcpStream,
+}
+
+impl MonitorClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<MonitorClient> {
+        let mut stream = TcpStream::connect(addr).context("connect to engine")?;
+        stream.set_nodelay(true).ok();
+        write_frame(
+            &mut stream,
+            &Message::Hello {
+                component: "client".into(),
+                version: 1,
+            },
+        )?;
+        match read_frame(&mut stream)? {
+            Message::Ok => Ok(MonitorClient { stream }),
+            other => bail!("handshake rejected: {other:?}"),
+        }
+    }
+
+    /// Poll the experiment status.
+    pub fn status(&mut self) -> Result<Message> {
+        write_frame(&mut self.stream, &Message::StatusRequest)?;
+        let msg = read_frame(&mut self.stream)?;
+        match msg {
+            Message::Status { .. } => Ok(msg),
+            other => bail!("expected status, got {other:?}"),
+        }
+    }
+
+    /// Tighten/relax the deadline mid-run.
+    pub fn set_deadline(&mut self, deadline_s: f64) -> Result<()> {
+        write_frame(&mut self.stream, &Message::SetDeadline { deadline_s })?;
+        self.expect_ok()
+    }
+
+    /// Adjust the budget mid-run.
+    pub fn set_budget(&mut self, budget: f64) -> Result<()> {
+        write_frame(&mut self.stream, &Message::SetBudget { budget })?;
+        self.expect_ok()
+    }
+
+    /// Ask the engine to stop the experiment.
+    pub fn stop_experiment(&mut self) -> Result<()> {
+        write_frame(&mut self.stream, &Message::Stop)?;
+        self.expect_ok()
+    }
+
+    fn expect_ok(&mut self) -> Result<()> {
+        match read_frame(&mut self.stream)? {
+            Message::Ok => Ok(()),
+            other => bail!("expected ok, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_roundtrip_over_tcp() {
+        let board = Arc::new(StatusBoard::default());
+        board.jobs_total.store(10, Ordering::Relaxed);
+        board.jobs_completed.store(4, Ordering::Relaxed);
+        board.spent_milli.store(1500, Ordering::Relaxed);
+        let server = StatusServer::start(board.clone()).unwrap();
+        let mut client = MonitorClient::connect(server.addr).unwrap();
+        match client.status().unwrap() {
+            Message::Status {
+                jobs_total,
+                jobs_completed,
+                spent,
+                ..
+            } => {
+                assert_eq!(jobs_total, 10);
+                assert_eq!(jobs_completed, 4);
+                assert!((spent - 1.5).abs() < 1e-9);
+            }
+            other => panic!("bad reply {other:?}"),
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_concurrent_clients() {
+        let board = Arc::new(StatusBoard::default());
+        board.jobs_total.store(3, Ordering::Relaxed);
+        let server = StatusServer::start(board.clone()).unwrap();
+        // The paper monitors one experiment from two continents; here, two
+        // sockets.
+        let mut a = MonitorClient::connect(server.addr).unwrap();
+        let mut b = MonitorClient::connect(server.addr).unwrap();
+        assert!(matches!(a.status().unwrap(), Message::Status { .. }));
+        assert!(matches!(b.status().unwrap(), Message::Status { .. }));
+        server.stop();
+    }
+
+    #[test]
+    fn control_intents_reach_the_board() {
+        let board = Arc::new(StatusBoard::default());
+        let server = StatusServer::start(board.clone()).unwrap();
+        let mut c = MonitorClient::connect(server.addr).unwrap();
+        c.set_deadline(7200.0).unwrap();
+        c.set_budget(99.5).unwrap();
+        assert_eq!(board.new_deadline_ms.load(Ordering::Relaxed), 7_200_000);
+        assert_eq!(board.new_budget_milli.load(Ordering::Relaxed), 99_500);
+        c.stop_experiment().unwrap();
+        assert!(board.stop_requested.load(Ordering::Relaxed));
+        server.stop();
+    }
+}

@@ -1,0 +1,179 @@
+//! Experiment configuration (what the client hands the parametric engine).
+
+use crate::grid::competition::CompetitionModel;
+use crate::types::{GridDollars, SimTime, HOUR};
+use crate::util::json::Json;
+
+/// Workload shape: how much compute and I/O one job costs. The Figure-3
+/// ionization study uses the defaults; benches sweep them.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Mean per-job work in reference-machine CPU-hours.
+    pub job_work_ref_h: f64,
+    /// Log-normal sigma of per-job work jitter (0 = deterministic).
+    pub work_jitter_sigma: f64,
+    /// Stage-in bytes per job (inputs + executable).
+    pub input_bytes: f64,
+    /// Stage-out bytes per job (results).
+    pub output_bytes: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        // Paper-scale: ~165 jobs × ~2 h on a ~70-machine testbed fills a
+        // 10-20 h deadline window; inputs are config + binary, outputs a
+        // modest results file.
+        WorkloadConfig {
+            job_work_ref_h: 2.0,
+            work_jitter_sigma: 0.25,
+            input_bytes: 2.0e6,
+            output_bytes: 0.5e6,
+        }
+    }
+}
+
+/// One experiment run description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Grid identity the experiment runs as.
+    pub user: String,
+    /// Deadline, seconds from experiment start.
+    pub deadline: SimTime,
+    /// Budget in G$ (None = unconstrained).
+    pub budget: Option<GridDollars>,
+    /// Scheduling policy name (see [`crate::scheduler::by_name`]).
+    pub policy: String,
+    /// Scheduler tick period, seconds.
+    pub tick_period_s: SimTime,
+    /// Max dispatch attempts per job before it is marked failed.
+    pub max_attempts: u32,
+    /// UTC hour-of-day at experiment start (drives time-of-day pricing).
+    pub start_utc_hour: f64,
+    /// Master RNG seed for the run.
+    pub seed: u64,
+    pub workload: WorkloadConfig,
+    /// Background competing-experiment process (paper §3: "the cost changes
+    /// as other competing experiments are put on the grid"); None = the
+    /// foreground experiment has the grid to itself.
+    pub competition: Option<CompetitionModel>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            user: "rajkumar".to_string(),
+            deadline: 15.0 * HOUR,
+            budget: None,
+            policy: "cost".to_string(),
+            tick_period_s: 120.0,
+            max_attempts: 4,
+            start_utc_hour: 22.0,
+            seed: 0xD15EA5E,
+            workload: WorkloadConfig::default(),
+            competition: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::str(&self.user)),
+            ("deadline_s", Json::num(self.deadline)),
+            (
+                "budget",
+                self.budget.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("policy", Json::str(&self.policy)),
+            ("tick_period_s", Json::num(self.tick_period_s)),
+            ("max_attempts", Json::num(self.max_attempts as f64)),
+            ("start_utc_hour", Json::num(self.start_utc_hour)),
+            ("seed", Json::num(self.seed as f64)),
+            ("job_work_ref_h", Json::num(self.workload.job_work_ref_h)),
+            (
+                "work_jitter_sigma",
+                Json::num(self.workload.work_jitter_sigma),
+            ),
+            ("input_bytes", Json::num(self.workload.input_bytes)),
+            ("output_bytes", Json::num(self.workload.output_bytes)),
+            (
+                "competition",
+                match &self.competition {
+                    None => Json::Null,
+                    Some(c) => Json::obj(vec![
+                        ("mean_interarrival_s", Json::num(c.mean_interarrival_s)),
+                        ("mean_duration_s", Json::num(c.mean_duration_s)),
+                        ("mean_cpus", Json::num(c.mean_cpus)),
+                    ]),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ExperimentConfig> {
+        Ok(ExperimentConfig {
+            user: v.req_str("user")?.to_string(),
+            deadline: v.req_f64("deadline_s")?,
+            budget: v.get("budget").as_f64(),
+            policy: v.req_str("policy")?.to_string(),
+            tick_period_s: v.req_f64("tick_period_s")?,
+            max_attempts: v.req_f64("max_attempts")? as u32,
+            start_utc_hour: v.req_f64("start_utc_hour")?,
+            seed: v.req_f64("seed")? as u64,
+            workload: WorkloadConfig {
+                job_work_ref_h: v.req_f64("job_work_ref_h")?,
+                work_jitter_sigma: v.req_f64("work_jitter_sigma")?,
+                input_bytes: v.req_f64("input_bytes")?,
+                output_bytes: v.req_f64("output_bytes")?,
+            },
+            competition: match v.get("competition") {
+                Json::Null => None,
+                c => Some(CompetitionModel {
+                    mean_interarrival_s: c.req_f64("mean_interarrival_s")?,
+                    mean_duration_s: c.req_f64("mean_duration_s")?,
+                    mean_cpus: c.req_f64("mean_cpus")?,
+                }),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ExperimentConfig::default();
+        assert!(c.deadline > 0.0);
+        assert!(c.tick_period_s > 0.0);
+        assert!(c.max_attempts >= 1);
+        assert!((0.0..24.0).contains(&c.start_utc_hour));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.budget = Some(5000.0);
+        c.policy = "time".into();
+        let j = c.to_json().to_string();
+        let back =
+            ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())
+                .unwrap();
+        assert_eq!(back.user, c.user);
+        assert_eq!(back.budget, c.budget);
+        assert_eq!(back.policy, "time");
+        assert_eq!(back.seed, c.seed);
+        assert!((back.workload.job_work_ref_h - c.workload.job_work_ref_h).abs() < 1e-12);
+    }
+
+    #[test]
+    fn null_budget_roundtrips() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json().to_string();
+        let back =
+            ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())
+                .unwrap();
+        assert_eq!(back.budget, None);
+    }
+}

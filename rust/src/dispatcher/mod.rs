@@ -1,0 +1,202 @@
+//! The dispatcher (paper §2): turns the schedule advisor's allocation into
+//! GRAM actions, and hosts the job-wrapper logic shared by the simulated
+//! and live execution paths.
+//!
+//! [`plan_actions`] is pure: given the allocation targets, the engine's job
+//! table and per-resource in-flight counts, it emits the submissions and
+//! cancellations that reconcile reality with the plan. Cancellation only
+//! targets still-queued jobs — running jobs are never pre-empted (matching
+//! Nimrod/G, which migrates unstarted jobs when it adapts its resource set).
+
+pub mod wrapper;
+
+use crate::engine::{Experiment, JobState};
+use crate::scheduler::Allocation;
+use crate::types::{JobId, ResourceId};
+
+/// One reconciliation step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Dispatch a Ready job to a resource.
+    Submit { job: JobId, rid: ResourceId },
+    /// Withdraw a Dispatched-but-not-Running job from a resource (it goes
+    /// back to Ready and will be re-dispatched elsewhere).
+    CancelQueued { job: JobId, rid: ResourceId },
+}
+
+/// Reconcile in-flight state with the allocation. `in_flight(rid)` must
+/// count Dispatched + Running jobs on `rid` (the engine view and the GRAM
+/// view agree in both drivers).
+pub fn plan_actions(alloc: &Allocation, exp: &Experiment) -> Vec<Action> {
+    let mut actions = Vec::new();
+
+    // One O(jobs) pass builds the per-resource in-flight counts and the
+    // queued-but-not-running job lists (the naive per-resource scan is
+    // O(resources x jobs) and shows up in the tick profile at scale).
+    let mut in_flight: std::collections::BTreeMap<ResourceId, u32> =
+        std::collections::BTreeMap::new();
+    let mut queued: std::collections::BTreeMap<ResourceId, Vec<(f64, JobId)>> =
+        std::collections::BTreeMap::new();
+    for job in &exp.jobs {
+        match job.state {
+            JobState::Dispatched { rid, at } => {
+                *in_flight.entry(rid).or_insert(0) += 1;
+                queued.entry(rid).or_default().push((at, job.spec.id));
+            }
+            JobState::Running { rid, .. } => {
+                *in_flight.entry(rid).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+
+    let mut over_allocated: Vec<(ResourceId, u32)> = Vec::new(); // (rid, excess)
+    let mut capacity_gap: Vec<(ResourceId, u32)> = Vec::new(); // (rid, free)
+    for (&rid, &target) in alloc {
+        let current = in_flight.get(&rid).copied().unwrap_or(0);
+        if current > target {
+            over_allocated.push((rid, current - target));
+        } else if current < target {
+            capacity_gap.push((rid, target - current));
+        }
+    }
+    // Resources with queued jobs but no allocation at all: drain them.
+    for (&rid, jobs) in &queued {
+        if !alloc.contains_key(&rid) {
+            for &(_, job) in jobs {
+                actions.push(Action::CancelQueued { job, rid });
+            }
+        }
+    }
+
+    // Cancel the excess on over-allocated resources, youngest dispatch
+    // first (most likely still deep in the queue).
+    for (rid, excess) in over_allocated {
+        let mut q = queued.remove(&rid).unwrap_or_default();
+        q.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for (_, job) in q.into_iter().take(excess as usize) {
+            actions.push(Action::CancelQueued { job, rid });
+        }
+    }
+
+    // Fill gaps with Ready jobs in id order.
+    let mut ready = exp.ready_jobs();
+    'outer: for (rid, free) in capacity_gap {
+        for _ in 0..free {
+            match ready.next() {
+                Some(job) => actions.push(Action::Submit { job, rid }),
+                None => break 'outer,
+            }
+        }
+    }
+    actions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{expand, Plan};
+
+    fn exp(n: usize) -> Experiment {
+        let src = format!(
+            "parameter i integer range from 1 to {n}\ntask main\nexecute run $i\nendtask"
+        );
+        let specs = expand(&Plan::parse(&src).unwrap(), 0).unwrap();
+        Experiment::new(specs, 3600.0, None, "u", 3)
+    }
+
+    fn alloc(pairs: &[(u32, u32)]) -> Allocation {
+        pairs.iter().map(|&(r, n)| (ResourceId(r), n)).collect()
+    }
+
+    #[test]
+    fn fills_capacity_in_job_order() {
+        let e = exp(5);
+        let actions = plan_actions(&alloc(&[(0, 2), (1, 1)]), &e);
+        assert_eq!(
+            actions,
+            vec![
+                Action::Submit {
+                    job: JobId(0),
+                    rid: ResourceId(0)
+                },
+                Action::Submit {
+                    job: JobId(1),
+                    rid: ResourceId(0)
+                },
+                Action::Submit {
+                    job: JobId(2),
+                    rid: ResourceId(1)
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn respects_existing_in_flight() {
+        let mut e = exp(5);
+        e.dispatch(JobId(0), ResourceId(0), 0.0).unwrap();
+        e.dispatch(JobId(1), ResourceId(0), 0.0).unwrap();
+        let actions = plan_actions(&alloc(&[(0, 2)]), &e);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn cancels_excess_queued_newest_first() {
+        let mut e = exp(5);
+        e.dispatch(JobId(0), ResourceId(0), 1.0).unwrap();
+        e.dispatch(JobId(1), ResourceId(0), 2.0).unwrap();
+        e.dispatch(JobId(2), ResourceId(0), 3.0).unwrap();
+        // j0 is already running — must never be cancelled.
+        e.start(JobId(0), 5.0).unwrap();
+        let actions = plan_actions(&alloc(&[(0, 1)]), &e);
+        assert_eq!(
+            actions,
+            vec![
+                Action::CancelQueued {
+                    job: JobId(2),
+                    rid: ResourceId(0)
+                },
+                Action::CancelQueued {
+                    job: JobId(1),
+                    rid: ResourceId(0)
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn drains_unallocated_resources() {
+        let mut e = exp(3);
+        e.dispatch(JobId(0), ResourceId(9), 0.0).unwrap();
+        e.start(JobId(0), 1.0).unwrap(); // running: stays
+        e.dispatch(JobId(1), ResourceId(9), 2.0).unwrap(); // queued: drained
+        let actions = plan_actions(&alloc(&[(1, 1)]), &e);
+        assert!(actions.contains(&Action::CancelQueued {
+            job: JobId(1),
+            rid: ResourceId(9)
+        }));
+        // The running job is untouched and the gap on r1 is filled.
+        assert!(actions.contains(&Action::Submit {
+            job: JobId(2),
+            rid: ResourceId(1)
+        }));
+        assert_eq!(actions.len(), 2);
+    }
+
+    #[test]
+    fn no_ready_jobs_no_submissions() {
+        let mut e = exp(1);
+        e.dispatch(JobId(0), ResourceId(0), 0.0).unwrap();
+        let actions = plan_actions(&alloc(&[(1, 4)]), &e);
+        // r0 lost its allocation, so its queued job is drained — but there
+        // are no Ready jobs, so no submissions are planned for r1.
+        assert_eq!(
+            actions,
+            vec![Action::CancelQueued {
+                job: JobId(0),
+                rid: ResourceId(0)
+            }]
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! The job-wrapper (paper §2): "responsible for staging of application
+//! tasks and data; starting execution of the task on the assigned resource
+//! and sending results back to the parametric engine via dispatcher".
+//!
+//! In the live (real-execution) driver each simulated node gets a working
+//! directory; the wrapper interprets the job's staged script op by op:
+//! `copy` ops move real files between the experiment root store and the
+//! node directory, and `execute` runs the AOT-compiled chamber model via
+//! PJRT with the job's parameter bindings, writing a real results file for
+//! stage-out.
+
+use crate::plan::{JobSpec, TaskOp};
+use crate::runtime::{ChamberOutput, ChamberRuntime};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Outcome of one wrapped job.
+#[derive(Debug, Clone)]
+pub struct WrapperResult {
+    pub output: ChamberOutput,
+    /// Bytes staged in + out (real file sizes).
+    pub bytes_staged: u64,
+}
+
+/// A job-wrapper bound to one node directory.
+pub struct JobWrapper {
+    /// Experiment root storage (the GASS server's backing directory).
+    pub root_store: PathBuf,
+    /// The node's scratch directory.
+    pub node_dir: PathBuf,
+}
+
+impl JobWrapper {
+    pub fn new(root_store: &Path, node_dir: &Path) -> Result<JobWrapper> {
+        std::fs::create_dir_all(root_store)?;
+        std::fs::create_dir_all(node_dir)?;
+        Ok(JobWrapper {
+            root_store: root_store.to_path_buf(),
+            node_dir: node_dir.to_path_buf(),
+        })
+    }
+
+    fn resolve(&self, path: &str) -> PathBuf {
+        match path.strip_prefix("node:") {
+            Some(rest) => self.node_dir.join(rest),
+            None => self.root_store.join(path),
+        }
+    }
+
+    /// Interpret the job's script. The chamber parameters come from the
+    /// job's bindings (`voltage`, `pressure`, `energy`).
+    pub fn run(&self, job: &JobSpec, rt: &ChamberRuntime) -> Result<WrapperResult> {
+        let mut bytes_staged = 0u64;
+        let mut output = None;
+        for op in &job.script {
+            match op {
+                TaskOp::Copy { from, to } => {
+                    let src = self.resolve(from);
+                    let dst = self.resolve(to);
+                    if let Some(parent) = dst.parent() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                    // Missing declared inputs are created empty (config
+                    // files the sweep does not actually populate).
+                    if !src.exists() && !from.starts_with("node:") {
+                        std::fs::write(&src, b"")?;
+                    }
+                    let n = std::fs::copy(&src, &dst).with_context(|| {
+                        format!("copy {} -> {}", src.display(), dst.display())
+                    })?;
+                    bytes_staged += n;
+                }
+                TaskOp::Execute { command } => {
+                    let v = job
+                        .f64_binding("voltage")
+                        .context("job missing `voltage` binding")?;
+                    let p = job
+                        .f64_binding("pressure")
+                        .context("job missing `pressure` binding")?;
+                    let e = job
+                        .f64_binding("energy")
+                        .context("job missing `energy` binding")?;
+                    let got = rt.run(&[[v as f32, p as f32, e as f32]])?;
+                    let o = got[0];
+                    // Produce the results file named in the command's -o
+                    // flag (default results.dat) so stage-out is real.
+                    let results_name = command
+                        .split_whitespace()
+                        .skip_while(|w| *w != "-o")
+                        .nth(1)
+                        .unwrap_or("results.dat");
+                    let results = self.node_dir.join(results_name);
+                    std::fs::write(
+                        &results,
+                        format!(
+                            "{{\"job\":\"{}\",\"voltage\":{v},\"pressure\":{p},\"energy\":{e},\"response\":{},\"dose\":{}}}\n",
+                            job.id, o.response, o.dose
+                        ),
+                    )?;
+                    output = Some(o);
+                }
+            }
+        }
+        match output {
+            Some(output) => Ok(WrapperResult {
+                output,
+                bytes_staged,
+            }),
+            None => bail!("job {} script has no execute op", job.id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ionization_jobs;
+
+    #[test]
+    fn wrapper_runs_full_script_end_to_end() {
+        let dir = ChamberRuntime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping wrapper test: artifacts not built");
+            return;
+        }
+        let rt = ChamberRuntime::load(&dir).unwrap();
+        let tmp = std::env::temp_dir().join(format!("nimrod-w-{}", std::process::id()));
+        let root = tmp.join("root");
+        let node = tmp.join("node0");
+        let w = JobWrapper::new(&root, &node).unwrap();
+
+        let job = &ionization_jobs(3)[7];
+        let res = w.run(job, &rt).unwrap();
+        assert!(res.output.response > 0.0);
+        // Stage-out produced the per-job results file in root storage.
+        let out_file = root.join(format!("results.{}.dat", job.id));
+        let contents = std::fs::read_to_string(&out_file).unwrap();
+        assert!(contents.contains("\"response\":"));
+        assert!(res.bytes_staged > 0);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

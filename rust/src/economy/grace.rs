@@ -1,0 +1,356 @@
+//! GRACE — Grid Architecture for Computational Economy (paper §7).
+//!
+//! The paper sketches GRACE as future work: a broker, bid-manager,
+//! directory server and per-owner bid-servers that let the user "enter into
+//! bidding and negotiate for the best possible resources". This module
+//! implements that layer over the simulated testbed:
+//!
+//! * the **broker** posts a [`Tender`] describing the work (jobs, work per
+//!   job, deadline, reservation rate);
+//! * each owner's [`BidServer`] answers with a [`Bid`] priced by its
+//!   strategy (idle machines discount, busy machines charge a premium,
+//!   premium owners never discount);
+//! * the **bid-manager** ([`select_bids`]) picks the cheapest bid set whose
+//!   aggregate rate meets the deadline;
+//! * [`Broker::negotiate`] runs tender → bids → select rounds, raising the
+//!   reservation rate between rounds if no feasible set exists — the
+//!   "renegotiate either by changing the deadline and/or the cost" loop of
+//!   §3, with the answer known *before* the experiment starts.
+
+use crate::types::{GridDollars, ResourceId, SimTime};
+
+/// A broker's call for offers.
+#[derive(Debug, Clone)]
+pub struct Tender {
+    pub user: String,
+    /// Number of jobs to place.
+    pub jobs: u32,
+    /// CPU-hours per job on the reference machine.
+    pub job_work_ref_h: f64,
+    /// Seconds from now in which all jobs must finish.
+    pub time_to_deadline_s: f64,
+    /// Reservation rate: maximum acceptable G$/CPU-second. Bids above this
+    /// are rejected in the current round.
+    pub max_rate: GridDollars,
+}
+
+/// One owner's offer against a tender.
+#[derive(Debug, Clone)]
+pub struct Bid {
+    pub resource: ResourceId,
+    pub resource_name: String,
+    /// Offered price, G$/CPU-second.
+    pub rate: GridDollars,
+    /// Concurrent job slots offered.
+    pub capacity: u32,
+    /// Relative speed of the offering machine (jobs of work w take
+    /// `w / speed` reference-hours each).
+    pub speed: f64,
+    /// Offer expiry (virtual time).
+    pub valid_until: SimTime,
+}
+
+impl Bid {
+    /// Jobs/hour this bid completes at full committed capacity.
+    pub fn throughput_jobs_per_h(&self, job_work_ref_h: f64) -> f64 {
+        self.capacity as f64 * self.speed / job_work_ref_h
+    }
+
+    /// G$ to run one job under this bid.
+    pub fn cost_per_job(&self, job_work_ref_h: f64) -> GridDollars {
+        // CPU-seconds consumed on this machine = work / speed * 3600.
+        self.rate * job_work_ref_h / self.speed * 3600.0
+    }
+}
+
+/// Owner bidding temperament.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BidStrategy {
+    /// Fills idle cycles: discounts up to 40% when lightly loaded.
+    Aggressive,
+    /// Posts the list price regardless of load.
+    ListPrice,
+    /// Charges a scarcity premium as the machine fills.
+    Premium,
+}
+
+/// A per-owner bid server: quotes offers for this resource.
+#[derive(Debug, Clone)]
+pub struct BidServer {
+    pub resource: ResourceId,
+    pub resource_name: String,
+    pub speed: f64,
+    pub cpus: u32,
+    /// Posted G$/CPU-second at quote time (already time-of-day adjusted).
+    pub posted_rate: GridDollars,
+    /// Fraction of CPUs currently busy (0..1).
+    pub utilization: f64,
+    pub strategy: BidStrategy,
+}
+
+impl BidServer {
+    /// Produce an offer, or `None` if the tender is not worth bidding on
+    /// (reservation rate below what this owner would ever accept, or no
+    /// spare capacity).
+    pub fn quote(&self, tender: &Tender, now: SimTime) -> Option<Bid> {
+        let free = ((1.0 - self.utilization) * self.cpus as f64).floor() as u32;
+        if free == 0 {
+            return None;
+        }
+        let rate = match self.strategy {
+            BidStrategy::Aggressive => {
+                // Idle machines shave the price to win work.
+                self.posted_rate * (0.6 + 0.4 * self.utilization)
+            }
+            BidStrategy::ListPrice => self.posted_rate,
+            BidStrategy::Premium => self.posted_rate * (1.0 + self.utilization),
+        };
+        if rate > tender.max_rate {
+            return None;
+        }
+        Some(Bid {
+            resource: self.resource,
+            resource_name: self.resource_name.clone(),
+            rate,
+            capacity: free.min(tender.jobs),
+            speed: self.speed,
+            valid_until: now + 600.0,
+        })
+    }
+}
+
+/// Bid-manager selection: cheapest-per-job-first subset whose aggregate
+/// throughput meets the deadline. Returns `None` when even all bids together
+/// cannot finish in time.
+pub fn select_bids(tender: &Tender, bids: &[Bid]) -> Option<Vec<Bid>> {
+    let needed_jobs_per_h =
+        tender.jobs as f64 / (tender.time_to_deadline_s / 3600.0);
+    let mut sorted: Vec<&Bid> = bids.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.cost_per_job(tender.job_work_ref_h)
+            .total_cmp(&b.cost_per_job(tender.job_work_ref_h))
+    });
+    let mut chosen = Vec::new();
+    let mut rate = 0.0;
+    for bid in sorted {
+        if rate >= needed_jobs_per_h {
+            break;
+        }
+        rate += bid.throughput_jobs_per_h(tender.job_work_ref_h);
+        chosen.push(bid.clone());
+    }
+    if rate >= needed_jobs_per_h {
+        Some(chosen)
+    } else {
+        None
+    }
+}
+
+/// Outcome of a negotiation.
+#[derive(Debug, Clone)]
+pub struct NegotiationOutcome {
+    pub selected: Vec<Bid>,
+    /// Tender rounds used (1 = first call succeeded).
+    pub rounds: u32,
+    /// Final reservation rate that produced a feasible set.
+    pub final_max_rate: GridDollars,
+    /// Estimated total cost of the experiment under the selected bids.
+    pub est_total_cost: GridDollars,
+}
+
+/// The GRACE broker: runs up to `max_rounds` tender rounds, escalating the
+/// reservation rate by `escalation` per round until a feasible bid set
+/// appears. Mirrors the §3 contract negotiation: the user learns up front
+/// whether the deadline is attainable and at what price.
+pub struct Broker {
+    pub max_rounds: u32,
+    pub escalation: f64,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Broker {
+            max_rounds: 5,
+            escalation: 1.5,
+        }
+    }
+}
+
+impl Broker {
+    pub fn negotiate(
+        &self,
+        mut tender: Tender,
+        servers: &[BidServer],
+        now: SimTime,
+    ) -> Option<NegotiationOutcome> {
+        for round in 1..=self.max_rounds {
+            let bids: Vec<Bid> =
+                servers.iter().filter_map(|s| s.quote(&tender, now)).collect();
+            if let Some(selected) = select_bids(&tender, &bids) {
+                // Cost estimate: spread jobs over the selected set
+                // proportionally to throughput.
+                let total_rate: f64 = selected
+                    .iter()
+                    .map(|b| b.throughput_jobs_per_h(tender.job_work_ref_h))
+                    .sum();
+                let est_total_cost = selected
+                    .iter()
+                    .map(|b| {
+                        let share = b.throughput_jobs_per_h(tender.job_work_ref_h)
+                            / total_rate;
+                        share * tender.jobs as f64
+                            * b.cost_per_job(tender.job_work_ref_h)
+                    })
+                    .sum();
+                return Some(NegotiationOutcome {
+                    selected,
+                    rounds: round,
+                    final_max_rate: tender.max_rate,
+                    est_total_cost,
+                });
+            }
+            tender.max_rate *= self.escalation;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(
+        id: u32,
+        rate: f64,
+        cpus: u32,
+        util: f64,
+        strategy: BidStrategy,
+    ) -> BidServer {
+        BidServer {
+            resource: ResourceId(id),
+            resource_name: format!("r{id}"),
+            speed: 1.0,
+            cpus,
+            posted_rate: rate,
+            utilization: util,
+            strategy,
+        }
+    }
+
+    fn tender(jobs: u32, hours: f64, max_rate: f64) -> Tender {
+        Tender {
+            user: "rajkumar".into(),
+            jobs,
+            job_work_ref_h: 1.0,
+            time_to_deadline_s: hours * 3600.0,
+            max_rate,
+        }
+    }
+
+    #[test]
+    fn aggressive_idle_discounts() {
+        let s = server(0, 1.0, 4, 0.0, BidStrategy::Aggressive);
+        let bid = s.quote(&tender(10, 10.0, 5.0), 0.0).unwrap();
+        assert!((bid.rate - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn premium_busy_charges_more() {
+        let s = server(0, 1.0, 8, 0.5, BidStrategy::Premium);
+        let bid = s.quote(&tender(10, 10.0, 5.0), 0.0).unwrap();
+        assert!((bid.rate - 1.5).abs() < 1e-9);
+        assert_eq!(bid.capacity, 4); // half the cpus are busy
+    }
+
+    #[test]
+    fn no_bid_above_reservation_rate() {
+        let s = server(0, 10.0, 4, 0.0, BidStrategy::ListPrice);
+        assert!(s.quote(&tender(10, 10.0, 5.0), 0.0).is_none());
+    }
+
+    #[test]
+    fn saturated_machine_does_not_bid() {
+        let s = server(0, 1.0, 4, 1.0, BidStrategy::Aggressive);
+        assert!(s.quote(&tender(10, 10.0, 5.0), 0.0).is_none());
+    }
+
+    #[test]
+    fn selection_prefers_cheap_bids() {
+        let t = tender(16, 4.0, 100.0); // need 4 jobs/h
+        let bids = vec![
+            Bid {
+                resource: ResourceId(0),
+                resource_name: "cheap".into(),
+                rate: 0.5,
+                capacity: 4,
+                speed: 1.0,
+                valid_until: 600.0,
+            },
+            Bid {
+                resource: ResourceId(1),
+                resource_name: "dear".into(),
+                rate: 5.0,
+                capacity: 16,
+                speed: 1.0,
+                valid_until: 600.0,
+            },
+        ];
+        let sel = select_bids(&t, &bids).unwrap();
+        assert_eq!(sel[0].resource_name, "cheap");
+        // The cheap bid alone gives 4 jobs/h — exactly enough.
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn selection_fails_when_infeasible() {
+        let t = tender(1000, 1.0, 100.0); // need 1000 jobs/h
+        let bids = vec![Bid {
+            resource: ResourceId(0),
+            resource_name: "small".into(),
+            rate: 0.1,
+            capacity: 2,
+            speed: 1.0,
+            valid_until: 600.0,
+        }];
+        assert!(select_bids(&t, &bids).is_none());
+    }
+
+    #[test]
+    fn broker_escalates_until_feasible() {
+        // Owner prices at 2.0; tender starts at 0.5 ⇒ needs 2 escalations
+        // of 1.5x (0.5 → 0.75 → 1.125 → 1.6875... wait for >= 2.0 needs 3).
+        let servers = vec![server(0, 2.0, 64, 0.0, BidStrategy::ListPrice)];
+        let broker = Broker::default();
+        let out = broker
+            .negotiate(tender(10, 10.0, 0.5), &servers, 0.0)
+            .unwrap();
+        assert!(out.rounds > 1, "should need escalation, rounds={}", out.rounds);
+        assert!(out.final_max_rate >= 2.0);
+        assert_eq!(out.selected.len(), 1);
+        assert!(out.est_total_cost > 0.0);
+    }
+
+    #[test]
+    fn broker_gives_up_after_max_rounds() {
+        let servers = vec![server(0, 1e9, 64, 0.0, BidStrategy::ListPrice)];
+        let broker = Broker {
+            max_rounds: 3,
+            escalation: 1.1,
+        };
+        assert!(broker.negotiate(tender(10, 10.0, 0.01), &servers, 0.0).is_none());
+    }
+
+    #[test]
+    fn cost_per_job_accounts_for_speed() {
+        let bid = Bid {
+            resource: ResourceId(0),
+            resource_name: "fast".into(),
+            rate: 1.0,
+            capacity: 1,
+            speed: 2.0,
+            valid_until: 0.0,
+        };
+        // 1 ref-hour of work at speed 2 = 1800 cpu-seconds = 1800 G$.
+        assert!((bid.cost_per_job(1.0) - 1800.0).abs() < 1e-9);
+    }
+}

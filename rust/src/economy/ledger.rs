@@ -1,0 +1,172 @@
+//! Experiment spend accounting.
+//!
+//! The scheduler works against a user budget ("price the user is willing to
+//! pay", §3). To make "never exceed the budget" a checkable invariant, the
+//! ledger is two-phase:
+//!
+//! 1. **commit** — when a job is dispatched, the *estimated* cost is
+//!    committed. Dispatch is refused if `settled + committed + estimate`
+//!    would exceed the budget.
+//! 2. **settle** — on completion the commitment is replaced by the actual
+//!    metered cost (actual may exceed the estimate — machines slow down —
+//!    but the committed envelope keeps aggregate spend inside the budget up
+//!    to estimation error on in-flight jobs).
+//! 3. **release** — a failed/cancelled job releases its commitment; any
+//!    partial CPU time already consumed is settled (grid owners bill for
+//!    cycles used, finished or not).
+
+use crate::types::{GridDollars, JobId};
+use std::collections::BTreeMap;
+
+/// Per-experiment spend ledger.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    budget: Option<GridDollars>,
+    settled: GridDollars,
+    committed: BTreeMap<JobId, GridDollars>,
+    /// Cumulative settled cost per resource name (reporting).
+    by_resource: BTreeMap<String, GridDollars>,
+}
+
+impl Ledger {
+    pub fn new(budget: Option<GridDollars>) -> Ledger {
+        Ledger {
+            budget,
+            ..Default::default()
+        }
+    }
+
+    pub fn budget(&self) -> Option<GridDollars> {
+        self.budget
+    }
+
+    /// Actually-incurred cost so far.
+    pub fn settled(&self) -> GridDollars {
+        self.settled
+    }
+
+    /// Outstanding commitments for in-flight jobs.
+    pub fn committed(&self) -> GridDollars {
+        self.committed.values().sum()
+    }
+
+    /// Settled + committed — the scheduler's planning figure.
+    pub fn exposure(&self) -> GridDollars {
+        self.settled + self.committed()
+    }
+
+    /// Budget remaining against exposure (`None` = unlimited).
+    pub fn headroom(&self) -> Option<GridDollars> {
+        self.budget.map(|b| b - self.exposure())
+    }
+
+    /// Try to commit `estimate` for `job`. Returns false (and commits
+    /// nothing) if that would push exposure past the budget.
+    pub fn commit(&mut self, job: JobId, estimate: GridDollars) -> bool {
+        debug_assert!(estimate >= 0.0);
+        debug_assert!(
+            !self.committed.contains_key(&job),
+            "double commit for {job}"
+        );
+        if let Some(b) = self.budget {
+            if self.exposure() + estimate > b + 1e-9 {
+                return false;
+            }
+        }
+        self.committed.insert(job, estimate);
+        true
+    }
+
+    /// Settle `job` at its actual metered cost, replacing the commitment.
+    pub fn settle(&mut self, job: JobId, actual: GridDollars, resource: &str) {
+        debug_assert!(actual >= 0.0);
+        self.committed.remove(&job);
+        self.settled += actual;
+        *self.by_resource.entry(resource.to_string()).or_insert(0.0) += actual;
+    }
+
+    /// Release `job`'s commitment (failure/cancel), billing any partial use.
+    pub fn release(&mut self, job: JobId, partial: GridDollars, resource: &str) {
+        self.committed.remove(&job);
+        if partial > 0.0 {
+            self.settled += partial;
+            *self.by_resource.entry(resource.to_string()).or_insert(0.0) +=
+                partial;
+        }
+    }
+
+    /// Per-resource settled totals (reporting).
+    pub fn by_resource(&self) -> &BTreeMap<String, GridDollars> {
+        &self.by_resource
+    }
+
+    /// Invariant check: per-resource totals sum to the settled figure.
+    pub fn check_conservation(&self) -> bool {
+        let sum: GridDollars = self.by_resource.values().sum();
+        (sum - self.settled).abs() <= 1e-6 * self.settled.abs().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_settle_flow() {
+        let mut l = Ledger::new(Some(100.0));
+        assert!(l.commit(JobId(0), 40.0));
+        assert!(l.commit(JobId(1), 40.0));
+        assert_eq!(l.exposure(), 80.0);
+        // Third commit would exceed the budget.
+        assert!(!l.commit(JobId(2), 40.0));
+        assert_eq!(l.exposure(), 80.0);
+        // Settle below estimate frees headroom.
+        l.settle(JobId(0), 25.0, "lemon0.anl.gov");
+        assert_eq!(l.settled(), 25.0);
+        assert_eq!(l.exposure(), 65.0);
+        assert!(l.commit(JobId(2), 30.0));
+    }
+
+    #[test]
+    fn unlimited_budget_always_commits() {
+        let mut l = Ledger::new(None);
+        for i in 0..1000 {
+            assert!(l.commit(JobId(i), 1e6));
+        }
+        assert_eq!(l.headroom(), None);
+    }
+
+    #[test]
+    fn release_with_partial_billing() {
+        let mut l = Ledger::new(Some(50.0));
+        assert!(l.commit(JobId(0), 20.0));
+        l.release(JobId(0), 5.0, "tuva1.isi.edu");
+        assert_eq!(l.committed(), 0.0);
+        assert_eq!(l.settled(), 5.0);
+        assert!(l.check_conservation());
+    }
+
+    #[test]
+    fn per_resource_accumulation() {
+        let mut l = Ledger::new(None);
+        l.commit(JobId(0), 1.0);
+        l.commit(JobId(1), 1.0);
+        l.commit(JobId(2), 1.0);
+        l.settle(JobId(0), 3.0, "a");
+        l.settle(JobId(1), 4.0, "a");
+        l.settle(JobId(2), 5.0, "b");
+        assert_eq!(l.by_resource()["a"], 7.0);
+        assert_eq!(l.by_resource()["b"], 5.0);
+        assert!(l.check_conservation());
+    }
+
+    #[test]
+    fn headroom_tracks_exposure() {
+        let mut l = Ledger::new(Some(10.0));
+        assert_eq!(l.headroom(), Some(10.0));
+        l.commit(JobId(0), 4.0);
+        assert_eq!(l.headroom(), Some(6.0));
+        l.settle(JobId(0), 6.0, "a"); // actual over estimate
+        assert_eq!(l.headroom(), Some(4.0));
+    }
+}

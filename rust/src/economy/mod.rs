@@ -1,0 +1,20 @@
+//! The computational economy (paper §3).
+//!
+//! * [`price`] — owner-set resource pricing: base rate scaled by machine
+//!   speed, peak/off-peak time-of-day multipliers in the *owner's* timezone,
+//!   and per-user discounts ("cost can vary from one user to another").
+//! * [`ledger`] — double-entry accounting of experiment spend: funds are
+//!   *committed* when a job is dispatched (so the scheduler can never
+//!   over-commit a budget) and *settled* to actual CPU-time cost when the
+//!   job completes.
+//! * [`grace`] — the GRACE trading layer sketched in §7 (future work in the
+//!   paper, implemented here as the extension feature): broker posts
+//!   tenders, per-owner bid-servers answer with priced offers, and the
+//!   bid-manager runs a deadline-aware selection over the offers.
+
+pub mod grace;
+pub mod ledger;
+pub mod price;
+
+pub use ledger::Ledger;
+pub use price::PriceModel;

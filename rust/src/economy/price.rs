@@ -1,0 +1,187 @@
+//! Owner-set resource pricing (paper §3).
+//!
+//! "The cost of resources can vary dynamically from time to time and the
+//! resource owner will have the full control over deciding access cost.
+//! Further, the cost can vary from one user to another."
+//!
+//! Prices are quoted in G$ per CPU-second on the priced machine. A
+//! [`PriceModel`] composes:
+//!
+//! * a **base rate** — the owner's price for one CPU-second, off-peak;
+//!   owners of faster machines typically (but not always) charge more;
+//! * a **peak multiplier** applied during the owner's local business hours
+//!   ("high @ daytime and low @ night");
+//! * optional **per-user discounts** negotiated out of band.
+
+use crate::types::GridDollars;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Peak window in the owner's local time (hours).
+pub const PEAK_START_H: f64 = 8.0;
+pub const PEAK_END_H: f64 = 18.0;
+
+/// A resource owner's pricing policy.
+#[derive(Debug, Clone)]
+pub struct PriceModel {
+    /// G$ per CPU-second, off-peak, before discounts.
+    pub base_rate: GridDollars,
+    /// Multiplier during local business hours (1.0 = flat pricing).
+    pub peak_multiplier: f64,
+    /// Whether the owner uses time-of-day pricing at all.
+    pub time_of_day: bool,
+    /// Per-user rate multipliers (e.g. 0.8 = 20% discount).
+    pub user_discounts: BTreeMap<String, f64>,
+}
+
+impl PriceModel {
+    /// Flat price, no peak, no discounts.
+    pub fn flat(base_rate: GridDollars) -> PriceModel {
+        PriceModel {
+            base_rate,
+            peak_multiplier: 1.0,
+            time_of_day: false,
+            user_discounts: BTreeMap::new(),
+        }
+    }
+
+    /// The generator used by the testbed builder: an owner prices a machine
+    /// of relative `speed` with an idiosyncratic `margin`, an optional
+    /// peak policy, and no standing discounts.
+    pub fn owner_policy(
+        speed: f64,
+        margin: f64,
+        peak_multiplier: f64,
+        time_of_day: bool,
+    ) -> PriceModel {
+        PriceModel {
+            // Faster machines cost more per second; the margin models owners
+            // who under- or over-price relative to capability, which is what
+            // gives the cost-optimizing scheduler something to exploit.
+            base_rate: speed * margin,
+            peak_multiplier,
+            time_of_day,
+            user_discounts: BTreeMap::new(),
+        }
+    }
+
+    /// Quoted G$ per CPU-second for `user` when the owner's local clock
+    /// reads `local_hour` (0..24).
+    pub fn rate_at(&self, local_hour: f64, user: &str) -> GridDollars {
+        let mut rate = self.base_rate;
+        if self.time_of_day && (PEAK_START_H..PEAK_END_H).contains(&local_hour) {
+            rate *= self.peak_multiplier;
+        }
+        if let Some(d) = self.user_discounts.get(user) {
+            rate *= d;
+        }
+        rate
+    }
+
+    /// True when the owner's peak window covers `local_hour`.
+    pub fn is_peak(&self, local_hour: f64) -> bool {
+        self.time_of_day && (PEAK_START_H..PEAK_END_H).contains(&local_hour)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", Json::num(self.base_rate)),
+            ("peak_mult", Json::num(self.peak_multiplier)),
+            ("tod", Json::Bool(self.time_of_day)),
+            (
+                "discounts",
+                Json::Obj(
+                    self.user_discounts
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<PriceModel> {
+        let mut user_discounts = BTreeMap::new();
+        if let Some(m) = v.get("discounts").as_obj() {
+            for (k, d) in m {
+                user_discounts.insert(
+                    k.clone(),
+                    d.as_f64().ok_or_else(|| anyhow::anyhow!("bad discount"))?,
+                );
+            }
+        }
+        Ok(PriceModel {
+            base_rate: v.req_f64("base")?,
+            peak_multiplier: v.req_f64("peak_mult")?,
+            time_of_day: v.get("tod").as_bool().unwrap_or(false),
+            user_discounts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_pricing_ignores_time() {
+        let p = PriceModel::flat(2.0);
+        assert_eq!(p.rate_at(3.0, "u"), 2.0);
+        assert_eq!(p.rate_at(12.0, "u"), 2.0);
+    }
+
+    #[test]
+    fn peak_hours_cost_more() {
+        let p = PriceModel {
+            base_rate: 1.0,
+            peak_multiplier: 2.5,
+            time_of_day: true,
+            user_discounts: BTreeMap::new(),
+        };
+        assert_eq!(p.rate_at(12.0, "u"), 2.5); // noon local = peak
+        assert_eq!(p.rate_at(3.0, "u"), 1.0); // 3am local = off-peak
+        assert_eq!(p.rate_at(7.99, "u"), 1.0);
+        assert_eq!(p.rate_at(8.0, "u"), 2.5);
+        assert_eq!(p.rate_at(18.0, "u"), 1.0); // end exclusive
+        assert!(p.is_peak(9.0));
+        assert!(!p.is_peak(20.0));
+    }
+
+    #[test]
+    fn per_user_discounts() {
+        let mut p = PriceModel::flat(4.0);
+        p.user_discounts.insert("rajkumar".into(), 0.5);
+        assert_eq!(p.rate_at(0.0, "rajkumar"), 2.0);
+        assert_eq!(p.rate_at(0.0, "other"), 4.0);
+    }
+
+    #[test]
+    fn discount_composes_with_peak() {
+        let mut p = PriceModel {
+            base_rate: 1.0,
+            peak_multiplier: 3.0,
+            time_of_day: true,
+            user_discounts: BTreeMap::new(),
+        };
+        p.user_discounts.insert("u".into(), 0.5);
+        assert_eq!(p.rate_at(10.0, "u"), 1.5);
+    }
+
+    #[test]
+    fn owner_policy_scales_with_speed() {
+        let slow = PriceModel::owner_policy(0.5, 1.0, 2.0, false);
+        let fast = PriceModel::owner_policy(2.0, 1.0, 2.0, false);
+        assert!(fast.base_rate > slow.base_rate);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = PriceModel::owner_policy(1.3, 0.9, 2.2, true);
+        p.user_discounts.insert("davida".into(), 0.75);
+        let j = p.to_json().to_string();
+        let back = PriceModel::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert!((back.base_rate - p.base_rate).abs() < 1e-12);
+        assert_eq!(back.time_of_day, p.time_of_day);
+        assert_eq!(back.user_discounts.get("davida"), Some(&0.75));
+    }
+}

@@ -1,0 +1,292 @@
+//! Experiment persistence: append-only JSON-lines journal + restart.
+//!
+//! "The parametric engine maintains the state of the whole experiment and
+//! ensures that the state is recorded in persistent storage. This allows
+//! the experiment to be restarted if the node running Nimrod goes down."
+//!
+//! Format: line 1 is a header (plan source, seed, envelope); every
+//! subsequent line is one transition record. Recovery replays transitions
+//! onto a freshly-expanded job table; jobs that were in flight at the crash
+//! are rolled back to `Ready` (their attempt still counts — the work was
+//! lost, the bill may not be recoverable, so we re-dispatch conservatively).
+
+use super::{Experiment, JobState};
+use crate::plan::{expand, Plan};
+use crate::types::{JobId, ResourceId};
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Append-only journal writer.
+pub struct Journal {
+    out: BufWriter<File>,
+}
+
+impl Journal {
+    /// Create a new journal, writing the header.
+    pub fn create(
+        path: &Path,
+        plan_src: &str,
+        seed: u64,
+        exp: &Experiment,
+    ) -> Result<Journal> {
+        let file = File::create(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        let header = Json::obj(vec![
+            ("type", Json::str("header")),
+            ("plan", Json::str(plan_src)),
+            ("seed", Json::num(seed as f64)),
+            ("deadline", Json::num(exp.deadline)),
+            (
+                "budget",
+                exp.budget.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("user", Json::str(&exp.user)),
+            ("max_attempts", Json::num(exp.max_attempts as f64)),
+        ]);
+        writeln!(out, "{}", header.to_string())?;
+        out.flush()?;
+        Ok(Journal { out })
+    }
+
+    /// Open an existing journal for appending (after recovery).
+    pub fn append_to(path: &Path) -> Result<Journal> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Journal {
+            out: BufWriter::new(file),
+        })
+    }
+
+    fn record(&mut self, fields: Vec<(&str, Json)>) -> Result<()> {
+        writeln!(self.out, "{}", Json::obj(fields).to_string())?;
+        // Flush per record: the journal exists to survive crashes.
+        self.out.flush()?;
+        Ok(())
+    }
+
+    pub fn dispatched(&mut self, job: JobId, rid: ResourceId, at: f64) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("dispatch")),
+            ("job", Json::num(job.0 as f64)),
+            ("rid", Json::num(rid.0 as f64)),
+            ("at", Json::num(at)),
+        ])
+    }
+
+    pub fn started(&mut self, job: JobId, at: f64) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("start")),
+            ("job", Json::num(job.0 as f64)),
+            ("at", Json::num(at)),
+        ])
+    }
+
+    pub fn completed(
+        &mut self,
+        job: JobId,
+        at: f64,
+        cpu_s: f64,
+        cost: f64,
+    ) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("complete")),
+            ("job", Json::num(job.0 as f64)),
+            ("at", Json::num(at)),
+            ("cpu_s", Json::num(cpu_s)),
+            ("cost", Json::num(cost)),
+        ])
+    }
+
+    pub fn failed_attempt(&mut self, job: JobId) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("fail")),
+            ("job", Json::num(job.0 as f64)),
+        ])
+    }
+
+    pub fn released(&mut self, job: JobId) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("release")),
+            ("job", Json::num(job.0 as f64)),
+        ])
+    }
+}
+
+/// Recovered state: the rebuilt experiment plus the header metadata.
+pub struct Recovered {
+    pub experiment: Experiment,
+    pub plan_src: String,
+    pub seed: u64,
+}
+
+/// Replay a journal into an [`Experiment`].
+pub fn recover(path: &Path) -> Result<Recovered> {
+    let file = File::open(path)
+        .with_context(|| format!("open journal {}", path.display()))?;
+    let mut lines = BufReader::new(file).lines();
+    let header_line = match lines.next() {
+        Some(l) => l?,
+        None => bail!("journal is empty"),
+    };
+    let header = parse(&header_line).context("parse journal header")?;
+    if header.req_str("type")? != "header" {
+        bail!("first journal line is not a header");
+    }
+    let plan_src = header.req_str("plan")?.to_string();
+    let seed = header.req_f64("seed")? as u64;
+    let plan = Plan::parse(&plan_src).context("re-parse journaled plan")?;
+    let specs = expand(&plan, seed).context("re-expand journaled plan")?;
+    let mut exp = Experiment::new(
+        specs,
+        header.req_f64("deadline")?,
+        header.get("budget").as_f64(),
+        header.req_str("user")?,
+        header.req_f64("max_attempts")? as u32,
+    );
+
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue; // torn tail write
+        }
+        let Ok(rec) = parse(&line) else {
+            continue; // torn tail write: stop-loss, keep what we have
+        };
+        let job = JobId(rec.req_f64("job")? as u32);
+        match rec.req_str("type")? {
+            "dispatch" => {
+                let rid = ResourceId(rec.req_f64("rid")? as u32);
+                exp.dispatch(job, rid, rec.req_f64("at")?)?;
+            }
+            "start" => exp.start(job, rec.req_f64("at")?)?,
+            "complete" => exp.complete(
+                job,
+                rec.req_f64("at")?,
+                rec.req_f64("cpu_s")?,
+                rec.req_f64("cost")?,
+            )?,
+            "fail" => {
+                exp.fail_attempt(job)?;
+            }
+            "release" => {
+                exp.release(job)?;
+            }
+            other => bail!("unknown journal record type `{other}`"),
+        }
+    }
+
+    // Roll in-flight jobs back to Ready: the engine died holding them.
+    for idx in 0..exp.jobs.len() {
+        let state = exp.jobs[idx].state.clone();
+        if matches!(state, JobState::Dispatched { .. } | JobState::Running { .. })
+        {
+            // Attempt already counted at dispatch; a crash must not be able
+            // to exhaust attempts by itself, so refund it.
+            exp.jobs[idx].attempts = exp.jobs[idx].attempts.saturating_sub(1);
+            exp.jobs[idx].state = JobState::Ready;
+        }
+    }
+    Ok(Recovered {
+        experiment: exp,
+        plan_src,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+
+    const PLAN: &str = "parameter i integer range from 1 to 4\ntask main\nexecute run $i\nendtask";
+
+    fn fresh(dir: &Path) -> (Experiment, Journal, std::path::PathBuf) {
+        let specs =
+            expand(&Plan::parse(PLAN).unwrap(), 9).unwrap();
+        let exp = Experiment::new(specs, 7200.0, Some(500.0), "davida", 3);
+        let path = dir.join("exp.journal");
+        let j = Journal::create(&path, PLAN, 9, &exp).unwrap();
+        (exp, j, path)
+    }
+
+    #[test]
+    fn roundtrip_mixed_states() {
+        let dir = std::env::temp_dir().join(format!("nimrod-j-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (mut exp, mut j, path) = fresh(&dir);
+
+        // j0: done. j1: running (in-flight at crash). j2: failed once,
+        // requeued. j3: untouched.
+        exp.dispatch(JobId(0), ResourceId(5), 10.0).unwrap();
+        j.dispatched(JobId(0), ResourceId(5), 10.0).unwrap();
+        exp.start(JobId(0), 20.0).unwrap();
+        j.started(JobId(0), 20.0).unwrap();
+        exp.complete(JobId(0), 100.0, 80.0, 3.5).unwrap();
+        j.completed(JobId(0), 100.0, 80.0, 3.5).unwrap();
+
+        exp.dispatch(JobId(1), ResourceId(6), 15.0).unwrap();
+        j.dispatched(JobId(1), ResourceId(6), 15.0).unwrap();
+        exp.start(JobId(1), 25.0).unwrap();
+        j.started(JobId(1), 25.0).unwrap();
+
+        exp.dispatch(JobId(2), ResourceId(7), 18.0).unwrap();
+        j.dispatched(JobId(2), ResourceId(7), 18.0).unwrap();
+        exp.fail_attempt(JobId(2)).unwrap();
+        j.failed_attempt(JobId(2)).unwrap();
+        drop(j); // crash
+
+        let rec = recover(&path).unwrap();
+        let e = rec.experiment;
+        assert_eq!(rec.seed, 9);
+        assert_eq!(e.user, "davida");
+        assert_eq!(e.budget, Some(500.0));
+        assert_eq!(e.jobs.len(), 4);
+        // j0 stays Done with its cost.
+        assert!(matches!(e.job(JobId(0)).state, JobState::Done { cost, .. } if cost == 3.5));
+        // j1 rolled back to Ready with the attempt refunded.
+        assert_eq!(e.job(JobId(1)).state, JobState::Ready);
+        assert_eq!(e.job(JobId(1)).attempts, 0);
+        // j2 Ready with one burned attempt.
+        assert_eq!(e.job(JobId(2)).state, JobState::Ready);
+        assert_eq!(e.job(JobId(2)).attempts, 1);
+        // j3 untouched.
+        assert_eq!(e.job(JobId(3)).state, JobState::Ready);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_line_tolerated() {
+        let dir =
+            std::env::temp_dir().join(format!("nimrod-j2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (mut exp, mut j, path) = fresh(&dir);
+        exp.dispatch(JobId(0), ResourceId(1), 5.0).unwrap();
+        j.dispatched(JobId(0), ResourceId(1), 5.0).unwrap();
+        drop(j);
+        // Simulate a torn write at crash.
+        use std::io::Write as _;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"type\":\"comp").unwrap();
+        drop(f);
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.experiment.job(JobId(0)).state, JobState::Ready);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_journal_is_error() {
+        let dir =
+            std::env::temp_dir().join(format!("nimrod-j3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.journal");
+        std::fs::write(&path, "").unwrap();
+        assert!(recover(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,365 @@
+//! The parametric engine (paper §2): "a persistent job control agent and
+//! the central component from where the whole experiment is managed".
+//!
+//! Owns the job table and its state machine, enforces legal transitions,
+//! tracks attempts, and journals every transition to persistent storage so
+//! the experiment "can be restarted if the node running Nimrod goes down"
+//! ([`journal`]).
+
+pub mod journal;
+
+use crate::plan::JobSpec;
+use crate::types::{GridDollars, JobId, ResourceId, SimTime};
+
+/// Job lifecycle. Legal transitions:
+///
+/// ```text
+/// Ready ─→ Dispatched ─→ Running ─→ Done
+///   ↑          │            │
+///   └──────────┴────────────┘  (failure / cancel, attempts < max)
+///                └─→ Failed     (attempts exhausted)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    /// Awaiting dispatch (initial, or re-queued after failure).
+    Ready,
+    /// Submitted to a resource's job manager (staging/queued).
+    Dispatched { rid: ResourceId, at: SimTime },
+    /// Executing.
+    Running { rid: ResourceId, started: SimTime },
+    /// Finished; terminal.
+    Done {
+        rid: ResourceId,
+        finished: SimTime,
+        cpu_s: f64,
+        cost: GridDollars,
+    },
+    /// Attempts exhausted; terminal.
+    Failed,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed)
+    }
+
+    /// The resource currently responsible for the job, if any.
+    pub fn resource(&self) -> Option<ResourceId> {
+        match self {
+            JobState::Dispatched { rid, .. } | JobState::Running { rid, .. } => {
+                Some(*rid)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One job: its spec plus runtime state.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub attempts: u32,
+}
+
+/// Transition error — indicates a driver bug, surfaced loudly.
+#[derive(Debug, thiserror::Error)]
+#[error("illegal transition for {job}: {from:?} -> {to}")]
+pub struct BadTransition {
+    pub job: JobId,
+    pub from: JobState,
+    pub to: &'static str,
+}
+
+/// The experiment: job table + deadline/budget envelope.
+#[derive(Debug)]
+pub struct Experiment {
+    pub jobs: Vec<Job>,
+    pub deadline: SimTime,
+    pub budget: Option<GridDollars>,
+    pub user: String,
+    pub max_attempts: u32,
+}
+
+impl Experiment {
+    pub fn new(
+        specs: Vec<JobSpec>,
+        deadline: SimTime,
+        budget: Option<GridDollars>,
+        user: &str,
+        max_attempts: u32,
+    ) -> Experiment {
+        Experiment {
+            jobs: specs
+                .into_iter()
+                .map(|spec| Job {
+                    spec,
+                    state: JobState::Ready,
+                    attempts: 0,
+                })
+                .collect(),
+            deadline,
+            budget,
+            user: user.to_string(),
+            max_attempts,
+        }
+    }
+
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id.0 as usize]
+    }
+
+    fn job_mut(&mut self, id: JobId) -> &mut Job {
+        &mut self.jobs[id.0 as usize]
+    }
+
+    // -- queries -------------------------------------------------------------
+
+    /// Jobs not yet in a terminal state (the scheduler's `remaining_jobs`).
+    pub fn remaining(&self) -> u32 {
+        self.jobs.iter().filter(|j| !j.state.is_terminal()).count() as u32
+    }
+
+    pub fn completed(&self) -> u32 {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Done { .. }))
+            .count() as u32
+    }
+
+    pub fn failed(&self) -> u32 {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Failed))
+            .count() as u32
+    }
+
+    /// All terminal ⇒ the experiment is over.
+    pub fn finished(&self) -> bool {
+        self.jobs.iter().all(|j| j.state.is_terminal())
+    }
+
+    /// Iterator over Ready jobs in id order (dispatch order).
+    pub fn ready_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.jobs
+            .iter()
+            .filter(|j| j.state == JobState::Ready)
+            .map(|j| j.spec.id)
+    }
+
+    /// Total settled cost across Done jobs.
+    pub fn total_cost(&self) -> GridDollars {
+        self.jobs
+            .iter()
+            .filter_map(|j| match j.state {
+                JobState::Done { cost, .. } => Some(cost),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Virtual time the last job finished.
+    pub fn makespan(&self) -> SimTime {
+        self.jobs
+            .iter()
+            .filter_map(|j| match j.state {
+                JobState::Done { finished, .. } => Some(finished),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    // -- transitions ---------------------------------------------------------
+
+    pub fn dispatch(
+        &mut self,
+        id: JobId,
+        rid: ResourceId,
+        now: SimTime,
+    ) -> Result<(), BadTransition> {
+        let job = self.job_mut(id);
+        if job.state != JobState::Ready {
+            return Err(BadTransition {
+                job: id,
+                from: job.state.clone(),
+                to: "Dispatched",
+            });
+        }
+        job.attempts += 1;
+        job.state = JobState::Dispatched { rid, at: now };
+        Ok(())
+    }
+
+    pub fn start(&mut self, id: JobId, now: SimTime) -> Result<(), BadTransition> {
+        let job = self.job_mut(id);
+        match job.state {
+            JobState::Dispatched { rid, .. } => {
+                job.state = JobState::Running { rid, started: now };
+                Ok(())
+            }
+            _ => Err(BadTransition {
+                job: id,
+                from: job.state.clone(),
+                to: "Running",
+            }),
+        }
+    }
+
+    pub fn complete(
+        &mut self,
+        id: JobId,
+        now: SimTime,
+        cpu_s: f64,
+        cost: GridDollars,
+    ) -> Result<(), BadTransition> {
+        let job = self.job_mut(id);
+        match job.state {
+            JobState::Running { rid, .. } => {
+                job.state = JobState::Done {
+                    rid,
+                    finished: now,
+                    cpu_s,
+                    cost,
+                };
+                Ok(())
+            }
+            _ => Err(BadTransition {
+                job: id,
+                from: job.state.clone(),
+                to: "Done",
+            }),
+        }
+    }
+
+    /// Failure or cancellation of an in-flight job: re-queues while attempts
+    /// remain, otherwise terminal-fails. Returns the resulting state.
+    pub fn fail_attempt(&mut self, id: JobId) -> Result<&JobState, BadTransition> {
+        let max = self.max_attempts;
+        let job = self.job_mut(id);
+        match job.state {
+            JobState::Dispatched { .. } | JobState::Running { .. } => {
+                job.state = if job.attempts >= max {
+                    JobState::Failed
+                } else {
+                    JobState::Ready
+                };
+                Ok(&job.state)
+            }
+            _ => Err(BadTransition {
+                job: id,
+                from: job.state.clone(),
+                to: "Ready/Failed",
+            }),
+        }
+    }
+
+    /// Scheduler-initiated withdrawal of a queued (not yet Running) job:
+    /// back to Ready with the dispatch attempt refunded — migration must
+    /// never burn attempts (only failures do).
+    pub fn release(&mut self, id: JobId) -> Result<(), BadTransition> {
+        let job = self.job_mut(id);
+        match job.state {
+            JobState::Dispatched { .. } => {
+                job.attempts = job.attempts.saturating_sub(1);
+                job.state = JobState::Ready;
+                Ok(())
+            }
+            _ => Err(BadTransition {
+                job: id,
+                from: job.state.clone(),
+                to: "Ready (release)",
+            }),
+        }
+    }
+
+    /// In-flight job count per resource (drives dispatcher top-ups).
+    pub fn in_flight_on(&self, rid: ResourceId) -> u32 {
+        self.jobs
+            .iter()
+            .filter(|j| j.state.resource() == Some(rid))
+            .count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{expand, Plan};
+
+    fn specs(n: usize) -> Vec<JobSpec> {
+        let src = format!(
+            "parameter i integer range from 1 to {n}\ntask main\nexecute run $i\nendtask"
+        );
+        expand(&Plan::parse(&src).unwrap(), 0).unwrap()
+    }
+
+    fn exp(n: usize) -> Experiment {
+        Experiment::new(specs(n), 3600.0, None, "rajkumar", 3)
+    }
+
+    #[test]
+    fn happy_path_lifecycle() {
+        let mut e = exp(2);
+        assert_eq!(e.remaining(), 2);
+        e.dispatch(JobId(0), ResourceId(4), 10.0).unwrap();
+        e.start(JobId(0), 20.0).unwrap();
+        e.complete(JobId(0), 50.0, 30.0, 1.5).unwrap();
+        assert_eq!(e.completed(), 1);
+        assert_eq!(e.remaining(), 1);
+        assert!(!e.finished());
+        assert_eq!(e.total_cost(), 1.5);
+        assert_eq!(e.makespan(), 50.0);
+        assert_eq!(e.in_flight_on(ResourceId(4)), 0);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut e = exp(1);
+        // Can't start or complete a Ready job.
+        assert!(e.start(JobId(0), 0.0).is_err());
+        assert!(e.complete(JobId(0), 0.0, 0.0, 0.0).is_err());
+        e.dispatch(JobId(0), ResourceId(0), 0.0).unwrap();
+        // Can't dispatch twice.
+        assert!(e.dispatch(JobId(0), ResourceId(1), 0.0).is_err());
+        e.start(JobId(0), 0.0).unwrap();
+        e.complete(JobId(0), 1.0, 1.0, 0.1).unwrap();
+        // Terminal is terminal.
+        assert!(e.fail_attempt(JobId(0)).is_err());
+        assert!(e.dispatch(JobId(0), ResourceId(0), 2.0).is_err());
+    }
+
+    #[test]
+    fn failure_requeues_until_attempts_exhausted() {
+        let mut e = exp(1);
+        for attempt in 1..=3 {
+            e.dispatch(JobId(0), ResourceId(0), 0.0).unwrap();
+            assert_eq!(e.job(JobId(0)).attempts, attempt);
+            let state = e.fail_attempt(JobId(0)).unwrap().clone();
+            if attempt < 3 {
+                assert_eq!(state, JobState::Ready);
+            } else {
+                assert_eq!(state, JobState::Failed);
+            }
+        }
+        assert_eq!(e.failed(), 1);
+        assert!(e.finished());
+    }
+
+    #[test]
+    fn running_failure_also_requeues() {
+        let mut e = exp(1);
+        e.dispatch(JobId(0), ResourceId(2), 0.0).unwrap();
+        e.start(JobId(0), 1.0).unwrap();
+        assert_eq!(e.in_flight_on(ResourceId(2)), 1);
+        assert_eq!(*e.fail_attempt(JobId(0)).unwrap(), JobState::Ready);
+        assert_eq!(e.in_flight_on(ResourceId(2)), 0);
+    }
+
+    #[test]
+    fn ready_iteration_in_id_order() {
+        let mut e = exp(3);
+        e.dispatch(JobId(1), ResourceId(0), 0.0).unwrap();
+        let ready: Vec<JobId> = e.ready_jobs().collect();
+        assert_eq!(ready, vec![JobId(0), JobId(2)]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Competing experiments (paper §3).
+//!
+//! "This system tries to find sufficient resources to meet the user's
+//! deadline, and adapts the list of machines it is using depending on
+//! competition for them. However, the cost changes as other competing
+//! experiments are put on the grid."
+//!
+//! Modelled as a population of background task farms arriving as a Poisson
+//! process. Each claims a bundle of CPUs on a random subset of resources
+//! for an exponential holding time. Effects on the foreground experiment:
+//!
+//! * **capacity**: claimed CPUs are unavailable to GRAM (slots shrink);
+//! * **price**: owners charge a *demand premium* that rises with the
+//!   fraction of their machine already claimed — the mechanism that makes
+//!   "the cost changes as other competing experiments are put on the grid"
+//!   true in this testbed.
+
+use crate::grid::testbed::Testbed;
+use crate::types::{ResourceId, SimTime};
+use crate::util::rng::Rng;
+
+/// Demand premium slope: a fully-contended machine costs this factor more.
+pub const DEMAND_PREMIUM_MAX: f64 = 1.5;
+
+/// One background experiment occupying grid capacity.
+#[derive(Debug, Clone)]
+pub struct CompetingLoad {
+    /// CPUs claimed per resource.
+    pub claims: Vec<(ResourceId, u32)>,
+    pub departs_at: SimTime,
+}
+
+/// Configuration of the competition process.
+#[derive(Debug, Clone)]
+pub struct CompetitionModel {
+    /// Mean seconds between competing-experiment arrivals (Poisson).
+    pub mean_interarrival_s: f64,
+    /// Mean holding time of a competing experiment, seconds.
+    pub mean_duration_s: f64,
+    /// Mean CPUs a competing experiment claims in total.
+    pub mean_cpus: f64,
+}
+
+impl Default for CompetitionModel {
+    fn default() -> Self {
+        CompetitionModel {
+            mean_interarrival_s: 2.0 * 3600.0,
+            mean_duration_s: 4.0 * 3600.0,
+            mean_cpus: 30.0,
+        }
+    }
+}
+
+/// Runtime state: how many CPUs each resource has lost to competitors.
+#[derive(Debug, Clone)]
+pub struct Competition {
+    pub model: CompetitionModel,
+    claimed: Vec<u32>,
+    active: Vec<CompetingLoad>,
+    rng: Rng,
+}
+
+impl Competition {
+    pub fn new(tb: &Testbed, model: CompetitionModel, rng: Rng) -> Competition {
+        Competition {
+            model,
+            claimed: vec![0; tb.resources.len()],
+            active: Vec::new(),
+            rng,
+        }
+    }
+
+    /// Seconds until the next competing experiment arrives.
+    pub fn draw_interarrival(&mut self) -> SimTime {
+        self.rng.exponential(self.model.mean_interarrival_s)
+    }
+
+    /// A new competing experiment lands: claim CPUs across random
+    /// resources. Returns its departure time.
+    pub fn arrive(&mut self, tb: &Testbed, now: SimTime) -> SimTime {
+        let mut remaining =
+            self.rng.exponential(self.model.mean_cpus).round().max(1.0) as u32;
+        let mut claims = Vec::new();
+        let mut guard = 0;
+        while remaining > 0 && guard < 4 * tb.resources.len() {
+            guard += 1;
+            let idx = self.rng.below(tb.resources.len());
+            let spec = &tb.resources[idx];
+            let free = spec.cpus.saturating_sub(self.claimed[idx]);
+            if free == 0 {
+                continue;
+            }
+            let take = remaining.min(free).min(1 + self.rng.below(8) as u32);
+            self.claimed[idx] += take;
+            claims.push((spec.id, take));
+            remaining -= take;
+        }
+        let departs_at = now + self.rng.exponential(self.model.mean_duration_s);
+        self.active.push(CompetingLoad { claims, departs_at });
+        departs_at
+    }
+
+    /// Release every competing experiment whose departure time has passed.
+    pub fn depart_until(&mut self, now: SimTime) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].departs_at <= now {
+                let load = self.active.swap_remove(i);
+                for (rid, n) in load.claims {
+                    let c = &mut self.claimed[rid.0 as usize];
+                    *c = c.saturating_sub(n);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// CPUs currently claimed by competitors on `rid`.
+    pub fn claimed(&self, rid: ResourceId) -> u32 {
+        self.claimed[rid.0 as usize]
+    }
+
+    /// Competing experiments currently on the grid.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Slots left for the foreground experiment on a resource.
+    pub fn free_slots(&self, tb: &Testbed, rid: ResourceId, base_slots: u32) -> u32 {
+        let spec = tb.spec(rid);
+        let free_cpus = spec.cpus.saturating_sub(self.claimed(rid));
+        base_slots.min(free_cpus)
+    }
+
+    /// Demand premium multiplier on the owner's quoted rate: 1.0 when idle,
+    /// up to [`DEMAND_PREMIUM_MAX`] when fully claimed.
+    pub fn demand_premium(&self, tb: &Testbed, rid: ResourceId) -> f64 {
+        let spec = tb.spec(rid);
+        if spec.cpus == 0 {
+            return 1.0;
+        }
+        let frac = self.claimed(rid) as f64 / spec.cpus as f64;
+        1.0 + (DEMAND_PREMIUM_MAX - 1.0) * frac.min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Testbed, Competition) {
+        let tb = Testbed::gusto(3, 0.5);
+        let comp =
+            Competition::new(&tb, CompetitionModel::default(), Rng::new(9));
+        (tb, comp)
+    }
+
+    #[test]
+    fn arrivals_claim_and_departures_release() {
+        let (tb, mut comp) = setup();
+        let total_before: u32 =
+            (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
+        assert_eq!(total_before, 0);
+        let departs = comp.arrive(&tb, 0.0);
+        assert!(comp.active_count() == 1);
+        let total: u32 = (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
+        assert!(total >= 1);
+        comp.depart_until(departs + 1.0);
+        assert_eq!(comp.active_count(), 0);
+        let total_after: u32 =
+            (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
+        assert_eq!(total_after, 0);
+    }
+
+    #[test]
+    fn claims_never_exceed_cpus() {
+        let (tb, mut comp) = setup();
+        for k in 0..50 {
+            comp.arrive(&tb, k as f64);
+        }
+        for spec in &tb.resources {
+            assert!(
+                comp.claimed(spec.id) <= spec.cpus,
+                "{}: {} > {}",
+                spec.name,
+                comp.claimed(spec.id),
+                spec.cpus
+            );
+        }
+    }
+
+    #[test]
+    fn premium_rises_with_contention() {
+        let (tb, mut comp) = setup();
+        let rid = tb.resources[0].id;
+        assert_eq!(comp.demand_premium(&tb, rid), 1.0);
+        // Saturate the grid with competitors.
+        for k in 0..100 {
+            comp.arrive(&tb, k as f64);
+        }
+        let contended = tb
+            .resources
+            .iter()
+            .find(|s| comp.claimed(s.id) > 0)
+            .expect("some contention");
+        let premium = comp.demand_premium(&tb, contended.id);
+        assert!(premium > 1.0 && premium <= DEMAND_PREMIUM_MAX);
+        // Slots shrink accordingly.
+        let slots = comp.free_slots(&tb, contended.id, contended.cpus);
+        assert!(slots < contended.cpus);
+    }
+
+    #[test]
+    fn interarrival_scale() {
+        let (_tb, mut comp) = setup();
+        let n = 2000;
+        let mean: f64 =
+            (0..n).map(|_| comp.draw_interarrival()).sum::<f64>() / n as f64;
+        assert!((mean / comp.model.mean_interarrival_s - 1.0).abs() < 0.1);
+    }
+}

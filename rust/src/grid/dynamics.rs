@@ -1,0 +1,150 @@
+//! Per-resource dynamic behaviour: background load and availability churn.
+//!
+//! These processes are what make the grid "dynamic" in the paper's sense —
+//! the scheduler must adapt its resource set because machine effective
+//! speeds drift (local owners use their machines) and machines leave/join
+//! the testbed (failures, maintenance).
+//!
+//! * **Background load** follows a mean-reverting AR(1) process clamped to
+//!   `[0, 0.95]`: `x' = ρ·x + (1-ρ)·μ + σ·ε`. A grid job on the machine
+//!   runs at `speed · (1 - x)`.
+//! * **Availability** alternates exponentially-distributed up/down periods
+//!   (means `mtbf_s` / `mttr_s`). A failure kills the resource's running
+//!   grid jobs (the engine re-queues them).
+
+use crate::grid::testbed::ResourceSpec;
+use crate::types::SimTime;
+use crate::util::rng::Rng;
+
+/// AR(1) persistence per update step.
+const LOAD_RHO: f64 = 0.9;
+/// Seconds between background-load updates.
+pub const LOAD_UPDATE_PERIOD_S: f64 = 300.0;
+
+/// Dynamic state of one resource.
+#[derive(Debug, Clone)]
+pub struct ResourceDyn {
+    pub up: bool,
+    /// Fraction of CPU consumed by local (non-grid) work, 0..0.95.
+    pub bg_load: f64,
+    /// Private RNG stream for this resource's processes.
+    rng: Rng,
+}
+
+impl ResourceDyn {
+    pub fn new(spec: &ResourceSpec, parent_rng: &mut Rng) -> ResourceDyn {
+        let mut rng = parent_rng.fork(spec.id.0 as u64);
+        let bg_load = (spec.bg_load_mean + rng.normal(0.0, spec.bg_load_vol))
+            .clamp(0.0, 0.95);
+        ResourceDyn {
+            up: true,
+            bg_load,
+            rng,
+        }
+    }
+
+    /// Advance the AR(1) load process one step.
+    pub fn step_load(&mut self, spec: &ResourceSpec) {
+        let eps = self.rng.normal(0.0, spec.bg_load_vol);
+        self.bg_load = (LOAD_RHO * self.bg_load
+            + (1.0 - LOAD_RHO) * spec.bg_load_mean
+            + eps)
+            .clamp(0.0, 0.95);
+    }
+
+    /// Effective speed for a grid job right now.
+    pub fn effective_speed(&self, spec: &ResourceSpec) -> f64 {
+        if !self.up {
+            0.0
+        } else {
+            spec.speed * (1.0 - self.bg_load)
+        }
+    }
+
+    /// Draw the time until this (currently up) resource next fails.
+    pub fn draw_uptime(&mut self, spec: &ResourceSpec) -> SimTime {
+        self.rng.exponential(spec.mtbf_s)
+    }
+
+    /// Draw the outage duration once failed.
+    pub fn draw_downtime(&mut self, spec: &ResourceSpec) -> SimTime {
+        self.rng.exponential(spec.mttr_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::economy::price::PriceModel;
+    use crate::grid::testbed::{AuthPolicy, QueueKind};
+    use crate::types::{Arch, Os, ResourceId, SiteId};
+
+    fn spec(mean: f64, vol: f64) -> ResourceSpec {
+        ResourceSpec {
+            id: ResourceId(0),
+            name: "test0".into(),
+            site: SiteId(0),
+            arch: Arch::Intel,
+            os: Os::Linux,
+            cpus: 4,
+            speed: 1.5,
+            mem_mb: 512,
+            queue: QueueKind::Interactive,
+            auth: AuthPolicy::AllUsers,
+            price: PriceModel::flat(1.0),
+            mtbf_s: 100_000.0,
+            mttr_s: 3600.0,
+            bg_load_mean: mean,
+            bg_load_vol: vol,
+            private_cluster: false,
+        }
+    }
+
+    #[test]
+    fn load_stays_in_bounds() {
+        let s = spec(0.4, 0.3);
+        let mut rng = Rng::new(5);
+        let mut d = ResourceDyn::new(&s, &mut rng);
+        for _ in 0..10_000 {
+            d.step_load(&s);
+            assert!((0.0..=0.95).contains(&d.bg_load), "load={}", d.bg_load);
+        }
+    }
+
+    #[test]
+    fn load_mean_reverts() {
+        let s = spec(0.3, 0.05);
+        let mut rng = Rng::new(6);
+        let mut d = ResourceDyn::new(&s, &mut rng);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            d.step_load(&s);
+            sum += d.bg_load;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.3).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn effective_speed_reflects_load_and_outage() {
+        let s = spec(0.5, 0.0);
+        let mut rng = Rng::new(7);
+        let mut d = ResourceDyn::new(&s, &mut rng);
+        d.bg_load = 0.5;
+        assert!((d.effective_speed(&s) - 0.75).abs() < 1e-12);
+        d.up = false;
+        assert_eq!(d.effective_speed(&s), 0.0);
+    }
+
+    #[test]
+    fn uptime_draws_have_right_scale() {
+        let s = spec(0.1, 0.01);
+        let mut rng = Rng::new(8);
+        let mut d = ResourceDyn::new(&s, &mut rng);
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| d.draw_uptime(&s)).sum::<f64>() / n as f64;
+        assert!((mean / s.mtbf_s - 1.0).abs() < 0.1, "mean={mean}");
+    }
+}

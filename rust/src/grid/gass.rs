@@ -1,0 +1,126 @@
+//! GASS analogue: storage servers and the file-staging time model.
+//!
+//! Nimrod/G's job-wrapper stages inputs to the node and results back via
+//! Globus GASS. Here each site runs a storage server; a transfer's duration
+//! is latency + size/bandwidth over the root↔site WAN link, degraded by the
+//! number of concurrent transfers sharing that link (the root side is the
+//! choke point for a parameter sweep, which is why staging matters to the
+//! scheduler at tight deadlines).
+
+use crate::grid::testbed::{NetLink, Testbed};
+use crate::types::{SimTime, SiteId};
+use std::collections::BTreeMap;
+
+/// A named file in experiment root storage or on a node.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FileRef {
+    pub name: String,
+}
+
+/// Per-site GASS server bookkeeping.
+#[derive(Debug, Clone, Default)]
+struct SiteServer {
+    active_transfers: u32,
+}
+
+/// The staging subsystem: tracks concurrent transfers per site link and
+/// computes transfer durations.
+#[derive(Debug, Clone, Default)]
+pub struct Gass {
+    servers: BTreeMap<SiteId, SiteServer>,
+    /// Total bytes moved (metrics).
+    pub bytes_moved: f64,
+    /// Total transfers performed.
+    pub transfers: u64,
+}
+
+impl Gass {
+    pub fn new(tb: &Testbed) -> Gass {
+        Gass {
+            servers: tb
+                .sites
+                .iter()
+                .map(|s| (s.id, SiteServer::default()))
+                .collect(),
+            bytes_moved: 0.0,
+            transfers: 0,
+        }
+    }
+
+    /// Begin a transfer of `bytes` between root storage and `site`; returns
+    /// its duration. Concurrency on the same link divides bandwidth.
+    /// The caller must pair this with [`Gass::end_transfer`].
+    pub fn begin_transfer(
+        &mut self,
+        tb: &Testbed,
+        site: SiteId,
+        bytes: f64,
+    ) -> SimTime {
+        let server = self.servers.entry(site).or_default();
+        server.active_transfers += 1;
+        let contention = server.active_transfers.max(1) as f64;
+        let link = tb.site(site).link;
+        let effective = NetLink {
+            bandwidth_mbps: link.bandwidth_mbps / contention,
+            latency_ms: link.latency_ms,
+        };
+        self.bytes_moved += bytes;
+        self.transfers += 1;
+        effective.transfer_seconds(bytes)
+    }
+
+    /// Mark a transfer finished (frees its bandwidth share).
+    pub fn end_transfer(&mut self, site: SiteId) {
+        if let Some(s) = self.servers.get_mut(&site) {
+            s.active_transfers = s.active_transfers.saturating_sub(1);
+        }
+    }
+
+    /// Transfers in flight to a site (tests/metrics).
+    pub fn active(&self, site: SiteId) -> u32 {
+        self.servers.get(&site).map(|s| s.active_transfers).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::testbed::Testbed;
+
+    #[test]
+    fn transfer_duration_scales_with_size() {
+        let tb = Testbed::gusto(1, 0.3);
+        let mut gass = Gass::new(&tb);
+        let site = tb.sites[0].id;
+        let t_small = gass.begin_transfer(&tb, site, 1e5);
+        gass.end_transfer(site);
+        let t_big = gass.begin_transfer(&tb, site, 1e7);
+        gass.end_transfer(site);
+        assert!(t_big > t_small * 10.0);
+    }
+
+    #[test]
+    fn contention_slows_concurrent_transfers() {
+        let tb = Testbed::gusto(1, 0.3);
+        let mut gass = Gass::new(&tb);
+        let site = tb.sites[0].id;
+        let alone = gass.begin_transfer(&tb, site, 1e7);
+        // Second concurrent transfer sees half the bandwidth.
+        let contended = gass.begin_transfer(&tb, site, 1e7);
+        assert!(contended > alone * 1.5);
+        assert_eq!(gass.active(site), 2);
+        gass.end_transfer(site);
+        gass.end_transfer(site);
+        assert_eq!(gass.active(site), 0);
+    }
+
+    #[test]
+    fn accounting() {
+        let tb = Testbed::gusto(1, 0.3);
+        let mut gass = Gass::new(&tb);
+        gass.begin_transfer(&tb, tb.sites[0].id, 100.0);
+        gass.begin_transfer(&tb, tb.sites[1].id, 200.0);
+        assert_eq!(gass.transfers, 2);
+        assert_eq!(gass.bytes_moved, 300.0);
+    }
+}

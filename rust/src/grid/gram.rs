@@ -1,0 +1,274 @@
+//! GRAM analogue: the per-resource job manager.
+//!
+//! The dispatcher talks to resources exclusively through this interface
+//! (submit / poll / cancel), as Nimrod/G's dispatcher talks to the Globus
+//! GRAM. The job manager is a pure state machine over queue slots; the
+//! simulation driver (or the live runtime) supplies timing.
+//!
+//! Queue semantics:
+//! * **Interactive** (fork jobmanager) — a job starts as soon as a CPU is
+//!   free; all CPUs are usable as slots.
+//! * **Batch** — at most `slots` grid jobs run concurrently and a job only
+//!   starts at the queue's next scheduling cycle, even on an idle machine.
+
+use crate::grid::testbed::{QueueKind, ResourceSpec};
+use crate::types::{JobId, SimTime};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Externally visible job status (GRAM job states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GramStatus {
+    /// Queued, not yet running.
+    Pending,
+    /// Executing.
+    Active,
+    /// Finished successfully.
+    Done,
+    /// Failed (machine went down, cancelled, ...).
+    Failed,
+}
+
+/// One resource's job manager.
+#[derive(Debug, Clone)]
+pub struct JobManager {
+    /// Max concurrently running grid jobs.
+    slots: u32,
+    /// Batch scheduling cycle (0 for interactive).
+    cycle_s: SimTime,
+    queue: VecDeque<JobId>,
+    running: BTreeMap<JobId, SimTime>, // job → start time
+    status: BTreeMap<JobId, GramStatus>,
+}
+
+impl JobManager {
+    pub fn new(spec: &ResourceSpec) -> JobManager {
+        let (slots, cycle_s) = match spec.queue {
+            QueueKind::Interactive => (spec.cpus, 0.0),
+            QueueKind::Batch { slots, cycle_s } => (slots.min(spec.cpus), cycle_s),
+        };
+        JobManager {
+            slots,
+            cycle_s,
+            queue: VecDeque::new(),
+            running: BTreeMap::new(),
+            status: BTreeMap::new(),
+        }
+    }
+
+    pub fn slots(&self) -> u32 {
+        self.slots
+    }
+
+    /// Jobs currently executing.
+    pub fn active_count(&self) -> u32 {
+        self.running.len() as u32
+    }
+
+    /// Jobs queued but not yet started.
+    pub fn pending_count(&self) -> u32 {
+        self.queue.len() as u32
+    }
+
+    /// Total jobs this manager is responsible for (in-flight).
+    pub fn in_flight(&self) -> u32 {
+        self.active_count() + self.pending_count()
+    }
+
+    /// GRAM submit: enqueue the job.
+    pub fn submit(&mut self, job: JobId) {
+        debug_assert!(
+            !self.status.contains_key(&job)
+                || matches!(
+                    self.status[&job],
+                    GramStatus::Done | GramStatus::Failed
+                ),
+            "resubmitting in-flight job {job}"
+        );
+        self.queue.push_back(job);
+        self.status.insert(job, GramStatus::Pending);
+    }
+
+    /// GRAM poll.
+    pub fn poll(&self, job: JobId) -> Option<GramStatus> {
+        self.status.get(&job).copied()
+    }
+
+    /// Pop jobs that may start now (free slots × queue head), marking them
+    /// Active. Returns `(job, queue_delay)` pairs: the extra delay before
+    /// execution actually begins (batch scheduling cycle).
+    pub fn start_eligible(&mut self, now: SimTime) -> Vec<(JobId, SimTime)> {
+        let mut started = Vec::new();
+        while (self.running.len() as u32) < self.slots {
+            let Some(job) = self.queue.pop_front() else {
+                break;
+            };
+            // Mid-cycle arrivals wait for the next scheduling cycle.
+            let delay = if self.cycle_s > 0.0 {
+                self.cycle_s / 2.0
+            } else {
+                0.0
+            };
+            self.running.insert(job, now + delay);
+            self.status.insert(job, GramStatus::Active);
+            started.push((job, delay));
+        }
+        started
+    }
+
+    /// Mark a running job complete.
+    pub fn complete(&mut self, job: JobId) {
+        let was = self.running.remove(&job);
+        debug_assert!(was.is_some(), "completing job {job} that is not running");
+        self.status.insert(job, GramStatus::Done);
+    }
+
+    /// GRAM cancel: remove a job wherever it is. Returns true if the job was
+    /// in flight here.
+    pub fn cancel(&mut self, job: JobId) -> bool {
+        if self.running.remove(&job).is_some() {
+            self.status.insert(job, GramStatus::Failed);
+            return true;
+        }
+        if let Some(pos) = self.queue.iter().position(|&j| j == job) {
+            self.queue.remove(pos);
+            self.status.insert(job, GramStatus::Failed);
+            return true;
+        }
+        false
+    }
+
+    /// Resource failure: everything in flight fails. Returns the jobs that
+    /// were running or queued (for the engine to re-queue elsewhere) paired
+    /// with their start time if they were running.
+    pub fn fail_all(&mut self) -> Vec<(JobId, Option<SimTime>)> {
+        let mut out: Vec<(JobId, Option<SimTime>)> = Vec::new();
+        for (job, started) in std::mem::take(&mut self.running) {
+            self.status.insert(job, GramStatus::Failed);
+            out.push((job, Some(started)));
+        }
+        for job in std::mem::take(&mut self.queue) {
+            self.status.insert(job, GramStatus::Failed);
+            out.push((job, None));
+        }
+        out
+    }
+
+    /// Running jobs and their start times (metering partial cost on failure).
+    pub fn running_jobs(&self) -> impl Iterator<Item = (&JobId, &SimTime)> {
+        self.running.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::economy::price::PriceModel;
+    use crate::grid::testbed::AuthPolicy;
+    use crate::types::{Arch, Os, ResourceId, SiteId};
+
+    fn spec(queue: QueueKind, cpus: u32) -> ResourceSpec {
+        ResourceSpec {
+            id: ResourceId(0),
+            name: "t".into(),
+            site: SiteId(0),
+            arch: Arch::Intel,
+            os: Os::Linux,
+            cpus,
+            speed: 1.0,
+            mem_mb: 256,
+            queue,
+            auth: AuthPolicy::AllUsers,
+            price: PriceModel::flat(1.0),
+            mtbf_s: 1e9,
+            mttr_s: 1.0,
+            bg_load_mean: 0.0,
+            bg_load_vol: 0.0,
+            private_cluster: false,
+        }
+    }
+
+    #[test]
+    fn interactive_starts_up_to_cpus() {
+        let mut jm = JobManager::new(&spec(QueueKind::Interactive, 2));
+        jm.submit(JobId(0));
+        jm.submit(JobId(1));
+        jm.submit(JobId(2));
+        let started = jm.start_eligible(0.0);
+        assert_eq!(started.len(), 2);
+        assert_eq!(started[0].1, 0.0); // no queue-cycle delay
+        assert_eq!(jm.poll(JobId(0)), Some(GramStatus::Active));
+        assert_eq!(jm.poll(JobId(2)), Some(GramStatus::Pending));
+        // Completing one admits the next.
+        jm.complete(JobId(0));
+        let started = jm.start_eligible(10.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].0, JobId(2));
+        assert_eq!(jm.poll(JobId(0)), Some(GramStatus::Done));
+    }
+
+    #[test]
+    fn batch_respects_slots_and_cycle() {
+        let mut jm = JobManager::new(&spec(
+            QueueKind::Batch {
+                slots: 1,
+                cycle_s: 60.0,
+            },
+            8,
+        ));
+        jm.submit(JobId(0));
+        jm.submit(JobId(1));
+        let started = jm.start_eligible(0.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].1, 30.0); // half a cycle on average
+        assert_eq!(jm.in_flight(), 2);
+    }
+
+    #[test]
+    fn batch_slots_capped_by_cpus() {
+        let jm = JobManager::new(&spec(
+            QueueKind::Batch {
+                slots: 64,
+                cycle_s: 30.0,
+            },
+            4,
+        ));
+        assert_eq!(jm.slots(), 4);
+    }
+
+    #[test]
+    fn cancel_queued_and_running() {
+        let mut jm = JobManager::new(&spec(QueueKind::Interactive, 1));
+        jm.submit(JobId(0));
+        jm.submit(JobId(1));
+        jm.start_eligible(0.0);
+        assert!(jm.cancel(JobId(0))); // running
+        assert!(jm.cancel(JobId(1))); // queued
+        assert!(!jm.cancel(JobId(2))); // unknown
+        assert_eq!(jm.poll(JobId(0)), Some(GramStatus::Failed));
+        assert_eq!(jm.in_flight(), 0);
+    }
+
+    #[test]
+    fn fail_all_reports_roles() {
+        let mut jm = JobManager::new(&spec(QueueKind::Interactive, 1));
+        jm.submit(JobId(0));
+        jm.submit(JobId(1));
+        jm.start_eligible(5.0);
+        let failed = jm.fail_all();
+        assert_eq!(failed.len(), 2);
+        let running: Vec<_> = failed.iter().filter(|(_, s)| s.is_some()).collect();
+        assert_eq!(running.len(), 1);
+        assert_eq!(running[0].0, JobId(0));
+        assert_eq!(jm.in_flight(), 0);
+    }
+
+    #[test]
+    fn resubmit_after_failure_allowed() {
+        let mut jm = JobManager::new(&spec(QueueKind::Interactive, 1));
+        jm.submit(JobId(0));
+        jm.start_eligible(0.0);
+        jm.fail_all();
+        jm.submit(JobId(0)); // re-dispatch after failure is legal
+        assert_eq!(jm.poll(JobId(0)), Some(GramStatus::Pending));
+    }
+}

@@ -1,0 +1,163 @@
+//! GSI analogue: grid security — mutual authentication and authorization.
+//!
+//! Models what the scheduler/dispatcher need from the Globus Security
+//! Infrastructure: users hold proxy credentials derived from an identity;
+//! resources map credentials to local accounts through their gridmap
+//! ([`crate::grid::testbed::AuthPolicy`]); every GRAM/GASS interaction is
+//! performed under a validated credential. Cryptography is out of scope —
+//! tokens are opaque capability strings with expiry, which preserves the
+//! control-flow the paper depends on (authorization failures prune the
+//! discovered resource list).
+
+use crate::grid::testbed::ResourceSpec;
+use crate::types::SimTime;
+
+/// Default proxy credential lifetime (12 h, the Globus default).
+pub const PROXY_LIFETIME_S: f64 = 12.0 * 3600.0;
+
+/// A user's proxy credential.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProxyCredential {
+    /// Grid identity (maps to per-resource accounts via the gridmap).
+    pub subject: String,
+    /// Opaque capability token.
+    pub token: u64,
+    pub expires_at: SimTime,
+}
+
+/// Credential authority: issues and validates proxies.
+#[derive(Debug, Default)]
+pub struct Gsi {
+    issued: Vec<ProxyCredential>,
+    next_token: u64,
+}
+
+/// Authorization failure reasons (what the dispatcher reports upstream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum AuthError {
+    #[error("credential expired")]
+    Expired,
+    #[error("credential unknown")]
+    Unknown,
+    #[error("user not in resource gridmap")]
+    NotAuthorized,
+}
+
+impl Gsi {
+    /// grid-proxy-init: issue a proxy for `subject`.
+    pub fn issue(&mut self, subject: &str, now: SimTime) -> ProxyCredential {
+        self.next_token += 1;
+        let cred = ProxyCredential {
+            subject: subject.to_string(),
+            token: self.next_token,
+            expires_at: now + PROXY_LIFETIME_S,
+        };
+        self.issued.push(cred.clone());
+        cred
+    }
+
+    /// Validate a credential (mutual auth step of every remote call).
+    pub fn validate(
+        &self,
+        cred: &ProxyCredential,
+        now: SimTime,
+    ) -> Result<(), AuthError> {
+        let known = self
+            .issued
+            .iter()
+            .any(|c| c.token == cred.token && c.subject == cred.subject);
+        if !known {
+            return Err(AuthError::Unknown);
+        }
+        if now >= cred.expires_at {
+            return Err(AuthError::Expired);
+        }
+        Ok(())
+    }
+
+    /// Full check for an operation on `resource`: authentication plus
+    /// gridmap authorization.
+    pub fn authorize(
+        &self,
+        cred: &ProxyCredential,
+        resource: &ResourceSpec,
+        now: SimTime,
+    ) -> Result<(), AuthError> {
+        self.validate(cred, now)?;
+        if !resource.auth.allows(&cred.subject) {
+            return Err(AuthError::NotAuthorized);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::economy::price::PriceModel;
+    use crate::grid::testbed::{AuthPolicy, QueueKind};
+    use crate::types::{Arch, Os, ResourceId, SiteId};
+
+    fn restricted_spec() -> ResourceSpec {
+        ResourceSpec {
+            id: ResourceId(0),
+            name: "t".into(),
+            site: SiteId(0),
+            arch: Arch::Intel,
+            os: Os::Linux,
+            cpus: 1,
+            speed: 1.0,
+            mem_mb: 128,
+            queue: QueueKind::Interactive,
+            auth: AuthPolicy::Users(vec!["rajkumar".into()]),
+            price: PriceModel::flat(1.0),
+            mtbf_s: 1e9,
+            mttr_s: 1.0,
+            bg_load_mean: 0.0,
+            bg_load_vol: 0.0,
+            private_cluster: false,
+        }
+    }
+
+    #[test]
+    fn issue_validate_expire() {
+        let mut gsi = Gsi::default();
+        let cred = gsi.issue("rajkumar", 0.0);
+        assert!(gsi.validate(&cred, 100.0).is_ok());
+        assert_eq!(
+            gsi.validate(&cred, PROXY_LIFETIME_S + 1.0),
+            Err(AuthError::Expired)
+        );
+    }
+
+    #[test]
+    fn forged_credentials_rejected() {
+        let mut gsi = Gsi::default();
+        let real = gsi.issue("rajkumar", 0.0);
+        let forged = ProxyCredential {
+            subject: "rajkumar".into(),
+            token: real.token + 999,
+            expires_at: 1e9,
+        };
+        assert_eq!(gsi.validate(&forged, 0.0), Err(AuthError::Unknown));
+        // Stolen token under a different subject also fails.
+        let stolen = ProxyCredential {
+            subject: "mallory".into(),
+            ..real
+        };
+        assert_eq!(gsi.validate(&stolen, 0.0), Err(AuthError::Unknown));
+    }
+
+    #[test]
+    fn gridmap_authorization() {
+        let mut gsi = Gsi::default();
+        let spec = restricted_spec();
+        let ok = gsi.issue("rajkumar", 0.0);
+        let nope = gsi.issue("stranger", 0.0);
+        assert!(gsi.authorize(&ok, &spec, 1.0).is_ok());
+        assert_eq!(
+            gsi.authorize(&nope, &spec, 1.0),
+            Err(AuthError::NotAuthorized)
+        );
+    }
+}

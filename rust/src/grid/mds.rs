@@ -1,0 +1,192 @@
+//! MDS analogue: the grid information/directory service.
+//!
+//! The scheduler's resource-discovery step queries this directory — as
+//! Nimrod/G queries the Globus MDS — for the machines a user is authorized
+//! on, with capability and status attributes. Directory data is a *stale
+//! snapshot*: records refresh on a period, so the scheduler sees load and
+//! availability as they were at the last refresh, not ground truth. This
+//! staleness is part of the paper's problem setting (resource state decays;
+//! the scheduler must adapt).
+
+use crate::grid::dynamics::ResourceDyn;
+use crate::grid::testbed::{QueueKind, ResourceSpec, Testbed};
+use crate::types::{ResourceId, SimTime, SiteId};
+
+/// Seconds between directory refreshes (GRIS cache TTL).
+pub const MDS_REFRESH_PERIOD_S: f64 = 120.0;
+
+/// One directory record (what discovery returns).
+#[derive(Debug, Clone)]
+pub struct MdsRecord {
+    pub id: ResourceId,
+    pub name: String,
+    pub site: SiteId,
+    pub cpus: u32,
+    pub speed: f64,
+    /// Load as of the last refresh.
+    pub bg_load: f64,
+    /// Up/down as of the last refresh.
+    pub up: bool,
+    pub batch_queue: bool,
+    /// Timestamp of the record's last refresh.
+    pub as_of: SimTime,
+}
+
+impl MdsRecord {
+    /// Effective speed the scheduler plans with (stale view).
+    pub fn planning_speed(&self) -> f64 {
+        if self.up {
+            self.speed * (1.0 - self.bg_load)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The directory service: hierarchical in the Globus sense (site GRIS →
+/// root GIIS), flattened here to a root index refreshed per site.
+#[derive(Debug, Clone)]
+pub struct Mds {
+    records: Vec<MdsRecord>,
+    last_refresh: SimTime,
+}
+
+impl Mds {
+    /// Build the initial directory from the testbed (t = 0 snapshot).
+    pub fn new(tb: &Testbed, dyns: &[ResourceDyn]) -> Mds {
+        let mut mds = Mds {
+            records: Vec::new(),
+            last_refresh: 0.0,
+        };
+        mds.refresh(tb, dyns, 0.0);
+        mds
+    }
+
+    /// Re-scan ground truth (the simulation driver calls this on the
+    /// refresh period; a live deployment would poll site GRIS daemons).
+    pub fn refresh(&mut self, tb: &Testbed, dyns: &[ResourceDyn], now: SimTime) {
+        self.records = tb
+            .resources
+            .iter()
+            .map(|spec| {
+                let d = &dyns[spec.id.0 as usize];
+                MdsRecord {
+                    id: spec.id,
+                    name: spec.name.clone(),
+                    site: spec.site,
+                    cpus: spec.cpus,
+                    speed: spec.speed,
+                    bg_load: d.bg_load,
+                    up: d.up,
+                    batch_queue: matches!(spec.queue, QueueKind::Batch { .. }),
+                    as_of: now,
+                }
+            })
+            .collect();
+        self.last_refresh = now;
+    }
+
+    pub fn last_refresh(&self) -> SimTime {
+        self.last_refresh
+    }
+
+    /// Discovery: records for machines `user` is authorized on that were up
+    /// at the last refresh. This is the paper's "resource discovery
+    /// algorithm interacts with a grid-information service directory,
+    /// identifies the list of authorized machines".
+    pub fn discover<'a>(
+        &'a self,
+        tb: &'a Testbed,
+        user: &'a str,
+    ) -> impl Iterator<Item = &'a MdsRecord> + 'a {
+        self.records
+            .iter()
+            .filter(move |r| r.up && tb.spec(r.id).auth.allows(user))
+    }
+
+    /// All records (monitoring clients).
+    pub fn records(&self) -> &[MdsRecord] {
+        &self.records
+    }
+
+    /// Look up one record.
+    pub fn record(&self, id: ResourceId) -> Option<&MdsRecord> {
+        self.records.iter().find(|r| r.id == id)
+    }
+}
+
+/// Convenience: specs of discovered resources (tests, GRACE directory).
+pub fn discover_specs<'a>(
+    mds: &'a Mds,
+    tb: &'a Testbed,
+    user: &'a str,
+) -> Vec<&'a ResourceSpec> {
+    mds.discover(tb, user).map(|r| tb.spec(r.id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Testbed, Vec<ResourceDyn>) {
+        let tb = Testbed::gusto(11, 0.5);
+        let mut rng = Rng::new(12);
+        let dyns = tb
+            .resources
+            .iter()
+            .map(|s| ResourceDyn::new(s, &mut rng))
+            .collect();
+        (tb, dyns)
+    }
+
+    #[test]
+    fn discovery_filters_authorization() {
+        let (tb, dyns) = setup();
+        let mds = Mds::new(&tb, &dyns);
+        let all_up = mds.records().iter().filter(|r| r.up).count();
+        let authorized = mds.discover(&tb, "rajkumar").count();
+        let stranger = mds.discover(&tb, "stranger").count();
+        // rajkumar is on every ACL; stranger only sees AllUsers machines.
+        assert_eq!(authorized, all_up);
+        assert!(stranger <= authorized);
+        let has_restricted = tb
+            .resources
+            .iter()
+            .any(|r| !r.auth.allows("stranger"));
+        if has_restricted {
+            assert!(stranger < authorized);
+        }
+    }
+
+    #[test]
+    fn staleness_until_refresh() {
+        let (tb, mut dyns) = setup();
+        let mut mds = Mds::new(&tb, &dyns);
+        let victim = tb.resources[0].id;
+        // Ground truth changes...
+        dyns[victim.0 as usize].up = false;
+        // ...but the directory still reports the old state.
+        assert!(mds.record(victim).unwrap().up);
+        // After refresh the outage is visible.
+        mds.refresh(&tb, &dyns, 120.0);
+        assert!(!mds.record(victim).unwrap().up);
+        assert_eq!(mds.record(victim).unwrap().as_of, 120.0);
+        assert!(mds.discover(&tb, "rajkumar").all(|r| r.id != victim));
+    }
+
+    #[test]
+    fn planning_speed_discounts_load() {
+        let (tb, mut dyns) = setup();
+        dyns[0].bg_load = 0.5;
+        let mds = {
+            let mut m = Mds::new(&tb, &dyns);
+            m.refresh(&tb, &dyns, 0.0);
+            m
+        };
+        let rec = mds.record(tb.resources[0].id).unwrap();
+        assert!(
+            (rec.planning_speed() - tb.resources[0].speed * 0.5).abs() < 1e-12
+        );
+    }
+}

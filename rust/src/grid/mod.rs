@@ -1,0 +1,34 @@
+//! The simulated grid substrate (the paper's Globus/GUSTO environment).
+//!
+//! Everything Nimrod/G ran *on* is unavailable (GUSTO testbed, Globus 1.1),
+//! so this module provides behaviour-preserving analogues (DESIGN.md §2):
+//!
+//! * [`testbed`] — resource/site descriptions and the ~70-machine
+//!   GUSTO-like testbed generator;
+//! * [`dynamics`] — per-resource background load (AR(1)) and availability
+//!   churn processes, the source of the "dynamic resources" the paper
+//!   schedules against;
+//! * [`mds`] — the directory service (Globus MDS analogue) with refresh
+//!   staleness;
+//! * [`gram`] — the per-resource job manager (GRAM analogue): submit /
+//!   queue / run / poll / cancel with interactive- and batch-queue
+//!   semantics;
+//! * [`gass`] — storage servers and the staging time model (GASS analogue);
+//! * [`gsi`] — token-based mutual authentication and per-resource
+//!   authorization (GSI analogue);
+//! * [`proxy`] — the cluster master-node proxy of paper §4, which mediates
+//!   storage access for private (non-routable) cluster nodes.
+
+pub mod competition;
+pub mod dynamics;
+pub mod gass;
+pub mod gram;
+pub mod gsi;
+pub mod mds;
+pub mod proxy;
+pub mod testbed;
+
+pub use gram::{GramStatus, JobManager};
+pub use testbed::{
+    AuthPolicy, NetLink, QueueKind, Resource, ResourceSpec, Site, Testbed,
+};

@@ -1,0 +1,127 @@
+//! Cluster master-node proxy (paper §4).
+//!
+//! "In many dedicated clusters ... only the master node is able to
+//! communicate to the external world. ... we have developed a proxy server
+//! in order to integrate closed cluster nodes as part of computational
+//! grids. The proxy deployed on the cluster master node acts as a mediator
+//! between external Nimrod components and cluster private-nodes for
+//! accessing storage."
+//!
+//! Modelled effects for a private cluster:
+//!
+//! * every stage-in/out for a job on a private node is **two hops**:
+//!   root ↔ master (WAN, via GASS) then master ↔ node (fast private LAN);
+//! * all of the cluster's staging shares the single master uplink, so a
+//!   wide sweep on a big private cluster self-throttles — exactly the
+//!   behaviour that makes private clusters cheap-but-slower-to-feed in the
+//!   economy benches.
+
+use crate::grid::gass::Gass;
+use crate::grid::testbed::{NetLink, ResourceSpec, Testbed};
+use crate::types::SimTime;
+use std::collections::BTreeMap;
+
+/// Private intra-cluster LAN (fixed: fast switched Ethernet).
+pub const CLUSTER_LAN: NetLink = NetLink {
+    bandwidth_mbps: 100.0,
+    latency_ms: 0.5,
+};
+
+/// Per-cluster proxy state: concurrent relays through the master uplink.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterProxy {
+    relays: BTreeMap<u32, u32>, // resource id → active relays
+    pub relayed_bytes: f64,
+}
+
+impl ClusterProxy {
+    /// Stage `bytes` to/from a node of `spec`. For public resources this is
+    /// a plain GASS transfer; for private clusters it is the two-hop relay.
+    /// Returns the transfer duration. Pair with [`ClusterProxy::end`].
+    pub fn begin(
+        &mut self,
+        gass: &mut Gass,
+        tb: &Testbed,
+        spec: &ResourceSpec,
+        bytes: f64,
+    ) -> SimTime {
+        let wan = gass.begin_transfer(tb, spec.site, bytes);
+        if !spec.private_cluster {
+            return wan;
+        }
+        let n = self.relays.entry(spec.id.0).or_insert(0);
+        *n += 1;
+        let contention = (*n).max(1) as f64;
+        // Master uplink is the same WAN link; the LAN hop adds its own time,
+        // serialized through the master relay.
+        let lan = NetLink {
+            bandwidth_mbps: CLUSTER_LAN.bandwidth_mbps / contention,
+            latency_ms: CLUSTER_LAN.latency_ms,
+        };
+        self.relayed_bytes += bytes;
+        wan + lan.transfer_seconds(bytes)
+    }
+
+    /// Finish a staging operation for `spec`.
+    pub fn end(&mut self, gass: &mut Gass, spec: &ResourceSpec) {
+        gass.end_transfer(spec.site);
+        if spec.private_cluster {
+            if let Some(n) = self.relays.get_mut(&spec.id.0) {
+                *n = n.saturating_sub(1);
+            }
+        }
+    }
+
+    pub fn active_relays(&self, spec: &ResourceSpec) -> u32 {
+        self.relays.get(&spec.id.0).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn testbed_with_private() -> (Testbed, usize, usize) {
+        // Find one private and one public resource in the generated testbed.
+        for seed in 0..20 {
+            let tb = Testbed::gusto(seed, 1.0);
+            let private = tb.resources.iter().position(|r| r.private_cluster);
+            let public = tb.resources.iter().position(|r| !r.private_cluster);
+            if let (Some(a), Some(b)) = (private, public) {
+                return (tb, a, b);
+            }
+        }
+        panic!("no seed produced both private and public resources");
+    }
+
+    #[test]
+    fn private_staging_slower_than_public_same_site() {
+        let (tb, prv, _) = testbed_with_private();
+        let spec = tb.resources[prv].clone();
+        let mut public_spec = spec.clone();
+        public_spec.private_cluster = false;
+
+        let mut gass = Gass::new(&tb);
+        let mut proxy = ClusterProxy::default();
+        let t_private = proxy.begin(&mut gass, &tb, &spec, 1e7);
+        proxy.end(&mut gass, &spec);
+        let t_public = proxy.begin(&mut gass, &tb, &public_spec, 1e7);
+        proxy.end(&mut gass, &public_spec);
+        assert!(t_private > t_public, "{t_private} vs {t_public}");
+    }
+
+    #[test]
+    fn relay_contention_counts() {
+        let (tb, prv, _) = testbed_with_private();
+        let spec = tb.resources[prv].clone();
+        let mut gass = Gass::new(&tb);
+        let mut proxy = ClusterProxy::default();
+        let t1 = proxy.begin(&mut gass, &tb, &spec, 1e7);
+        let t2 = proxy.begin(&mut gass, &tb, &spec, 1e7);
+        assert_eq!(proxy.active_relays(&spec), 2);
+        assert!(t2 > t1, "second concurrent relay must be slower");
+        proxy.end(&mut gass, &spec);
+        proxy.end(&mut gass, &spec);
+        assert_eq!(proxy.active_relays(&spec), 0);
+    }
+}

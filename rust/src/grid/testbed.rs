@@ -1,0 +1,464 @@
+//! Resource and site descriptions plus the GUSTO-like testbed generator.
+//!
+//! The paper's Figure-3 trial ran on "about 70 machines" of the GUSTO
+//! testbed during April/May 1999 — heterogeneous workstations, SMPs and
+//! clusters across administrative domains in the US, Europe, Japan and
+//! Australia. [`Testbed::gusto`] synthesizes a testbed of that shape:
+//! 8 sites in 5 time zones, ~70 machines with mixed architectures, queue
+//! disciplines, owner pricing policies, and network links whose quality
+//! falls with distance from the experiment's root site.
+
+use crate::economy::price::PriceModel;
+use crate::types::{Arch, Os, ResourceId, SiteId};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// An administrative site: one owner domain, one GASS server, one timezone.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub id: SiteId,
+    pub name: String,
+    /// Hours relative to UTC (experiment clock is UTC).
+    pub tz_offset_hours: f64,
+    /// Wide-area link from the experiment root to this site.
+    pub link: NetLink,
+}
+
+/// Network link quality used by the GASS staging model.
+#[derive(Debug, Clone, Copy)]
+pub struct NetLink {
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+}
+
+impl NetLink {
+    /// Seconds to move `bytes` over this link, one transfer, no contention.
+    pub fn transfer_seconds(&self, bytes: f64) -> f64 {
+        self.latency_ms / 1000.0 + bytes * 8.0 / (self.bandwidth_mbps * 1e6)
+    }
+}
+
+/// Queue discipline the resource's local management system enforces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QueueKind {
+    /// Fork-style immediate execution (GRAM fork jobmanager).
+    Interactive,
+    /// Space-shared batch queue (PBS/LSF-like): bounded running slots and a
+    /// scheduling cycle the job waits for even on an idle machine.
+    Batch {
+        /// Concurrent grid jobs the queue admits.
+        slots: u32,
+        /// Seconds between queue scheduling cycles.
+        cycle_s: f64,
+    },
+}
+
+/// Who may run jobs on a resource (the GSI gridmap analogue).
+#[derive(Debug, Clone)]
+pub enum AuthPolicy {
+    /// Any authenticated grid user.
+    AllUsers,
+    /// Only the listed accounts.
+    Users(Vec<String>),
+}
+
+impl AuthPolicy {
+    pub fn allows(&self, user: &str) -> bool {
+        match self {
+            AuthPolicy::AllUsers => true,
+            AuthPolicy::Users(us) => us.iter().any(|u| u == user),
+        }
+    }
+}
+
+/// Static description of one grid resource (machine/cluster head).
+#[derive(Debug, Clone)]
+pub struct ResourceSpec {
+    pub id: ResourceId,
+    pub name: String,
+    pub site: SiteId,
+    pub arch: Arch,
+    pub os: Os,
+    /// CPUs this resource exposes to grid users.
+    pub cpus: u32,
+    /// Relative CPU speed (reference machine = 1.0).
+    pub speed: f64,
+    pub mem_mb: u32,
+    pub queue: QueueKind,
+    pub auth: AuthPolicy,
+    /// Owner-set pricing (the computational economy input).
+    pub price: PriceModel,
+    /// Mean time between failures, seconds (availability churn).
+    pub mtbf_s: f64,
+    /// Mean time to recover, seconds.
+    pub mttr_s: f64,
+    /// Background (owner/local) load process parameters: long-run mean
+    /// fraction of CPU consumed locally, and its volatility.
+    pub bg_load_mean: f64,
+    pub bg_load_vol: f64,
+    /// True if this is a closed cluster reachable only via the master-node
+    /// proxy (paper §4).
+    pub private_cluster: bool,
+}
+
+/// Convenience pairing used throughout the scheduler and simulator.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    pub spec: ResourceSpec,
+}
+
+/// A complete testbed: sites plus resources.
+#[derive(Debug, Clone, Default)]
+pub struct Testbed {
+    pub sites: Vec<Site>,
+    pub resources: Vec<ResourceSpec>,
+}
+
+impl Testbed {
+    /// Total CPUs across all resources.
+    pub fn total_cpus(&self) -> u32 {
+        self.resources.iter().map(|r| r.cpus).sum()
+    }
+
+    pub fn site(&self, id: SiteId) -> &Site {
+        &self.sites[id.0 as usize]
+    }
+
+    pub fn spec(&self, id: ResourceId) -> &ResourceSpec {
+        &self.resources[id.0 as usize]
+    }
+
+    /// Synthesize the GUSTO-like testbed (DESIGN.md §2). `scale` multiplies
+    /// the machine count at every site (1.0 ⇒ ~70 machines / ~330 CPUs);
+    /// `seed` fixes all sampled attributes.
+    pub fn gusto(seed: u64, scale: f64) -> Testbed {
+        let mut rng = Rng::new(seed);
+        // (name, tz, wan bandwidth Mbps, latency ms, machines at scale 1)
+        let site_defs: [(&str, f64, f64, f64, usize); 8] = [
+            ("anl.gov", -6.0, 40.0, 30.0, 12),       // Argonne (root-adjacent)
+            ("isi.edu", -8.0, 30.0, 60.0, 9),        // USC ISI
+            ("ncsa.uiuc.edu", -6.0, 45.0, 35.0, 11), // NCSA
+            ("sdsc.edu", -8.0, 30.0, 65.0, 8),       // San Diego
+            ("ctc.cornell.edu", -5.0, 25.0, 45.0, 7),
+            ("monash.edu.au", 10.0, 8.0, 220.0, 10), // experiment home site
+            ("unile.it", 1.0, 6.0, 160.0, 6),        // Lecce, Italy
+            ("etl.go.jp", 9.0, 10.0, 180.0, 7),      // ETL, Japan
+        ];
+        let archs = [
+            (Arch::Intel, Os::Linux, 1.0),
+            (Arch::Sparc, Os::Solaris, 0.8),
+            (Arch::Mips, Os::Irix, 1.3),
+            (Arch::Alpha, Os::Tru64, 1.5),
+            (Arch::PowerPc, Os::Aix, 1.1),
+        ];
+        let mut tb = Testbed::default();
+        let mut rid = 0u32;
+        for (sidx, (sname, tz, bw, lat, count)) in site_defs.iter().enumerate() {
+            let site_id = SiteId(sidx as u32);
+            tb.sites.push(Site {
+                id: site_id,
+                name: sname.to_string(),
+                tz_offset_hours: *tz,
+                link: NetLink {
+                    bandwidth_mbps: *bw * rng.uniform(0.8, 1.2),
+                    latency_ms: *lat * rng.uniform(0.9, 1.1),
+                },
+            });
+            let n_machines = ((*count as f64) * scale).round().max(1.0) as usize;
+            for m in 0..n_machines {
+                let (arch, os, speed_base) = *rng.choose(&archs);
+                // A few big SMPs / clusters; mostly workstations.
+                let cpus = match rng.below(10) {
+                    0 => rng.range(16, 64) as u32, // cluster or big SMP
+                    1..=2 => rng.range(4, 8) as u32,
+                    _ => rng.range(1, 2) as u32,
+                };
+                let speed = speed_base * rng.uniform(0.7, 1.4);
+                let batch = cpus >= 8 || rng.chance(0.25);
+                let queue = if batch {
+                    QueueKind::Batch {
+                        slots: (cpus as f64 * rng.uniform(0.5, 1.0)).ceil() as u32,
+                        cycle_s: rng.uniform(15.0, 120.0),
+                    }
+                } else {
+                    QueueKind::Interactive
+                };
+                // Owner pricing: faster machines charge more; each owner adds
+                // its own margin and peak policy (paper §3: owner-controlled,
+                // time-varying cost).
+                let price = PriceModel::owner_policy(
+                    speed,
+                    rng.uniform(0.6, 1.8),
+                    rng.uniform(1.2, 3.0),
+                    rng.chance(0.7),
+                );
+                let private_cluster = cpus >= 16 && rng.chance(0.5);
+                tb.resources.push(ResourceSpec {
+                    id: ResourceId(rid),
+                    name: format!("{}{}.{}", host_stem(&mut rng), m, sname),
+                    site: site_id,
+                    arch,
+                    os,
+                    cpus,
+                    speed,
+                    mem_mb: 128 * cpus.max(2) * rng.range(1, 4) as u32,
+                    queue,
+                    auth: if rng.chance(0.85) {
+                        AuthPolicy::AllUsers
+                    } else {
+                        AuthPolicy::Users(vec!["rajkumar".into(), "davida".into()])
+                    },
+                    price,
+                    mtbf_s: rng.uniform(20.0, 200.0) * 3600.0,
+                    mttr_s: rng.uniform(0.25, 2.0) * 3600.0,
+                    bg_load_mean: rng.uniform(0.05, 0.5),
+                    bg_load_vol: rng.uniform(0.02, 0.15),
+                    private_cluster,
+                });
+                rid += 1;
+            }
+        }
+        tb
+    }
+
+    // -- JSON config round-trip ---------------------------------------------
+
+    /// Serialize to the JSON config format (`nimrod testbed --dump`).
+    pub fn to_json(&self) -> Json {
+        let sites = self
+            .sites
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("tz", Json::num(s.tz_offset_hours)),
+                    ("bw_mbps", Json::num(s.link.bandwidth_mbps)),
+                    ("lat_ms", Json::num(s.link.latency_ms)),
+                ])
+            })
+            .collect();
+        let resources = self
+            .resources
+            .iter()
+            .map(|r| {
+                let (kind, slots, cycle) = match r.queue {
+                    QueueKind::Interactive => ("interactive", 0.0, 0.0),
+                    QueueKind::Batch { slots, cycle_s } => {
+                        ("batch", slots as f64, cycle_s)
+                    }
+                };
+                let users = match &r.auth {
+                    AuthPolicy::AllUsers => Json::Null,
+                    AuthPolicy::Users(us) => {
+                        Json::arr(us.iter().map(Json::str).collect())
+                    }
+                };
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("site", Json::num(r.site.0 as f64)),
+                    ("arch", Json::str(r.arch.to_string())),
+                    ("os", Json::str(r.os.to_string())),
+                    ("cpus", Json::num(r.cpus as f64)),
+                    ("speed", Json::num(r.speed)),
+                    ("mem_mb", Json::num(r.mem_mb as f64)),
+                    ("queue", Json::str(kind)),
+                    ("slots", Json::num(slots)),
+                    ("cycle_s", Json::num(cycle)),
+                    ("users", users),
+                    ("price", r.price.to_json()),
+                    ("mtbf_s", Json::num(r.mtbf_s)),
+                    ("mttr_s", Json::num(r.mttr_s)),
+                    ("bg_load_mean", Json::num(r.bg_load_mean)),
+                    ("bg_load_vol", Json::num(r.bg_load_vol)),
+                    ("private", Json::Bool(r.private_cluster)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("sites", Json::arr(sites)),
+            ("resources", Json::arr(resources)),
+        ])
+    }
+
+    /// Load from the JSON config format.
+    pub fn from_json(v: &Json) -> anyhow::Result<Testbed> {
+        let mut tb = Testbed::default();
+        for (i, s) in v.req_arr("sites")?.iter().enumerate() {
+            tb.sites.push(Site {
+                id: SiteId(i as u32),
+                name: s.req_str("name")?.to_string(),
+                tz_offset_hours: s.req_f64("tz")?,
+                link: NetLink {
+                    bandwidth_mbps: s.req_f64("bw_mbps")?,
+                    latency_ms: s.req_f64("lat_ms")?,
+                },
+            });
+        }
+        for (i, r) in v.req_arr("resources")?.iter().enumerate() {
+            let queue = match r.req_str("queue")? {
+                "interactive" => QueueKind::Interactive,
+                "batch" => QueueKind::Batch {
+                    slots: r.req_f64("slots")? as u32,
+                    cycle_s: r.req_f64("cycle_s")?,
+                },
+                other => anyhow::bail!("unknown queue kind `{other}`"),
+            };
+            let auth = match r.get("users") {
+                Json::Null => AuthPolicy::AllUsers,
+                Json::Arr(us) => AuthPolicy::Users(
+                    us.iter()
+                        .filter_map(|u| u.as_str().map(String::from))
+                        .collect(),
+                ),
+                _ => anyhow::bail!("bad `users` field"),
+            };
+            tb.resources.push(ResourceSpec {
+                id: ResourceId(i as u32),
+                name: r.req_str("name")?.to_string(),
+                site: SiteId(r.req_f64("site")? as u32),
+                arch: parse_arch(r.req_str("arch")?)?,
+                os: parse_os(r.req_str("os")?)?,
+                cpus: r.req_f64("cpus")? as u32,
+                speed: r.req_f64("speed")?,
+                mem_mb: r.req_f64("mem_mb")? as u32,
+                queue,
+                auth,
+                price: PriceModel::from_json(r.get("price"))?,
+                mtbf_s: r.req_f64("mtbf_s")?,
+                mttr_s: r.req_f64("mttr_s")?,
+                bg_load_mean: r.req_f64("bg_load_mean")?,
+                bg_load_vol: r.req_f64("bg_load_vol")?,
+                private_cluster: r.get("private").as_bool().unwrap_or(false),
+            });
+        }
+        Ok(tb)
+    }
+}
+
+fn parse_arch(s: &str) -> anyhow::Result<Arch> {
+    Ok(match s {
+        "intel" => Arch::Intel,
+        "sparc" => Arch::Sparc,
+        "alpha" => Arch::Alpha,
+        "mips" => Arch::Mips,
+        "powerpc" => Arch::PowerPc,
+        other => anyhow::bail!("unknown arch `{other}`"),
+    })
+}
+
+fn parse_os(s: &str) -> anyhow::Result<Os> {
+    Ok(match s {
+        "linux" => Os::Linux,
+        "solaris" => Os::Solaris,
+        "irix" => Os::Irix,
+        "tru64" => Os::Tru64,
+        "aix" => Os::Aix,
+        other => anyhow::bail!("unknown os `{other}`"),
+    })
+}
+
+fn host_stem(rng: &mut Rng) -> &'static str {
+    const STEMS: [&str; 12] = [
+        "lemon", "pitcairn", "tuva", "bolas", "denali", "huxley", "vidar",
+        "osprey", "jupiter", "modi", "lindner", "dirac",
+    ];
+    STEMS[rng.below(STEMS.len())]
+}
+
+/// Local wall-clock hour at a site when the UTC experiment clock reads
+/// `utc_hours` hours (fractional).
+pub fn local_hour(utc_hours: f64, tz_offset_hours: f64) -> f64 {
+    ((utc_hours + tz_offset_hours) % 24.0 + 24.0) % 24.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gusto_shape() {
+        let tb = Testbed::gusto(1, 1.0);
+        assert_eq!(tb.sites.len(), 8);
+        let n = tb.resources.len();
+        assert!((55..=90).contains(&n), "expected ~70 machines, got {n}");
+        assert!(tb.total_cpus() >= 100, "cpus={}", tb.total_cpus());
+        // Heterogeneity: more than one arch, some batch queues, some
+        // restricted-auth machines, some private clusters at scale 1.
+        let archs: std::collections::HashSet<_> =
+            tb.resources.iter().map(|r| r.arch).collect();
+        assert!(archs.len() >= 3);
+        assert!(tb
+            .resources
+            .iter()
+            .any(|r| matches!(r.queue, QueueKind::Batch { .. })));
+        assert!(tb
+            .resources
+            .iter()
+            .any(|r| matches!(r.auth, AuthPolicy::Users(_))));
+    }
+
+    #[test]
+    fn gusto_deterministic() {
+        let a = Testbed::gusto(7, 1.0);
+        let b = Testbed::gusto(7, 1.0);
+        assert_eq!(a.resources.len(), b.resources.len());
+        for (x, y) in a.resources.iter().zip(&b.resources) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.speed, y.speed);
+            assert_eq!(x.cpus, y.cpus);
+        }
+    }
+
+    #[test]
+    fn gusto_scales() {
+        let small = Testbed::gusto(1, 0.5);
+        let big = Testbed::gusto(1, 4.0);
+        assert!(big.resources.len() > 3 * small.resources.len());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let tb = Testbed::gusto(3, 0.3);
+        let j = tb.to_json();
+        let back = Testbed::from_json(&crate::util::json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(tb.resources.len(), back.resources.len());
+        assert_eq!(tb.sites.len(), back.sites.len());
+        for (a, b) in tb.resources.iter().zip(&back.resources) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.cpus, b.cpus);
+            assert!((a.speed - b.speed).abs() < 1e-9);
+            assert_eq!(
+                matches!(a.queue, QueueKind::Interactive),
+                matches!(b.queue, QueueKind::Interactive)
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let link = NetLink {
+            bandwidth_mbps: 8.0,
+            latency_ms: 100.0,
+        };
+        // 1 MB over 8 Mbps = 1 s, plus 0.1 s latency.
+        let t = link.transfer_seconds(1e6);
+        assert!((t - 1.1).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn local_hour_wraps() {
+        assert_eq!(local_hour(0.0, 10.0), 10.0);
+        assert_eq!(local_hour(20.0, 10.0), 6.0);
+        assert_eq!(local_hour(3.0, -6.0), 21.0);
+    }
+
+    #[test]
+    fn auth_policy() {
+        let all = AuthPolicy::AllUsers;
+        assert!(all.allows("anyone"));
+        let some = AuthPolicy::Users(vec!["rajkumar".into()]);
+        assert!(some.allows("rajkumar"));
+        assert!(!some.allows("stranger"));
+    }
+}

@@ -1,0 +1,36 @@
+//! Nimrod/G — resource management and scheduling for a computational grid
+//! with a computational economy.
+//!
+//! Reproduction of Buyya, Abramson, Giddy, *"Nimrod/G: An Architecture for a
+//! Resource Management and Scheduling System in a Global Computational
+//! Grid"* (HPC Asia 2000), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: parametric engine, scheduler
+//!   with deadline/budget (computational-economy) algorithms, dispatcher,
+//!   job-wrapper, the Clustor-style TCP protocol, and a simulated GUSTO
+//!   testbed (MDS/GRAM/GASS/GSI analogues) it schedules over.
+//! * **L2/L1 (python/, build time)** — the ionization-chamber calibration
+//!   workload as a JAX model with a Pallas spectral-transform kernel, lowered
+//!   AOT to HLO text.
+//! * **runtime** — PJRT CPU client that loads the HLO artifacts so the Rust
+//!   job-wrapper executes real compute on the request path (Python never).
+//!
+//! Start with [`sim::GridSimulation`] (virtual-time experiments, the paper's
+//! Figure 3) or `examples/ionization_study.rs` (real execution end to end).
+
+pub mod client;
+pub mod config;
+pub mod dispatcher;
+pub mod economy;
+pub mod engine;
+pub mod grid;
+pub mod metrics;
+pub mod plan;
+pub mod protocol;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod simtime;
+pub mod types;
+pub mod util;
+pub mod workload;

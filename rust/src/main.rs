@@ -1,0 +1,286 @@
+//! `nimrod` — the Nimrod/G command-line launcher.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! nimrod run        --plan FILE [--deadline-h H] [--budget G] [--policy P]
+//!                   [--seed S] [--scale X] [--journal FILE] [--csv DIR]
+//! nimrod resume     --journal FILE            restart a crashed experiment
+//! nimrod figure3    [--csv DIR] [--seed S]    reproduce the paper's Figure 3
+//! nimrod testbed    [--seed S] [--scale X]    dump the GUSTO-like testbed JSON
+//! nimrod policies                             list scheduling policies
+//! nimrod live       [--workers N] [--jobs N]  real PJRT execution demo
+//! ```
+//!
+//! (Argument parsing is hand-rolled: this image builds offline without
+//! clap; see rust/src/util/.)
+
+use anyhow::{bail, Context, Result};
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::engine::journal::{recover, Journal};
+use nimrod_g::grid::Testbed;
+use nimrod_g::plan::{expand, Plan};
+use nimrod_g::sim::live::LiveRunner;
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+use nimrod_g::util::logging;
+use nimrod_g::workload;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("nimrod: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parsed `--key value` options.
+struct Opts {
+    flags: BTreeMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Opts> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                bail!("unexpected argument `{a}`");
+            }
+        }
+        Ok(Opts { flags })
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad --{key} `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad --{key} `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.flags.get(key) {
+            Some(v) => Ok(Some(
+                v.parse().with_context(|| format!("bad --{key} `{v}`"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    fn path(&self, key: &str) -> Option<PathBuf> {
+        self.flags.get(key).map(PathBuf::from)
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&opts),
+        "resume" => cmd_resume(&opts),
+        "figure3" => cmd_figure3(&opts),
+        "testbed" => cmd_testbed(&opts),
+        "policies" => {
+            for p in nimrod_g::scheduler::ALL_POLICIES {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        "live" => cmd_live(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `nimrod help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "nimrod — Nimrod/G grid resource management and scheduling\n\n\
+         usage:\n  nimrod run --plan FILE [--deadline-h H] [--budget G$] [--policy NAME]\n             [--seed S] [--scale X] [--journal FILE] [--csv DIR]\n  nimrod resume --journal FILE [--policy NAME] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--workdir DIR]"
+    );
+}
+
+fn experiment_cfg(opts: &Opts) -> Result<ExperimentConfig> {
+    Ok(ExperimentConfig {
+        user: opts.str("user", "rajkumar"),
+        deadline: opts.f64("deadline-h", 15.0)? * HOUR,
+        budget: opts.opt_f64("budget")?,
+        policy: opts.str("policy", "cost"),
+        seed: opts.u64("seed", 0xD15EA5E)?,
+        ..Default::default()
+    })
+}
+
+fn write_csvs(report: &nimrod_g::metrics::Report, dir: &Path, tag: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(
+        dir.join(format!("{tag}_timeline.csv")),
+        report.timeline_csv(300.0),
+    )?;
+    std::fs::write(
+        dir.join(format!("{tag}_resources.csv")),
+        report.per_resource_csv(),
+    )?;
+    println!("wrote {}/{{{tag}_timeline,{tag}_resources}}.csv", dir.display());
+    Ok(())
+}
+
+fn cmd_run(opts: &Opts) -> Result<()> {
+    let plan_path = opts
+        .path("plan")
+        .context("`nimrod run` needs --plan FILE")?;
+    let src = std::fs::read_to_string(&plan_path)
+        .with_context(|| format!("read plan {}", plan_path.display()))?;
+    let plan = Plan::parse(&src)?;
+    let cfg = experiment_cfg(opts)?;
+    let specs = expand(&plan, cfg.seed)?;
+    println!(
+        "experiment: {} jobs, deadline {:.1} h, policy {}, budget {}",
+        specs.len(),
+        cfg.deadline / HOUR,
+        cfg.policy,
+        cfg.budget
+            .map(|b| format!("{b:.0} G$"))
+            .unwrap_or_else(|| "unlimited".into()),
+    );
+    let tb = Testbed::gusto(cfg.seed ^ 0x6057, opts.f64("scale", 1.0)?);
+    println!(
+        "testbed: {} resources / {} cpus across {} sites",
+        tb.resources.len(),
+        tb.total_cpus(),
+        tb.sites.len()
+    );
+    let mut sim = GridSimulation::new(tb, specs, cfg.clone());
+    if let Some(journal_path) = opts.path("journal") {
+        let journal = Journal::create(&journal_path, &src, cfg.seed, &sim.exp)?;
+        sim = sim.with_journal(journal);
+    }
+    let report = sim.run();
+    println!("{}", report.summary());
+    if let Some(dir) = opts.path("csv") {
+        write_csvs(&report, &dir, "run")?;
+    }
+    Ok(())
+}
+
+fn cmd_resume(opts: &Opts) -> Result<()> {
+    let journal_path = opts
+        .path("journal")
+        .context("`nimrod resume` needs --journal FILE")?;
+    let rec = recover(&journal_path)?;
+    println!(
+        "recovered: {}/{} jobs done, {} remaining",
+        rec.experiment.completed(),
+        rec.experiment.jobs.len(),
+        rec.experiment.remaining()
+    );
+    let mut cfg = experiment_cfg(opts)?;
+    cfg.seed = rec.seed;
+    cfg.deadline = rec.experiment.deadline;
+    cfg.budget = rec.experiment.budget;
+    let tb = Testbed::gusto(cfg.seed ^ 0x6057, opts.f64("scale", 1.0)?);
+    let journal = Journal::append_to(&journal_path)?;
+    let sim = GridSimulation::new(tb, Vec::new(), cfg)
+        .with_experiment(rec.experiment)
+        .with_journal(journal);
+    let report = sim.run();
+    println!("{}", report.summary());
+    if let Some(dir) = opts.path("csv") {
+        write_csvs(&report, &dir, "resume")?;
+    }
+    Ok(())
+}
+
+fn cmd_figure3(opts: &Opts) -> Result<()> {
+    let seed = opts.u64("seed", 0xD15EA5E)?;
+    let csv_dir = opts.path("csv");
+    println!("Figure 3: GUSTO resource usage for 10 / 15 / 20 hour deadlines");
+    println!("(165-job ionization chamber calibration, cost-optimizing DBC)\n");
+    for deadline_h in [10.0, 15.0, 20.0] {
+        let cfg = ExperimentConfig {
+            deadline: deadline_h * HOUR,
+            policy: "cost".into(),
+            seed,
+            ..Default::default()
+        };
+        let report = GridSimulation::gusto_ionization(cfg).run();
+        println!("deadline {deadline_h:>4.0} h: {}", report.summary());
+        println!(
+            "              avg {:.1} busy cpus over the run",
+            report.busy_cpus.average(report.makespan_s.max(1.0))
+        );
+        if let Some(dir) = &csv_dir {
+            write_csvs(&report, dir, &format!("figure3_{}h", deadline_h as u32))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_testbed(opts: &Opts) -> Result<()> {
+    let tb = Testbed::gusto(opts.u64("seed", 0xD15EA5E)?, opts.f64("scale", 1.0)?);
+    println!("{}", tb.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_live(opts: &Opts) -> Result<()> {
+    let workers = opts.u64("workers", 4)? as usize;
+    let jobs = opts.u64("jobs", 24)? as usize;
+    let nv = jobs.div_ceil(6).max(1);
+    let src = workload::ionization_plan(nv, 3, 2);
+    let plan = Plan::parse(&src)?;
+    let cfg = ExperimentConfig {
+        deadline: 3600.0, // wall-clock seconds in live mode
+        policy: opts.str("policy", "time"),
+        seed: opts.u64("seed", 7)?,
+        ..Default::default()
+    };
+    let specs = expand(&plan, cfg.seed)?;
+    let workdir = opts
+        .path("workdir")
+        .unwrap_or_else(|| std::env::temp_dir().join("nimrod-live"));
+    println!(
+        "live: {} jobs on {} PJRT workers under {}",
+        specs.len(),
+        workers,
+        workdir.display()
+    );
+    let outcome = LiveRunner::new(workers, cfg, &workdir).run(specs)?;
+    println!("{}", outcome.report.summary());
+    for (jid, out) in outcome.outputs.iter().take(5) {
+        println!("  {jid}: response={:.4} dose={:.3}", out.response, out.dose);
+    }
+    if outcome.outputs.len() > 5 {
+        println!("  ... {} more", outcome.outputs.len() - 5);
+    }
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! Experiment metrics: the processors-in-use timeline (the y-axis of the
+//! paper's Figure 3), cost/makespan summaries, and CSV emission.
+
+use crate::types::{GridDollars, SimTime};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Step timeline of an integer quantity (busy processors). Records only
+/// changes; queries interpolate as a step function.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    points: Vec<(SimTime, u32)>,
+}
+
+impl Timeline {
+    /// Record the value at `t` (must be non-decreasing in `t`).
+    pub fn record(&mut self, t: SimTime, value: u32) {
+        if let Some(&(last_t, last_v)) = self.points.last() {
+            debug_assert!(t >= last_t, "timeline time went backwards");
+            if last_v == value {
+                return;
+            }
+            if last_t == t {
+                self.points.pop();
+            }
+        }
+        self.points.push((t, value));
+    }
+
+    /// Value at time `t` (0 before the first record).
+    pub fn at(&self, t: SimTime) -> u32 {
+        match self.points.binary_search_by(|(pt, _)| pt.total_cmp(&t)) {
+            Ok(i) => self.points[i].1,
+            Err(0) => 0,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+
+    /// Peak value.
+    pub fn peak(&self) -> u32 {
+        self.points.iter().map(|&(_, v)| v).max().unwrap_or(0)
+    }
+
+    /// Time-weighted average over `[0, horizon]`.
+    pub fn average(&self, horizon: SimTime) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut prev_t = 0.0;
+        let mut prev_v = 0u32;
+        for &(t, v) in &self.points {
+            if t >= horizon {
+                break;
+            }
+            acc += (t - prev_t) * prev_v as f64;
+            prev_t = t;
+            prev_v = v;
+        }
+        acc += (horizon - prev_t).max(0.0) * prev_v as f64;
+        acc / horizon
+    }
+
+    /// Resample onto a regular grid (for CSV/plotting): `(t, value)` rows
+    /// every `dt` from 0 to `horizon` inclusive.
+    pub fn sample(&self, dt: SimTime, horizon: SimTime) -> Vec<(SimTime, u32)> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t <= horizon + 1e-9 {
+            out.push((t, self.at(t)));
+            t += dt;
+        }
+        out
+    }
+
+    pub fn points(&self) -> &[(SimTime, u32)] {
+        &self.points
+    }
+}
+
+/// Per-resource usage rollup.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceUsage {
+    pub jobs_completed: u32,
+    pub jobs_failed: u32,
+    pub cpu_seconds: f64,
+    pub cost: GridDollars,
+}
+
+/// Final report for one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Virtual time the last job finished (0 if none ran).
+    pub makespan_s: SimTime,
+    pub deadline_s: SimTime,
+    pub deadline_met: bool,
+    pub jobs_total: u32,
+    pub jobs_completed: u32,
+    pub jobs_failed: u32,
+    pub total_cost: GridDollars,
+    /// Busy grid CPUs over time (Figure 3's y-axis).
+    pub busy_cpus: Timeline,
+    /// Distinct resources that ran at least one job.
+    pub resources_used: u32,
+    pub per_resource: BTreeMap<String, ResourceUsage>,
+    /// Scheduler ticks executed.
+    pub ticks: u64,
+    /// Simulator events processed.
+    pub events: u64,
+}
+
+impl Report {
+    /// One-line summary (CLI output).
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs {}/{} done ({} failed), makespan {:.2} h (deadline {:.1} h, {}), cost {:.0} G$, peak {} cpus on {} resources",
+            self.jobs_completed,
+            self.jobs_total,
+            self.jobs_failed,
+            self.makespan_s / 3600.0,
+            self.deadline_s / 3600.0,
+            if self.deadline_met { "met" } else { "MISSED" },
+            self.total_cost,
+            self.busy_cpus.peak(),
+            self.resources_used,
+        )
+    }
+
+    /// CSV of the busy-processor timeline: `hours,busy_cpus` rows.
+    pub fn timeline_csv(&self, dt: SimTime) -> String {
+        let horizon = self.makespan_s.max(self.deadline_s);
+        let mut out = String::from("hours,busy_cpus\n");
+        for (t, v) in self.busy_cpus.sample(dt, horizon) {
+            let _ = writeln!(out, "{:.3},{v}", t / 3600.0);
+        }
+        out
+    }
+
+    /// CSV of per-resource usage.
+    pub fn per_resource_csv(&self) -> String {
+        let mut out =
+            String::from("resource,jobs_completed,jobs_failed,cpu_hours,cost_gd\n");
+        for (name, u) in &self.per_resource {
+            let _ = writeln!(
+                out,
+                "{name},{},{},{:.3},{:.2}",
+                u.jobs_completed,
+                u.jobs_failed,
+                u.cpu_seconds / 3600.0,
+                u.cost
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_step_semantics() {
+        let mut tl = Timeline::default();
+        tl.record(0.0, 0);
+        tl.record(10.0, 3);
+        tl.record(20.0, 1);
+        assert_eq!(tl.at(-1.0), 0);
+        assert_eq!(tl.at(5.0), 0);
+        assert_eq!(tl.at(10.0), 3);
+        assert_eq!(tl.at(15.0), 3);
+        assert_eq!(tl.at(25.0), 1);
+        assert_eq!(tl.peak(), 3);
+    }
+
+    #[test]
+    fn duplicate_values_coalesce() {
+        let mut tl = Timeline::default();
+        tl.record(0.0, 2);
+        tl.record(5.0, 2);
+        tl.record(6.0, 2);
+        assert_eq!(tl.points().len(), 1);
+    }
+
+    #[test]
+    fn same_instant_overwrites() {
+        let mut tl = Timeline::default();
+        tl.record(1.0, 1);
+        tl.record(1.0, 5);
+        assert_eq!(tl.at(1.0), 5);
+        assert_eq!(tl.points().len(), 1);
+    }
+
+    #[test]
+    fn average_time_weighted() {
+        let mut tl = Timeline::default();
+        tl.record(0.0, 4);
+        tl.record(5.0, 0);
+        // 4 for half the horizon, 0 after.
+        assert!((tl.average(10.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_grid() {
+        let mut tl = Timeline::default();
+        tl.record(0.0, 1);
+        tl.record(3.0, 2);
+        let s = tl.sample(1.0, 4.0);
+        assert_eq!(
+            s,
+            vec![(0.0, 1), (1.0, 1), (2.0, 1), (3.0, 2), (4.0, 2)]
+        );
+    }
+
+    #[test]
+    fn report_csv_shapes() {
+        let mut r = Report {
+            jobs_total: 2,
+            jobs_completed: 2,
+            makespan_s: 7200.0,
+            deadline_s: 7200.0,
+            deadline_met: true,
+            ..Default::default()
+        };
+        r.busy_cpus.record(0.0, 1);
+        r.per_resource.insert(
+            "lemon0.anl.gov".into(),
+            ResourceUsage {
+                jobs_completed: 2,
+                jobs_failed: 0,
+                cpu_seconds: 3600.0,
+                cost: 12.5,
+            },
+        );
+        let csv = r.timeline_csv(3600.0);
+        assert!(csv.starts_with("hours,busy_cpus\n"));
+        assert_eq!(csv.lines().count(), 1 + 3); // header + 0,1,2 h
+        let pr = r.per_resource_csv();
+        assert!(pr.contains("lemon0.anl.gov,2,0,1.000,12.50"));
+        assert!(r.summary().contains("met"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Plan AST: parameters, domains, constants, and the task script.
+
+use std::fmt;
+
+/// A parsed plan: the experiment's parameter space plus the per-job task.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    /// Swept parameters, in declaration order (expansion is the cross
+    /// product, last parameter varying fastest).
+    pub parameters: Vec<Parameter>,
+    /// Fixed bindings available for substitution.
+    pub constants: Vec<(String, ParamValue)>,
+    /// The `task main` script run for every job.
+    pub task: Vec<TaskOp>,
+}
+
+/// One `parameter` declaration.
+#[derive(Debug, Clone)]
+pub struct Parameter {
+    pub name: String,
+    /// Optional human label (`label "..."`).
+    pub label: Option<String>,
+    pub domain: Domain,
+}
+
+/// The value domain a parameter sweeps over.
+#[derive(Debug, Clone)]
+pub enum Domain {
+    /// `float range from LO to HI step S` (inclusive of endpoints hit by the
+    /// step), or `integer range ...`.
+    Range {
+        lo: f64,
+        hi: f64,
+        step: f64,
+        integer: bool,
+    },
+    /// `float random from LO to HI count N` — N values drawn uniformly at
+    /// expansion time (seeded; reproducible).
+    Random { lo: f64, hi: f64, count: usize },
+    /// `select anyof v1 v2 ...` — explicit value list (numbers or strings).
+    Select { values: Vec<ParamValue> },
+}
+
+impl Domain {
+    /// Number of values this domain contributes to the cross product.
+    pub fn cardinality(&self) -> usize {
+        match self {
+            Domain::Range { lo, hi, step, .. } => {
+                if *step <= 0.0 || hi < lo {
+                    0
+                } else {
+                    ((hi - lo) / step + 1.0 + 1e-9).floor() as usize
+                }
+            }
+            Domain::Random { count, .. } => *count,
+            Domain::Select { values } => values.len(),
+        }
+    }
+}
+
+/// A concrete parameter value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Float(f64),
+    Int(i64),
+    Text(String),
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Float(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            ParamValue::Int(i) => write!(f, "{i}"),
+            ParamValue::Text(s) => f.write_str(s),
+        }
+    }
+}
+
+impl ParamValue {
+    /// Numeric view (used by the workload model and the runtime bridge).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Float(x) => Some(*x),
+            ParamValue::Int(i) => Some(*i as f64),
+            ParamValue::Text(_) => None,
+        }
+    }
+}
+
+/// One operation in the per-job task script.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOp {
+    /// `copy SRC DST` — stage a file. Paths prefixed `node:` are on the
+    /// compute node; others are on the root (experiment) store. Exactly one
+    /// side should be `node:` (stage-in or stage-out).
+    Copy { from: String, to: String },
+    /// `execute CMD...` — run the application binary on the node.
+    Execute { command: String },
+}
+
+impl TaskOp {
+    /// True if this op stages a file from root storage to the node.
+    pub fn is_stage_in(&self) -> bool {
+        matches!(self, TaskOp::Copy { from, to }
+            if !from.starts_with("node:") && to.starts_with("node:"))
+    }
+
+    /// True if this op stages a file from the node back to root storage.
+    pub fn is_stage_out(&self) -> bool {
+        matches!(self, TaskOp::Copy { from, to }
+            if from.starts_with("node:") && !to.starts_with("node:"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_cardinality() {
+        let d = Domain::Range {
+            lo: 100.0,
+            hi: 1000.0,
+            step: 100.0,
+            integer: false,
+        };
+        assert_eq!(d.cardinality(), 10);
+        let d = Domain::Range {
+            lo: 0.0,
+            hi: 1.0,
+            step: 0.25,
+            integer: false,
+        };
+        assert_eq!(d.cardinality(), 5);
+        // Degenerate cases.
+        let d = Domain::Range {
+            lo: 5.0,
+            hi: 5.0,
+            step: 1.0,
+            integer: true,
+        };
+        assert_eq!(d.cardinality(), 1);
+        let d = Domain::Range {
+            lo: 5.0,
+            hi: 1.0,
+            step: 1.0,
+            integer: true,
+        };
+        assert_eq!(d.cardinality(), 0);
+    }
+
+    #[test]
+    fn value_display() {
+        assert_eq!(ParamValue::Float(4.0).to_string(), "4");
+        assert_eq!(ParamValue::Float(4.5).to_string(), "4.5");
+        assert_eq!(ParamValue::Int(-2).to_string(), "-2");
+        assert_eq!(ParamValue::Text("ab".into()).to_string(), "ab");
+    }
+
+    #[test]
+    fn stage_direction() {
+        let op = TaskOp::Copy {
+            from: "in.dat".into(),
+            to: "node:in.dat".into(),
+        };
+        assert!(op.is_stage_in() && !op.is_stage_out());
+        let op = TaskOp::Copy {
+            from: "node:out.dat".into(),
+            to: "out.dat".into(),
+        };
+        assert!(op.is_stage_out() && !op.is_stage_in());
+    }
+}

@@ -1,0 +1,279 @@
+//! Parameter-space expansion: plan → concrete jobs.
+//!
+//! The parametric engine calls [`expand`] once at experiment start. The
+//! expansion is the cross product of all parameter domains (last parameter
+//! varying fastest, matching Clustor), with `random` domains drawn from a
+//! seeded stream so the same (plan, seed) pair always yields the same jobs —
+//! required for restart-from-journal to be consistent.
+
+use super::ast::{Domain, ParamValue, Plan, TaskOp};
+use super::PlanError;
+use crate::types::JobId;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// A fully-instantiated job: bindings plus the substituted task script.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// Parameter name → value (constants included).
+    pub bindings: BTreeMap<String, ParamValue>,
+    /// Task script with `$var` substitution applied.
+    pub script: Vec<TaskOp>,
+}
+
+impl JobSpec {
+    /// Numeric view of a binding (used by the runtime bridge).
+    pub fn f64_binding(&self, name: &str) -> Option<f64> {
+        self.bindings.get(name).and_then(|v| v.as_f64())
+    }
+}
+
+/// Expand a plan into jobs. `seed` drives `random` domains only.
+pub fn expand(plan: &Plan, seed: u64) -> Result<Vec<JobSpec>, PlanError> {
+    // Materialize each domain's value list.
+    let mut rng = Rng::new(seed);
+    let mut axes: Vec<(String, Vec<ParamValue>)> = Vec::new();
+    for p in &plan.parameters {
+        let values = materialize(&p.domain, &mut rng);
+        if values.is_empty() {
+            return Err(PlanError::Expand(format!(
+                "parameter `{}` has an empty domain",
+                p.name
+            )));
+        }
+        axes.push((p.name.clone(), values));
+    }
+    // Duplicate names would silently shadow; reject.
+    for i in 0..axes.len() {
+        for j in i + 1..axes.len() {
+            if axes[i].0 == axes[j].0 {
+                return Err(PlanError::Expand(format!(
+                    "duplicate parameter `{}`",
+                    axes[i].0
+                )));
+            }
+        }
+    }
+
+    let total: usize = axes.iter().map(|(_, v)| v.len()).product();
+    let mut jobs = Vec::with_capacity(total);
+    let mut idx = vec![0usize; axes.len()];
+    for jobno in 0..total {
+        let mut bindings = BTreeMap::new();
+        for (k, (name, values)) in axes.iter().enumerate() {
+            bindings.insert(name.clone(), values[idx[k]].clone());
+        }
+        for (name, value) in &plan.constants {
+            bindings.insert(name.clone(), value.clone());
+        }
+        let id = JobId(jobno as u32);
+        bindings.insert(
+            "jobname".to_string(),
+            ParamValue::Text(format!("{id}")),
+        );
+        let script = plan
+            .task
+            .iter()
+            .map(|op| substitute_op(op, &bindings))
+            .collect::<Result<Vec<_>, _>>()?;
+        jobs.push(JobSpec {
+            id,
+            bindings,
+            script,
+        });
+        // Odometer increment, last axis fastest.
+        for k in (0..axes.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < axes[k].1.len() {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    Ok(jobs)
+}
+
+fn materialize(domain: &Domain, rng: &mut Rng) -> Vec<ParamValue> {
+    match domain {
+        Domain::Range {
+            lo,
+            hi,
+            step,
+            integer,
+        } => {
+            let n = domain.cardinality();
+            (0..n)
+                .map(|i| {
+                    let x = lo + *step * i as f64;
+                    let x = if x > *hi { *hi } else { x };
+                    if *integer {
+                        ParamValue::Int(x.round() as i64)
+                    } else {
+                        ParamValue::Float(x)
+                    }
+                })
+                .collect()
+        }
+        Domain::Random { lo, hi, count } => (0..*count)
+            .map(|_| ParamValue::Float(rng.uniform(*lo, *hi)))
+            .collect(),
+        Domain::Select { values } => values.clone(),
+    }
+}
+
+fn substitute_op(
+    op: &TaskOp,
+    bindings: &BTreeMap<String, ParamValue>,
+) -> Result<TaskOp, PlanError> {
+    Ok(match op {
+        TaskOp::Copy { from, to } => TaskOp::Copy {
+            from: substitute(from, bindings)?,
+            to: substitute(to, bindings)?,
+        },
+        TaskOp::Execute { command } => TaskOp::Execute {
+            command: substitute(command, bindings)?,
+        },
+    })
+}
+
+/// Replace `$name` / `${name}` references. Unknown references are an error
+/// (silently passing them to a remote shell is how experiments die quietly).
+pub fn substitute(
+    text: &str,
+    bindings: &BTreeMap<String, ParamValue>,
+) -> Result<String, PlanError> {
+    let mut out = String::with_capacity(text.len());
+    let b = text.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'$' {
+            let (name, consumed) = if b.get(i + 1) == Some(&b'{') {
+                let end = text[i + 2..].find('}').ok_or_else(|| {
+                    PlanError::Expand(format!("unterminated ${{...}} in `{text}`"))
+                })?;
+                (&text[i + 2..i + 2 + end], end + 3)
+            } else {
+                let rest = &text[i + 1..];
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                    .unwrap_or(rest.len());
+                (&rest[..end], end + 1)
+            };
+            if name.is_empty() {
+                out.push('$');
+                i += 1;
+                continue;
+            }
+            let value = bindings.get(name).ok_or_else(|| {
+                PlanError::Expand(format!("unknown parameter `${name}` in `{text}`"))
+            })?;
+            out.push_str(&value.to_string());
+            i += consumed;
+        } else {
+            let len = match b[i] {
+                0x00..=0x7f => 1,
+                0xc0..=0xdf => 2,
+                0xe0..=0xef => 3,
+                _ => 4,
+            };
+            out.push_str(&text[i..i + len]);
+            i += len;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+
+    fn bindings(pairs: &[(&str, ParamValue)]) -> BTreeMap<String, ParamValue> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn substitution_forms() {
+        let b = bindings(&[
+            ("x", ParamValue::Int(7)),
+            ("name", ParamValue::Text("run1".into())),
+        ]);
+        assert_eq!(substitute("a $x b", &b).unwrap(), "a 7 b");
+        assert_eq!(substitute("${x}b", &b).unwrap(), "7b");
+        assert_eq!(substitute("out.$name.dat", &b).unwrap(), "out.run1.dat");
+        assert!(substitute("$missing", &b).is_err());
+        assert!(substitute("${unclosed", &b).is_err());
+        // Bare dollar passes through.
+        assert_eq!(substitute("cost $ 5", &b).unwrap(), "cost $ 5");
+    }
+
+    #[test]
+    fn cross_product_order_last_fastest() {
+        let plan = Plan::parse(
+            "parameter a float select anyof 1 2\nparameter b float select anyof 10 20 30\ntask main\nexecute r $a $b\nendtask",
+        )
+        .unwrap();
+        let jobs = expand(&plan, 0).unwrap();
+        assert_eq!(jobs.len(), 6);
+        let cmds: Vec<String> = jobs
+            .iter()
+            .map(|j| match &j.script[0] {
+                TaskOp::Execute { command } => command.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(cmds[0], "r 1 10");
+        assert_eq!(cmds[1], "r 1 20");
+        assert_eq!(cmds[2], "r 1 30");
+        assert_eq!(cmds[3], "r 2 10");
+    }
+
+    #[test]
+    fn random_domains_reproducible() {
+        let plan = Plan::parse(
+            "parameter p float random from 0 to 1 count 4\ntask main\nexecute r $p\nendtask",
+        )
+        .unwrap();
+        let a = expand(&plan, 99).unwrap();
+        let b = expand(&plan, 99).unwrap();
+        let c = expand(&plan, 100).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.bindings, y.bindings);
+        }
+        assert!(a.iter().zip(&c).any(|(x, y)| x.bindings != y.bindings));
+    }
+
+    #[test]
+    fn jobname_binding_present() {
+        let plan = Plan::parse(
+            "parameter a float select anyof 1\ntask main\nexecute run out.$jobname\nendtask",
+        )
+        .unwrap();
+        let jobs = expand(&plan, 0).unwrap();
+        match &jobs[0].script[0] {
+            TaskOp::Execute { command } => assert_eq!(command, "run out.j0"),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn integer_range_values() {
+        let plan = Plan::parse(
+            "parameter n integer range from 2 to 6 step 2\ntask main\nexecute r $n\nendtask",
+        )
+        .unwrap();
+        let jobs = expand(&plan, 0).unwrap();
+        let vals: Vec<i64> = jobs
+            .iter()
+            .map(|j| match j.bindings["n"] {
+                ParamValue::Int(i) => i,
+                _ => panic!("expected int"),
+            })
+            .collect();
+        assert_eq!(vals, vec![2, 4, 6]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Line-oriented lexer for plan files.
+//!
+//! The Clustor plan grammar is line-structured: one declaration or task op
+//! per line, `#` comments, quoted strings, and bare words/numbers. The lexer
+//! produces a token stream with line numbers preserved for diagnostics, and
+//! keeps the raw remainder-of-line for `execute` commands (which are free
+//! text with `$var` references).
+
+use super::PlanError;
+
+/// A lexical token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Bare word (keyword, identifier, or path fragment).
+    Word(String),
+    /// Quoted string literal (quotes stripped, escapes applied).
+    Str(String),
+    /// Numeric literal.
+    Num(f64),
+    /// End of line (statement separator).
+    Eol,
+}
+
+/// Token with source line for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Lex a plan source into tokens. Blank lines and comments are dropped, but
+/// every non-empty line is terminated by an `Eol` token.
+pub fn lex(src: &str) -> Result<Vec<Token>, PlanError> {
+    let mut out = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno as u32 + 1;
+        let text = match raw.find('#') {
+            Some(i) if !in_string(raw, i) => &raw[..i],
+            _ => raw,
+        };
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        lex_line(text, line, &mut out)?;
+        out.push(Token {
+            tok: Tok::Eol,
+            line,
+        });
+    }
+    Ok(out)
+}
+
+/// Check whether byte offset `i` falls inside a quoted string in `s`.
+fn in_string(s: &str, i: usize) -> bool {
+    let mut inside = false;
+    for (j, c) in s.char_indices() {
+        if j >= i {
+            break;
+        }
+        if c == '"' {
+            inside = !inside;
+        }
+    }
+    inside
+}
+
+fn lex_line(text: &str, line: u32, out: &mut Vec<Token>) -> Result<(), PlanError> {
+    let b = text.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i] as char;
+        if c.is_whitespace() {
+            i += 1;
+        } else if c == '"' {
+            let (s, len) = lex_string(&text[i..], line)?;
+            out.push(Token {
+                tok: Tok::Str(s),
+                line,
+            });
+            i += len;
+        } else {
+            let start = i;
+            while i < b.len() && !(b[i] as char).is_whitespace() {
+                i += 1;
+            }
+            let word = &text[start..i];
+            let tok = match word.parse::<f64>() {
+                Ok(x) => Tok::Num(x),
+                Err(_) => Tok::Word(word.to_string()),
+            };
+            out.push(Token { tok, line });
+        }
+    }
+    Ok(())
+}
+
+fn lex_string(s: &str, line: u32) -> Result<(String, usize), PlanError> {
+    debug_assert!(s.starts_with('"'));
+    let mut out = String::new();
+    let mut chars = s.char_indices().skip(1);
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, e)) => out.push(e),
+                None => break,
+            },
+            c => out.push(c),
+        }
+    }
+    Err(PlanError::Lex {
+        line,
+        msg: "unterminated string literal".to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn words(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn words_numbers_strings() {
+        let toks = words(r#"parameter x float range from 1 to 2.5 step 0.5"#);
+        assert_eq!(toks[0], Tok::Word("parameter".into()));
+        assert_eq!(toks[5], Tok::Num(1.0));
+        assert_eq!(toks[7], Tok::Num(2.5));
+        assert_eq!(*toks.last().unwrap(), Tok::Eol);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_dropped() {
+        let toks = words("# full comment\n\nfoo # trailing\n");
+        assert_eq!(toks, vec![Tok::Word("foo".into()), Tok::Eol]);
+    }
+
+    #[test]
+    fn quoted_strings_with_escapes() {
+        let toks = words(r#"label "a \"b\" c""#);
+        assert_eq!(toks[1], Tok::Str("a \"b\" c".into()));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let toks = words(r#"name "with # hash""#);
+        assert_eq!(toks[1], Tok::Str("with # hash".into()));
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(lex(r#"bad "never ends"#).is_err());
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let toks = lex("a\nb\nc").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[2].line, 2);
+        assert_eq!(toks[4].line, 3);
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let toks = words("offset -3.5");
+        assert_eq!(toks[1], Tok::Num(-3.5));
+    }
+}

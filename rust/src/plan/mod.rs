@@ -1,0 +1,108 @@
+//! The Nimrod declarative parametric modeling language ("plans").
+//!
+//! A plan declares the parameter space of an experiment and the task script
+//! each job runs (file staging + execution), after the Clustor plan-file
+//! syntax the paper builds on (§1, refs [13][14]):
+//!
+//! ```text
+//! # ionization chamber calibration sweep
+//! parameter voltage label "electrode V" float range from 100 to 1000 step 100
+//! parameter pressure float random from 0.5 to 2.0 count 4
+//! parameter energy float select anyof 2.0 10.0 18.0
+//! constant chamber text "icc-mk2"
+//!
+//! task main
+//!     copy chamber.cfg node:chamber.cfg
+//!     execute ./icc_sim -v $voltage -p $pressure -e $energy -c $chamber
+//!     copy node:results.dat results.$jobname.dat
+//! endtask
+//! ```
+//!
+//! [`Plan::parse`] builds the AST; [`expand::expand`] produces the cross
+//! product of parameter domains as concrete [`JobSpec`]s with `$var`
+//! substitution applied to task commands.
+
+pub mod ast;
+pub mod expand;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::{Domain, ParamValue, Parameter, Plan, TaskOp};
+pub use expand::{expand, JobSpec};
+
+use thiserror::Error;
+
+/// Errors from plan parsing or expansion.
+#[derive(Debug, Error)]
+pub enum PlanError {
+    #[error("line {line}: lex error: {msg}")]
+    Lex { line: u32, msg: String },
+    #[error("line {line}: parse error: {msg}")]
+    Parse { line: u32, msg: String },
+    #[error("expansion error: {0}")]
+    Expand(String),
+}
+
+impl Plan {
+    /// Parse a plan from source text.
+    pub fn parse(src: &str) -> Result<Plan, PlanError> {
+        let tokens = lexer::lex(src)?;
+        parser::parse(&tokens)
+    }
+
+    /// Total number of jobs this plan expands to.
+    pub fn job_count(&self) -> usize {
+        self.parameters
+            .iter()
+            .map(|p| p.domain.cardinality())
+            .product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN: &str = r#"
+# ionization chamber calibration
+parameter voltage label "electrode V" float range from 100 to 300 step 100
+parameter energy float select anyof 2.0 10.0
+constant chamber text "icc-mk2"
+
+task main
+    copy chamber.cfg node:chamber.cfg
+    execute ./icc_sim -v $voltage -e $energy -c $chamber
+    copy node:results.dat results.$jobname.dat
+endtask
+"#;
+
+    #[test]
+    fn parse_and_count() {
+        let plan = Plan::parse(PLAN).unwrap();
+        assert_eq!(plan.parameters.len(), 2);
+        assert_eq!(plan.constants.len(), 1);
+        assert_eq!(plan.job_count(), 6); // 3 voltages x 2 energies
+        assert_eq!(plan.task.len(), 3);
+    }
+
+    #[test]
+    fn full_roundtrip_expansion() {
+        let plan = Plan::parse(PLAN).unwrap();
+        let jobs = expand(&plan, 12345).unwrap();
+        assert_eq!(jobs.len(), 6);
+        // Every job has distinct parameter bindings.
+        let mut seen = std::collections::HashSet::new();
+        for j in &jobs {
+            let key = format!("{:?}", j.bindings);
+            assert!(seen.insert(key), "duplicate binding set");
+        }
+        // Substitution applied in execute op.
+        let exec = &jobs[0].script[1];
+        if let TaskOp::Execute { command } = exec {
+            assert!(command.contains("-c icc-mk2"), "constant substituted");
+            assert!(!command.contains('$'), "no unresolved vars: {command}");
+        } else {
+            panic!("expected execute op");
+        }
+    }
+}

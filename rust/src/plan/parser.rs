@@ -1,0 +1,415 @@
+//! Recursive-descent parser over the plan token stream.
+
+use super::ast::{Domain, ParamValue, Parameter, Plan, TaskOp};
+use super::lexer::{Tok, Token};
+use super::PlanError;
+
+/// Parse a token stream into a [`Plan`].
+pub fn parse(tokens: &[Token]) -> Result<Plan, PlanError> {
+    let mut p = P { toks: tokens, i: 0 };
+    let mut plan = Plan::default();
+    while !p.at_end() {
+        match p.peek_word() {
+            Some("parameter") => plan.parameters.push(p.parameter()?),
+            Some("constant") => {
+                let (name, value) = p.constant()?;
+                plan.constants.push((name, value));
+            }
+            Some("task") => {
+                if !plan.task.is_empty() {
+                    return Err(p.err("duplicate task block"));
+                }
+                plan.task = p.task_block()?;
+            }
+            _ => return Err(p.err("expected `parameter`, `constant` or `task`")),
+        }
+    }
+    if plan.task.is_empty() {
+        return Err(PlanError::Parse {
+            line: 0,
+            msg: "plan has no task block".to_string(),
+        });
+    }
+    Ok(plan)
+}
+
+struct P<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn at_end(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn line(&self) -> u32 {
+        self.toks
+            .get(self.i.min(self.toks.len().saturating_sub(1)))
+            .map(|t| t.line)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> PlanError {
+        PlanError::Parse {
+            line: self.line(),
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i).map(|t| &t.tok)
+    }
+
+    fn peek_word(&self) -> Option<&str> {
+        match self.peek() {
+            Some(Tok::Word(w)) => Some(w.as_str()),
+            _ => None,
+        }
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.i).map(|t| t.tok.clone());
+        self.i += 1;
+        t
+    }
+
+    fn expect_word(&mut self, w: &str) -> Result<(), PlanError> {
+        match self.next() {
+            Some(Tok::Word(ref got)) if got == w => Ok(()),
+            other => Err(self.err(format!("expected `{w}`, got {other:?}"))),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, PlanError> {
+        match self.next() {
+            Some(Tok::Word(w)) => Ok(w),
+            other => Err(self.err(format!("expected identifier, got {other:?}"))),
+        }
+    }
+
+    fn num(&mut self) -> Result<f64, PlanError> {
+        match self.next() {
+            Some(Tok::Num(x)) => Ok(x),
+            other => Err(self.err(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    fn eol(&mut self) -> Result<(), PlanError> {
+        match self.next() {
+            Some(Tok::Eol) | None => Ok(()),
+            other => Err(self.err(format!("expected end of line, got {other:?}"))),
+        }
+    }
+
+    /// `parameter NAME [label "..."] TYPE DOMAIN`
+    fn parameter(&mut self) -> Result<Parameter, PlanError> {
+        self.expect_word("parameter")?;
+        let name = self.ident()?;
+        let label = if self.peek_word() == Some("label") {
+            self.next();
+            match self.next() {
+                Some(Tok::Str(s)) => Some(s.clone()),
+                other => {
+                    return Err(self.err(format!("expected label string, got {other:?}")))
+                }
+            }
+        } else {
+            None
+        };
+        let ty = self.ident()?; // float | integer | text
+        let integer = match ty.as_str() {
+            "float" => false,
+            "integer" => true,
+            "text" => {
+                // text parameters only support `select anyof`.
+                self.expect_word("select")?;
+                self.expect_word("anyof")?;
+                let values = self.value_list(true)?;
+                self.eol()?;
+                return Ok(Parameter {
+                    name,
+                    label,
+                    domain: Domain::Select { values },
+                });
+            }
+            other => return Err(self.err(format!("unknown parameter type `{other}`"))),
+        };
+
+        let domain = match self.peek_word() {
+            Some("range") => {
+                self.next();
+                self.expect_word("from")?;
+                let lo = self.num()?;
+                self.expect_word("to")?;
+                let hi = self.num()?;
+                let step = if self.peek_word() == Some("step") {
+                    self.next();
+                    self.num()?
+                } else {
+                    1.0
+                };
+                if step <= 0.0 {
+                    return Err(self.err("range step must be positive"));
+                }
+                if hi < lo {
+                    return Err(self.err("range hi must be >= lo"));
+                }
+                Domain::Range {
+                    lo,
+                    hi,
+                    step,
+                    integer,
+                }
+            }
+            Some("random") => {
+                self.next();
+                self.expect_word("from")?;
+                let lo = self.num()?;
+                self.expect_word("to")?;
+                let hi = self.num()?;
+                self.expect_word("count")?;
+                let count = self.num()? as usize;
+                if count == 0 {
+                    return Err(self.err("random count must be >= 1"));
+                }
+                Domain::Random { lo, hi, count }
+            }
+            Some("select") => {
+                self.next();
+                self.expect_word("anyof")?;
+                let values = self.value_list(false)?;
+                Domain::Select { values }
+            }
+            other => return Err(self.err(format!("unknown domain {other:?}"))),
+        };
+        self.eol()?;
+        Ok(Parameter {
+            name,
+            label,
+            domain,
+        })
+    }
+
+    fn value_list(&mut self, text: bool) -> Result<Vec<ParamValue>, PlanError> {
+        let mut values = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::Num(x)) => {
+                    values.push(if text {
+                        ParamValue::Text(format!("{x}"))
+                    } else {
+                        ParamValue::Float(*x)
+                    });
+                    self.next();
+                }
+                Some(Tok::Str(s)) => {
+                    values.push(ParamValue::Text(s.clone()));
+                    self.next();
+                }
+                Some(Tok::Word(w)) => {
+                    values.push(ParamValue::Text(w.clone()));
+                    self.next();
+                }
+                _ => break,
+            }
+        }
+        if values.is_empty() {
+            return Err(self.err("`anyof` needs at least one value"));
+        }
+        Ok(values)
+    }
+
+    /// `constant NAME TYPE VALUE`
+    fn constant(&mut self) -> Result<(String, ParamValue), PlanError> {
+        self.expect_word("constant")?;
+        let name = self.ident()?;
+        let ty = self.ident()?;
+        let value = match (ty.as_str(), self.next()) {
+            ("float", Some(Tok::Num(x))) => ParamValue::Float(x),
+            ("integer", Some(Tok::Num(x))) => ParamValue::Int(x as i64),
+            ("text", Some(Tok::Str(s))) => ParamValue::Text(s),
+            ("text", Some(Tok::Word(w))) => ParamValue::Text(w),
+            (ty, other) => {
+                return Err(self.err(format!("bad constant {ty} value {other:?}")))
+            }
+        };
+        self.eol()?;
+        Ok((name, value))
+    }
+
+    /// `task main ... endtask` — ops are `copy` and `execute`.
+    fn task_block(&mut self) -> Result<Vec<TaskOp>, PlanError> {
+        self.expect_word("task")?;
+        let _name = self.ident()?; // conventionally `main`
+        self.eol()?;
+        let mut ops = Vec::new();
+        loop {
+            match self.peek_word() {
+                Some("endtask") => {
+                    self.next();
+                    let _ = self.eol();
+                    break;
+                }
+                Some("copy") => {
+                    self.next();
+                    let from = self.path_word()?;
+                    let to = self.path_word()?;
+                    self.eol()?;
+                    ops.push(TaskOp::Copy { from, to });
+                }
+                Some("execute") => {
+                    self.next();
+                    // Free text to end of line.
+                    let mut parts: Vec<String> = Vec::new();
+                    loop {
+                        match self.peek() {
+                            Some(Tok::Eol) | None => {
+                                self.next();
+                                break;
+                            }
+                            Some(Tok::Word(w)) => {
+                                parts.push(w.clone());
+                                self.next();
+                            }
+                            Some(Tok::Str(s)) => {
+                                parts.push(format!("\"{s}\""));
+                                self.next();
+                            }
+                            Some(Tok::Num(x)) => {
+                                parts.push(format!("{x}"));
+                                self.next();
+                            }
+                        }
+                    }
+                    if parts.is_empty() {
+                        return Err(self.err("empty execute command"));
+                    }
+                    ops.push(TaskOp::Execute {
+                        command: parts.join(" "),
+                    });
+                }
+                None => return Err(self.err("unterminated task block")),
+                other => return Err(self.err(format!("unknown task op {other:?}"))),
+            }
+        }
+        if ops.is_empty() {
+            return Err(self.err("task block has no operations"));
+        }
+        Ok(ops)
+    }
+
+    fn path_word(&mut self) -> Result<String, PlanError> {
+        match self.next() {
+            Some(Tok::Word(w)) => Ok(w),
+            Some(Tok::Str(s)) => Ok(s),
+            other => Err(self.err(format!("expected path, got {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse_src(src: &str) -> Result<Plan, PlanError> {
+        parse(&lex(src).unwrap())
+    }
+
+    #[test]
+    fn minimal_plan() {
+        let plan = parse_src(
+            "parameter x float range from 1 to 3\ntask main\nexecute run $x\nendtask",
+        )
+        .unwrap();
+        assert_eq!(plan.parameters.len(), 1);
+        assert_eq!(plan.job_count(), 3);
+    }
+
+    #[test]
+    fn all_domain_kinds() {
+        let plan = parse_src(
+            r#"
+parameter a float range from 0 to 1 step 0.5
+parameter b integer range from 1 to 4
+parameter c float random from 2 to 3 count 5
+parameter d text select anyof "x" "y"
+parameter e float select anyof 1.5 2.5 3.5
+task main
+execute run
+endtask
+"#,
+        )
+        .unwrap();
+        let cards: Vec<usize> =
+            plan.parameters.iter().map(|p| p.domain.cardinality()).collect();
+        assert_eq!(cards, vec![3, 4, 5, 2, 3]);
+        assert_eq!(plan.job_count(), 3 * 4 * 5 * 2 * 3);
+    }
+
+    #[test]
+    fn labels_and_constants() {
+        let plan = parse_src(
+            r#"
+parameter v label "voltage (V)" float range from 1 to 2
+constant gas text "argon"
+constant trials integer 5
+task main
+execute sim $v $gas $trials
+endtask
+"#,
+        )
+        .unwrap();
+        assert_eq!(plan.parameters[0].label.as_deref(), Some("voltage (V)"));
+        assert_eq!(plan.constants.len(), 2);
+        assert_eq!(plan.constants[1].1, ParamValue::Int(5));
+    }
+
+    #[test]
+    fn copy_ops_parsed() {
+        let plan = parse_src(
+            "parameter x float range from 1 to 2\ntask main\ncopy in.dat node:in.dat\nexecute run\ncopy node:out out.$jobname\nendtask",
+        )
+        .unwrap();
+        assert!(plan.task[0].is_stage_in());
+        assert!(plan.task[2].is_stage_out());
+    }
+
+    #[test]
+    fn error_cases() {
+        // No task block.
+        assert!(parse_src("parameter x float range from 1 to 2").is_err());
+        // Bad step.
+        assert!(parse_src(
+            "parameter x float range from 1 to 2 step 0\ntask main\nexecute r\nendtask"
+        )
+        .is_err());
+        // hi < lo.
+        assert!(parse_src(
+            "parameter x float range from 5 to 2\ntask main\nexecute r\nendtask"
+        )
+        .is_err());
+        // Unterminated task.
+        assert!(parse_src("parameter x float range from 1 to 2\ntask main\nexecute r")
+            .is_err());
+        // Unknown op.
+        assert!(parse_src(
+            "parameter x float range from 1 to 2\ntask main\nfrobnicate\nendtask"
+        )
+        .is_err());
+        // Duplicate task.
+        assert!(parse_src(
+            "task main\nexecute a\nendtask\ntask main\nexecute b\nendtask"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn line_numbers_in_errors() {
+        let err = parse_src("parameter x float range from 5 to 2\ntask main\nexecute r\nendtask")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 1"), "{msg}");
+    }
+}

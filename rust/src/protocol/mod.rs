@@ -1,0 +1,217 @@
+//! The Clustor-style component network protocol (paper §4).
+//!
+//! "Nimrod/G components use TCP/IP sockets for exchanging commands and
+//! information between them." Frames are a 4-byte big-endian length prefix
+//! followed by one JSON document; [`Message`] enumerates the commands the
+//! components exchange. The same framing serves the engine↔client monitor
+//! channel and the engine↔worker dispatch channel in live mode.
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Handshake: component kind + protocol version.
+    Hello { component: String, version: u32 },
+    /// Client → engine: request an experiment status snapshot.
+    StatusRequest,
+    /// Engine → client: status snapshot.
+    Status {
+        jobs_total: u32,
+        jobs_completed: u32,
+        jobs_failed: u32,
+        jobs_running: u32,
+        spent: f64,
+        busy_workers: u32,
+        elapsed_s: f64,
+    },
+    /// Client → engine: adjust the experiment envelope mid-run (the paper's
+    /// client can "vary parameters related to time and cost").
+    SetDeadline { deadline_s: f64 },
+    SetBudget { budget: f64 },
+    /// Client → engine: stop the experiment.
+    Stop,
+    /// Engine → client: generic acknowledgement.
+    Ok,
+    /// Engine → client: error report.
+    Error { reason: String },
+}
+
+impl Message {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Hello { component, version } => Json::obj(vec![
+                ("type", Json::str("hello")),
+                ("component", Json::str(component)),
+                ("version", Json::num(*version as f64)),
+            ]),
+            Message::StatusRequest => {
+                Json::obj(vec![("type", Json::str("status_request"))])
+            }
+            Message::Status {
+                jobs_total,
+                jobs_completed,
+                jobs_failed,
+                jobs_running,
+                spent,
+                busy_workers,
+                elapsed_s,
+            } => Json::obj(vec![
+                ("type", Json::str("status")),
+                ("jobs_total", Json::num(*jobs_total as f64)),
+                ("jobs_completed", Json::num(*jobs_completed as f64)),
+                ("jobs_failed", Json::num(*jobs_failed as f64)),
+                ("jobs_running", Json::num(*jobs_running as f64)),
+                ("spent", Json::num(*spent)),
+                ("busy_workers", Json::num(*busy_workers as f64)),
+                ("elapsed_s", Json::num(*elapsed_s)),
+            ]),
+            Message::SetDeadline { deadline_s } => Json::obj(vec![
+                ("type", Json::str("set_deadline")),
+                ("deadline_s", Json::num(*deadline_s)),
+            ]),
+            Message::SetBudget { budget } => Json::obj(vec![
+                ("type", Json::str("set_budget")),
+                ("budget", Json::num(*budget)),
+            ]),
+            Message::Stop => Json::obj(vec![("type", Json::str("stop"))]),
+            Message::Ok => Json::obj(vec![("type", Json::str("ok"))]),
+            Message::Error { reason } => Json::obj(vec![
+                ("type", Json::str("error")),
+                ("reason", Json::str(reason)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Message> {
+        Ok(match v.req_str("type")? {
+            "hello" => Message::Hello {
+                component: v.req_str("component")?.to_string(),
+                version: v.req_f64("version")? as u32,
+            },
+            "status_request" => Message::StatusRequest,
+            "status" => Message::Status {
+                jobs_total: v.req_f64("jobs_total")? as u32,
+                jobs_completed: v.req_f64("jobs_completed")? as u32,
+                jobs_failed: v.req_f64("jobs_failed")? as u32,
+                jobs_running: v.req_f64("jobs_running")? as u32,
+                spent: v.req_f64("spent")?,
+                busy_workers: v.req_f64("busy_workers")? as u32,
+                elapsed_s: v.req_f64("elapsed_s")?,
+            },
+            "set_deadline" => Message::SetDeadline {
+                deadline_s: v.req_f64("deadline_s")?,
+            },
+            "set_budget" => Message::SetBudget {
+                budget: v.req_f64("budget")?,
+            },
+            "stop" => Message::Stop,
+            "ok" => Message::Ok,
+            "error" => Message::Error {
+                reason: v.req_str("reason")?.to_string(),
+            },
+            other => bail!("unknown message type `{other}`"),
+        })
+    }
+}
+
+/// Write one framed message.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let body = msg.to_json().to_string();
+    let len = body.len() as u32;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("oversized frame: {len} bytes");
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).context("read frame body")?;
+    let text = std::str::from_utf8(&body).context("frame not utf-8")?;
+    Message::from_json(&parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Hello {
+            component: "client".into(),
+            version: 1,
+        });
+        roundtrip(Message::StatusRequest);
+        roundtrip(Message::Status {
+            jobs_total: 165,
+            jobs_completed: 42,
+            jobs_failed: 1,
+            jobs_running: 8,
+            spent: 1234.5,
+            busy_workers: 8,
+            elapsed_s: 77.7,
+        });
+        roundtrip(Message::SetDeadline { deadline_s: 3600.0 });
+        roundtrip(Message::SetBudget { budget: 500.0 });
+        roundtrip(Message::Stop);
+        roundtrip(Message::Ok);
+        roundtrip(Message::Error {
+            reason: "boom".into(),
+        });
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::StatusRequest).unwrap();
+        write_frame(&mut buf, &Message::Stop).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Message::StatusRequest);
+        assert_eq!(read_frame(&mut r).unwrap(), Message::Stop);
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::Stop).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let buf = (MAX_FRAME + 1).to_be_bytes().to_vec();
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn garbage_body_rejected() {
+        let body = b"not json";
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

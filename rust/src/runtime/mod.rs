@@ -1,0 +1,337 @@
+//! The PJRT runtime bridge: load AOT HLO-text artifacts and execute them
+//! from the Rust request path (Python is never involved at runtime).
+//!
+//! `make artifacts` lowers the L2 JAX chamber model (with its L1 Pallas
+//! kernels inlined) to `artifacts/*.hlo.txt` plus a `manifest.json`
+//! describing shapes and carrying golden probe outputs. [`ChamberRuntime`]
+//! compiles the artifacts once on a PJRT CPU client;
+//! [`ChamberRuntime::run`] executes a batch of job parameters, padding the
+//! tail batch as needed.
+//!
+//! Two interchange gotchas (see DESIGN.md and python/compile/aot.py):
+//! * HLO **text**, not serialized protos — jax ≥ 0.5 emits 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects;
+//! * the DST matrix and eigenvalue grid arrive as **runtime inputs** read
+//!   from raw f32 files — the HLO text printer elides large constants
+//!   (`constant({...})`), which the 0.5.1 text parser reads back as zeros.
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Result of one chamber-model evaluation (one job).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChamberOutput {
+    /// Collected charge (the calibration observable).
+    pub response: f32,
+    /// Total deposited dose.
+    pub dose: f32,
+}
+
+/// One compiled artifact.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// The chamber-model runtime: a PJRT CPU client plus the compiled batch and
+/// batch-1 executables and the constant operand data.
+pub struct ChamberRuntime {
+    _client: xla::PjRtClient,
+    batched: Compiled,
+    single: Option<Compiled>,
+    grid_n: usize,
+    dst: Vec<f32>,
+    lam: Vec<f32>,
+    /// Golden probe from the manifest: (params, response, dose).
+    golden: Option<(Vec<[f32; 3]>, Vec<f32>, Vec<f32>)>,
+    /// Executions performed (metrics).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl ChamberRuntime {
+    /// Locate the artifacts directory: `$NIMROD_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts`.
+    pub fn default_artifact_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("NIMROD_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load and compile the artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<ChamberRuntime> {
+        let manifest_path = dir.join("manifest.json");
+        let manifest_src = std::fs::read_to_string(&manifest_path).with_context(
+            || {
+                format!(
+                    "read {} (run `make artifacts` first)",
+                    manifest_path.display()
+                )
+            },
+        )?;
+        let manifest = parse(&manifest_src).context("parse manifest.json")?;
+        if manifest.req_str("format")? != "hlo-text" {
+            bail!("unsupported artifact format");
+        }
+        let grid_n = manifest.req_f64("grid_n")? as usize;
+        let dst = read_f32_file(&dir.join("dst_matrix.f32"), grid_n * grid_n)?;
+        let lam = read_f32_file(&dir.join("laplacian.f32"), grid_n * grid_n)?;
+
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let arts = manifest.get("artifacts");
+        let batched = Self::compile_one(&client, dir, arts, "chamber.hlo.txt")
+            .context("compile chamber.hlo.txt")?;
+        // The batch-1 variant is optional (latency path).
+        let single =
+            Self::compile_one(&client, dir, arts, "chamber_b1.hlo.txt").ok();
+
+        let golden = Self::parse_golden(manifest.get("golden"));
+
+        Ok(ChamberRuntime {
+            _client: client,
+            batched,
+            single,
+            grid_n,
+            dst,
+            lam,
+            golden,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    fn parse_golden(g: &Json) -> Option<(Vec<[f32; 3]>, Vec<f32>, Vec<f32>)> {
+        let params: Vec<[f32; 3]> = g
+            .get("params")
+            .as_arr()?
+            .iter()
+            .filter_map(|row| {
+                let r = row.as_arr()?;
+                Some([
+                    r.first()?.as_f64()? as f32,
+                    r.get(1)?.as_f64()? as f32,
+                    r.get(2)?.as_f64()? as f32,
+                ])
+            })
+            .collect();
+        let vecf = |key: &str| -> Option<Vec<f32>> {
+            Some(
+                g.get(key)
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|x| x.as_f64().map(|v| v as f32))
+                    .collect(),
+            )
+        };
+        Some((params, vecf("response")?, vecf("dose")?))
+    }
+
+    fn compile_one(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        arts: &Json,
+        name: &str,
+    ) -> Result<Compiled> {
+        let meta = arts.get(name);
+        let batch = meta.req_f64("batch")? as usize;
+        let path = dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(Compiled { exe, batch })
+    }
+
+    /// Batch size of the main executable.
+    pub fn batch_size(&self) -> usize {
+        self.batched.batch
+    }
+
+    /// Golden-parity check: run the manifest's probe batch and compare
+    /// against the jax-computed outputs. Returns the max abs error.
+    pub fn verify_golden(&self) -> Result<f32> {
+        let Some((params, want_r, want_d)) = self.golden.clone() else {
+            bail!("manifest has no golden probe");
+        };
+        let got = self.run(&params)?;
+        let mut max_err = 0f32;
+        for (g, (wr, wd)) in got.iter().zip(want_r.iter().zip(&want_d)) {
+            max_err = max_err.max((g.response - wr).abs());
+            max_err = max_err.max((g.dose - wd).abs());
+        }
+        Ok(max_err)
+    }
+
+    /// Evaluate the chamber model for each `[voltage, pressure, energy]`
+    /// row. Inputs are chunked to the artifact batch size; the tail chunk is
+    /// padded (padding rows are discarded). Uses the batch-1 executable for
+    /// single jobs when available.
+    pub fn run(&self, params: &[[f32; 3]]) -> Result<Vec<ChamberOutput>> {
+        let mut out = Vec::with_capacity(params.len());
+        if params.is_empty() {
+            return Ok(out);
+        }
+        let mut i = 0;
+        while i < params.len() {
+            let left = params.len() - i;
+            let (c, take) = match (&self.single, left) {
+                (Some(s), 1) => (s, 1),
+                _ => (&self.batched, left.min(self.batched.batch)),
+            };
+            let chunk = &params[i..i + take];
+            let results = self.run_chunk(c, chunk)?;
+            out.extend(results);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    fn run_chunk(
+        &self,
+        c: &Compiled,
+        chunk: &[[f32; 3]],
+    ) -> Result<Vec<ChamberOutput>> {
+        debug_assert!(chunk.len() <= c.batch);
+        // Pad to the executable's fixed batch.
+        let mut flat = Vec::with_capacity(c.batch * 3);
+        for row in chunk {
+            flat.extend_from_slice(row);
+        }
+        for _ in chunk.len()..c.batch {
+            // Benign mid-range padding values.
+            flat.extend_from_slice(&[400.0, 1.0, 10.0]);
+        }
+        let n = self.grid_n as i64;
+        let params_lit = xla::Literal::vec1(&flat).reshape(&[c.batch as i64, 3])?;
+        let dst_lit = xla::Literal::vec1(&self.dst).reshape(&[n, n])?;
+        let lam_lit = xla::Literal::vec1(&self.lam).reshape(&[n, n])?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[params_lit, dst_lit, lam_lit])?[0][0]
+            .to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        // jax lowering used return_tuple=True with two outputs.
+        let (response, dose) = result.to_tuple2()?;
+        let response = response.to_vec::<f32>()?;
+        let dose = dose.to_vec::<f32>()?;
+        if response.len() < chunk.len() || dose.len() < chunk.len() {
+            bail!(
+                "artifact returned {} outputs for batch {}",
+                response.len(),
+                chunk.len()
+            );
+        }
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(k, _)| ChamberOutput {
+                response: response[k],
+                dose: dose[k],
+            })
+            .collect())
+    }
+}
+
+/// Read a raw little-endian f32 file, checking the element count.
+fn read_f32_file(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    if bytes.len() != expect * 4 {
+        bail!(
+            "{}: expected {} f32s, found {} bytes",
+            path.display(),
+            expect,
+            bytes.len()
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<ChamberRuntime> {
+        let dir = ChamberRuntime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: artifacts not built");
+            return None;
+        }
+        Some(ChamberRuntime::load(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn golden_parity_with_jax() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.verify_golden().expect("golden probe present");
+        assert!(err < 1e-3, "rust-vs-jax divergence {err}");
+    }
+
+    #[test]
+    fn executes_full_batch() {
+        let Some(rt) = runtime() else { return };
+        let b = rt.batch_size();
+        let params: Vec<[f32; 3]> = (0..b)
+            .map(|i| [200.0 + 50.0 * i as f32, 1.0, 5.0 + i as f32])
+            .collect();
+        let out = rt.run(&params).unwrap();
+        assert_eq!(out.len(), b);
+        for o in &out {
+            assert!(o.response.is_finite() && o.response > 0.0, "{o:?}");
+            assert!(o.dose >= o.response - 1e-3, "eta <= 1 ⇒ response <= dose");
+        }
+    }
+
+    #[test]
+    fn tail_padding_discarded() {
+        let Some(rt) = runtime() else { return };
+        let b = rt.batch_size();
+        let params: Vec<[f32; 3]> = (0..b + 3)
+            .map(|i| [300.0, 0.8 + 0.05 * i as f32, 10.0])
+            .collect();
+        let out = rt.run(&params).unwrap();
+        assert_eq!(out.len(), b + 3);
+    }
+
+    #[test]
+    fn single_job_uses_b1_and_matches_batch() {
+        let Some(rt) = runtime() else { return };
+        let p = [[500.0f32, 1.2, 8.0]];
+        let single = rt.run(&p).unwrap()[0];
+        // Same parameters inside a full batch give the same numbers.
+        let b = rt.batch_size();
+        let batch: Vec<[f32; 3]> = std::iter::repeat(p[0]).take(b).collect();
+        let batched = rt.run(&batch).unwrap()[0];
+        assert!((single.response - batched.response).abs() < 1e-4);
+        assert!((single.dose - batched.dose).abs() < 1e-4);
+    }
+
+    #[test]
+    fn physics_monotonicity_voltage() {
+        let Some(rt) = runtime() else { return };
+        let out = rt
+            .run(&[[150.0, 1.0, 10.0], [900.0, 1.0, 10.0]])
+            .unwrap();
+        assert!(
+            out[1].response > out[0].response,
+            "higher voltage must collect more charge: {out:?}"
+        );
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.run(&[]).unwrap().is_empty());
+    }
+}

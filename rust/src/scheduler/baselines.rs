@@ -1,0 +1,233 @@
+//! Baseline schedulers from the paper's related-work section (§6), used by
+//! the comparison benches: none of these understand the computational
+//! economy, which is exactly the gap the paper's DBC schedulers fill.
+
+use super::{Allocation, Policy, ResourceView, SchedCtx};
+
+/// Classic round-robin: hand slots out one at a time cycling over the
+/// resource list until remaining jobs are covered. Position persists across
+/// ticks so the rotation is fair over the experiment.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl Policy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .collect();
+        let mut alloc = Allocation::new();
+        if rs.is_empty() {
+            return alloc;
+        }
+        let mut remaining = ctx.remaining_jobs;
+        let mut exhausted = 0;
+        while remaining > 0 && exhausted < rs.len() {
+            let r = rs[self.cursor % rs.len()];
+            self.cursor = (self.cursor + 1) % rs.len();
+            let have = alloc.get(&r.id).copied().unwrap_or(0);
+            if have < r.slots {
+                alloc.insert(r.id, have + 1);
+                remaining -= 1;
+                exhausted = 0;
+            } else {
+                exhausted += 1;
+            }
+        }
+        alloc
+    }
+}
+
+/// Random subset: sample resources uniformly until remaining jobs are
+/// covered. The "no scheduler" straw-man.
+#[derive(Debug, Default)]
+pub struct RandomPick;
+
+impl Policy for RandomPick {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .collect();
+        let mut alloc = Allocation::new();
+        if rs.is_empty() {
+            return alloc;
+        }
+        let mut remaining = ctx.remaining_jobs;
+        // Bounded draw count keeps the tick O(jobs + resources).
+        let mut attempts = 4 * (ctx.remaining_jobs as usize + rs.len());
+        while remaining > 0 && attempts > 0 {
+            attempts -= 1;
+            let r = rs[ctx.rng.below(rs.len())];
+            let have = alloc.get(&r.id).copied().unwrap_or(0);
+            if have < r.slots {
+                alloc.insert(r.id, have + 1);
+                remaining -= 1;
+            }
+        }
+        alloc
+    }
+}
+
+/// AppLeS-like performance-only selection: always run on the
+/// highest-effective-speed machines available (NWS-style load-corrected),
+/// price never considered, capacity never trimmed to the deadline.
+#[derive(Debug, Default)]
+pub struct PerfOnly;
+
+impl Policy for PerfOnly {
+    fn name(&self) -> &'static str {
+        "perf"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let mut rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .collect();
+        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
+        let mut alloc = Allocation::new();
+        let mut total = 0u32;
+        for r in rs {
+            if total >= ctx.remaining_jobs {
+                break;
+            }
+            let take = r.slots.min(ctx.remaining_jobs - total);
+            alloc.insert(r.id, take);
+            total += take;
+        }
+        alloc
+    }
+}
+
+/// REXEC-like fixed-rate policy: the user caps the rate they will pay
+/// (credits per minute in REXEC; G$/CPU-second here); any resource at or
+/// under the cap is used, fastest first. No deadline awareness.
+#[derive(Debug)]
+pub struct FixedRate {
+    pub max_rate: f64,
+}
+
+impl Default for FixedRate {
+    fn default() -> Self {
+        FixedRate { max_rate: 1.0 }
+    }
+}
+
+impl Policy for FixedRate {
+    fn name(&self) -> &'static str {
+        "fixed-rate"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let mut rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .filter(|r| r.rate <= self.max_rate)
+            .collect();
+        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
+        let mut alloc = Allocation::new();
+        let mut total = 0u32;
+        for r in rs {
+            if total >= ctx.remaining_jobs {
+                break;
+            }
+            let take = r.slots.min(ctx.remaining_jobs - total);
+            alloc.insert(r.id, take);
+            total += take;
+        }
+        alloc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::view;
+    use super::*;
+    use crate::types::{ResourceId, HOUR};
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        resources: &'a [ResourceView],
+        rng: &'a mut Rng,
+        jobs: u32,
+    ) -> SchedCtx<'a> {
+        SchedCtx {
+            now: 0.0,
+            deadline: 10.0 * HOUR,
+            budget_headroom: None,
+            remaining_jobs: jobs,
+            job_work_ref_h: 1.0,
+            resources,
+            rng,
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let rs = vec![view(0, 4, 1.0, 1.0), view(1, 4, 1.0, 1.0), view(2, 4, 1.0, 1.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 6);
+        let alloc = RoundRobin::default().allocate(&mut c);
+        assert_eq!(alloc.len(), 3);
+        assert!(alloc.values().all(|&n| n == 2), "{alloc:?}");
+    }
+
+    #[test]
+    fn round_robin_caps_at_slots() {
+        let rs = vec![view(0, 1, 1.0, 1.0), view(1, 2, 1.0, 1.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 100);
+        let alloc = RoundRobin::default().allocate(&mut c);
+        assert_eq!(alloc[&ResourceId(0)], 1);
+        assert_eq!(alloc[&ResourceId(1)], 2);
+    }
+
+    #[test]
+    fn random_total_never_exceeds_jobs_or_slots() {
+        let rs = vec![view(0, 3, 1.0, 1.0), view(1, 2, 1.0, 1.0)];
+        let mut rng = Rng::new(42);
+        let mut c = ctx(&rs, &mut rng, 4);
+        let alloc = RandomPick.allocate(&mut c);
+        let total: u32 = alloc.values().sum();
+        assert!(total <= 4);
+        for (id, n) in &alloc {
+            let r = rs.iter().find(|r| r.id == *id).unwrap();
+            assert!(*n <= r.slots);
+        }
+    }
+
+    #[test]
+    fn perf_only_picks_fastest() {
+        let rs = vec![view(0, 8, 0.5, 0.01), view(1, 8, 3.0, 50.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 4);
+        let alloc = PerfOnly.allocate(&mut c);
+        assert_eq!(alloc.get(&ResourceId(1)), Some(&4));
+        assert!(!alloc.contains_key(&ResourceId(0)));
+    }
+
+    #[test]
+    fn fixed_rate_excludes_expensive() {
+        let rs = vec![view(0, 8, 1.0, 0.5), view(1, 8, 5.0, 2.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 16);
+        let alloc = FixedRate { max_rate: 1.0 }.allocate(&mut c);
+        assert!(alloc.contains_key(&ResourceId(0)));
+        assert!(!alloc.contains_key(&ResourceId(1)));
+    }
+}

@@ -1,0 +1,440 @@
+//! Deadline/budget-constrained (DBC) scheduling algorithms — the paper's
+//! computational-economy schedulers (§3).
+//!
+//! All four share the adaptive loop the paper describes for the Figure-3
+//! trial: each tick they re-derive the capacity needed from *remaining* work
+//! and *remaining* time, so as the deadline tightens (or machines slow down,
+//! fail, or get expensive) the resource set grows, and when the experiment
+//! runs ahead of schedule expensive machines are released — "adapts the list
+//! of machines it is using depending on competition for them".
+
+use super::{Allocation, Policy, ResourceView, SchedCtx};
+
+/// Tail-feasibility filter: a resource is only eligible while one of its
+/// slots can still finish a whole job inside the remaining window —
+/// otherwise tail jobs get stranded on cheap-but-slow machines and the
+/// deadline slips (the classic straggler failure the adaptive loop exists
+/// to avoid).
+fn finishes_in_window(r: &ResourceView, ctx: &SchedCtx<'_>) -> bool {
+    r.jphps(ctx.job_work_ref_h) * ctx.hours_left() >= 1.0
+}
+
+/// Order resources by expected cost per job, cheapest first; ties (same
+/// price) break toward the faster machine.
+fn by_cost<'a>(
+    ctx: &SchedCtx<'a>,
+) -> Vec<&'a ResourceView> {
+    let mut rs: Vec<&ResourceView> = ctx
+        .resources
+        .iter()
+        .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+        .filter(|r| finishes_in_window(r, ctx))
+        .collect();
+    if rs.is_empty() {
+        // Deadline infeasible on every machine: run best-effort rather than
+        // stall (the user renegotiates the deadline, §3).
+        rs = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .collect();
+    }
+    rs.sort_by(|a, b| {
+        a.cost_per_job(ctx.job_work_ref_h)
+            .total_cmp(&b.cost_per_job(ctx.job_work_ref_h))
+            .then(b.planning_speed.total_cmp(&a.planning_speed))
+    });
+    rs
+}
+
+/// Greedy capacity fill: walk `ordered`, allocating slots until the
+/// aggregate planned throughput reaches `needed_jph` (or resources run out).
+/// Never allocates more total slots than `remaining_jobs` (no point
+/// holding capacity that can't receive a job).
+fn fill_capacity(
+    ordered: &[&ResourceView],
+    needed_jph: f64,
+    remaining_jobs: u32,
+    job_work_ref_h: f64,
+) -> Allocation {
+    let mut alloc = Allocation::new();
+    let mut rate = 0.0;
+    let mut slots_total = 0u32;
+    for r in ordered {
+        if rate >= needed_jph || slots_total >= remaining_jobs {
+            break;
+        }
+        let per_slot = r.jphps(job_work_ref_h);
+        if per_slot <= 0.0 {
+            continue;
+        }
+        // Slots needed from this resource to close the gap.
+        let want = ((needed_jph - rate) / per_slot).ceil() as u32;
+        let take = want
+            .min(r.slots)
+            .min(remaining_jobs.saturating_sub(slots_total));
+        if take == 0 {
+            continue;
+        }
+        alloc.insert(r.id, take);
+        rate += take as f64 * per_slot;
+        slots_total += take;
+    }
+    alloc
+}
+
+/// **Cost-optimizing DBC** — the paper's headline scheduler: select the
+/// cheapest set of resources whose aggregate rate still meets the deadline;
+/// re-evaluated every tick. With a budget, expensive resources are skipped
+/// once the projected spend of the tentative allocation exceeds headroom.
+#[derive(Debug, Default)]
+pub struct CostOpt;
+
+impl Policy for CostOpt {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let ordered = by_cost(ctx);
+        let mut alloc =
+            fill_capacity(&ordered, ctx.required_rate_jph(), ctx.remaining_jobs, ctx.job_work_ref_h);
+        // Budget guard: projected spend for remaining jobs under this
+        // allocation must fit in the headroom; if it does not, shed the
+        // most expensive allocated resources (jobs they would have taken
+        // run later on cheaper machines — the deadline may slip, which is
+        // the correct economic outcome when the budget binds).
+        if let Some(headroom) = ctx.budget_headroom {
+            let mut allocated: Vec<&&ResourceView> = ordered
+                .iter()
+                .filter(|r| alloc.contains_key(&r.id))
+                .collect();
+            allocated.sort_by(|a, b| {
+                b.cost_per_job(ctx.job_work_ref_h)
+                    .total_cmp(&a.cost_per_job(ctx.job_work_ref_h))
+            });
+            let mut projected = projected_spend(ctx, &alloc);
+            for r in allocated {
+                if projected <= headroom {
+                    break;
+                }
+                let slots = alloc.remove(&r.id).unwrap_or(0);
+                let share = share_of(ctx, r, slots, &alloc);
+                projected -= share * r.cost_per_job(ctx.job_work_ref_h);
+            }
+        }
+        alloc
+    }
+}
+
+/// Projected spend: remaining jobs split across the allocation
+/// proportionally to throughput, each priced at its resource.
+fn projected_spend(ctx: &SchedCtx<'_>, alloc: &Allocation) -> f64 {
+    let total_rate: f64 = ctx
+        .resources
+        .iter()
+        .filter_map(|r| {
+            alloc
+                .get(&r.id)
+                .map(|&n| n as f64 * r.jphps(ctx.job_work_ref_h))
+        })
+        .sum();
+    if total_rate <= 0.0 {
+        return 0.0;
+    }
+    ctx.resources
+        .iter()
+        .filter_map(|r| {
+            alloc.get(&r.id).map(|&n| {
+                let share = n as f64 * r.jphps(ctx.job_work_ref_h) / total_rate;
+                share * ctx.remaining_jobs as f64 * r.cost_per_job(ctx.job_work_ref_h)
+            })
+        })
+        .sum()
+}
+
+/// Job share a resource would take under the allocation (for shed math).
+fn share_of(
+    ctx: &SchedCtx<'_>,
+    r: &ResourceView,
+    slots: u32,
+    rest: &Allocation,
+) -> f64 {
+    let r_rate = slots as f64 * r.jphps(ctx.job_work_ref_h);
+    let rest_rate: f64 = ctx
+        .resources
+        .iter()
+        .filter_map(|x| {
+            rest.get(&x.id)
+                .map(|&n| n as f64 * x.jphps(ctx.job_work_ref_h))
+        })
+        .sum();
+    if r_rate + rest_rate <= 0.0 {
+        0.0
+    } else {
+        r_rate / (r_rate + rest_rate) * ctx.remaining_jobs as f64
+    }
+}
+
+/// **Time-optimizing DBC**: finish as early as possible — saturate resources
+/// fastest-first (within budget if one is set). The deadline only matters as
+/// a feasibility check; capacity is not trimmed to it.
+#[derive(Debug, Default)]
+pub struct TimeOpt;
+
+impl Policy for TimeOpt {
+    fn name(&self) -> &'static str {
+        "time"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let mut rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .collect();
+        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
+        let mut alloc = Allocation::new();
+        let mut slots_total = 0u32;
+        let mut projected = 0.0;
+        for r in rs {
+            if slots_total >= ctx.remaining_jobs {
+                break;
+            }
+            let take = r.slots.min(ctx.remaining_jobs - slots_total);
+            if let Some(headroom) = ctx.budget_headroom {
+                // Rough guard: average cost of jobs placed here.
+                let add = take as f64 * r.cost_per_job(ctx.job_work_ref_h);
+                if projected + add > headroom {
+                    continue;
+                }
+                projected += add;
+            }
+            alloc.insert(r.id, take);
+            slots_total += take;
+        }
+        alloc
+    }
+}
+
+/// **Conservative-time DBC**: time-optimizing, but each job is only placed
+/// where its expected cost stays within an equal per-job share of the
+/// remaining budget — guaranteeing unprocessed jobs keep their funding (the
+/// conservative variant described in the Nimrod/G economy papers).
+#[derive(Debug, Default)]
+pub struct ConservativeTime;
+
+impl Policy for ConservativeTime {
+    fn name(&self) -> &'static str {
+        "conservative-time"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let per_job_cap = ctx
+            .budget_headroom
+            .map(|h| h / ctx.remaining_jobs.max(1) as f64);
+        let mut rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .filter(|r| match per_job_cap {
+                Some(cap) => r.cost_per_job(ctx.job_work_ref_h) <= cap,
+                None => true,
+            })
+            .collect();
+        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
+        let mut alloc = Allocation::new();
+        let mut slots_total = 0u32;
+        for r in rs {
+            if slots_total >= ctx.remaining_jobs {
+                break;
+            }
+            let take = r.slots.min(ctx.remaining_jobs - slots_total);
+            alloc.insert(r.id, take);
+            slots_total += take;
+        }
+        alloc
+    }
+}
+
+/// **Deadline-only** — the first-generation Nimrod/G scheduler ("tries to
+/// find sufficient resources to meet the user's deadline" without a real
+/// economy): identical capacity sizing to cost-opt but ordered by speed, so
+/// it grabs the fastest sufficient set regardless of price.
+#[derive(Debug, Default)]
+pub struct DeadlineOnly;
+
+impl Policy for DeadlineOnly {
+    fn name(&self) -> &'static str {
+        "deadline-only"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let mut rs: Vec<&ResourceView> = ctx
+            .resources
+            .iter()
+            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+            .filter(|r| finishes_in_window(r, ctx))
+            .collect();
+        if rs.is_empty() {
+            rs = ctx
+                .resources
+                .iter()
+                .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
+                .collect();
+        }
+        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
+        fill_capacity(&rs, ctx.required_rate_jph(), ctx.remaining_jobs, ctx.job_work_ref_h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::view;
+    use super::*;
+    use crate::types::{ResourceId, HOUR};
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        resources: &'a [ResourceView],
+        rng: &'a mut Rng,
+        deadline_h: f64,
+        jobs: u32,
+        budget: Option<f64>,
+    ) -> SchedCtx<'a> {
+        SchedCtx {
+            now: 0.0,
+            deadline: deadline_h * HOUR,
+            budget_headroom: budget,
+            remaining_jobs: jobs,
+            job_work_ref_h: 1.0,
+            resources,
+            rng,
+        }
+    }
+
+    #[test]
+    fn cost_opt_prefers_cheap_resources() {
+        // cheap-slow vs dear-fast; relaxed deadline ⇒ cheap only.
+        let rs = vec![view(0, 10, 1.0, 0.5), view(1, 10, 2.0, 5.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 20.0, 10, None);
+        let alloc = CostOpt.allocate(&mut c);
+        assert!(alloc.contains_key(&ResourceId(0)));
+        assert!(!alloc.contains_key(&ResourceId(1)), "{alloc:?}");
+    }
+
+    #[test]
+    fn cost_opt_adds_resources_as_deadline_tightens() {
+        let rs = vec![view(0, 4, 1.0, 0.5), view(1, 8, 1.0, 2.0), view(2, 8, 1.0, 6.0)];
+        let mut rng = Rng::new(1);
+        let mut loose = ctx(&rs, &mut rng, 40.0, 40, None);
+        let a_loose: u32 = CostOpt.allocate(&mut loose).values().sum();
+        let mut rng = Rng::new(1);
+        let mut tight = ctx(&rs, &mut rng, 4.0, 40, None);
+        let a_tight: u32 = CostOpt.allocate(&mut tight).values().sum();
+        assert!(
+            a_tight > a_loose,
+            "tight {a_tight} should use more slots than loose {a_loose}"
+        );
+    }
+
+    #[test]
+    fn cost_opt_respects_budget() {
+        let rs = vec![view(0, 2, 1.0, 0.001), view(1, 50, 1.0, 10.0)];
+        let mut rng = Rng::new(1);
+        // Tight deadline wants the expensive machine, but the budget can
+        // only carry the cheap one (100 jobs × 36000 G$/job ≫ 1000).
+        let mut c = ctx(&rs, &mut rng, 1.0, 100, Some(1000.0));
+        let alloc = CostOpt.allocate(&mut c);
+        assert!(alloc.contains_key(&ResourceId(0)));
+        assert!(
+            !alloc.contains_key(&ResourceId(1)),
+            "budget must exclude the dear machine: {alloc:?}"
+        );
+    }
+
+    #[test]
+    fn time_opt_saturates_fastest_first() {
+        let rs = vec![view(0, 4, 1.0, 0.1), view(1, 4, 3.0, 9.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 10.0, 100, None);
+        let alloc = TimeOpt.allocate(&mut c);
+        assert_eq!(alloc[&ResourceId(1)], 4); // fastest fully used
+        assert_eq!(alloc[&ResourceId(0)], 4);
+    }
+
+    #[test]
+    fn time_opt_never_allocates_beyond_remaining_jobs() {
+        let rs = vec![view(0, 64, 1.0, 1.0), view(1, 64, 2.0, 1.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 10.0, 5, None);
+        let alloc = TimeOpt.allocate(&mut c);
+        let total: u32 = alloc.values().sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn conservative_time_filters_by_per_job_share() {
+        // Budget 100 over 10 jobs ⇒ 10 G$/job cap. Machine 1 costs 36 G$/job.
+        let rs = vec![view(0, 8, 1.0, 0.001), view(1, 8, 1.0, 0.01)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 10.0, 10, Some(100.0));
+        let alloc = ConservativeTime.allocate(&mut c);
+        assert!(alloc.contains_key(&ResourceId(0)));
+        assert!(!alloc.contains_key(&ResourceId(1)), "{alloc:?}");
+    }
+
+    #[test]
+    fn deadline_only_ignores_price() {
+        // Same speeds, wildly different prices: deadline-only picks by speed
+        // order, so the expensive-fast machine is first.
+        let rs = vec![view(0, 8, 1.0, 0.001), view(1, 8, 2.0, 100.0)];
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &mut rng, 2.0, 8, None);
+        let alloc = DeadlineOnly.allocate(&mut c);
+        assert!(alloc.contains_key(&ResourceId(1)), "{alloc:?}");
+    }
+
+    #[test]
+    fn allocations_shrink_when_ahead_of_schedule() {
+        let rs = vec![view(0, 16, 1.0, 1.0)];
+        let mut rng = Rng::new(1);
+        // 16 jobs, 16 hours: needs ~1 job/h ⇒ 2 slots at 1 jph/slot (ceil).
+        let mut c = ctx(&rs, &mut rng, 16.0, 16, None);
+        let alloc = CostOpt.allocate(&mut c);
+        let total: u32 = alloc.values().sum();
+        assert!(total <= 3, "should not saturate: {alloc:?}");
+        // Down to 2 remaining jobs with 10 h left: 1 slot suffices.
+        let mut rng = Rng::new(1);
+        let mut c2 = SchedCtx {
+            now: 6.0 * HOUR,
+            deadline: 16.0 * HOUR,
+            budget_headroom: None,
+            remaining_jobs: 2,
+            job_work_ref_h: 1.0,
+            resources: &rs,
+            rng: &mut rng,
+        };
+        let alloc2 = CostOpt.allocate(&mut c2);
+        let total2: u32 = alloc2.values().sum();
+        assert!(total2 <= total);
+        assert!(total2 >= 1);
+    }
+
+    #[test]
+    fn down_resources_never_allocated() {
+        let mut down = view(0, 8, 0.0, 0.1);
+        down.planning_speed = 0.0;
+        let rs = vec![down, view(1, 2, 1.0, 1.0)];
+        for name in ["cost", "time", "conservative-time", "deadline-only"] {
+            let mut rng = Rng::new(1);
+            let mut c = ctx(&rs, &mut rng, 1.0, 50, None);
+            let alloc = super::super::by_name(name).unwrap().allocate(&mut c);
+            assert!(
+                !alloc.contains_key(&ResourceId(0)),
+                "{name} allocated a down resource"
+            );
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! The Nimrod/G schedule advisor (paper §2 "Scheduler", §3).
+//!
+//! Responsibilities split exactly as the paper lists them:
+//!
+//! 1. **resource discovery** — the simulation/live driver queries
+//!    [`crate::grid::mds`] and assembles a [`ResourceView`] per authorized
+//!    machine (stale capability + status + current quoted price);
+//! 2. **resource selection** — a [`Policy`] turns those views plus the
+//!    experiment state ([`SchedCtx`]) into an [`Allocation`]: a target
+//!    number of concurrently in-flight jobs per resource;
+//! 3. **job assignment** — the dispatcher tops resources up to their
+//!    allocation and tears down what the policy no longer wants.
+//!
+//! Policies implemented (see [`dbc`] and [`baselines`]):
+//!
+//! | name | behaviour |
+//! |---|---|
+//! | `cost` | deadline/budget-constrained **cost-optimizing** (the paper's headline scheduler: cheapest resources that still meet the deadline) |
+//! | `time` | deadline-constrained **time-optimizing** (finish ASAP within budget) |
+//! | `conservative-time` | time-optimizing with per-job budget guards |
+//! | `deadline-only` | the pre-economy Nimrod/G (meet deadline, ignore cost) |
+//! | `round-robin` | classic metacomputing baseline |
+//! | `random` | random resource subset |
+//! | `perf` | AppLeS-like performance-only selection |
+//! | `fixed-rate` | REXEC-like: any resource priced under a user rate cap |
+
+pub mod baselines;
+pub mod dbc;
+pub mod rate;
+
+pub use rate::RateEstimator;
+
+use crate::types::{GridDollars, ResourceId, SimTime};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Safety factor applied to time-to-deadline when sizing capacity: plan to
+/// finish in 85% of the remaining window, leaving slack for estimate error
+/// and running stragglers (jobs are never pre-empted once started).
+pub const DEADLINE_SAFETY: f64 = 0.85;
+
+/// Everything the scheduler knows about one discovered resource at tick
+/// time. Assembled by the driver from MDS (stale), GRAM (in-flight counts),
+/// the economy (current quoted rate for this user) and the rate estimator.
+#[derive(Debug, Clone)]
+pub struct ResourceView {
+    pub id: ResourceId,
+    /// Concurrent job slots GRAM admits (≤ CPUs).
+    pub slots: u32,
+    /// Stale effective speed from the directory (0 if down at last refresh).
+    pub planning_speed: f64,
+    /// Quoted G$/CPU-second for this user right now.
+    pub rate: GridDollars,
+    /// Jobs currently dispatched here (running + queued).
+    pub in_flight: u32,
+    /// Measured service rate, jobs/hour/slot, if history exists.
+    pub measured_jphps: Option<f64>,
+    pub batch_queue: bool,
+}
+
+impl ResourceView {
+    /// Planning throughput in jobs/hour/slot: measured history if present,
+    /// else the capability prior (speed / work-per-job).
+    pub fn jphps(&self, job_work_ref_h: f64) -> f64 {
+        match self.measured_jphps {
+            Some(m) if m > 0.0 => m,
+            _ => {
+                if job_work_ref_h <= 0.0 {
+                    0.0
+                } else {
+                    self.planning_speed / job_work_ref_h
+                }
+            }
+        }
+    }
+
+    /// Expected G$ to run one job here (CPU-seconds × rate).
+    pub fn cost_per_job(&self, job_work_ref_h: f64) -> GridDollars {
+        if self.planning_speed <= 0.0 {
+            return GridDollars::INFINITY;
+        }
+        // CPU-time on this machine = ref-work / speed.
+        self.rate * job_work_ref_h / self.planning_speed * 3600.0
+    }
+}
+
+/// Experiment state the policy plans against.
+#[derive(Debug)]
+pub struct SchedCtx<'a> {
+    pub now: SimTime,
+    pub deadline: SimTime,
+    /// Remaining budget headroom (None = unlimited).
+    pub budget_headroom: Option<GridDollars>,
+    /// Jobs not yet completed (includes in-flight).
+    pub remaining_jobs: u32,
+    /// Current estimate of per-job work, reference-machine CPU-hours.
+    pub job_work_ref_h: f64,
+    pub resources: &'a [ResourceView],
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> SchedCtx<'a> {
+    /// Hours to the (safety-discounted) deadline.
+    pub fn hours_left(&self) -> f64 {
+        ((self.deadline - self.now) * DEADLINE_SAFETY / 3600.0).max(1e-6)
+    }
+
+    /// Aggregate throughput (jobs/hour) needed to finish in time.
+    pub fn required_rate_jph(&self) -> f64 {
+        self.remaining_jobs as f64 / self.hours_left()
+    }
+}
+
+/// Target in-flight jobs per resource. Resources absent from the map get 0
+/// (drain: no new submissions, running jobs finish normally).
+pub type Allocation = BTreeMap<ResourceId, u32>;
+
+/// A scheduling policy (the pluggable "schedule advisor" of Figure 1).
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    /// Compute the per-resource in-flight targets for this tick.
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation;
+}
+
+/// Construct a policy by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
+    Some(match name {
+        "cost" => Box::new(dbc::CostOpt::default()),
+        "time" => Box::new(dbc::TimeOpt::default()),
+        "conservative-time" => Box::new(dbc::ConservativeTime::default()),
+        "deadline-only" => Box::new(dbc::DeadlineOnly::default()),
+        "round-robin" => Box::new(baselines::RoundRobin::default()),
+        "random" => Box::new(baselines::RandomPick::default()),
+        "perf" => Box::new(baselines::PerfOnly::default()),
+        "fixed-rate" => Box::new(baselines::FixedRate::default()),
+        _ => return None,
+    })
+}
+
+/// All policy names (benches iterate these).
+pub const ALL_POLICIES: [&str; 8] = [
+    "cost",
+    "time",
+    "conservative-time",
+    "deadline-only",
+    "round-robin",
+    "random",
+    "perf",
+    "fixed-rate",
+];
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Build a simple view for policy unit tests.
+    pub fn view(id: u32, slots: u32, speed: f64, rate: f64) -> ResourceView {
+        ResourceView {
+            id: ResourceId(id),
+            slots,
+            planning_speed: speed,
+            rate,
+            in_flight: 0,
+            measured_jphps: None,
+            batch_queue: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_registry_complete() {
+        for name in ALL_POLICIES {
+            let p = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(p.name(), name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn cost_per_job_uses_speed_and_rate() {
+        let v = testutil::view(0, 4, 2.0, 1.0);
+        // 1 ref-hour at speed 2 = 1800 cpu-s at 1 G$/s.
+        assert!((v.cost_per_job(1.0) - 1800.0).abs() < 1e-9);
+        let down = ResourceView {
+            planning_speed: 0.0,
+            ..v
+        };
+        assert!(down.cost_per_job(1.0).is_infinite());
+    }
+
+    #[test]
+    fn jphps_prefers_measurement() {
+        let mut v = testutil::view(0, 4, 2.0, 1.0);
+        assert!((v.jphps(0.5) - 4.0).abs() < 1e-12); // prior: 2 / 0.5
+        v.measured_jphps = Some(1.25);
+        assert!((v.jphps(0.5) - 1.25).abs() < 1e-12);
+    }
+}

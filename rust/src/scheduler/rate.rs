@@ -1,0 +1,143 @@
+//! Job-consumption-rate estimation ("Historical Information, including Job
+//! Consumption Rate" — one of the paper's §3 scheduling parameters).
+//!
+//! For each resource the estimator maintains an EWMA of per-job service time
+//! (dispatch → completion wall time divided by concurrency), giving the
+//! measured jobs/hour/slot figure the DBC policies prefer over the
+//! capability prior. It also tracks the global per-job work estimate that
+//! seeds planning before any history exists.
+
+use crate::types::{ResourceId, SimTime};
+use std::collections::BTreeMap;
+
+/// EWMA weight for new observations.
+const ALPHA: f64 = 0.3;
+
+#[derive(Debug, Clone, Default)]
+struct ResStats {
+    /// EWMA of observed per-job service seconds (queue + stage + run).
+    ewma_service_s: Option<f64>,
+    pub completed: u32,
+    pub failed: u32,
+}
+
+/// Per-experiment historical information.
+#[derive(Debug, Clone, Default)]
+pub struct RateEstimator {
+    stats: BTreeMap<ResourceId, ResStats>,
+    /// EWMA of measured job work in reference CPU-hours.
+    work_ewma_ref_h: Option<f64>,
+}
+
+impl RateEstimator {
+    /// Record a completion: `service_s` is wall seconds from dispatch to
+    /// completion; `work_ref_h` the job's work in reference CPU-hours
+    /// (derived from machine speed × busy time).
+    pub fn on_complete(
+        &mut self,
+        rid: ResourceId,
+        service_s: SimTime,
+        work_ref_h: f64,
+    ) {
+        let s = self.stats.entry(rid).or_default();
+        s.completed += 1;
+        s.ewma_service_s = Some(match s.ewma_service_s {
+            Some(prev) => (1.0 - ALPHA) * prev + ALPHA * service_s,
+            None => service_s,
+        });
+        if work_ref_h > 0.0 {
+            self.work_ewma_ref_h = Some(match self.work_ewma_ref_h {
+                Some(prev) => (1.0 - ALPHA) * prev + ALPHA * work_ref_h,
+                None => work_ref_h,
+            });
+        }
+    }
+
+    /// Record a failure (drops the resource's attractiveness implicitly by
+    /// keeping service history unchanged but counting the strike).
+    pub fn on_failure(&mut self, rid: ResourceId) {
+        self.stats.entry(rid).or_default().failed += 1;
+    }
+
+    /// Measured jobs/hour/slot, if any history exists for the resource.
+    pub fn measured_jphps(&self, rid: ResourceId) -> Option<f64> {
+        self.stats
+            .get(&rid)
+            .and_then(|s| s.ewma_service_s)
+            .map(|svc| 3600.0 / svc.max(1e-6))
+    }
+
+    /// Completions recorded for a resource.
+    pub fn completed(&self, rid: ResourceId) -> u32 {
+        self.stats.get(&rid).map(|s| s.completed).unwrap_or(0)
+    }
+
+    /// Failures recorded for a resource.
+    pub fn failures(&self, rid: ResourceId) -> u32 {
+        self.stats.get(&rid).map(|s| s.failed).unwrap_or(0)
+    }
+
+    /// Current job-work estimate (ref CPU-hours), falling back to the prior.
+    pub fn job_work_ref_h(&self, prior: f64) -> f64 {
+        self.work_ewma_ref_h.unwrap_or(prior)
+    }
+
+    /// Total completions across resources.
+    pub fn total_completed(&self) -> u32 {
+        self.stats.values().map(|s| s.completed).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_history_means_no_measurement() {
+        let est = RateEstimator::default();
+        assert_eq!(est.measured_jphps(ResourceId(0)), None);
+        assert_eq!(est.job_work_ref_h(2.5), 2.5);
+    }
+
+    #[test]
+    fn single_observation_sets_rate() {
+        let mut est = RateEstimator::default();
+        est.on_complete(ResourceId(0), 1800.0, 0.5);
+        // 1800 s per job = 2 jobs/hour.
+        assert!((est.measured_jphps(ResourceId(0)).unwrap() - 2.0).abs() < 1e-9);
+        assert!((est.job_work_ref_h(9.9) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges_toward_new_regime() {
+        let mut est = RateEstimator::default();
+        est.on_complete(ResourceId(0), 3600.0, 1.0);
+        // Machine speeds up: 900 s/job from now on.
+        for _ in 0..30 {
+            est.on_complete(ResourceId(0), 900.0, 1.0);
+        }
+        let rate = est.measured_jphps(ResourceId(0)).unwrap();
+        assert!((rate - 4.0).abs() < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn per_resource_isolation() {
+        let mut est = RateEstimator::default();
+        est.on_complete(ResourceId(0), 3600.0, 1.0);
+        est.on_complete(ResourceId(1), 7200.0, 1.0);
+        assert!(est.measured_jphps(ResourceId(0)).unwrap() > est
+            .measured_jphps(ResourceId(1))
+            .unwrap());
+        assert_eq!(est.completed(ResourceId(0)), 1);
+        assert_eq!(est.total_completed(), 2);
+    }
+
+    #[test]
+    fn failures_counted() {
+        let mut est = RateEstimator::default();
+        est.on_failure(ResourceId(3));
+        est.on_failure(ResourceId(3));
+        assert_eq!(est.failures(ResourceId(3)), 2);
+        assert_eq!(est.completed(ResourceId(3)), 0);
+    }
+}

@@ -1,0 +1,700 @@
+//! The discrete-event experiment driver: Nimrod/G running over the
+//! simulated GUSTO testbed in virtual time.
+//!
+//! Wires every component the paper's Figure 2 shows: the parametric engine
+//! ([`crate::engine`]) holds job state; each scheduler tick discovers
+//! resources through MDS, quotes prices from the economy, runs the
+//! configured [`Policy`], and reconciles via the dispatcher
+//! ([`crate::dispatcher::plan_actions`]); GRAM job managers enforce queue
+//! semantics; GASS + the cluster proxy time the staging; background load
+//! and availability churn perturb everything.
+//!
+//! Per-job event chain:
+//!
+//! ```text
+//! Submit ─stage-in──▶ StagedIn ─queue──▶ BeginExec ─exec+stage-out──▶ Complete
+//!    (GASS/proxy)       (GRAM)              (engine Running)           (settle)
+//! ```
+//!
+//! A 20-hour trial replays in a few milliseconds; identical seeds produce
+//! identical traces (see `rust/tests/`).
+
+pub mod live;
+
+use crate::config::ExperimentConfig;
+use crate::dispatcher::{plan_actions, Action};
+use crate::economy::Ledger;
+use crate::engine::journal::Journal;
+use crate::engine::{Experiment, JobState};
+use crate::grid::competition::Competition;
+use crate::grid::dynamics::{ResourceDyn, LOAD_UPDATE_PERIOD_S};
+use crate::grid::gass::Gass;
+use crate::grid::mds::{Mds, MDS_REFRESH_PERIOD_S};
+use crate::grid::proxy::ClusterProxy;
+use crate::grid::testbed::{local_hour, Testbed};
+use crate::grid::JobManager;
+use crate::metrics::{Report, ResourceUsage};
+use crate::plan::JobSpec;
+use crate::scheduler::{by_name, Policy, RateEstimator, ResourceView, SchedCtx};
+use crate::simtime::EventQueue;
+use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
+use crate::util::rng::Rng;
+use crate::workload::WorkSampler;
+use std::collections::BTreeMap;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Scheduler tick (discovery → selection → dispatch).
+    Tick,
+    /// Directory refresh.
+    MdsRefresh,
+    /// Background-load AR(1) step on all resources.
+    LoadUpdate,
+    /// Stage-in finished; hand the job to GRAM.
+    StagedIn { rid: ResourceId, jid: JobId },
+    /// GRAM started the job (queue delay elapsed).
+    BeginExec { rid: ResourceId, jid: JobId },
+    /// Execution + stage-out finished.
+    Complete { rid: ResourceId, jid: JobId },
+    /// Availability churn.
+    Fail { rid: ResourceId },
+    Recover { rid: ResourceId },
+    /// A competing experiment lands on the grid (paper §3).
+    CompetitorArrive,
+    /// Competing experiments holding until `now` leave.
+    CompetitorDepart,
+}
+
+/// Per-in-flight-job bookkeeping.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    dispatched_at: SimTime,
+    exec_started: Option<SimTime>,
+    /// G$/CPU-second locked at execution start.
+    rate: GridDollars,
+    /// Work drawn for this job, reference CPU-hours.
+    work_ref_h: f64,
+    /// CPU seconds this job will consume on its machine.
+    cpu_s: f64,
+}
+
+/// The simulation. Construct with [`GridSimulation::new`], call
+/// [`GridSimulation::run`] for the final [`Report`].
+pub struct GridSimulation {
+    pub tb: Testbed,
+    cfg: ExperimentConfig,
+    dyns: Vec<ResourceDyn>,
+    mds: Mds,
+    gass: Gass,
+    proxy: ClusterProxy,
+    managers: Vec<JobManager>,
+    pub exp: Experiment,
+    pub ledger: Ledger,
+    policy: Box<dyn Policy>,
+    estimator: RateEstimator,
+    sampler: WorkSampler,
+    q: EventQueue<Ev>,
+    rng: Rng,
+    busy_cpus: u32,
+    inflight: BTreeMap<JobId, InFlight>,
+    report: Report,
+    journal: Option<Journal>,
+    /// Background competing-experiment process, if configured.
+    competition: Option<Competition>,
+    /// Stop even if jobs remain (budget exhaustion, dead grid).
+    hard_stop: SimTime,
+}
+
+impl GridSimulation {
+    /// Build a simulation over `tb` running `specs` under `cfg`.
+    pub fn new(tb: Testbed, specs: Vec<JobSpec>, cfg: ExperimentConfig) -> Self {
+        let policy = by_name(&cfg.policy)
+            .unwrap_or_else(|| panic!("unknown policy `{}`", cfg.policy));
+        let mut rng = Rng::new(cfg.seed);
+        let dyns: Vec<ResourceDyn> = tb
+            .resources
+            .iter()
+            .map(|s| ResourceDyn::new(s, &mut rng))
+            .collect();
+        let mds = Mds::new(&tb, &dyns);
+        let managers = tb.resources.iter().map(JobManager::new).collect();
+        let gass = Gass::new(&tb);
+        let jobs_total = specs.len() as u32;
+        let exp = Experiment::new(
+            specs,
+            cfg.deadline,
+            cfg.budget,
+            &cfg.user,
+            cfg.max_attempts,
+        );
+        let ledger = Ledger::new(cfg.budget);
+        let sampler = WorkSampler::new(&cfg.workload, cfg.seed ^ 0xF00D);
+        let mut q = EventQueue::new();
+        q.schedule_at(0.0, Ev::Tick);
+        q.schedule_at(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
+        q.schedule_at(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
+        let competition = cfg.competition.clone().map(|model| {
+            Competition::new(&tb, model, rng.fork(0xC0117E7E))
+        });
+        if competition.is_some() {
+            q.schedule_at(1.0, Ev::CompetitorArrive);
+        }
+        let hard_stop = cfg.deadline * 4.0 + 48.0 * HOUR;
+        let mut sim = GridSimulation {
+            report: Report {
+                jobs_total,
+                deadline_s: cfg.deadline,
+                ..Default::default()
+            },
+            tb,
+            cfg,
+            dyns,
+            mds,
+            gass,
+            proxy: ClusterProxy::default(),
+            managers,
+            exp,
+            ledger,
+            policy,
+            estimator: RateEstimator::default(),
+            sampler,
+            q,
+            rng,
+            busy_cpus: 0,
+            inflight: BTreeMap::new(),
+            journal: None,
+            competition,
+            hard_stop,
+        };
+        // Seed availability churn per resource.
+        for i in 0..sim.tb.resources.len() {
+            let spec = sim.tb.resources[i].clone();
+            let t = sim.dyns[i].draw_uptime(&spec);
+            sim.q.schedule_at(t, Ev::Fail { rid: spec.id });
+        }
+        sim
+    }
+
+    /// Convenience: paper-scale Figure-3 experiment over the GUSTO testbed.
+    pub fn gusto_ionization(cfg: ExperimentConfig) -> Self {
+        let tb = Testbed::gusto(cfg.seed ^ 0x6057, 1.0);
+        let specs = crate::workload::ionization_jobs(cfg.seed);
+        GridSimulation::new(tb, specs, cfg)
+    }
+
+    /// Attach a persistence journal (restart support).
+    pub fn with_journal(mut self, journal: Journal) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Replace the experiment (restart-from-journal path).
+    pub fn with_experiment(mut self, exp: Experiment) -> Self {
+        self.report.jobs_total = exp.jobs.len() as u32;
+        self.exp = exp;
+        self
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    /// Posted G$/CPU-second on `rid` for the experiment user right now
+    /// (owner price at the owner's local hour, before demand premium).
+    fn quote(&self, rid: ResourceId) -> GridDollars {
+        let spec = self.tb.spec(rid);
+        let lh = local_hour(
+            self.cfg.start_utc_hour + self.q.now() / 3600.0,
+            self.tb.site(spec.site).tz_offset_hours,
+        );
+        spec.price.rate_at(lh, &self.cfg.user)
+    }
+
+    /// Effective rate including any competition demand premium — what jobs
+    /// are actually billed at.
+    fn effective_rate(&self, rid: ResourceId) -> GridDollars {
+        let premium = self
+            .competition
+            .as_ref()
+            .map(|c| c.demand_premium(&self.tb, rid))
+            .unwrap_or(1.0);
+        self.quote(rid) * premium
+    }
+
+    /// Run to completion (or hard stop); consume the sim, return the report.
+    pub fn run(mut self) -> Report {
+        while !self.exp.finished() {
+            if self.q.now() > self.hard_stop {
+                break;
+            }
+            let Some((_, ev)) = self.q.pop() else {
+                break; // queue drained with jobs unfinished (dead grid)
+            };
+            self.handle(ev);
+        }
+        self.finalize()
+    }
+
+    /// Run until `t` (for incremental inspection in tests/examples).
+    pub fn run_until(&mut self, t: SimTime) {
+        while !self.exp.finished() {
+            match self.q.next_time() {
+                Some(nt) if nt <= t => {
+                    let (_, ev) = self.q.pop().unwrap();
+                    self.handle(ev);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Finalize the report after the event loop.
+    pub fn finalize(mut self) -> Report {
+        self.report.makespan_s = self.exp.makespan();
+        self.report.jobs_completed = self.exp.completed();
+        self.report.jobs_failed = self.exp.failed();
+        self.report.deadline_met = self.report.jobs_completed
+            + self.report.jobs_failed
+            == self.report.jobs_total
+            && self.report.makespan_s <= self.exp.deadline
+            && self.report.jobs_failed == 0;
+        self.report.total_cost = self.ledger.settled();
+        self.report.resources_used = self
+            .report
+            .per_resource
+            .values()
+            .filter(|u| u.jobs_completed > 0)
+            .count() as u32;
+        self.report.events = self.q.processed();
+        self.report
+    }
+
+    // -- event handlers ------------------------------------------------------
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Tick => self.on_tick(),
+            Ev::MdsRefresh => {
+                self.mds.refresh(&self.tb, &self.dyns, self.q.now());
+                self.q
+                    .schedule_in(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
+            }
+            Ev::LoadUpdate => {
+                for i in 0..self.dyns.len() {
+                    let spec = &self.tb.resources[i];
+                    self.dyns[i].step_load(spec);
+                }
+                self.q.schedule_in(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
+            }
+            Ev::StagedIn { rid, jid } => self.on_staged_in(rid, jid),
+            Ev::BeginExec { rid, jid } => self.on_begin_exec(rid, jid),
+            Ev::Complete { rid, jid } => self.on_complete(rid, jid),
+            Ev::Fail { rid } => self.on_fail(rid),
+            Ev::Recover { rid } => self.on_recover(rid),
+            Ev::CompetitorArrive => {
+                let now = self.q.now();
+                if let Some(comp) = &mut self.competition {
+                    let departs = comp.arrive(&self.tb, now);
+                    self.q.schedule_at(departs, Ev::CompetitorDepart);
+                    let next = comp.draw_interarrival();
+                    self.q.schedule_in(next, Ev::CompetitorArrive);
+                }
+            }
+            Ev::CompetitorDepart => {
+                let now = self.q.now();
+                if let Some(comp) = &mut self.competition {
+                    comp.depart_until(now);
+                }
+            }
+        }
+    }
+
+    fn on_tick(&mut self) {
+        self.report.ticks += 1;
+        let now = self.q.now();
+        // 1. discovery + view assembly.
+        let job_work =
+            self.estimator.job_work_ref_h(self.cfg.workload.job_work_ref_h);
+        // Per-resource in-flight counts in one O(jobs) pass (doing
+        // `in_flight_on` per view is O(resources x jobs) and dominates the
+        // tick at scale — see EXPERIMENTS.md §Perf).
+        let mut in_flight = vec![0u32; self.tb.resources.len()];
+        for job in &self.exp.jobs {
+            if let Some(rid) = job.state.resource() {
+                in_flight[rid.0 as usize] += 1;
+            }
+        }
+        // Copy only the scalar fields out of the directory records —
+        // cloning whole MdsRecords allocates a String per resource per tick.
+        let discovered: Vec<(ResourceId, f64, bool)> = self
+            .mds
+            .discover(&self.tb, &self.cfg.user)
+            .map(|r| (r.id, r.planning_speed(), r.batch_queue))
+            .collect();
+        let mut views: Vec<ResourceView> = Vec::with_capacity(discovered.len());
+        for (id, planning_speed, batch_queue) in discovered {
+            // Competing experiments shrink the slots open to us and raise
+            // the owner's quoted rate (demand premium).
+            let base_slots = self.managers[id.0 as usize].slots();
+            let (slots, rate) = match &self.competition {
+                Some(comp) => (
+                    comp.free_slots(&self.tb, id, base_slots),
+                    self.quote(id) * comp.demand_premium(&self.tb, id),
+                ),
+                None => (base_slots, self.quote(id)),
+            };
+            views.push(ResourceView {
+                id,
+                slots,
+                planning_speed,
+                rate,
+                in_flight: in_flight[id.0 as usize],
+                measured_jphps: self.estimator.measured_jphps(id),
+                batch_queue,
+            });
+        }
+        // 2. selection.
+        let alloc = {
+            let mut ctx = SchedCtx {
+                now,
+                deadline: self.exp.deadline,
+                budget_headroom: self.ledger.headroom(),
+                remaining_jobs: self.exp.remaining(),
+                job_work_ref_h: job_work,
+                resources: &views,
+                rng: &mut self.rng,
+            };
+            self.policy.allocate(&mut ctx)
+        };
+        // 3. assignment.
+        let actions = plan_actions(&alloc, &self.exp);
+        for action in actions {
+            match action {
+                Action::Submit { job, rid } => self.submit(job, rid, job_work),
+                Action::CancelQueued { job, rid } => self.cancel_queued(job, rid),
+            }
+        }
+        if !self.exp.finished() {
+            self.q.schedule_in(self.cfg.tick_period_s, Ev::Tick);
+        }
+    }
+
+    fn submit(&mut self, jid: JobId, rid: ResourceId, job_work: f64) {
+        let now = self.q.now();
+        // Budget commit against the expected cost here.
+        let spec = self.tb.spec(rid);
+        let d = &self.dyns[rid.0 as usize];
+        let speed = d.effective_speed(spec).max(0.05);
+        let est_cost = self.effective_rate(rid) * job_work / speed * 3600.0;
+        if !self.ledger.commit(jid, est_cost) {
+            return; // budget headroom exhausted: leave the job Ready
+        }
+        if self.exp.dispatch(jid, rid, now).is_err() {
+            self.ledger.release(jid, 0.0, &spec.name);
+            return;
+        }
+        if let Some(j) = &mut self.journal {
+            let _ = j.dispatched(jid, rid, now);
+        }
+        self.inflight.insert(
+            jid,
+            InFlight {
+                dispatched_at: now,
+                exec_started: None,
+                rate: 0.0,
+                work_ref_h: self.sampler.work_ref_h(jid),
+                cpu_s: 0.0,
+            },
+        );
+        // Stage-in through GASS (and the cluster proxy if private).
+        let spec = self.tb.spec(rid).clone();
+        let t_stage = self.proxy.begin(
+            &mut self.gass,
+            &self.tb,
+            &spec,
+            self.cfg.workload.input_bytes,
+        );
+        self.q.schedule_in(t_stage, Ev::StagedIn { rid, jid });
+    }
+
+    fn cancel_queued(&mut self, jid: JobId, rid: ResourceId) {
+        // Withdraw from GRAM if it got there; mid-stage-in jobs are caught
+        // at their StagedIn event by the state check.
+        self.managers[rid.0 as usize].cancel(jid);
+        let name = self.tb.spec(rid).name.clone();
+        self.ledger.release(jid, 0.0, &name);
+        if self.exp.release(jid).is_ok() {
+            if let Some(j) = &mut self.journal {
+                let _ = j.released(jid);
+            }
+        }
+        self.inflight.remove(&jid);
+    }
+
+    fn on_staged_in(&mut self, rid: ResourceId, jid: JobId) {
+        let spec = self.tb.spec(rid).clone();
+        self.proxy.end(&mut self.gass, &spec);
+        // The job may have been cancelled or the resource may have died
+        // while staging.
+        if self.exp.job(jid).state.resource() != Some(rid) {
+            return;
+        }
+        if !self.dyns[rid.0 as usize].up {
+            self.fail_in_flight(jid, rid);
+            return;
+        }
+        self.managers[rid.0 as usize].submit(jid);
+        self.try_start(rid);
+    }
+
+    /// Pump GRAM: start whatever the queue admits.
+    fn try_start(&mut self, rid: ResourceId) {
+        let now = self.q.now();
+        let started = self.managers[rid.0 as usize].start_eligible(now);
+        for (jid, delay) in started {
+            self.q.schedule_in(delay, Ev::BeginExec { rid, jid });
+        }
+    }
+
+    fn on_begin_exec(&mut self, rid: ResourceId, jid: JobId) {
+        let now = self.q.now();
+        if self.exp.job(jid).state.resource() != Some(rid) {
+            return; // cancelled while waiting on the queue cycle
+        }
+        if !self.dyns[rid.0 as usize].up {
+            return; // Fail handler already requeued it
+        }
+        let spec = self.tb.spec(rid);
+        let speed = self.dyns[rid.0 as usize].effective_speed(spec).max(0.01);
+        let rate = self.effective_rate(rid);
+        let name = spec.name.clone();
+        // CPU time on this machine: drawn work scaled by effective speed at
+        // start (load drift during the run is absorbed into the draw).
+        let work_ref_h = self.inflight[&jid].work_ref_h;
+        let cpu_s = work_ref_h * 3600.0 / speed;
+        // Replace the dispatch-time *estimate* with the now-known actual
+        // cost. If the budget headroom no longer carries it, withdraw the
+        // job (still Dispatched — a clean release, not a burned attempt)
+        // instead of running over budget: this is what makes "spend never
+        // exceeds budget" a hard invariant in virtual mode.
+        self.ledger.release(jid, 0.0, &name);
+        if !self.ledger.commit(jid, cpu_s * rate) {
+            self.managers[rid.0 as usize].cancel(jid);
+            let _ = self.exp.release(jid);
+            if let Some(j) = &mut self.journal {
+                let _ = j.released(jid);
+            }
+            self.inflight.remove(&jid);
+            return;
+        }
+        if self.exp.start(jid, now).is_err() {
+            return;
+        }
+        if let Some(j) = &mut self.journal {
+            let _ = j.started(jid, now);
+        }
+        let inf = self.inflight.get_mut(&jid).expect("inflight record");
+        inf.exec_started = Some(now);
+        inf.rate = rate;
+        inf.cpu_s = cpu_s;
+        let exec_wall = inf.cpu_s;
+        self.busy_cpus += 1;
+        self.report.busy_cpus.record(now, self.busy_cpus);
+        // Stage-out folded into the completion event.
+        let t_out = self
+            .tb
+            .site(spec.site)
+            .link
+            .transfer_seconds(self.cfg.workload.output_bytes);
+        self.q
+            .schedule_in(exec_wall + t_out, Ev::Complete { rid, jid });
+    }
+
+    fn on_complete(&mut self, rid: ResourceId, jid: JobId) {
+        let now = self.q.now();
+        if !matches!(self.exp.job(jid).state, JobState::Running { rid: r, .. } if r == rid)
+        {
+            return; // failed/cancelled meanwhile
+        }
+        let inf = self.inflight.remove(&jid).expect("inflight record");
+        self.managers[rid.0 as usize].complete(jid);
+        self.busy_cpus -= 1;
+        self.report.busy_cpus.record(now, self.busy_cpus);
+        let cost = inf.cpu_s * inf.rate;
+        let name = self.tb.spec(rid).name.clone();
+        self.ledger.settle(jid, cost, &name);
+        self.exp
+            .complete(jid, now, inf.cpu_s, cost)
+            .expect("legal complete");
+        if let Some(j) = &mut self.journal {
+            let _ = j.completed(jid, now, inf.cpu_s, cost);
+        }
+        self.estimator
+            .on_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
+        let usage = self.report.per_resource.entry(name).or_insert_with(
+            ResourceUsage::default,
+        );
+        usage.jobs_completed += 1;
+        usage.cpu_seconds += inf.cpu_s;
+        usage.cost += cost;
+        self.try_start(rid);
+    }
+
+    /// Shared failure path for one in-flight job on `rid`.
+    fn fail_in_flight(&mut self, jid: JobId, rid: ResourceId) {
+        let now = self.q.now();
+        let name = self.tb.spec(rid).name.clone();
+        if let Some(inf) = self.inflight.remove(&jid) {
+            // Owners bill for cycles consumed before the crash.
+            let partial = match inf.exec_started {
+                Some(t0) => (now - t0).max(0.0) * inf.rate,
+                None => 0.0,
+            };
+            if inf.exec_started.is_some() {
+                self.busy_cpus = self.busy_cpus.saturating_sub(1);
+                self.report.busy_cpus.record(now, self.busy_cpus);
+            }
+            self.ledger.release(jid, partial, &name);
+            let usage = self
+                .report
+                .per_resource
+                .entry(name)
+                .or_insert_with(ResourceUsage::default);
+            usage.jobs_failed += 1;
+            usage.cost += partial;
+        }
+        self.estimator.on_failure(rid);
+        if self.exp.fail_attempt(jid).is_ok() {
+            if let Some(j) = &mut self.journal {
+                let _ = j.failed_attempt(jid);
+            }
+        }
+    }
+
+    fn on_fail(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        if !self.dyns[i].up {
+            return;
+        }
+        self.dyns[i].up = false;
+        let victims = self.managers[i].fail_all();
+        for (jid, _started) in victims {
+            self.fail_in_flight(jid, rid);
+        }
+        let spec = self.tb.resources[i].clone();
+        let downtime = self.dyns[i].draw_downtime(&spec);
+        self.q.schedule_in(downtime, Ev::Recover { rid });
+    }
+
+    fn on_recover(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        self.dyns[i].up = true;
+        let spec = self.tb.resources[i].clone();
+        let uptime = self.dyns[i].draw_uptime(&spec);
+        self.q.schedule_in(uptime, Ev::Fail { rid });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::HOUR;
+
+    fn small_cfg(policy: &str, deadline_h: f64) -> ExperimentConfig {
+        ExperimentConfig {
+            policy: policy.to_string(),
+            deadline: deadline_h * HOUR,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    fn small_sim(policy: &str, deadline_h: f64, jobs: usize) -> GridSimulation {
+        let cfg = small_cfg(policy, deadline_h);
+        let tb = Testbed::gusto(7, 0.5);
+        let src = format!(
+            "parameter voltage float range from 100 to 1000 step {}\nparameter pressure float random from 0.5 to 2 count 1\nparameter energy float select anyof 10\ntask main\nexecute icc -v $voltage -p $pressure -e $energy\nendtask",
+            900.0 / (jobs.max(2) - 1) as f64
+        );
+        let plan = crate::plan::Plan::parse(&src).unwrap();
+        let specs = crate::plan::expand(&plan, cfg.seed).unwrap();
+        GridSimulation::new(tb, specs, cfg)
+    }
+
+    #[test]
+    fn small_experiment_completes() {
+        let report = small_sim("cost", 30.0, 10).run();
+        assert_eq!(report.jobs_completed + report.jobs_failed, 10);
+        assert!(report.jobs_completed >= 8, "{}", report.summary());
+        assert!(report.total_cost > 0.0);
+        assert!(report.busy_cpus.peak() >= 1);
+        assert!(report.events > 20);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = small_sim("cost", 20.0, 12).run();
+        let b = small_sim("cost", 20.0, 12).run();
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert!((a.total_cost - b.total_cost).abs() < 1e-9);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn all_policies_run_to_completion() {
+        for policy in crate::scheduler::ALL_POLICIES {
+            let report = small_sim(policy, 40.0, 8).run();
+            assert!(
+                report.jobs_completed >= 6,
+                "{policy}: {}",
+                report.summary()
+            );
+        }
+    }
+
+    #[test]
+    fn paper_scale_cost_run() {
+        let report =
+            GridSimulation::gusto_ionization(small_cfg("cost", 20.0)).run();
+        assert_eq!(report.jobs_total, 165);
+        assert!(
+            report.jobs_completed >= 160,
+            "expected nearly all jobs done: {}",
+            report.summary()
+        );
+        assert!(report.makespan_s <= 20.0 * HOUR * 1.05, "{}", report.summary());
+        assert!(report.resources_used >= 5);
+    }
+
+    #[test]
+    fn tighter_deadline_uses_more_processors() {
+        let loose =
+            GridSimulation::gusto_ionization(small_cfg("cost", 20.0)).run();
+        let tight =
+            GridSimulation::gusto_ionization(small_cfg("cost", 10.0)).run();
+        let avg_loose = loose.busy_cpus.average(loose.makespan_s.max(1.0));
+        let avg_tight = tight.busy_cpus.average(tight.makespan_s.max(1.0));
+        assert!(
+            avg_tight > avg_loose,
+            "tight {avg_tight:.1} cpus vs loose {avg_loose:.1}"
+        );
+    }
+
+    #[test]
+    fn budget_is_never_exceeded() {
+        let mut cfg = small_cfg("cost", 15.0);
+        cfg.budget = Some(2000.0);
+        let tb = Testbed::gusto(7, 0.5);
+        let specs = crate::workload::ionization_jobs(cfg.seed);
+        let sim = GridSimulation::new(tb, specs, cfg);
+        let report = sim.run();
+        assert!(
+            report.total_cost <= 2000.0 + 1e-6,
+            "spent {} over budget",
+            report.total_cost
+        );
+    }
+}

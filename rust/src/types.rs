@@ -1,0 +1,123 @@
+//! Core identifier and unit types shared across the system.
+
+use std::fmt;
+
+/// Identifier of a job within an experiment (dense, 0-based).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub struct JobId(pub u32);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// Identifier of a grid resource (a machine visible through MDS).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub struct ResourceId(pub u32);
+
+impl fmt::Display for ResourceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Identifier of an administrative site (one owner / one GASS server).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub struct SiteId(pub u32);
+
+impl fmt::Display for SiteId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Grid currency used by the computational economy, after the G$ of the
+/// Nimrod/G papers. 1 G$ buys one CPU-second on the reference machine at the
+/// base (off-peak) rate.
+pub type GridDollars = f64;
+
+/// Seconds of virtual experiment time (t = 0 at experiment start).
+pub type SimTime = f64;
+
+/// Hours → seconds.
+pub const HOUR: SimTime = 3600.0;
+/// Minutes → seconds.
+pub const MINUTE: SimTime = 60.0;
+
+/// Machine architecture, as reported through the directory service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Intel,
+    Sparc,
+    Alpha,
+    Mips,
+    PowerPc,
+}
+
+impl fmt::Display for Arch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Arch::Intel => "intel",
+            Arch::Sparc => "sparc",
+            Arch::Alpha => "alpha",
+            Arch::Mips => "mips",
+            Arch::PowerPc => "powerpc",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Operating system, for plan task constraints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Os {
+    Linux,
+    Solaris,
+    Irix,
+    Tru64,
+    Aix,
+}
+
+impl fmt::Display for Os {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Os::Linux => "linux",
+            Os::Solaris => "solaris",
+            Os::Irix => "irix",
+            Os::Tru64 => "tru64",
+            Os::Aix => "aix",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(JobId(3).to_string(), "j3");
+        assert_eq!(ResourceId(7).to_string(), "r7");
+        assert_eq!(SiteId(1).to_string(), "s1");
+        assert_eq!(Arch::Intel.to_string(), "intel");
+        assert_eq!(Os::Linux.to_string(), "linux");
+    }
+
+    #[test]
+    fn ids_order_and_hash() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(JobId(1));
+        set.insert(JobId(1));
+        set.insert(JobId(2));
+        assert_eq!(set.len(), 2);
+        assert!(JobId(1) < JobId(2));
+    }
+}

@@ -1,0 +1,147 @@
+//! Criterion-style measurement harness for `benches/` (criterion itself is
+//! not in the offline crate cache).
+//!
+//! Usage from a `harness = false` bench binary:
+//!
+//! ```ignore
+//! let mut b = Bench::new("figure3");
+//! b.iter("deadline=10h", || run_experiment(10.0));
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to pass a
+//! minimum measurement window; mean / p50 / p95 wall times are printed in a
+//! fixed-width table that the EXPERIMENTS.md tables are copied from.
+
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+/// A named group of measurements.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    window: Duration,
+    max_iters: u32,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(200),
+            window: Duration::from_secs(1),
+            max_iters: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Shrink the measurement window (for slow end-to-end cases).
+    pub fn fast(mut self) -> Self {
+        self.warmup = Duration::from_millis(0);
+        self.window = Duration::from_millis(200);
+        self.max_iters = 20;
+        self
+    }
+
+    /// Measure `f`, discarding its result.
+    pub fn iter<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.window && (samples.len() as u32) < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+        self.results.push(Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean,
+            p50,
+            p95,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the fixed-width results table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<44} {:>7} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p95"
+        );
+        for m in &self.results {
+            println!(
+                "{:<44} {:>7} {:>12} {:>12} {:>12}",
+                m.name,
+                m.iters,
+                fmt_dur(m.mean),
+                fmt_dur(m.p50),
+                fmt_dur(m.p95)
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human format with µs/ms/s autoscale.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").fast();
+        let m = b.iter("noop", || 1 + 1).clone();
+        assert!(m.iters >= 1);
+        assert!(m.p95 >= m.p50 || m.iters < 3);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.00s");
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny leveled stderr logger, controlled by the `NIMROD_LOG` env var
+//! (`error`, `warn`, `info`, `debug`, `trace`; default `warn`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static INIT: Once = Once::new();
+
+/// Initialize the logger from `NIMROD_LOG`. Idempotent.
+pub fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("NIMROD_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Warn,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+/// Explicitly set the level (tests).
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {target}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree utility layer.
+//!
+//! This image builds offline from a baked cargo cache that carries only the
+//! `xla` crate closure, so the usual ecosystem crates (serde, rand, clap,
+//! criterion, proptest) are implemented here at the scale this system needs:
+//!
+//! * [`rng`] — deterministic xoshiro256++ PRNG with the distributions the
+//!   grid simulator draws from;
+//! * [`json`] — a small JSON value model, parser and writer used by the
+//!   persistence journal, the wire protocol and the artifact manifest;
+//! * [`bench`] — a criterion-style measurement harness for `benches/`;
+//! * [`logging`] — a leveled stderr logger controlled by `NIMROD_LOG`;
+//! * [`prop`] — a seeded property-testing loop used by the invariant tests.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,80 @@
+//! Seeded property-testing loop (proptest is not in the offline crate
+//! cache). No shrinking — failures report the exact case seed so the case is
+//! reproducible with `prop_check_seeded`.
+//!
+//! ```ignore
+//! prop_check(256, |rng| {
+//!     let n = rng.below(100) + 1;
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     // ... assert invariant, return Result<(), String>
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Base seed for the suite; change to re-roll every property in the repo.
+pub const SUITE_SEED: u64 = 0x5EED_0F_9172;
+
+/// Run `cases` random cases; panics with the failing case seed on error.
+pub fn prop_check<F>(cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = SUITE_SEED.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single case by seed (for debugging a reported failure).
+pub fn prop_check_seeded<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper producing `Result` instead of panicking, so properties can
+/// carry context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(32, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(8, |rng| {
+            if rng.f64() >= 0.0 {
+                Err("always fails".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Workload definitions: the ionization-chamber calibration study and the
+//! per-job work sampler.
+//!
+//! The Figure-3 experiment "ran the code across different design
+//! parameters" — voltage, pressure and beam energy in our surrogate model
+//! (python/compile/model.py). [`ionization_plan`] emits the corresponding
+//! plan-language source; [`WorkSampler`] draws the per-job compute demand
+//! the simulator charges for.
+
+use crate::config::WorkloadConfig;
+use crate::plan::{expand, JobSpec, Plan};
+use crate::types::JobId;
+use crate::util::rng::Rng;
+
+/// Parameter ranges mirrored from the L2 model's physical ranges.
+pub const VOLTAGE_RANGE: (f64, f64) = (100.0, 1000.0);
+pub const PRESSURE_RANGE: (f64, f64) = (0.5, 2.0);
+pub const ENERGY_RANGE: (f64, f64) = (1.0, 20.0);
+
+/// Emit the calibration-study plan: an `nv × np × ne` sweep. The paper-scale
+/// default (`ionization_plan(11, 5, 3)`) expands to 165 jobs, matching the
+/// trial in [4] (Abramson, Giddy, Kotler, IPDPS 2000).
+pub fn ionization_plan(nv: usize, np: usize, ne: usize) -> String {
+    assert!(nv >= 1 && np >= 1 && ne >= 1);
+    let vstep = (VOLTAGE_RANGE.1 - VOLTAGE_RANGE.0) / (nv.max(2) - 1) as f64;
+    let estep = (ENERGY_RANGE.1 - ENERGY_RANGE.0) / (ne.max(2) - 1) as f64;
+    let mut plan = String::new();
+    plan.push_str("# ionization chamber calibration (paper Figure 3 workload)\n");
+    plan.push_str(&format!(
+        "parameter voltage label \"electrode voltage (V)\" float range from {} to {} step {}\n",
+        VOLTAGE_RANGE.0, VOLTAGE_RANGE.1, vstep
+    ));
+    plan.push_str(&format!(
+        "parameter pressure label \"gas pressure (atm)\" float random from {} to {} count {}\n",
+        PRESSURE_RANGE.0, PRESSURE_RANGE.1, np
+    ));
+    plan.push_str(&format!(
+        "parameter energy label \"beam energy (MeV)\" float range from {} to {} step {}\n",
+        ENERGY_RANGE.0, ENERGY_RANGE.1, estep
+    ));
+    plan.push_str("constant chamber text \"icc-mk2\"\n");
+    plan.push_str("task main\n");
+    plan.push_str("    copy chamber.cfg node:chamber.cfg\n");
+    plan.push_str(
+        "    execute ./icc_sim -v $voltage -p $pressure -e $energy -c $chamber -o results.dat\n",
+    );
+    plan.push_str("    copy node:results.dat results.$jobname.dat\n");
+    plan.push_str("endtask\n");
+    plan
+}
+
+/// Parse + expand the paper-scale study (165 jobs).
+pub fn ionization_jobs(seed: u64) -> Vec<JobSpec> {
+    let src = ionization_plan(11, 5, 3);
+    let plan = Plan::parse(&src).expect("generated plan must parse");
+    expand(&plan, seed).expect("generated plan must expand")
+}
+
+/// Draws per-job compute demand: lognormal jitter around the configured
+/// mean so job sizes are heterogeneous but reproducible per (seed, job).
+#[derive(Debug, Clone)]
+pub struct WorkSampler {
+    base_ref_h: f64,
+    sigma: f64,
+    seed: u64,
+}
+
+impl WorkSampler {
+    pub fn new(cfg: &WorkloadConfig, seed: u64) -> WorkSampler {
+        WorkSampler {
+            base_ref_h: cfg.job_work_ref_h,
+            sigma: cfg.work_jitter_sigma,
+            seed,
+        }
+    }
+
+    /// Work (reference CPU-hours) for one job. Deterministic in (seed, id):
+    /// re-dispatching a failed job costs the same work again.
+    pub fn work_ref_h(&self, job: JobId) -> f64 {
+        if self.sigma <= 0.0 {
+            return self.base_ref_h;
+        }
+        let mut rng = Rng::new(self.seed ^ (job.0 as u64).wrapping_mul(0x9E37_79B9));
+        // E[lognormal(mu, sigma)] = exp(mu + sigma²/2) ⇒ mu keeps the mean.
+        let mu = self.base_ref_h.ln() - self.sigma * self.sigma / 2.0;
+        rng.lognormal(mu, self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_is_165_jobs() {
+        let jobs = ionization_jobs(1);
+        assert_eq!(jobs.len(), 165);
+        // Every job carries the three swept parameters plus constants.
+        assert!(jobs[0].bindings.contains_key("voltage"));
+        assert!(jobs[0].bindings.contains_key("pressure"));
+        assert!(jobs[0].bindings.contains_key("energy"));
+        assert!(jobs[0].bindings.contains_key("chamber"));
+    }
+
+    #[test]
+    fn parameters_inside_model_ranges() {
+        for job in ionization_jobs(2) {
+            let v = job.f64_binding("voltage").unwrap();
+            let p = job.f64_binding("pressure").unwrap();
+            let e = job.f64_binding("energy").unwrap();
+            assert!((VOLTAGE_RANGE.0..=VOLTAGE_RANGE.1).contains(&v));
+            assert!((PRESSURE_RANGE.0..=PRESSURE_RANGE.1).contains(&p));
+            assert!((ENERGY_RANGE.0..=ENERGY_RANGE.1).contains(&e));
+        }
+    }
+
+    #[test]
+    fn custom_sweep_sizes() {
+        let src = ionization_plan(3, 2, 2);
+        let plan = Plan::parse(&src).unwrap();
+        assert_eq!(plan.job_count(), 12);
+    }
+
+    #[test]
+    fn work_sampler_mean_and_determinism() {
+        let cfg = WorkloadConfig {
+            job_work_ref_h: 2.0,
+            work_jitter_sigma: 0.25,
+            ..Default::default()
+        };
+        let s = WorkSampler::new(&cfg, 7);
+        // Deterministic per job.
+        assert_eq!(s.work_ref_h(JobId(5)), s.work_ref_h(JobId(5)));
+        // Jobs differ.
+        assert_ne!(s.work_ref_h(JobId(5)), s.work_ref_h(JobId(6)));
+        // Mean close to configured value.
+        let n = 4000;
+        let mean: f64 =
+            (0..n).map(|i| s.work_ref_h(JobId(i))).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic_work() {
+        let cfg = WorkloadConfig {
+            job_work_ref_h: 1.5,
+            work_jitter_sigma: 0.0,
+            ..Default::default()
+        };
+        let s = WorkSampler::new(&cfg, 7);
+        assert_eq!(s.work_ref_h(JobId(0)), 1.5);
+        assert_eq!(s.work_ref_h(JobId(1)), 1.5);
+    }
+}

@@ -1,0 +1,208 @@
+//! Integration tests: whole-system behaviour over the simulated grid.
+
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::engine::journal::{recover, Journal};
+use nimrod_g::grid::Testbed;
+use nimrod_g::plan::{expand, Plan};
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::HOUR;
+use nimrod_g::workload::{ionization_jobs, ionization_plan};
+
+fn cfg(policy: &str, deadline_h: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        policy: policy.into(),
+        deadline: deadline_h * HOUR,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn figure3_shape_tight_deadline_uses_more_and_costs_more() {
+    let tight = GridSimulation::gusto_ionization(cfg("cost", 10.0, 0xF1)).run();
+    let mid = GridSimulation::gusto_ionization(cfg("cost", 15.0, 0xF1)).run();
+    let loose = GridSimulation::gusto_ionization(cfg("cost", 20.0, 0xF1)).run();
+    for r in [&tight, &mid, &loose] {
+        assert_eq!(r.jobs_completed, 165, "{}", r.summary());
+        assert!(r.deadline_met, "{}", r.summary());
+    }
+    let avg = |r: &nimrod_g::metrics::Report| r.busy_cpus.average(r.makespan_s);
+    assert!(
+        avg(&tight) > avg(&mid) && avg(&mid) > avg(&loose),
+        "processors-in-use must decrease with relaxed deadline: {:.1} / {:.1} / {:.1}",
+        avg(&tight),
+        avg(&mid),
+        avg(&loose)
+    );
+    assert!(
+        tight.total_cost > loose.total_cost,
+        "tight deadline must cost more: {} vs {}",
+        tight.total_cost,
+        loose.total_cost
+    );
+}
+
+#[test]
+fn economy_beats_performance_only_on_cost() {
+    let cost = GridSimulation::gusto_ionization(cfg("cost", 15.0, 0xB2)).run();
+    let perf = GridSimulation::gusto_ionization(cfg("perf", 15.0, 0xB2)).run();
+    assert!(cost.deadline_met, "{}", cost.summary());
+    assert!(
+        cost.total_cost < perf.total_cost,
+        "economy-aware scheduling must be cheaper at an equal (met) deadline: {} vs {}",
+        cost.total_cost,
+        perf.total_cost
+    );
+}
+
+#[test]
+fn failure_churn_is_survived_by_retries() {
+    // A flaky testbed: every machine fails every ~2 simulated hours.
+    let mut tb = Testbed::gusto(5, 0.5);
+    for spec in &mut tb.resources {
+        spec.mtbf_s = 2.0 * 3600.0;
+        spec.mttr_s = 0.5 * 3600.0;
+    }
+    let specs = ionization_jobs(5);
+    let mut c = cfg("time", 40.0, 5);
+    c.max_attempts = 8;
+    let r = GridSimulation::new(tb, specs, c).run();
+    assert!(
+        r.jobs_completed >= 160,
+        "retries should carry most jobs through churn: {}",
+        r.summary()
+    );
+    // Failures actually happened (the testbed really was flaky).
+    let failures: u32 = r.per_resource.values().map(|u| u.jobs_failed).sum();
+    assert!(failures > 0, "expected some failures under churn");
+}
+
+#[test]
+fn journal_restart_roundtrip_at_scale() {
+    let dir = std::env::temp_dir().join(format!("nimrod-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.journal");
+    let c = cfg("cost", 15.0, 0x7E57);
+    let plan_src = ionization_plan(11, 5, 3);
+    let specs = ionization_jobs(c.seed);
+    let tb = Testbed::gusto(c.seed ^ 0x6057, 1.0);
+
+    let mut sim = GridSimulation::new(tb.clone(), specs, c.clone());
+    let journal = Journal::create(&path, &plan_src, c.seed, &sim.exp).unwrap();
+    sim = sim.with_journal(journal);
+    sim.run_until(4.0 * HOUR);
+    let done_at_crash = sim.exp.completed();
+    assert!(done_at_crash > 5, "some progress before the crash");
+    assert!(!sim.exp.finished());
+    drop(sim);
+
+    let rec = recover(&path).unwrap();
+    assert_eq!(rec.experiment.completed(), done_at_crash);
+    let journal = Journal::append_to(&path).unwrap();
+    let r = GridSimulation::new(tb, Vec::new(), c)
+        .with_experiment(rec.experiment)
+        .with_journal(journal)
+        .run();
+    assert_eq!(r.jobs_completed + r.jobs_failed, 165);
+    assert!(r.jobs_completed >= 160, "{}", r.summary());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn budget_sweep_monotone_spend() {
+    let mut spends = Vec::new();
+    for budget in [3e6, 1e6, 3e5] {
+        let mut c = cfg("cost", 15.0, 0xB4D);
+        c.budget = Some(budget);
+        let r = GridSimulation::gusto_ionization(c).run();
+        assert!(
+            r.total_cost <= budget + 1e-6,
+            "budget {} exceeded: {}",
+            budget,
+            r.total_cost
+        );
+        spends.push(r.total_cost);
+    }
+    assert!(
+        spends[0] >= spends[1] && spends[1] >= spends[2],
+        "tighter budget cannot increase spend: {spends:?}"
+    );
+}
+
+#[test]
+fn restricted_user_never_runs_on_unauthorized_machines() {
+    // "stranger" is outside every restrictive gridmap; discovery must prune
+    // those machines, so no job may ever land on one.
+    let mut c = cfg("time", 30.0, 0xACE);
+    c.user = "stranger".into();
+    let seed = c.seed;
+    let restricted = GridSimulation::gusto_ionization(c).run();
+    assert!(restricted.jobs_completed >= 160, "{}", restricted.summary());
+
+    let tb = Testbed::gusto(seed ^ 0x6057, 1.0);
+    let forbidden: Vec<&str> = tb
+        .resources
+        .iter()
+        .filter(|r| !r.auth.allows("stranger"))
+        .map(|r| r.name.as_str())
+        .collect();
+    assert!(!forbidden.is_empty(), "testbed should have some ACLed machines");
+    for name in restricted.per_resource.keys() {
+        assert!(
+            !forbidden.contains(&name.as_str()),
+            "job ran on unauthorized machine {name}"
+        );
+    }
+}
+
+#[test]
+fn plan_file_through_cli_surface() {
+    // The same plan text a user would pass to `nimrod run --plan`.
+    let src = r#"
+parameter voltage float range from 100 to 1000 step 300
+parameter energy float select anyof 5 15
+task main
+    copy chamber.cfg node:chamber.cfg
+    execute ./icc_sim -v $voltage -e $energy -o out.dat
+    copy node:out.dat results.$jobname.dat
+endtask
+"#;
+    let plan = Plan::parse(src).unwrap();
+    let specs = expand(&plan, 1).unwrap();
+    assert_eq!(specs.len(), 8);
+    let tb = Testbed::gusto(1, 0.3);
+    let r = GridSimulation::new(tb, specs, cfg("cost", 20.0, 1)).run();
+    assert_eq!(r.jobs_completed, 8, "{}", r.summary());
+}
+
+#[test]
+fn competition_raises_cost_and_shifts_resources() {
+    // Paper §3: "the cost changes as other competing experiments are put on
+    // the grid" — with background task farms claiming CPUs and triggering
+    // demand premiums, the same experiment must cost more.
+    let quiet = GridSimulation::gusto_ionization(cfg("cost", 20.0, 0xC0)).run();
+    let mut c = cfg("cost", 20.0, 0xC0);
+    c.competition = Some(nimrod_g::grid::competition::CompetitionModel {
+        mean_interarrival_s: 1800.0, // busy grid: a new competitor every 30 min
+        mean_duration_s: 4.0 * 3600.0,
+        mean_cpus: 60.0,
+    });
+    let busy = GridSimulation::gusto_ionization(c).run();
+    assert!(busy.jobs_completed >= 160, "{}", busy.summary());
+    assert!(
+        busy.total_cost > quiet.total_cost,
+        "competition must raise cost: {} vs {}",
+        busy.total_cost,
+        quiet.total_cost
+    );
+}
+
+#[test]
+fn deterministic_replay_full_stack() {
+    let a = GridSimulation::gusto_ionization(cfg("cost", 15.0, 0xD0)).run();
+    let b = GridSimulation::gusto_ionization(cfg("cost", 15.0, 0xD0)).run();
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.total_cost, b.total_cost);
+    assert_eq!(a.busy_cpus.points(), b.busy_cpus.points());
+}

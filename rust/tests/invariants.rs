@@ -1,0 +1,377 @@
+//! Property-based invariant tests (seeded random cases; see
+//! `nimrod_g::util::prop` — failures report the case seed).
+
+use nimrod_g::economy::Ledger;
+use nimrod_g::engine::Experiment;
+use nimrod_g::grid::gram::JobManager;
+use nimrod_g::grid::testbed::{AuthPolicy, QueueKind, ResourceSpec, Testbed};
+use nimrod_g::plan::{expand, Plan};
+use nimrod_g::prop_assert;
+use nimrod_g::scheduler::{by_name, ResourceView, SchedCtx, ALL_POLICIES};
+use nimrod_g::simtime::EventQueue;
+use nimrod_g::types::{Arch, JobId, Os, ResourceId, SiteId, HOUR};
+use nimrod_g::util::prop::prop_check;
+use nimrod_g::util::rng::Rng;
+
+#[test]
+fn prop_plan_expansion_cardinality_is_domain_product() {
+    prop_check(128, |rng| {
+        let n_params = rng.below(4) + 1;
+        let mut src = String::new();
+        let mut expected = 1usize;
+        for p in 0..n_params {
+            match rng.below(3) {
+                0 => {
+                    let n = rng.below(6) + 1;
+                    src.push_str(&format!(
+                        "parameter p{p} integer range from 1 to {n}\n"
+                    ));
+                    expected *= n;
+                }
+                1 => {
+                    let n = rng.below(5) + 1;
+                    src.push_str(&format!(
+                        "parameter p{p} float random from 0 to 1 count {n}\n"
+                    ));
+                    expected *= n;
+                }
+                _ => {
+                    let n = rng.below(4) + 1;
+                    let vals: Vec<String> =
+                        (0..n).map(|i| format!("{}", i as f64 + 0.5)).collect();
+                    src.push_str(&format!(
+                        "parameter p{p} float select anyof {}\n",
+                        vals.join(" ")
+                    ));
+                    expected *= n;
+                }
+            }
+        }
+        src.push_str("task main\nexecute run");
+        for p in 0..n_params {
+            src.push_str(&format!(" $p{p}"));
+        }
+        src.push_str("\nendtask\n");
+        let plan = Plan::parse(&src).map_err(|e| e.to_string())?;
+        let jobs = expand(&plan, rng.next_u64()).map_err(|e| e.to_string())?;
+        prop_assert!(
+            jobs.len() == expected,
+            "expected {expected} jobs, got {} for plan:\n{src}",
+            jobs.len()
+        );
+        // No job carries an unsubstituted reference.
+        for job in &jobs {
+            for op in &job.script {
+                if let nimrod_g::plan::TaskOp::Execute { command } = op {
+                    prop_assert!(
+                        !command.contains('$'),
+                        "unsubstituted var in `{command}`"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_in_nondecreasing_time_order() {
+    prop_check(256, |rng| {
+        let mut q = EventQueue::new();
+        let n = rng.below(200) + 1;
+        for i in 0..n {
+            q.schedule_at(rng.uniform(0.0, 1000.0), i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut popped = 0;
+        while let Some((t, _)) = q.pop() {
+            prop_assert!(t >= last, "time went backwards: {t} < {last}");
+            last = t;
+            popped += 1;
+        }
+        prop_assert!(popped == n, "lost events: {popped} != {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ledger_never_exceeds_budget_and_conserves() {
+    prop_check(256, |rng| {
+        let budget = rng.uniform(10.0, 1000.0);
+        let mut ledger = Ledger::new(Some(budget));
+        let mut in_flight: Vec<(JobId, f64)> = Vec::new();
+        let mut next = 0u32;
+        // Ledger guarantee: exposure stays within budget *up to the
+        // cumulative overshoot of actual over estimate* (and of partial
+        // billing on release) — commit-time enforcement cannot see the
+        // future. Track that slack exactly.
+        let mut slack = 0.0f64;
+        for _ in 0..rng.below(300) {
+            match rng.below(3) {
+                0 => {
+                    let est = rng.uniform(0.0, 80.0);
+                    if ledger.commit(JobId(next), est) {
+                        in_flight.push((JobId(next), est));
+                    }
+                    next += 1;
+                }
+                1 if !in_flight.is_empty() => {
+                    let (j, est) =
+                        in_flight.swap_remove(rng.below(in_flight.len()));
+                    // Actual cost may overshoot the estimate.
+                    let actual = rng.uniform(0.0, 90.0);
+                    slack += (actual - est).max(0.0);
+                    ledger.settle(j, actual, "r");
+                }
+                _ if !in_flight.is_empty() => {
+                    let (j, _) =
+                        in_flight.swap_remove(rng.below(in_flight.len()));
+                    let partial = rng.uniform(0.0, 5.0);
+                    slack += partial;
+                    ledger.release(j, partial, "r");
+                }
+                _ => {}
+            }
+            prop_assert!(
+                ledger.exposure() <= budget + slack + 1e-9,
+                "exposure {} past budget {} + slack {}",
+                ledger.exposure(),
+                budget,
+                slack
+            );
+            prop_assert!(ledger.check_conservation(), "per-resource sums diverged");
+        }
+        // Commit-time enforcement: with everything settled, spend can only
+        // exceed the budget by accumulated (actual - estimate) overshoot,
+        // never by new commitments.
+        for (j, _) in in_flight.drain(..) {
+            ledger.release(j, 0.0, "r");
+        }
+        prop_assert!(ledger.committed() == 0.0, "commitments leak");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_job_state_machine_counts_consistent() {
+    prop_check(128, |rng| {
+        let n = rng.below(30) + 2;
+        let src = format!(
+            "parameter i integer range from 1 to {n}\ntask main\nexecute r $i\nendtask"
+        );
+        let specs = expand(&Plan::parse(&src).unwrap(), 0).unwrap();
+        let mut exp = Experiment::new(specs, 3600.0, None, "u", 3);
+        for _ in 0..rng.below(400) {
+            let id = JobId(rng.below(n) as u32);
+            match rng.below(5) {
+                0 => {
+                    let _ = exp.dispatch(id, ResourceId(rng.below(8) as u32), 0.0);
+                }
+                1 => {
+                    let _ = exp.start(id, 1.0);
+                }
+                2 => {
+                    let _ = exp.complete(id, 2.0, 10.0, 1.0);
+                }
+                3 => {
+                    let _ = exp.fail_attempt(id);
+                }
+                _ => {
+                    let _ = exp.release(id);
+                }
+            }
+            let done = exp.completed();
+            let failed = exp.failed();
+            let remaining = exp.remaining();
+            prop_assert!(
+                done + failed + remaining == n as u32,
+                "counts diverged: {done}+{failed}+{remaining} != {n}"
+            );
+            // Attempts never exceed max.
+            for job in &exp.jobs {
+                prop_assert!(
+                    job.attempts <= 3,
+                    "job {} has {} attempts",
+                    job.spec.id,
+                    job.attempts
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gram_never_runs_more_than_slots() {
+    prop_check(128, |rng| {
+        let cpus = rng.below(8) as u32 + 1;
+        let queue = if rng.chance(0.5) {
+            QueueKind::Interactive
+        } else {
+            QueueKind::Batch {
+                slots: rng.below(6) as u32 + 1,
+                cycle_s: 30.0,
+            }
+        };
+        let spec = ResourceSpec {
+            id: ResourceId(0),
+            name: "t".into(),
+            site: SiteId(0),
+            arch: Arch::Intel,
+            os: Os::Linux,
+            cpus,
+            speed: 1.0,
+            mem_mb: 128,
+            queue,
+            auth: AuthPolicy::AllUsers,
+            price: nimrod_g::economy::PriceModel::flat(1.0),
+            mtbf_s: 1e9,
+            mttr_s: 1.0,
+            bg_load_mean: 0.0,
+            bg_load_vol: 0.0,
+            private_cluster: false,
+        };
+        let mut jm = JobManager::new(&spec);
+        let mut next = 0u32;
+        let mut running: Vec<JobId> = Vec::new();
+        for _ in 0..rng.below(200) {
+            match rng.below(4) {
+                0 => {
+                    jm.submit(JobId(next));
+                    next += 1;
+                }
+                1 => {
+                    for (j, _) in jm.start_eligible(0.0) {
+                        running.push(j);
+                    }
+                }
+                2 if !running.is_empty() => {
+                    let j = running.swap_remove(rng.below(running.len()));
+                    jm.complete(j);
+                }
+                _ => {
+                    if rng.chance(0.1) {
+                        jm.fail_all();
+                        running.clear();
+                    }
+                }
+            }
+            prop_assert!(
+                jm.active_count() <= jm.slots(),
+                "running {} > slots {}",
+                jm.active_count(),
+                jm.slots()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policies_respect_slots_and_skip_down_resources() {
+    prop_check(96, |rng| {
+        let n = rng.below(40) + 1;
+        let views: Vec<ResourceView> = (0..n)
+            .map(|i| ResourceView {
+                id: ResourceId(i as u32),
+                slots: rng.below(16) as u32 + 1,
+                planning_speed: if rng.chance(0.15) {
+                    0.0 // down at last MDS refresh
+                } else {
+                    rng.uniform(0.2, 2.0)
+                },
+                rate: rng.uniform(0.01, 5.0),
+                in_flight: 0,
+                measured_jphps: if rng.chance(0.3) {
+                    Some(rng.uniform(0.05, 3.0))
+                } else {
+                    None
+                },
+                batch_queue: rng.chance(0.5),
+            })
+            .collect();
+        let remaining = rng.below(300) as u32 + 1;
+        for name in ALL_POLICIES {
+            let mut policy = by_name(name).unwrap();
+            let mut prng = Rng::new(rng.next_u64());
+            let alloc = {
+                let mut ctx = SchedCtx {
+                    now: rng.uniform(0.0, 10.0 * HOUR),
+                    deadline: 15.0 * HOUR,
+                    budget_headroom: if rng.chance(0.5) {
+                        Some(rng.uniform(100.0, 1e7))
+                    } else {
+                        None
+                    },
+                    remaining_jobs: remaining,
+                    job_work_ref_h: rng.uniform(0.2, 4.0),
+                    resources: &views,
+                    rng: &mut prng,
+                };
+                policy.allocate(&mut ctx)
+            };
+            let mut total = 0u32;
+            for (rid, target) in &alloc {
+                let v = &views[rid.0 as usize];
+                prop_assert!(
+                    *target <= v.slots,
+                    "{name}: target {} > slots {} on {rid}",
+                    target,
+                    v.slots
+                );
+                prop_assert!(
+                    v.planning_speed > 0.0,
+                    "{name}: allocated down resource {rid}"
+                );
+                total += target;
+            }
+            prop_assert!(
+                total <= remaining.max(1) * 2,
+                "{name}: grossly over-allocated {total} for {remaining} jobs"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_small_simulations_terminate_consistently() {
+    prop_check(24, |rng| {
+        let seed = rng.next_u64();
+        let policy = *rng.choose(&["cost", "time", "round-robin", "perf"]);
+        let nv = rng.below(4) + 2;
+        let src = format!(
+            "parameter voltage float range from 100 to 1000 step {}\nparameter energy float select anyof 5 15\ntask main\nexecute icc -v $voltage -e $energy\nendtask",
+            900.0 / (nv - 1) as f64
+        );
+        let specs = expand(&Plan::parse(&src).unwrap(), seed).unwrap();
+        let total = specs.len() as u32;
+        let tb = Testbed::gusto(seed, 0.4);
+        let cfg = nimrod_g::config::ExperimentConfig {
+            policy: policy.to_string(),
+            deadline: 30.0 * HOUR,
+            seed,
+            ..Default::default()
+        };
+        let r = nimrod_g::sim::GridSimulation::new(tb, specs, cfg).run();
+        prop_assert!(
+            r.jobs_completed + r.jobs_failed == total,
+            "{policy}: jobs unaccounted for: {}",
+            r.summary()
+        );
+        // Spend bookkeeping agrees between ledger and per-resource rollup.
+        let rollup: f64 = r.per_resource.values().map(|u| u.cost).sum();
+        prop_assert!(
+            (rollup - r.total_cost).abs() <= 1e-6 * r.total_cost.max(1.0),
+            "{policy}: cost rollup {rollup} != total {}",
+            r.total_cost
+        );
+        // All processors released at the end.
+        let final_busy = r.busy_cpus.at(r.makespan_s + 1.0);
+        prop_assert!(
+            final_busy == 0,
+            "{policy}: {final_busy} cpus still busy after completion"
+        );
+        Ok(())
+    });
+}
