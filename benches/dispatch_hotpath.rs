@@ -1,20 +1,23 @@
 //! Bench: hot-path micro-benchmarks (EXPERIMENTS.md §Perf).
 //!
 //! The per-cycle costs of a live deployment: scheduler tick (policy
-//! allocation over N resource views), dispatcher reconciliation, event
-//! queue throughput, Clustor frame encode/decode, and the PJRT chamber
-//! executions the job-wrapper performs (batch-1 and full-batch).
+//! allocation over N resource views), dispatcher reconciliation, the
+//! broker's ScheduleAdvisor facade versus the inlined pipeline
+//! (`broker_overhead`), event queue throughput, Clustor frame
+//! encode/decode, and the PJRT chamber executions the job-wrapper performs
+//! (batch-1 and full-batch).
 //!
 //! ```bash
 //! make artifacts && cargo bench --bench dispatch_hotpath
 //! ```
 
+use nimrod_g::broker::{PolicyRegistry, ScheduleAdvisor, TickCtx};
 use nimrod_g::dispatcher::plan_actions;
 use nimrod_g::engine::Experiment;
 use nimrod_g::plan::{expand, Plan};
 use nimrod_g::protocol::{read_frame, write_frame, Message};
 use nimrod_g::runtime::ChamberRuntime;
-use nimrod_g::scheduler::{by_name, ResourceView, SchedCtx};
+use nimrod_g::scheduler::{ResourceView, SchedCtx};
 use nimrod_g::simtime::EventQueue;
 use nimrod_g::types::{ResourceId, HOUR};
 use nimrod_g::util::bench::Bench;
@@ -43,13 +46,14 @@ fn experiment(jobs: usize) -> Experiment {
 }
 
 fn main() {
+    let registry = PolicyRegistry::with_builtins();
     let mut b = Bench::new("dispatch hot path");
 
     // Scheduler tick at GUSTO and 8x-GUSTO sizes.
     for n in [70, 280, 560] {
         let mut rng = Rng::new(1);
         let vs = views(n, &mut rng);
-        let mut policy = by_name("cost").unwrap();
+        let mut policy = registry.resolve("cost").unwrap();
         b.iter(&format!("cost-opt allocate ({n} resources)"), || {
             let mut ctx = SchedCtx {
                 now: 0.0,
@@ -69,7 +73,7 @@ fn main() {
         let exp = experiment(165);
         let mut rng = Rng::new(2);
         let vs = views(70, &mut rng);
-        let mut policy = by_name("cost").unwrap();
+        let mut policy = registry.resolve("cost").unwrap();
         let alloc = {
             let mut ctx = SchedCtx {
                 now: 0.0,
@@ -84,6 +88,44 @@ fn main() {
         };
         b.iter("plan_actions (165 jobs, 70 resources)", || {
             plan_actions(&alloc, &exp)
+        });
+    }
+
+    // broker_overhead: the full selection+assignment tick, inlined versus
+    // through the ScheduleAdvisor facade — the facade must add no
+    // measurable per-tick cost.
+    {
+        let exp = experiment(165);
+        let mut rng = Rng::new(3);
+        let vs = views(70, &mut rng);
+        let mut policy = registry.resolve("cost").unwrap();
+        b.iter("tick inlined (policy + plan_actions, 70 res)", || {
+            let alloc = {
+                let mut ctx = SchedCtx {
+                    now: 0.0,
+                    deadline: 15.0 * HOUR,
+                    budget_headroom: Some(1e9),
+                    remaining_jobs: exp.remaining(),
+                    job_work_ref_h: 2.0,
+                    resources: &vs,
+                    rng: &mut rng,
+                };
+                policy.allocate(&mut ctx)
+            };
+            plan_actions(&alloc, &exp)
+        });
+        let mut advisor = ScheduleAdvisor::resolve("cost", 2.0).unwrap();
+        b.iter("broker_overhead: tick via ScheduleAdvisor", || {
+            advisor.advise(
+                TickCtx {
+                    now: 0.0,
+                    deadline: 15.0 * HOUR,
+                    budget_headroom: Some(1e9),
+                    views: &vs,
+                },
+                &exp,
+                &mut rng,
+            )
         });
     }
 
@@ -119,17 +161,21 @@ fn main() {
     // PJRT execution (the job-wrapper's compute call).
     let dir = ChamberRuntime::default_artifact_dir();
     if dir.join("manifest.json").exists() {
-        let rt = ChamberRuntime::load(&dir).expect("artifacts");
-        let batch = rt.batch_size();
-        b.iter("pjrt chamber execute (batch=1)", || {
-            rt.run(&[[400.0, 1.0, 10.0]]).unwrap()
-        });
-        let params: Vec<[f32; 3]> = (0..batch)
-            .map(|i| [200.0 + i as f32 * 40.0, 1.0, 10.0])
-            .collect();
-        b.iter(&format!("pjrt chamber execute (batch={batch})"), || {
-            rt.run(&params).unwrap()
-        });
+        match ChamberRuntime::load(&dir) {
+            Ok(rt) => {
+                let batch = rt.batch_size();
+                b.iter("pjrt chamber execute (batch=1)", || {
+                    rt.run(&[[400.0, 1.0, 10.0]]).unwrap()
+                });
+                let params: Vec<[f32; 3]> = (0..batch)
+                    .map(|i| [200.0 + i as f32 * 40.0, 1.0, 10.0])
+                    .collect();
+                b.iter(&format!("pjrt chamber execute (batch={batch})"), || {
+                    rt.run(&params).unwrap()
+                });
+            }
+            Err(e) => eprintln!("(skipping PJRT cases: {e:#})"),
+        }
     } else {
         eprintln!("(skipping PJRT cases: run `make artifacts` first)");
     }

@@ -14,20 +14,19 @@
 //! cargo bench --bench economy_ablation
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
-use nimrod_g::sim::GridSimulation;
+use nimrod_g::broker::Broker;
 use nimrod_g::types::HOUR;
 
 fn run(policy: &str, deadline_h: f64, budget: Option<f64>, start_utc: f64) -> nimrod_g::metrics::Report {
-    let cfg = ExperimentConfig {
-        deadline: deadline_h * HOUR,
-        policy: policy.to_string(),
-        budget,
-        start_utc_hour: start_utc,
-        seed: 0xEC0,
-        ..Default::default()
-    };
-    GridSimulation::gusto_ionization(cfg).run()
+    let mut b = Broker::experiment()
+        .deadline_h(deadline_h)
+        .policy(policy)
+        .start_utc_hour(start_utc)
+        .seed(0xEC0);
+    if let Some(budget) = budget {
+        b = b.budget(budget);
+    }
+    b.run().expect("ablation experiment")
 }
 
 fn main() {
@@ -112,20 +111,18 @@ fn main() {
         ("competitor every 2 h", Some(2.0 * 3600.0)),
         ("competitor every 30 min", Some(1800.0)),
     ] {
-        let mut cfg = ExperimentConfig {
-            deadline: 20.0 * HOUR,
-            policy: "cost".into(),
-            seed: 0xEC0,
-            ..Default::default()
-        };
-        cfg.competition = interarrival.map(|s| {
-            nimrod_g::grid::competition::CompetitionModel {
+        let mut b = Broker::experiment()
+            .deadline_h(20.0)
+            .policy("cost")
+            .seed(0xEC0);
+        if let Some(s) = interarrival {
+            b = b.competition(nimrod_g::grid::competition::CompetitionModel {
                 mean_interarrival_s: s,
                 mean_duration_s: 4.0 * 3600.0,
                 mean_cpus: 60.0,
-            }
-        });
-        let r = GridSimulation::gusto_ionization(cfg).run();
+            });
+        }
+        let r = b.run().expect("competition experiment");
         println!(
             "{label:<26} {:>12.0} {:>12.2} {:>10}",
             r.total_cost,

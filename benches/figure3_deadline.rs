@@ -12,19 +12,17 @@
 //! cargo bench --bench figure3_deadline
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
-use nimrod_g::sim::GridSimulation;
+use nimrod_g::broker::Broker;
 use nimrod_g::types::HOUR;
 use nimrod_g::util::bench::Bench;
 
 fn run(deadline_h: f64, seed: u64) -> nimrod_g::metrics::Report {
-    let cfg = ExperimentConfig {
-        deadline: deadline_h * HOUR,
-        policy: "cost".to_string(),
-        seed,
-        ..Default::default()
-    };
-    GridSimulation::gusto_ionization(cfg).run()
+    Broker::experiment()
+        .deadline_h(deadline_h)
+        .policy("cost")
+        .seed(seed)
+        .run()
+        .expect("figure3 experiment")
 }
 
 fn main() {

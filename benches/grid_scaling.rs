@@ -10,15 +10,13 @@
 //! cargo bench --bench grid_scaling
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
+use nimrod_g::broker::Broker;
 use nimrod_g::grid::dynamics::ResourceDyn;
 use nimrod_g::grid::mds::Mds;
 use nimrod_g::grid::Testbed;
-use nimrod_g::sim::GridSimulation;
 use nimrod_g::types::HOUR;
 use nimrod_g::util::bench::Bench;
 use nimrod_g::util::rng::Rng;
-use nimrod_g::workload::ionization_jobs;
 
 fn main() {
     println!("== grid scaling: testbed size sweep ==\n");
@@ -27,17 +25,16 @@ fn main() {
         "scale", "machines", "cpus", "makespan(h)", "sim events", "wall(ms)"
     );
     for scale in [0.5, 1.0, 2.0, 4.0, 8.0] {
-        let cfg = ExperimentConfig {
-            deadline: 15.0 * HOUR,
-            policy: "cost".to_string(),
-            seed: 0x5CA1E,
-            ..Default::default()
-        };
         let tb = Testbed::gusto(3, scale);
         let (machines, cpus) = (tb.resources.len(), tb.total_cpus());
-        let specs = ionization_jobs(cfg.seed);
         let t0 = std::time::Instant::now();
-        let r = GridSimulation::new(tb, specs, cfg).run();
+        let r = Broker::experiment()
+            .deadline_h(15.0)
+            .policy("cost")
+            .seed(0x5CA1E)
+            .testbed(tb)
+            .run()
+            .expect("scaling experiment");
         let wall = t0.elapsed();
         println!(
             "{scale:<10} {machines:>10} {cpus:>8} {:>12.2} {:>14} {:>12.1}",

@@ -10,9 +10,8 @@
 //! cargo bench --bench scheduler_comparison
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
+use nimrod_g::broker::Broker;
 use nimrod_g::scheduler::ALL_POLICIES;
-use nimrod_g::sim::GridSimulation;
 use nimrod_g::types::HOUR;
 
 fn main() {
@@ -23,13 +22,12 @@ fn main() {
     );
     let mut results = Vec::new();
     for policy in ALL_POLICIES {
-        let cfg = ExperimentConfig {
-            deadline: 15.0 * HOUR,
-            policy: policy.to_string(),
-            seed: 0x5C0ED,
-            ..Default::default()
-        };
-        let r = GridSimulation::gusto_ionization(cfg).run();
+        let r = Broker::experiment()
+            .deadline_h(15.0)
+            .policy(policy)
+            .seed(0x5C0ED)
+            .run()
+            .expect("comparison experiment");
         println!(
             "{policy:<20} {:>12.2} {:>12.0} {:>9} {:>10} {:>6}",
             r.makespan_s / HOUR,

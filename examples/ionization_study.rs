@@ -12,26 +12,23 @@
 //! make artifacts && cargo run --release --example ionization_study
 //! ```
 
+use nimrod_g::broker::Broker;
 use nimrod_g::client::{MonitorClient, StatusBoard, StatusServer};
-use nimrod_g::config::ExperimentConfig;
-use nimrod_g::plan::{expand, Plan};
 use nimrod_g::protocol::Message;
-use nimrod_g::sim::live::LiveRunner;
 use nimrod_g::workload::ionization_plan;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    // A reduced calibration sweep: 5 voltages x 3 pressures x 2 energies.
-    let src = ionization_plan(5, 3, 2);
-    let plan = Plan::parse(&src)?;
-    let cfg = ExperimentConfig {
-        deadline: 1800.0, // wall-clock seconds in live mode
-        policy: "time".to_string(),
-        seed: 99,
-        ..Default::default()
-    };
-    let jobs = expand(&plan, cfg.seed)?;
-    println!("ionization study: {} real jobs", jobs.len());
+    // A reduced calibration sweep: 5 voltages x 3 pressures x 2 energies,
+    // assembled through the broker and finished as a live experiment.
+    let workdir = std::env::temp_dir().join("nimrod-ionization-study");
+    let live = Broker::experiment()
+        .plan(ionization_plan(5, 3, 2))
+        .deadline_s(1800.0) // wall-clock seconds in live mode
+        .policy("time")
+        .seed(99)
+        .live(6, &workdir)?;
+    println!("ionization study: {} real jobs", live.job_count());
 
     // Engine-side status server (the paper's multi-site monitoring).
     let board = Arc::new(StatusBoard::default());
@@ -70,10 +67,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     // Run on 6 PJRT workers.
-    let workdir = std::env::temp_dir().join("nimrod-ionization-study");
-    let outcome = LiveRunner::new(6, cfg, &workdir)
-        .with_board(board)
-        .run(jobs)?;
+    let outcome = live.with_board(board).run()?;
     monitor.join().ok();
     server.stop();
 

@@ -1,15 +1,13 @@
-//! Quickstart: parse a plan, expand it, and run it on the simulated GUSTO
-//! testbed with the cost-optimizing deadline/budget scheduler.
+//! Quickstart: compose an experiment through the broker — plan, envelope,
+//! policy, testbed, seed — and run it on the simulated GUSTO testbed with
+//! the cost-optimizing deadline/budget scheduler.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
-use nimrod_g::grid::Testbed;
-use nimrod_g::plan::{expand, Plan};
-use nimrod_g::sim::GridSimulation;
-use nimrod_g::types::HOUR;
+use nimrod_g::broker::Broker;
+use nimrod_g::plan::Plan;
 
 const PLAN: &str = r#"
 # A small parametric study: 3 voltages x 2 pressures x 2 energies = 12 jobs.
@@ -26,7 +24,7 @@ endtask
 "#;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Parse the declarative plan and expand the parameter space.
+    // A peek at what the declarative plan expands to.
     let plan = Plan::parse(PLAN)?;
     println!(
         "plan: {} parameters, {} constants, {} task ops -> {} jobs",
@@ -35,31 +33,32 @@ fn main() -> anyhow::Result<()> {
         plan.task.len(),
         plan.job_count()
     );
-    let cfg = ExperimentConfig {
-        deadline: 12.0 * HOUR,
-        budget: Some(200_000.0),
-        policy: "cost".to_string(),
-        seed: 2026,
-        ..Default::default()
-    };
-    let jobs = expand(&plan, cfg.seed)?;
-    for job in jobs.iter().take(3) {
-        println!("  {}: {:?}", job.id, job.bindings);
-    }
-    println!("  ...");
 
-    // 2. Build a small grid (half-scale GUSTO) and run the experiment.
-    let tb = Testbed::gusto(11, 0.5);
+    // The broker is the single entry point: one fluent chain assembles the
+    // experiment (plan + envelope + policy spec + testbed + seed) and
+    // `.simulate()` hands back the virtual-time driver.
+    let sim = Broker::experiment()
+        .plan(PLAN)
+        .deadline_h(12.0)
+        .budget(200_000.0)
+        .policy("cost?safety=0.9") // parameterized policy spec
+        .testbed_scale(0.5) // half-scale GUSTO: ~35 machines
+        .seed(2026)
+        .simulate()?;
     println!(
         "\ntestbed: {} machines / {} cpus across {} sites",
-        tb.resources.len(),
-        tb.total_cpus(),
-        tb.sites.len()
+        sim.tb.resources.len(),
+        sim.tb.total_cpus(),
+        sim.tb.sites.len()
     );
-    let report = GridSimulation::new(tb, jobs, cfg).run();
+    let report = sim.run();
 
-    // 3. Report.
     println!("\n{}", report.summary());
     println!("\nper-resource usage:\n{}", report.per_resource_csv());
+
+    // Named presets compose testbed + dynamics + competition in one call —
+    // still seedable, still overridable.
+    let crowd = Broker::scenario("flash-crowd")?.seed(2026).run()?;
+    println!("flash-crowd scenario: {}", crowd.summary());
     Ok(())
 }

@@ -11,32 +11,31 @@
 //! cargo run --release --example restart_recovery
 //! ```
 
-use nimrod_g::config::ExperimentConfig;
+use nimrod_g::broker::Broker;
 use nimrod_g::engine::journal::{recover, Journal};
-use nimrod_g::grid::Testbed;
-use nimrod_g::sim::GridSimulation;
 use nimrod_g::types::HOUR;
-use nimrod_g::workload::{ionization_jobs, ionization_plan};
+use nimrod_g::workload::ionization_plan;
+
+const SEED: u64 = 4242;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join("nimrod-restart-demo");
     std::fs::create_dir_all(&dir)?;
     let journal_path = dir.join("experiment.journal");
-
-    let cfg = ExperimentConfig {
-        deadline: 15.0 * HOUR,
-        policy: "cost".to_string(),
-        seed: 4242,
-        ..Default::default()
-    };
     let plan_src = ionization_plan(11, 5, 3);
-    let specs = ionization_jobs(cfg.seed);
-    println!("experiment: {} jobs, journaling to {}", specs.len(), journal_path.display());
 
-    // Phase 1: run ~5 virtual hours, then crash.
-    let tb = Testbed::gusto(cfg.seed ^ 0x6057, 1.0);
-    let mut sim = GridSimulation::new(tb.clone(), specs, cfg.clone());
-    let journal = Journal::create(&journal_path, &plan_src, cfg.seed, &sim.exp)?;
+    // Phase 1: run ~5 virtual hours with a journal attached, then crash.
+    let mut sim = Broker::experiment()
+        .deadline_h(15.0)
+        .policy("cost")
+        .seed(SEED)
+        .simulate()?;
+    println!(
+        "experiment: {} jobs, journaling to {}",
+        sim.exp.jobs.len(),
+        journal_path.display()
+    );
+    let journal = Journal::create(&journal_path, &plan_src, SEED, &sim.exp)?;
     sim = sim.with_journal(journal);
     sim.run_until(5.0 * HOUR);
     println!(
@@ -47,7 +46,8 @@ fn main() -> anyhow::Result<()> {
     let done_before = sim.exp.completed();
     drop(sim); // the engine node dies
 
-    // Phase 2: recover from the journal and finish.
+    // Phase 2: recover from the journal and finish. The same seed rebuilds
+    // the identical testbed; the recovered job table replaces the specs.
     let rec = recover(&journal_path)?;
     println!(
         "recovered: {} done survive the crash, {} jobs to go",
@@ -57,8 +57,12 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(rec.experiment.completed(), done_before);
 
     let journal = Journal::append_to(&journal_path)?;
-    let sim2 = GridSimulation::new(tb, Vec::new(), cfg)
-        .with_experiment(rec.experiment)
+    let sim2 = Broker::experiment()
+        .deadline_h(15.0)
+        .policy("cost")
+        .seed(SEED)
+        .resume(rec.experiment)
+        .simulate()?
         .with_journal(journal);
     let report = sim2.run();
     println!("\nafter restart: {}", report.summary());

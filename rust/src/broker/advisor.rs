@@ -1,0 +1,215 @@
+//! The shared schedule-advisor component (paper §2, Figure 1).
+//!
+//! Both experiment drivers — virtual-time [`crate::sim::GridSimulation`]
+//! and real-execution [`crate::sim::live::LiveRunner`] — used to hand-wire
+//! the same per-tick pipeline: estimate per-job work, build a
+//! [`SchedCtx`], run the [`Policy`], and reconcile through
+//! [`crate::dispatcher::plan_actions`]. [`ScheduleAdvisor`] owns that
+//! pipeline (policy + historical rate estimator + work prior) so the
+//! drivers only assemble their driver-specific [`ResourceView`]s and apply
+//! the returned [`Action`]s.
+
+use crate::dispatcher::{plan_actions, Action};
+use crate::engine::Experiment;
+use crate::scheduler::{Policy, RateEstimator, ResourceView, SchedCtx};
+use crate::types::{GridDollars, ResourceId, SimTime};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Driver-agnostic inputs for one scheduling tick. The views carry
+/// everything discovery produced (MDS capability, GRAM slots, economy
+/// quotes); experiment state is read from the engine directly.
+#[derive(Debug)]
+pub struct TickCtx<'a> {
+    /// Current time (virtual seconds or wall seconds since start).
+    pub now: SimTime,
+    /// Experiment deadline on the same clock.
+    pub deadline: SimTime,
+    /// Remaining budget headroom from the ledger (None = unlimited).
+    pub budget_headroom: Option<GridDollars>,
+    /// Discovered resources, one view per schedulable machine.
+    pub views: &'a [ResourceView],
+}
+
+/// The schedule advisor: the pluggable selection component plus the
+/// historical information it learns from (job consumption rates, per-job
+/// work). Constructed from a policy spec via [`ScheduleAdvisor::resolve`]
+/// or handed a custom [`Policy`] with [`ScheduleAdvisor::new`].
+pub struct ScheduleAdvisor {
+    policy: Box<dyn Policy>,
+    estimator: RateEstimator,
+    /// Prior for per-job work (reference CPU-hours) before history exists.
+    work_prior_h: f64,
+}
+
+impl ScheduleAdvisor {
+    /// Wrap an already-constructed policy.
+    pub fn new(policy: Box<dyn Policy>, work_prior_h: f64) -> ScheduleAdvisor {
+        ScheduleAdvisor {
+            policy,
+            estimator: RateEstimator::default(),
+            work_prior_h,
+        }
+    }
+
+    /// Resolve a `name?key=value` policy spec against the built-in
+    /// registry.
+    pub fn resolve(spec: &str, work_prior_h: f64) -> Result<ScheduleAdvisor> {
+        let policy = super::PolicyRegistry::with_builtins().resolve(spec)?;
+        Ok(ScheduleAdvisor::new(policy, work_prior_h))
+    }
+
+    /// Name of the active policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// The learned historical information.
+    pub fn estimator(&self) -> &RateEstimator {
+        &self.estimator
+    }
+
+    /// Current per-job work estimate (reference CPU-hours): measured EWMA
+    /// if history exists, else the prior.
+    pub fn job_work_ref_h(&self) -> f64 {
+        self.estimator.job_work_ref_h(self.work_prior_h)
+    }
+
+    /// Update the work prior (live mode recalibrates from wall time).
+    pub fn set_work_prior_h(&mut self, prior: f64) {
+        self.work_prior_h = prior;
+    }
+
+    /// Measured jobs/hour/slot for a resource, if history exists.
+    pub fn measured_jphps(&self, rid: ResourceId) -> Option<f64> {
+        self.estimator.measured_jphps(rid)
+    }
+
+    /// Feed back a completion (service wall seconds + measured work).
+    pub fn observe_complete(
+        &mut self,
+        rid: ResourceId,
+        service_s: SimTime,
+        work_ref_h: f64,
+    ) {
+        self.estimator.on_complete(rid, service_s, work_ref_h);
+    }
+
+    /// Feed back a failure.
+    pub fn observe_failure(&mut self, rid: ResourceId) {
+        self.estimator.on_failure(rid);
+    }
+
+    /// Per-resource in-flight counts (Dispatched + Running) in one O(jobs)
+    /// pass — the naive per-resource scan is O(resources × jobs) and
+    /// dominates the tick at scale.
+    pub fn in_flight_counts(exp: &Experiment, n_resources: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; n_resources];
+        for job in &exp.jobs {
+            if let Some(rid) = job.state.resource() {
+                if let Some(c) = counts.get_mut(rid.0 as usize) {
+                    *c += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// One scheduling tick: selection (policy allocation over the views)
+    /// followed by assignment planning (dispatcher reconciliation). Returns
+    /// the submit/cancel actions the driver must apply.
+    pub fn advise(
+        &mut self,
+        tick: TickCtx<'_>,
+        exp: &Experiment,
+        rng: &mut Rng,
+    ) -> Vec<Action> {
+        let job_work = self.job_work_ref_h();
+        let alloc = {
+            let mut ctx = SchedCtx {
+                now: tick.now,
+                deadline: tick.deadline,
+                budget_headroom: tick.budget_headroom,
+                remaining_jobs: exp.remaining(),
+                job_work_ref_h: job_work,
+                resources: tick.views,
+                rng,
+            };
+            self.policy.allocate(&mut ctx)
+        };
+        plan_actions(&alloc, exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{expand, Plan};
+    use crate::types::HOUR;
+
+    fn experiment(n: usize) -> Experiment {
+        let src = format!(
+            "parameter i integer range from 1 to {n}\ntask main\nexecute run $i\nendtask"
+        );
+        let specs = expand(&Plan::parse(&src).unwrap(), 0).unwrap();
+        Experiment::new(specs, 10.0 * HOUR, None, "u", 3)
+    }
+
+    fn view(id: u32, slots: u32) -> ResourceView {
+        ResourceView {
+            id: ResourceId(id),
+            slots,
+            planning_speed: 1.0,
+            rate: 1.0,
+            in_flight: 0,
+            measured_jphps: None,
+            batch_queue: false,
+        }
+    }
+
+    #[test]
+    fn advise_produces_submissions_for_idle_grid() {
+        let exp = experiment(6);
+        let mut adv = ScheduleAdvisor::resolve("time", 1.0).unwrap();
+        let views = vec![view(0, 4), view(1, 4)];
+        let mut rng = Rng::new(1);
+        let actions = adv.advise(
+            TickCtx {
+                now: 0.0,
+                deadline: 10.0 * HOUR,
+                budget_headroom: None,
+                views: &views,
+            },
+            &exp,
+            &mut rng,
+        );
+        let submits = actions
+            .iter()
+            .filter(|a| matches!(a, Action::Submit { .. }))
+            .count();
+        assert_eq!(submits, 6, "{actions:?}");
+    }
+
+    #[test]
+    fn in_flight_counts_one_pass() {
+        let mut exp = experiment(4);
+        exp.dispatch(crate::types::JobId(0), ResourceId(1), 0.0).unwrap();
+        exp.dispatch(crate::types::JobId(1), ResourceId(1), 0.0).unwrap();
+        exp.dispatch(crate::types::JobId(2), ResourceId(0), 0.0).unwrap();
+        exp.start(crate::types::JobId(2), 1.0).unwrap();
+        let counts = ScheduleAdvisor::in_flight_counts(&exp, 3);
+        assert_eq!(counts, vec![1, 2, 0]);
+        for rid in 0..3 {
+            assert_eq!(counts[rid], exp.in_flight_on(ResourceId(rid as u32)));
+        }
+    }
+
+    #[test]
+    fn work_estimate_prefers_history() {
+        let mut adv = ScheduleAdvisor::resolve("cost", 2.0).unwrap();
+        assert!((adv.job_work_ref_h() - 2.0).abs() < 1e-12);
+        adv.observe_complete(ResourceId(0), 1800.0, 0.5);
+        assert!((adv.job_work_ref_h() - 0.5).abs() < 1e-12);
+        assert!(adv.measured_jphps(ResourceId(0)).is_some());
+    }
+}

@@ -1,0 +1,451 @@
+//! The Nimrod/G resource broker — the crate's public entry point for
+//! composing and running experiments.
+//!
+//! The paper's §2 architecture is component-based: a client hands the
+//! parametric engine an experiment, a *schedule advisor* picks resources,
+//! a dispatcher farms jobs out. This module is that seam in code form:
+//!
+//! * [`ExperimentBuilder`] (via [`Broker::experiment`]) — fluent assembly
+//!   of an experiment: plan/workload, deadline, budget, policy spec,
+//!   testbed, seed — finished with [`ExperimentBuilder::simulate`]
+//!   (virtual time) or [`ExperimentBuilder::live`] (real PJRT execution);
+//! * [`ScheduleAdvisor`] — the shared per-tick
+//!   discovery → selection → assignment pipeline both drivers delegate to;
+//! * [`PolicyRegistry`] — open, parameterized policy construction
+//!   (`"cost?safety=0.9"`), extensible from outside the crate;
+//! * [`scenarios`] — a catalog of named, seedable experiment presets
+//!   (`gusto`, `peak-offpeak`, `flash-crowd`, `cheap-but-flaky`, …).
+//!
+//! ```
+//! use nimrod_g::broker::Broker;
+//!
+//! let report = Broker::experiment()
+//!     .deadline_h(20.0)
+//!     .budget(2.0e6)
+//!     .policy("cost?safety=0.9")
+//!     .seed(42)
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(report.jobs_total, 165);
+//! ```
+
+pub mod advisor;
+pub mod registry;
+pub mod scenarios;
+
+pub use advisor::{ScheduleAdvisor, TickCtx};
+pub use registry::{PolicyFactory, PolicyParams, PolicyRegistry};
+
+use crate::client::StatusBoard;
+use crate::config::{ExperimentConfig, WorkloadConfig};
+use crate::engine::Experiment;
+use crate::grid::competition::CompetitionModel;
+use crate::grid::Testbed;
+use crate::metrics::Report;
+use crate::plan::{expand, JobSpec, Plan};
+use crate::sim::live::{LiveOutcome, LiveRunner};
+use crate::sim::GridSimulation;
+use crate::types::{GridDollars, SimTime, HOUR};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Work-estimate prior for live mode: tiny, so the first tick allocates
+/// jobs at all and wall-time history takes over immediately. Shared with
+/// [`LiveRunner`]'s legacy construction path so both live entry points
+/// plan the first tick identically.
+pub const LIVE_WORK_PRIOR_H: f64 = 1e-4;
+
+/// The broker facade. Stateless — it exists to make entry points
+/// discoverable: `Broker::experiment()`, `Broker::scenario("gusto")`.
+pub struct Broker;
+
+impl Broker {
+    /// Start composing an experiment from defaults (the paper-scale
+    /// 165-job ionization study on the GUSTO-like testbed).
+    pub fn experiment() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+
+    /// Start from a named scenario preset (see [`scenarios`]); every
+    /// setting can still be overridden afterwards.
+    pub fn scenario(name: &str) -> Result<ExperimentBuilder> {
+        scenarios::builder(name)
+    }
+}
+
+/// Where the job list comes from.
+enum JobSource {
+    /// The paper-scale 165-job ionization calibration study.
+    Ionization,
+    /// Plan-language source text, expanded at build time with the seed.
+    Plan(String),
+    /// Pre-expanded job specs.
+    Specs(Vec<JobSpec>),
+}
+
+/// Where the testbed comes from (simulation drivers only).
+enum TestbedSource {
+    /// GUSTO-like generated testbed at a machine-count scale.
+    Gusto { scale: f64 },
+    /// An explicit, caller-built testbed.
+    Explicit(Testbed),
+}
+
+/// Fluent experiment assembly. Every setter consumes and returns the
+/// builder; finish with [`simulate`](Self::simulate),
+/// [`run`](Self::run) or [`live`](Self::live).
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    jobs: JobSource,
+    testbed: TestbedSource,
+    tweaks: Vec<Box<dyn Fn(&mut Testbed) + Send + Sync>>,
+    registry: Option<PolicyRegistry>,
+    resume: Option<Experiment>,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> Self {
+        ExperimentBuilder {
+            cfg: ExperimentConfig::default(),
+            jobs: JobSource::Ionization,
+            testbed: TestbedSource::Gusto { scale: 1.0 },
+            tweaks: Vec::new(),
+            registry: None,
+            resume: None,
+        }
+    }
+}
+
+impl ExperimentBuilder {
+    // -- workload ------------------------------------------------------------
+
+    /// Use plan-language source text (expanded with the experiment seed).
+    pub fn plan(mut self, src: impl Into<String>) -> Self {
+        self.jobs = JobSource::Plan(src.into());
+        self
+    }
+
+    /// Use pre-expanded job specs.
+    pub fn jobs(mut self, specs: Vec<JobSpec>) -> Self {
+        self.jobs = JobSource::Specs(specs);
+        self
+    }
+
+    /// Use the paper-scale 165-job ionization study (the default).
+    pub fn ionization_study(mut self) -> Self {
+        self.jobs = JobSource::Ionization;
+        self
+    }
+
+    /// Resume a journal-recovered experiment: its job table (with completed
+    /// work preserved) replaces the configured job source.
+    pub fn resume(mut self, experiment: Experiment) -> Self {
+        self.resume = Some(experiment);
+        self
+    }
+
+    /// Per-job compute/I-O shape.
+    pub fn workload(mut self, w: WorkloadConfig) -> Self {
+        self.cfg.workload = w;
+        self
+    }
+
+    // -- envelope ------------------------------------------------------------
+
+    /// Deadline in hours (virtual hours when simulating, wall hours live).
+    pub fn deadline_h(mut self, hours: f64) -> Self {
+        self.cfg.deadline = hours * HOUR;
+        self
+    }
+
+    /// Deadline in seconds.
+    pub fn deadline_s(mut self, seconds: SimTime) -> Self {
+        self.cfg.deadline = seconds;
+        self
+    }
+
+    /// Budget in G$.
+    pub fn budget(mut self, gd: GridDollars) -> Self {
+        self.cfg.budget = Some(gd);
+        self
+    }
+
+    /// Remove any budget (unconstrained spend).
+    pub fn no_budget(mut self) -> Self {
+        self.cfg.budget = None;
+        self
+    }
+
+    // -- scheduling ----------------------------------------------------------
+
+    /// Policy spec: a registered name, optionally with parameters —
+    /// `"cost"`, `"cost?safety=0.9"`, `"fixed-rate?max-rate=2"`.
+    pub fn policy(mut self, spec: &str) -> Self {
+        self.cfg.policy = spec.to_string();
+        self
+    }
+
+    /// Resolve policies against a custom registry (for out-of-crate
+    /// policies) instead of the built-ins.
+    pub fn registry(mut self, registry: PolicyRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Scheduler tick period, seconds.
+    pub fn tick_period_s(mut self, seconds: f64) -> Self {
+        self.cfg.tick_period_s = seconds;
+        self
+    }
+
+    /// Dispatch attempts per job before it is marked failed.
+    pub fn max_attempts(mut self, n: u32) -> Self {
+        self.cfg.max_attempts = n;
+        self
+    }
+
+    // -- identity / environment ----------------------------------------------
+
+    /// Grid identity the experiment runs as.
+    pub fn user(mut self, user: &str) -> Self {
+        self.cfg.user = user.to_string();
+        self
+    }
+
+    /// Master RNG seed (fixes testbed, workload jitter, churn, policy RNG).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// UTC hour-of-day at experiment start (drives time-of-day pricing).
+    pub fn start_utc_hour(mut self, hour: f64) -> Self {
+        self.cfg.start_utc_hour = hour;
+        self
+    }
+
+    /// Background competing-experiment process.
+    pub fn competition(mut self, model: CompetitionModel) -> Self {
+        self.cfg.competition = Some(model);
+        self
+    }
+
+    /// Remove background competition (the default).
+    pub fn no_competition(mut self) -> Self {
+        self.cfg.competition = None;
+        self
+    }
+
+    // -- testbed -------------------------------------------------------------
+
+    /// Use an explicit testbed instead of the generated GUSTO one.
+    pub fn testbed(mut self, tb: Testbed) -> Self {
+        self.testbed = TestbedSource::Explicit(tb);
+        self
+    }
+
+    /// Scale the generated GUSTO testbed's machine count (1.0 ≈ 70
+    /// machines).
+    pub fn testbed_scale(mut self, scale: f64) -> Self {
+        self.testbed = TestbedSource::Gusto { scale };
+        self
+    }
+
+    /// Apply a transformation to the testbed after generation (scenario
+    /// presets use this for e.g. failure-prone or discounted grids).
+    pub fn tweak_testbed(
+        mut self,
+        f: impl Fn(&mut Testbed) + Send + Sync + 'static,
+    ) -> Self {
+        self.tweaks.push(Box::new(f));
+        self
+    }
+
+    // -- introspection -------------------------------------------------------
+
+    /// The experiment configuration assembled so far.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    // -- finishers -----------------------------------------------------------
+
+    /// Validate settings and resolve the policy spec into an advisor.
+    fn advisor(&self, work_prior_h: f64) -> Result<ScheduleAdvisor> {
+        let cfg = &self.cfg;
+        ensure!(
+            cfg.deadline.is_finite() && cfg.deadline > 0.0,
+            "deadline must be positive, got {} s",
+            cfg.deadline
+        );
+        ensure!(
+            cfg.tick_period_s.is_finite() && cfg.tick_period_s > 0.0,
+            "tick period must be positive, got {} s",
+            cfg.tick_period_s
+        );
+        ensure!(cfg.max_attempts >= 1, "max_attempts must be at least 1");
+        if let Some(b) = cfg.budget {
+            ensure!(
+                b.is_finite() && b > 0.0,
+                "budget must be positive, got {b} G$ (use no_budget() for unlimited)"
+            );
+        }
+        ensure!(
+            (0.0..24.0).contains(&cfg.start_utc_hour),
+            "start_utc_hour must be in [0, 24), got {}",
+            cfg.start_utc_hour
+        );
+        if let TestbedSource::Gusto { scale } = &self.testbed {
+            let scale = *scale;
+            ensure!(
+                scale.is_finite() && scale > 0.0,
+                "testbed scale must be positive, got {scale}"
+            );
+        }
+        let policy = match &self.registry {
+            Some(reg) => reg.resolve(&cfg.policy)?,
+            None => PolicyRegistry::with_builtins().resolve(&cfg.policy)?,
+        };
+        Ok(ScheduleAdvisor::new(policy, work_prior_h))
+    }
+
+    /// Expand the configured job source.
+    fn specs(&self) -> Result<Vec<JobSpec>> {
+        let specs = match &self.jobs {
+            JobSource::Ionization => crate::workload::ionization_jobs(self.cfg.seed),
+            JobSource::Plan(src) => {
+                let plan = Plan::parse(src).context("parse experiment plan")?;
+                expand(&plan, self.cfg.seed).context("expand experiment plan")?
+            }
+            JobSource::Specs(specs) => specs.clone(),
+        };
+        ensure!(!specs.is_empty(), "experiment has no jobs");
+        Ok(specs)
+    }
+
+    /// Build the testbed (generated or explicit) with tweaks applied.
+    fn build_testbed(&self) -> Testbed {
+        let mut tb = match &self.testbed {
+            // Same seed derivation as the legacy `gusto_ionization` path so
+            // builder runs replay identically at equal seeds.
+            TestbedSource::Gusto { scale } => {
+                Testbed::gusto(self.cfg.seed ^ 0x6057, *scale)
+            }
+            TestbedSource::Explicit(tb) => tb.clone(),
+        };
+        for tweak in &self.tweaks {
+            tweak(&mut tb);
+        }
+        tb
+    }
+
+    /// Finish as a virtual-time simulation driver.
+    pub fn simulate(mut self) -> Result<GridSimulation> {
+        let advisor = self.advisor(self.cfg.workload.job_work_ref_h)?;
+        let resume = self.resume.take();
+        // A resumed experiment carries its own job table.
+        let specs = if resume.is_some() { Vec::new() } else { self.specs()? };
+        let tb = self.build_testbed();
+        let sim = GridSimulation::with_advisor(tb, specs, self.cfg, advisor);
+        Ok(match resume {
+            Some(exp) => sim.with_experiment(exp),
+            None => sim,
+        })
+    }
+
+    /// Convenience: simulate to completion and return the report.
+    pub fn run(self) -> Result<Report> {
+        Ok(self.simulate()?.run())
+    }
+
+    /// Finish as a live (real PJRT execution) experiment on `workers`
+    /// worker threads under `workdir`. The deadline/budget envelope applies
+    /// on the wall clock.
+    pub fn live(self, workers: usize, workdir: &Path) -> Result<LiveExperiment> {
+        ensure!(workers >= 1, "live mode needs at least one worker");
+        ensure!(
+            self.resume.is_none(),
+            "resume() is only supported by the simulation driver"
+        );
+        let advisor = self.advisor(LIVE_WORK_PRIOR_H)?;
+        let specs = self.specs()?;
+        let runner =
+            LiveRunner::new(workers, self.cfg, workdir).with_advisor(advisor);
+        Ok(LiveExperiment { runner, specs })
+    }
+}
+
+/// A fully-assembled live experiment: a configured [`LiveRunner`] plus the
+/// jobs it will execute. Produced by [`ExperimentBuilder::live`].
+pub struct LiveExperiment {
+    runner: LiveRunner,
+    specs: Vec<JobSpec>,
+}
+
+impl LiveExperiment {
+    /// Attach a status board shared with a
+    /// [`crate::client::StatusServer`].
+    pub fn with_board(mut self, board: Arc<StatusBoard>) -> Self {
+        self.runner = self.runner.with_board(board);
+        self
+    }
+
+    /// Number of jobs the experiment will run.
+    pub fn job_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Execute to completion on real PJRT workers.
+    pub fn run(self) -> Result<LiveOutcome> {
+        self.runner.run(self.specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_match_config_defaults() {
+        let b = Broker::experiment();
+        let d = ExperimentConfig::default();
+        assert_eq!(b.config().policy, d.policy);
+        assert_eq!(b.config().seed, d.seed);
+        assert_eq!(b.config().deadline, d.deadline);
+        assert_eq!(b.config().budget, None);
+    }
+
+    #[test]
+    fn builder_validation_rejects_nonsense() {
+        assert!(Broker::experiment().deadline_h(-1.0).simulate().is_err());
+        assert!(Broker::experiment().budget(0.0).simulate().is_err());
+        assert!(Broker::experiment().policy("nope").simulate().is_err());
+        assert!(Broker::experiment()
+            .policy("cost?bogus=1")
+            .simulate()
+            .is_err());
+        assert!(Broker::experiment().tick_period_s(0.0).simulate().is_err());
+        assert!(Broker::experiment().max_attempts(0).simulate().is_err());
+        assert!(Broker::experiment().testbed_scale(0.0).simulate().is_err());
+        assert!(Broker::experiment().start_utc_hour(24.5).simulate().is_err());
+        assert!(Broker::experiment().jobs(Vec::new()).simulate().is_err());
+    }
+
+    #[test]
+    fn small_builder_run_completes() {
+        let report = Broker::experiment()
+            .plan(
+                "parameter v float range from 100 to 1000 step 300\n\
+                 task main\nexecute icc -v $v\nendtask",
+            )
+            .deadline_h(20.0)
+            .policy("cost")
+            .testbed_scale(0.3)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert_eq!(report.jobs_total, 4);
+        assert_eq!(report.jobs_completed + report.jobs_failed, 4);
+    }
+}

@@ -1,0 +1,232 @@
+//! Open policy registry with parameterized construction.
+//!
+//! Replaces the closed `match` that used to live in
+//! [`crate::scheduler::by_name`]: policies are looked up by name in a
+//! registry that out-of-crate code can extend with
+//! [`PolicyRegistry::register`], and each factory receives the parameters
+//! parsed from a `name?key=value&key2=value2` spec, so tunables like the
+//! cost-optimizer's deadline safety factor can be set per experiment
+//! without recompiling:
+//!
+//! ```
+//! use nimrod_g::broker::PolicyRegistry;
+//! let reg = PolicyRegistry::with_builtins();
+//! assert!(reg.resolve("cost?safety=0.9").is_ok());
+//! assert!(reg.resolve("cost?typo=1").is_err()); // unknown keys are errors
+//! ```
+//!
+//! Unknown policy names and unknown (or malformed) parameter keys are hard
+//! errors — a typo must never silently fall back to defaults.
+
+use crate::scheduler::{baselines, dbc, Policy, DEADLINE_SAFETY};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parameters parsed from the query part of a policy spec. Factories *take*
+/// the keys they understand; [`PolicyRegistry::resolve`] rejects the spec
+/// if any key is left over.
+#[derive(Debug, Default)]
+pub struct PolicyParams {
+    map: BTreeMap<String, String>,
+}
+
+impl PolicyParams {
+    /// Parse a `key=value&key2=value2` query string (empty is fine).
+    pub fn parse(query: &str) -> Result<PolicyParams> {
+        let mut map = BTreeMap::new();
+        for part in query.split('&').filter(|p| !p.is_empty()) {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("policy parameter `{part}` must be key=value");
+            };
+            ensure!(!key.is_empty(), "policy parameter `{part}` has an empty key");
+            if map.insert(key.to_string(), value.to_string()).is_some() {
+                bail!("duplicate policy parameter `{key}`");
+            }
+        }
+        Ok(PolicyParams { map })
+    }
+
+    /// Remove and return a raw parameter value.
+    pub fn take(&mut self, key: &str) -> Option<String> {
+        self.map.remove(key)
+    }
+
+    /// Remove and parse a float parameter.
+    pub fn take_f64(&mut self, key: &str) -> Result<Option<f64>> {
+        match self.map.remove(key) {
+            None => Ok(None),
+            Some(v) => {
+                let parsed = v
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|x| x.is_finite())
+                    .with_context(|| format!("parameter `{key}={v}` is not a number"))?;
+                Ok(Some(parsed))
+            }
+        }
+    }
+
+    /// Keys no factory has consumed.
+    pub fn remaining_keys(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// A policy constructor: receives the parsed parameters, takes the ones it
+/// understands, returns the policy.
+pub type PolicyFactory =
+    Box<dyn Fn(&mut PolicyParams) -> Result<Box<dyn Policy>> + Send + Sync>;
+
+/// Name → factory table. The single source of policy construction; the
+/// legacy [`crate::scheduler::by_name`] is a deprecated shim over this.
+pub struct PolicyRegistry {
+    factories: BTreeMap<String, PolicyFactory>,
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        PolicyRegistry::with_builtins()
+    }
+}
+
+impl PolicyRegistry {
+    /// A registry with no entries (for fully custom policy sets).
+    pub fn empty() -> PolicyRegistry {
+        PolicyRegistry {
+            factories: BTreeMap::new(),
+        }
+    }
+
+    /// A registry pre-loaded with the eight in-tree policies
+    /// ([`crate::scheduler::ALL_POLICIES`]).
+    pub fn with_builtins() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::empty();
+        reg.register("cost", |p| {
+            let safety = p.take_f64("safety")?.unwrap_or(DEADLINE_SAFETY);
+            ensure!(
+                safety > 0.0 && safety <= 1.0,
+                "cost: safety must be in (0, 1], got {safety}"
+            );
+            Ok(Box::new(dbc::CostOpt { safety }))
+        });
+        reg.register("time", |_| Ok(Box::new(dbc::TimeOpt)));
+        reg.register("conservative-time", |_| Ok(Box::new(dbc::ConservativeTime)));
+        reg.register("deadline-only", |p| {
+            let safety = p.take_f64("safety")?.unwrap_or(DEADLINE_SAFETY);
+            ensure!(
+                safety > 0.0 && safety <= 1.0,
+                "deadline-only: safety must be in (0, 1], got {safety}"
+            );
+            Ok(Box::new(dbc::DeadlineOnly { safety }))
+        });
+        reg.register("round-robin", |_| {
+            Ok(Box::new(baselines::RoundRobin::default()))
+        });
+        reg.register("random", |_| Ok(Box::new(baselines::RandomPick)));
+        reg.register("perf", |_| Ok(Box::new(baselines::PerfOnly)));
+        reg.register("fixed-rate", |p| {
+            let max_rate = p.take_f64("max-rate")?.unwrap_or(1.0);
+            ensure!(
+                max_rate > 0.0,
+                "fixed-rate: max-rate must be positive, got {max_rate}"
+            );
+            Ok(Box::new(baselines::FixedRate { max_rate }))
+        });
+        reg
+    }
+
+    /// Register (or replace) a policy factory under `name`.
+    pub fn register<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&mut PolicyParams) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+    {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    /// True if `name` (without parameters) is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.contains_key(name)
+    }
+
+    /// Registered policy names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.keys().map(String::as_str).collect()
+    }
+
+    /// Construct a policy from a `name` or `name?key=value&...` spec.
+    pub fn resolve(&self, spec: &str) -> Result<Box<dyn Policy>> {
+        let (name, query) = match spec.split_once('?') {
+            Some((n, q)) => (n, q),
+            None => (spec, ""),
+        };
+        ensure!(!name.is_empty(), "empty policy name in spec `{spec}`");
+        let Some(factory) = self.factories.get(name) else {
+            bail!(
+                "unknown policy `{name}` (registered: {})",
+                self.names().join(", ")
+            );
+        };
+        let mut params = PolicyParams::parse(query)?;
+        let policy = factory(&mut params)
+            .with_context(|| format!("constructing policy `{name}`"))?;
+        if !params.is_empty() {
+            bail!(
+                "policy `{name}` does not understand parameter(s): {}",
+                params.remaining_keys().join(", ")
+            );
+        }
+        Ok(policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::ALL_POLICIES;
+
+    #[test]
+    fn builtins_cover_all_policies() {
+        let reg = PolicyRegistry::with_builtins();
+        for name in ALL_POLICIES {
+            let p = reg
+                .resolve(name)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(reg.names().len(), ALL_POLICIES.len());
+    }
+
+    #[test]
+    fn parameterized_spec_parses() {
+        let reg = PolicyRegistry::with_builtins();
+        assert!(reg.resolve("cost?safety=0.9").is_ok());
+        assert!(reg.resolve("fixed-rate?max-rate=2.5").is_ok());
+        assert!(reg.resolve("cost?").is_ok(), "empty query is allowed");
+    }
+
+    #[test]
+    fn unknown_names_and_keys_rejected() {
+        let reg = PolicyRegistry::with_builtins();
+        assert!(reg.resolve("nope").is_err());
+        assert!(reg.resolve("cost?nope=1").is_err());
+        assert!(reg.resolve("time?safety=0.9").is_err(), "time takes no params");
+        assert!(reg.resolve("cost?safety=high").is_err(), "non-numeric value");
+        assert!(reg.resolve("cost?safety=0.9&safety=0.8").is_err(), "duplicate");
+        assert!(reg.resolve("cost?safety").is_err(), "missing =value");
+        assert!(reg.resolve("cost?safety=2.0").is_err(), "out of range");
+        assert!(reg.resolve("").is_err(), "empty spec");
+    }
+
+    #[test]
+    fn params_take_semantics() {
+        let mut p = PolicyParams::parse("a=1&b=x").unwrap();
+        assert_eq!(p.take_f64("a").unwrap(), Some(1.0));
+        assert_eq!(p.take("b").as_deref(), Some("x"));
+        assert!(p.is_empty());
+        assert_eq!(p.take_f64("a").unwrap(), None);
+    }
+}

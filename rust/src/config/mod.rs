@@ -41,7 +41,9 @@ pub struct ExperimentConfig {
     pub deadline: SimTime,
     /// Budget in G$ (None = unconstrained).
     pub budget: Option<GridDollars>,
-    /// Scheduling policy name (see [`crate::scheduler::by_name`]).
+    /// Scheduling policy spec resolved through
+    /// [`crate::broker::PolicyRegistry`]: a registered name, optionally
+    /// with parameters (`"cost"`, `"cost?safety=0.9"`).
     pub policy: String,
     /// Scheduler tick period, seconds.
     pub tick_period_s: SimTime,
@@ -153,9 +155,11 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let mut c = ExperimentConfig::default();
-        c.budget = Some(5000.0);
-        c.policy = "time".into();
+        let c = ExperimentConfig {
+            budget: Some(5000.0),
+            policy: "time".into(),
+            ..Default::default()
+        };
         let j = c.to_json().to_string();
         let back =
             ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())

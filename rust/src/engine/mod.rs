@@ -63,13 +63,24 @@ pub struct Job {
 }
 
 /// Transition error — indicates a driver bug, surfaced loudly.
-#[derive(Debug, thiserror::Error)]
-#[error("illegal transition for {job}: {from:?} -> {to}")]
+#[derive(Debug)]
 pub struct BadTransition {
     pub job: JobId,
     pub from: JobState,
     pub to: &'static str,
 }
+
+impl std::fmt::Display for BadTransition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "illegal transition for {}: {:?} -> {}",
+            self.job, self.from, self.to
+        )
+    }
+}
+
+impl std::error::Error for BadTransition {}
 
 /// The experiment: job table + deadline/budget envelope.
 #[derive(Debug)]

@@ -33,15 +33,24 @@ pub struct Gsi {
 }
 
 /// Authorization failure reasons (what the dispatcher reports upstream).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AuthError {
-    #[error("credential expired")]
     Expired,
-    #[error("credential unknown")]
     Unknown,
-    #[error("user not in resource gridmap")]
     NotAuthorized,
 }
+
+impl std::fmt::Display for AuthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AuthError::Expired => "credential expired",
+            AuthError::Unknown => "credential unknown",
+            AuthError::NotAuthorized => "user not in resource gridmap",
+        })
+    }
+}
+
+impl std::error::Error for AuthError {}
 
 impl Gsi {
     /// grid-proxy-init: issue a proxy for `subject`.

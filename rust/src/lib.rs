@@ -15,9 +15,41 @@
 //! * **runtime** — PJRT CPU client that loads the HLO artifacts so the Rust
 //!   job-wrapper executes real compute on the request path (Python never).
 //!
-//! Start with [`sim::GridSimulation`] (virtual-time experiments, the paper's
-//! Figure 3) or `examples/ionization_study.rs` (real execution end to end).
+//! # Entry point: the broker
+//!
+//! Experiments are composed and launched through [`broker::Broker`] — the
+//! paper's resource-broker facade over the whole component stack:
+//!
+//! ```no_run
+//! use nimrod_g::broker::Broker;
+//!
+//! // The paper's Figure-3 trial, tuned and reseeded:
+//! let report = Broker::experiment()
+//!     .deadline_h(20.0)
+//!     .budget(2.0e6)
+//!     .policy("cost?safety=0.9") // parameterized policy spec
+//!     .seed(42)
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.summary());
+//!
+//! // Or start from a named scenario preset:
+//! let report = Broker::scenario("flash-crowd").unwrap().seed(7).run().unwrap();
+//! println!("{}", report.summary());
+//! ```
+//!
+//! [`broker::ExperimentBuilder::simulate`] yields the virtual-time driver
+//! ([`sim::GridSimulation`], replaying a 20-hour trial in milliseconds);
+//! [`broker::ExperimentBuilder::live`] yields real PJRT execution
+//! ([`sim::live::LiveRunner`]). Both drivers delegate their per-tick
+//! discovery → selection → assignment pipeline to the shared
+//! [`broker::ScheduleAdvisor`]; scheduling policies are constructed through
+//! the open, parameterized [`broker::PolicyRegistry`].
+//!
+//! See `examples/quickstart.rs` for the plan-language path and
+//! `examples/ionization_study.rs` for live execution end to end.
 
+pub mod broker;
 pub mod client;
 pub mod config;
 pub mod dispatcher;

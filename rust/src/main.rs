@@ -3,25 +3,24 @@
 //! Subcommands:
 //!
 //! ```text
-//! nimrod run        --plan FILE [--deadline-h H] [--budget G] [--policy P]
-//!                   [--seed S] [--scale X] [--journal FILE] [--csv DIR]
+//! nimrod run        --plan FILE | --scenario NAME  [--deadline-h H]
+//!                   [--budget G] [--policy P[?k=v]] [--seed S] [--scale X]
+//!                   [--user U] [--journal FILE] [--csv DIR]
 //! nimrod resume     --journal FILE            restart a crashed experiment
 //! nimrod figure3    [--csv DIR] [--seed S]    reproduce the paper's Figure 3
 //! nimrod testbed    [--seed S] [--scale X]    dump the GUSTO-like testbed JSON
 //! nimrod policies                             list scheduling policies
+//! nimrod scenarios                            list scenario presets
 //! nimrod live       [--workers N] [--jobs N]  real PJRT execution demo
 //! ```
 //!
+//! Every subcommand takes `--help`; `--verbose` raises log level to info.
 //! (Argument parsing is hand-rolled: this image builds offline without
 //! clap; see rust/src/util/.)
 
 use anyhow::{bail, Context, Result};
-use nimrod_g::config::ExperimentConfig;
+use nimrod_g::broker::{scenarios, Broker, ExperimentBuilder, PolicyRegistry};
 use nimrod_g::engine::journal::{recover, Journal};
-use nimrod_g::grid::Testbed;
-use nimrod_g::plan::{expand, Plan};
-use nimrod_g::sim::live::LiveRunner;
-use nimrod_g::sim::GridSimulation;
 use nimrod_g::types::HOUR;
 use nimrod_g::util::logging;
 use nimrod_g::workload;
@@ -41,9 +40,10 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Parsed `--key value` options.
+/// Parsed command-line flags: `--key value`, `--key=value`, or a bare
+/// boolean `--key` (e.g. `--verbose`, `--help`).
 struct Opts {
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Option<String>>,
 }
 
 impl Opts {
@@ -52,39 +52,84 @@ impl Opts {
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
-            if let Some(key) = a.strip_prefix("--") {
-                let val = args
-                    .get(i + 1)
-                    .with_context(|| format!("--{key} needs a value"))?;
-                flags.insert(key.to_string(), val.clone());
-                i += 2;
+            let key = if a == "-h" {
+                "help"
+            } else if let Some(key) = a.strip_prefix("--") {
+                key
             } else {
-                bail!("unexpected argument `{a}`");
+                bail!("unexpected argument `{a}` (flags look like `--key value`; try --help)");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), Some(v.to_string()));
+                i += 1;
+                continue;
+            }
+            match args.get(i + 1) {
+                // A following token that is not itself a flag is this
+                // flag's value; otherwise the flag is boolean.
+                Some(v) if !v.starts_with("--") && v != "-h" => {
+                    flags.insert(key.to_string(), Some(v.clone()));
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(key.to_string(), None);
+                    i += 1;
+                }
             }
         }
         Ok(Opts { flags })
     }
 
-    fn str(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    /// Reject flags outside `known` (help/verbose are always allowed).
+    fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if key != "help" && key != "verbose" && !known.contains(&key.as_str())
+            {
+                bail!(
+                    "unknown flag --{key} (expected: {})",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
     }
 
-    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+    /// Boolean flag: present without a value (or with true/false).
+    fn bool(&self, key: &str) -> Result<bool> {
         match self.flags.get(key) {
-            Some(v) => v.parse().with_context(|| format!("bad --{key} `{v}`")),
-            None => Ok(default),
+            None => Ok(false),
+            Some(None) => Ok(true),
+            Some(Some(v)) => match v.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("bad --{key} `{other}` (expected true/false)"),
+            },
         }
     }
 
-    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+    /// Raw value of a flag that requires one.
+    fn value(&self, key: &str) -> Result<Option<&str>> {
         match self.flags.get(key) {
-            Some(v) => v.parse().with_context(|| format!("bad --{key} `{v}`")),
-            None => Ok(default),
+            None => Ok(None),
+            Some(Some(v)) => Ok(Some(v.as_str())),
+            Some(None) => bail!("--{key} needs a value"),
         }
+    }
+
+    fn str_opt(&self, key: &str) -> Result<Option<String>> {
+        Ok(self.value(key)?.map(String::from))
+    }
+
+    fn str(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.value(key)?.unwrap_or(default).to_string())
     }
 
     fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
-        match self.flags.get(key) {
+        match self.value(key)? {
             Some(v) => Ok(Some(
                 v.parse().with_context(|| format!("bad --{key} `{v}`"))?,
             )),
@@ -92,8 +137,25 @@ impl Opts {
         }
     }
 
-    fn path(&self, key: &str) -> Option<PathBuf> {
-        self.flags.get(key).map(PathBuf::from)
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.opt_f64(key)?.unwrap_or(default))
+    }
+
+    fn opt_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.value(key)? {
+            Some(v) => Ok(Some(
+                v.parse().with_context(|| format!("bad --{key} `{v}`"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.opt_u64(key)?.unwrap_or(default))
+    }
+
+    fn path(&self, key: &str) -> Result<Option<PathBuf>> {
+        Ok(self.value(key)?.map(PathBuf::from))
     }
 }
 
@@ -103,17 +165,16 @@ fn run(args: &[String]) -> Result<()> {
         return Ok(());
     };
     let opts = Opts::parse(&args[1..])?;
+    if opts.bool("verbose")? {
+        logging::set_level(logging::Level::Info);
+    }
     match cmd.as_str() {
         "run" => cmd_run(&opts),
         "resume" => cmd_resume(&opts),
         "figure3" => cmd_figure3(&opts),
         "testbed" => cmd_testbed(&opts),
-        "policies" => {
-            for p in nimrod_g::scheduler::ALL_POLICIES {
-                println!("{p}");
-            }
-            Ok(())
-        }
+        "policies" => cmd_policies(&opts),
+        "scenarios" => cmd_scenarios(&opts),
         "live" => cmd_live(&opts),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -126,19 +187,32 @@ fn run(args: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "nimrod — Nimrod/G grid resource management and scheduling\n\n\
-         usage:\n  nimrod run --plan FILE [--deadline-h H] [--budget G$] [--policy NAME]\n             [--seed S] [--scale X] [--journal FILE] [--csv DIR]\n  nimrod resume --journal FILE [--policy NAME] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--workdir DIR]"
+         usage:\n  nimrod run --plan FILE | --scenario NAME [--deadline-h H] [--budget G$]\n             [--policy NAME[?key=value]] [--seed S] [--scale X] [--user U]\n             [--journal FILE] [--csv DIR]\n  nimrod resume --journal FILE [--policy NAME] [--scale X] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod scenarios\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--seed S] [--workdir DIR]\n\n\
+         global flags: --help (per subcommand), --verbose"
     );
 }
 
-fn experiment_cfg(opts: &Opts) -> Result<ExperimentConfig> {
-    Ok(ExperimentConfig {
-        user: opts.str("user", "rajkumar"),
-        deadline: opts.f64("deadline-h", 15.0)? * HOUR,
-        budget: opts.opt_f64("budget")?,
-        policy: opts.str("policy", "cost"),
-        seed: opts.u64("seed", 0xD15EA5E)?,
-        ..Default::default()
-    })
+/// Apply the envelope/identity flags shared by experiment subcommands.
+fn apply_common(mut b: ExperimentBuilder, opts: &Opts) -> Result<ExperimentBuilder> {
+    if let Some(u) = opts.str_opt("user")? {
+        b = b.user(&u);
+    }
+    if let Some(h) = opts.opt_f64("deadline-h")? {
+        b = b.deadline_h(h);
+    }
+    if let Some(g) = opts.opt_f64("budget")? {
+        b = b.budget(g);
+    }
+    if let Some(p) = opts.str_opt("policy")? {
+        b = b.policy(&p);
+    }
+    if let Some(s) = opts.opt_u64("seed")? {
+        b = b.seed(s);
+    }
+    if let Some(x) = opts.opt_f64("scale")? {
+        b = b.testbed_scale(x);
+    }
+    Ok(b)
 }
 
 fn write_csvs(report: &nimrod_g::metrics::Report, dir: &Path, tag: &str) -> Result<()> {
@@ -156,46 +230,91 @@ fn write_csvs(report: &nimrod_g::metrics::Report, dir: &Path, tag: &str) -> Resu
 }
 
 fn cmd_run(opts: &Opts) -> Result<()> {
-    let plan_path = opts
-        .path("plan")
-        .context("`nimrod run` needs --plan FILE")?;
-    let src = std::fs::read_to_string(&plan_path)
-        .with_context(|| format!("read plan {}", plan_path.display()))?;
-    let plan = Plan::parse(&src)?;
-    let cfg = experiment_cfg(opts)?;
-    let specs = expand(&plan, cfg.seed)?;
+    if opts.bool("help")? {
+        println!(
+            "nimrod run — simulate an experiment on the GUSTO-like testbed\n\n\
+             usage: nimrod run --plan FILE | --scenario NAME [flags]\n\n\
+             flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery\n  --csv DIR          write timeline/per-resource CSVs"
+        );
+        return Ok(());
+    }
+    opts.expect_known(&[
+        "plan", "scenario", "deadline-h", "budget", "policy", "seed", "scale",
+        "user", "journal", "csv",
+    ])?;
+    let scenario = opts.str_opt("scenario")?;
+    // The journal records only plan + seed + envelope, so `nimrod resume`
+    // cannot reconstruct scenario-specific testbed tweaks, competition, or
+    // policy — refuse the combination rather than resume onto a different
+    // grid silently.
+    if scenario.is_some() && opts.value("journal")?.is_some() {
+        bail!("--journal cannot be combined with --scenario: resume cannot reconstruct scenario settings; journal a --plan run instead");
+    }
+    let mut b = match &scenario {
+        Some(name) => Broker::scenario(name)?,
+        None => Broker::experiment(),
+    };
+    // The journal needs the plan source so recovery can re-expand specs;
+    // scenario presets all run the generated ionization study.
+    let plan_src = match opts.path("plan")? {
+        Some(plan_path) => {
+            let src = std::fs::read_to_string(&plan_path)
+                .with_context(|| format!("read plan {}", plan_path.display()))?;
+            b = b.plan(src.clone());
+            src
+        }
+        None => {
+            if scenario.is_none() {
+                bail!("`nimrod run` needs --plan FILE or --scenario NAME (try `nimrod run --help`)");
+            }
+            workload::ionization_plan(11, 5, 3)
+        }
+    };
+    let b = apply_common(b, opts)?;
+    let cfg = b.config().clone();
+    if let Some(name) = &scenario {
+        let info = scenarios::describe(name).expect("scenario resolved above");
+        println!("scenario {}: {}", info.name, info.summary);
+    }
+    let mut sim = b.simulate()?;
     println!(
         "experiment: {} jobs, deadline {:.1} h, policy {}, budget {}",
-        specs.len(),
+        sim.exp.jobs.len(),
         cfg.deadline / HOUR,
         cfg.policy,
         cfg.budget
             .map(|b| format!("{b:.0} G$"))
             .unwrap_or_else(|| "unlimited".into()),
     );
-    let tb = Testbed::gusto(cfg.seed ^ 0x6057, opts.f64("scale", 1.0)?);
     println!(
         "testbed: {} resources / {} cpus across {} sites",
-        tb.resources.len(),
-        tb.total_cpus(),
-        tb.sites.len()
+        sim.tb.resources.len(),
+        sim.tb.total_cpus(),
+        sim.tb.sites.len()
     );
-    let mut sim = GridSimulation::new(tb, specs, cfg.clone());
-    if let Some(journal_path) = opts.path("journal") {
-        let journal = Journal::create(&journal_path, &src, cfg.seed, &sim.exp)?;
+    if let Some(journal_path) = opts.path("journal")? {
+        let journal = Journal::create(&journal_path, &plan_src, cfg.seed, &sim.exp)?;
         sim = sim.with_journal(journal);
     }
     let report = sim.run();
     println!("{}", report.summary());
-    if let Some(dir) = opts.path("csv") {
+    if let Some(dir) = opts.path("csv")? {
         write_csvs(&report, &dir, "run")?;
     }
     Ok(())
 }
 
 fn cmd_resume(opts: &Opts) -> Result<()> {
+    if opts.bool("help")? {
+        println!(
+            "nimrod resume — restart a journaled experiment after a crash\n\n\
+             usage: nimrod resume --journal FILE [--policy SPEC] [--scale X] [--csv DIR]"
+        );
+        return Ok(());
+    }
+    opts.expect_known(&["journal", "policy", "scale", "csv"])?;
     let journal_path = opts
-        .path("journal")
+        .path("journal")?
         .context("`nimrod resume` needs --journal FILE")?;
     let rec = recover(&journal_path)?;
     println!(
@@ -204,36 +323,46 @@ fn cmd_resume(opts: &Opts) -> Result<()> {
         rec.experiment.jobs.len(),
         rec.experiment.remaining()
     );
-    let mut cfg = experiment_cfg(opts)?;
-    cfg.seed = rec.seed;
-    cfg.deadline = rec.experiment.deadline;
-    cfg.budget = rec.experiment.budget;
-    let tb = Testbed::gusto(cfg.seed ^ 0x6057, opts.f64("scale", 1.0)?);
+    let mut b = Broker::experiment()
+        .seed(rec.seed)
+        .deadline_s(rec.experiment.deadline)
+        .policy(&opts.str("policy", "cost")?)
+        .testbed_scale(opts.f64("scale", 1.0)?);
+    if let Some(budget) = rec.experiment.budget {
+        b = b.budget(budget);
+    }
     let journal = Journal::append_to(&journal_path)?;
-    let sim = GridSimulation::new(tb, Vec::new(), cfg)
-        .with_experiment(rec.experiment)
+    let sim = b
+        .resume(rec.experiment)
+        .simulate()?
         .with_journal(journal);
     let report = sim.run();
     println!("{}", report.summary());
-    if let Some(dir) = opts.path("csv") {
+    if let Some(dir) = opts.path("csv")? {
         write_csvs(&report, &dir, "resume")?;
     }
     Ok(())
 }
 
 fn cmd_figure3(opts: &Opts) -> Result<()> {
+    if opts.bool("help")? {
+        println!(
+            "nimrod figure3 — reproduce the paper's Figure 3 deadline sweep\n\n\
+             usage: nimrod figure3 [--csv DIR] [--seed S]"
+        );
+        return Ok(());
+    }
+    opts.expect_known(&["csv", "seed"])?;
     let seed = opts.u64("seed", 0xD15EA5E)?;
-    let csv_dir = opts.path("csv");
+    let csv_dir = opts.path("csv")?;
     println!("Figure 3: GUSTO resource usage for 10 / 15 / 20 hour deadlines");
     println!("(165-job ionization chamber calibration, cost-optimizing DBC)\n");
     for deadline_h in [10.0, 15.0, 20.0] {
-        let cfg = ExperimentConfig {
-            deadline: deadline_h * HOUR,
-            policy: "cost".into(),
-            seed,
-            ..Default::default()
-        };
-        let report = GridSimulation::gusto_ionization(cfg).run();
+        let report = Broker::experiment()
+            .deadline_h(deadline_h)
+            .policy("cost")
+            .seed(seed)
+            .run()?;
         println!("deadline {deadline_h:>4.0} h: {}", report.summary());
         println!(
             "              avg {:.1} busy cpus over the run",
@@ -247,34 +376,77 @@ fn cmd_figure3(opts: &Opts) -> Result<()> {
 }
 
 fn cmd_testbed(opts: &Opts) -> Result<()> {
-    let tb = Testbed::gusto(opts.u64("seed", 0xD15EA5E)?, opts.f64("scale", 1.0)?);
+    if opts.bool("help")? {
+        println!(
+            "nimrod testbed — dump the generated GUSTO-like testbed as JSON\n\n\
+             usage: nimrod testbed [--seed S] [--scale X]"
+        );
+        return Ok(());
+    }
+    opts.expect_known(&["seed", "scale"])?;
+    let tb = nimrod_g::grid::Testbed::gusto(
+        opts.u64("seed", 0xD15EA5E)?,
+        opts.f64("scale", 1.0)?,
+    );
     println!("{}", tb.to_json().to_string());
     Ok(())
 }
 
+fn cmd_policies(opts: &Opts) -> Result<()> {
+    if opts.bool("help")? {
+        println!("nimrod policies — list registered scheduling policies");
+        return Ok(());
+    }
+    opts.expect_known(&[])?;
+    for name in PolicyRegistry::with_builtins().names() {
+        println!("{name}");
+    }
+    println!("\n(parameterized specs accepted, e.g. cost?safety=0.9, fixed-rate?max-rate=2)");
+    Ok(())
+}
+
+fn cmd_scenarios(opts: &Opts) -> Result<()> {
+    if opts.bool("help")? {
+        println!("nimrod scenarios — list named experiment presets for `nimrod run --scenario`");
+        return Ok(());
+    }
+    opts.expect_known(&[])?;
+    for info in &scenarios::CATALOG {
+        println!("{:<16} {}", info.name, info.summary);
+    }
+    Ok(())
+}
+
 fn cmd_live(opts: &Opts) -> Result<()> {
+    if opts.bool("help")? {
+        println!(
+            "nimrod live — run real PJRT compute on worker threads\n\n\
+             usage: nimrod live [--workers N] [--jobs N] [--policy SPEC] [--seed S] [--workdir DIR]\n\n\
+             requires `make artifacts` to have produced the AOT chamber model"
+        );
+        return Ok(());
+    }
+    opts.expect_known(&["workers", "jobs", "policy", "seed", "workdir"])?;
     let workers = opts.u64("workers", 4)? as usize;
     let jobs = opts.u64("jobs", 24)? as usize;
     let nv = jobs.div_ceil(6).max(1);
     let src = workload::ionization_plan(nv, 3, 2);
-    let plan = Plan::parse(&src)?;
-    let cfg = ExperimentConfig {
-        deadline: 3600.0, // wall-clock seconds in live mode
-        policy: opts.str("policy", "time"),
-        seed: opts.u64("seed", 7)?,
-        ..Default::default()
-    };
-    let specs = expand(&plan, cfg.seed)?;
     let workdir = opts
-        .path("workdir")
+        .path("workdir")?
         .unwrap_or_else(|| std::env::temp_dir().join("nimrod-live"));
+    let live = Broker::experiment()
+        .plan(src)
+        .deadline_s(3600.0) // wall-clock seconds in live mode
+        .policy(&opts.str("policy", "time")?)
+        .seed(opts.u64("seed", 7)?)
+        .live(workers, &workdir)?;
     println!(
         "live: {} jobs on {} PJRT workers under {}",
-        specs.len(),
+        live.job_count(),
         workers,
         workdir.display()
     );
-    let outcome = LiveRunner::new(workers, cfg, &workdir).run(specs)?;
+    let outcome = live.run()?;
     println!("{}", outcome.report.summary());
     for (jid, out) in outcome.outputs.iter().take(5) {
         println!("  {jid}: response={:.4} dose={:.3}", out.response, out.dose);
@@ -283,4 +455,70 @@ fn cmd_live(opts: &Opts) -> Result<()> {
         println!("  ... {} more", outcome.outputs.len() - 5);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Opts;
+
+    fn parse(args: &[&str]) -> anyhow::Result<Opts> {
+        Opts::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn key_value_pairs_parse() {
+        let o = parse(&["--plan", "exp.pln", "--seed", "42"]).unwrap();
+        assert_eq!(o.str("plan", "").unwrap(), "exp.pln");
+        assert_eq!(o.u64("seed", 0).unwrap(), 42);
+        assert_eq!(o.u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn boolean_flags_parse() {
+        let o = parse(&["--verbose", "--plan", "x"]).unwrap();
+        assert!(o.bool("verbose").unwrap());
+        assert!(!o.bool("help").unwrap());
+        // A flag at the end of the line is boolean too.
+        let o = parse(&["--plan", "x", "--help"]).unwrap();
+        assert!(o.bool("help").unwrap());
+        // Explicit values still work.
+        let o = parse(&["--verbose", "false"]).unwrap();
+        assert!(!o.bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let o = parse(&["--seed=9", "--policy=cost?safety=0.9"]).unwrap();
+        assert_eq!(o.u64("seed", 0).unwrap(), 9);
+        assert_eq!(o.str("policy", "").unwrap(), "cost?safety=0.9");
+    }
+
+    #[test]
+    fn value_flags_reject_missing_values() {
+        // `--plan --help` leaves plan valueless: accessors must error.
+        let o = parse(&["--plan", "--help"]).unwrap();
+        assert!(o.path("plan").is_err());
+        assert!(o.bool("help").unwrap());
+        let o = parse(&["--seed"]).unwrap();
+        assert!(o.u64("seed", 1).is_err());
+    }
+
+    #[test]
+    fn h_alias_and_errors() {
+        let o = parse(&["-h"]).unwrap();
+        assert!(o.bool("help").unwrap());
+        assert!(parse(&["loose-word"]).is_err());
+        let o = parse(&["--seed", "abc"]).unwrap();
+        assert!(o.u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let o = parse(&["--plan", "x", "--bogus", "1"]).unwrap();
+        assert!(o.expect_known(&["plan"]).is_err());
+        assert!(o.expect_known(&["plan", "bogus"]).is_ok());
+        // help/verbose are always allowed.
+        let o = parse(&["--verbose", "--help"]).unwrap();
+        assert!(o.expect_known(&[]).is_ok());
+    }
 }

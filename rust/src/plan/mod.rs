@@ -30,18 +30,29 @@ pub mod parser;
 pub use ast::{Domain, ParamValue, Parameter, Plan, TaskOp};
 pub use expand::{expand, JobSpec};
 
-use thiserror::Error;
-
 /// Errors from plan parsing or expansion.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum PlanError {
-    #[error("line {line}: lex error: {msg}")]
     Lex { line: u32, msg: String },
-    #[error("line {line}: parse error: {msg}")]
     Parse { line: u32, msg: String },
-    #[error("expansion error: {0}")]
     Expand(String),
 }
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Lex { line, msg } => {
+                write!(f, "line {line}: lex error: {msg}")
+            }
+            PlanError::Parse { line, msg } => {
+                write!(f, "line {line}: parse error: {msg}")
+            }
+            PlanError::Expand(msg) => write!(f, "expansion error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 impl Plan {
     /// Parse a plan from source text.

@@ -8,27 +8,41 @@
 //! runs ahead of schedule expensive machines are released — "adapts the list
 //! of machines it is using depending on competition for them".
 
-use super::{Allocation, Policy, ResourceView, SchedCtx};
+use super::{Allocation, Policy, ResourceView, SchedCtx, DEADLINE_SAFETY};
+
+/// Hours to the deadline after applying a policy's safety factor (the
+/// tunable generalization of [`SchedCtx::hours_left`], which fixes the
+/// factor at [`DEADLINE_SAFETY`]).
+fn hours_left(ctx: &SchedCtx<'_>, safety: f64) -> f64 {
+    ((ctx.deadline - ctx.now) * safety / 3600.0).max(1e-6)
+}
+
+/// Aggregate throughput (jobs/hour) needed to finish inside the
+/// safety-discounted window.
+fn required_rate_jph(ctx: &SchedCtx<'_>, safety: f64) -> f64 {
+    ctx.remaining_jobs as f64 / hours_left(ctx, safety)
+}
 
 /// Tail-feasibility filter: a resource is only eligible while one of its
 /// slots can still finish a whole job inside the remaining window —
 /// otherwise tail jobs get stranded on cheap-but-slow machines and the
 /// deadline slips (the classic straggler failure the adaptive loop exists
 /// to avoid).
-fn finishes_in_window(r: &ResourceView, ctx: &SchedCtx<'_>) -> bool {
-    r.jphps(ctx.job_work_ref_h) * ctx.hours_left() >= 1.0
+fn finishes_in_window(r: &ResourceView, ctx: &SchedCtx<'_>, safety: f64) -> bool {
+    r.jphps(ctx.job_work_ref_h) * hours_left(ctx, safety) >= 1.0
 }
 
 /// Order resources by expected cost per job, cheapest first; ties (same
 /// price) break toward the faster machine.
 fn by_cost<'a>(
     ctx: &SchedCtx<'a>,
+    safety: f64,
 ) -> Vec<&'a ResourceView> {
     let mut rs: Vec<&ResourceView> = ctx
         .resources
         .iter()
         .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-        .filter(|r| finishes_in_window(r, ctx))
+        .filter(|r| finishes_in_window(r, ctx, safety))
         .collect();
     if rs.is_empty() {
         // Deadline infeasible on every machine: run best-effort rather than
@@ -87,8 +101,21 @@ fn fill_capacity(
 /// cheapest set of resources whose aggregate rate still meets the deadline;
 /// re-evaluated every tick. With a budget, expensive resources are skipped
 /// once the projected spend of the tentative allocation exceeds headroom.
-#[derive(Debug, Default)]
-pub struct CostOpt;
+#[derive(Debug)]
+pub struct CostOpt {
+    /// Fraction of the remaining window to plan into: lower values leave
+    /// more slack for estimate error and stragglers at higher cost.
+    /// Tunable via the policy spec `cost?safety=0.9`.
+    pub safety: f64,
+}
+
+impl Default for CostOpt {
+    fn default() -> Self {
+        CostOpt {
+            safety: DEADLINE_SAFETY,
+        }
+    }
+}
 
 impl Policy for CostOpt {
     fn name(&self) -> &'static str {
@@ -96,9 +123,13 @@ impl Policy for CostOpt {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let ordered = by_cost(ctx);
-        let mut alloc =
-            fill_capacity(&ordered, ctx.required_rate_jph(), ctx.remaining_jobs, ctx.job_work_ref_h);
+        let ordered = by_cost(ctx, self.safety);
+        let mut alloc = fill_capacity(
+            &ordered,
+            required_rate_jph(ctx, self.safety),
+            ctx.remaining_jobs,
+            ctx.job_work_ref_h,
+        );
         // Budget guard: projected spend for remaining jobs under this
         // allocation must fit in the headroom; if it does not, shed the
         // most expensive allocated resources (jobs they would have taken
@@ -261,8 +292,20 @@ impl Policy for ConservativeTime {
 /// find sufficient resources to meet the user's deadline" without a real
 /// economy): identical capacity sizing to cost-opt but ordered by speed, so
 /// it grabs the fastest sufficient set regardless of price.
-#[derive(Debug, Default)]
-pub struct DeadlineOnly;
+#[derive(Debug)]
+pub struct DeadlineOnly {
+    /// Planning safety factor (see [`CostOpt::safety`]); tunable via
+    /// `deadline-only?safety=0.9`.
+    pub safety: f64,
+}
+
+impl Default for DeadlineOnly {
+    fn default() -> Self {
+        DeadlineOnly {
+            safety: DEADLINE_SAFETY,
+        }
+    }
+}
 
 impl Policy for DeadlineOnly {
     fn name(&self) -> &'static str {
@@ -274,7 +317,7 @@ impl Policy for DeadlineOnly {
             .resources
             .iter()
             .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .filter(|r| finishes_in_window(r, ctx))
+            .filter(|r| finishes_in_window(r, ctx, self.safety))
             .collect();
         if rs.is_empty() {
             rs = ctx
@@ -284,7 +327,12 @@ impl Policy for DeadlineOnly {
                 .collect();
         }
         rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
-        fill_capacity(&rs, ctx.required_rate_jph(), ctx.remaining_jobs, ctx.job_work_ref_h)
+        fill_capacity(
+            &rs,
+            required_rate_jph(ctx, self.safety),
+            ctx.remaining_jobs,
+            ctx.job_work_ref_h,
+        )
     }
 }
 
@@ -319,7 +367,7 @@ mod tests {
         let rs = vec![view(0, 10, 1.0, 0.5), view(1, 10, 2.0, 5.0)];
         let mut rng = Rng::new(1);
         let mut c = ctx(&rs, &mut rng, 20.0, 10, None);
-        let alloc = CostOpt.allocate(&mut c);
+        let alloc = CostOpt::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(!alloc.contains_key(&ResourceId(1)), "{alloc:?}");
     }
@@ -329,10 +377,10 @@ mod tests {
         let rs = vec![view(0, 4, 1.0, 0.5), view(1, 8, 1.0, 2.0), view(2, 8, 1.0, 6.0)];
         let mut rng = Rng::new(1);
         let mut loose = ctx(&rs, &mut rng, 40.0, 40, None);
-        let a_loose: u32 = CostOpt.allocate(&mut loose).values().sum();
+        let a_loose: u32 = CostOpt::default().allocate(&mut loose).values().sum();
         let mut rng = Rng::new(1);
         let mut tight = ctx(&rs, &mut rng, 4.0, 40, None);
-        let a_tight: u32 = CostOpt.allocate(&mut tight).values().sum();
+        let a_tight: u32 = CostOpt::default().allocate(&mut tight).values().sum();
         assert!(
             a_tight > a_loose,
             "tight {a_tight} should use more slots than loose {a_loose}"
@@ -346,7 +394,7 @@ mod tests {
         // Tight deadline wants the expensive machine, but the budget can
         // only carry the cheap one (100 jobs × 36000 G$/job ≫ 1000).
         let mut c = ctx(&rs, &mut rng, 1.0, 100, Some(1000.0));
-        let alloc = CostOpt.allocate(&mut c);
+        let alloc = CostOpt::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(
             !alloc.contains_key(&ResourceId(1)),
@@ -392,7 +440,7 @@ mod tests {
         let rs = vec![view(0, 8, 1.0, 0.001), view(1, 8, 2.0, 100.0)];
         let mut rng = Rng::new(1);
         let mut c = ctx(&rs, &mut rng, 2.0, 8, None);
-        let alloc = DeadlineOnly.allocate(&mut c);
+        let alloc = DeadlineOnly::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(1)), "{alloc:?}");
     }
 
@@ -402,7 +450,7 @@ mod tests {
         let mut rng = Rng::new(1);
         // 16 jobs, 16 hours: needs ~1 job/h ⇒ 2 slots at 1 jph/slot (ceil).
         let mut c = ctx(&rs, &mut rng, 16.0, 16, None);
-        let alloc = CostOpt.allocate(&mut c);
+        let alloc = CostOpt::default().allocate(&mut c);
         let total: u32 = alloc.values().sum();
         assert!(total <= 3, "should not saturate: {alloc:?}");
         // Down to 2 remaining jobs with 10 h left: 1 slot suffices.
@@ -416,7 +464,7 @@ mod tests {
             resources: &rs,
             rng: &mut rng,
         };
-        let alloc2 = CostOpt.allocate(&mut c2);
+        let alloc2 = CostOpt::default().allocate(&mut c2);
         let total2: u32 = alloc2.values().sum();
         assert!(total2 <= total);
         assert!(total2 >= 1);
@@ -430,7 +478,10 @@ mod tests {
         for name in ["cost", "time", "conservative-time", "deadline-only"] {
             let mut rng = Rng::new(1);
             let mut c = ctx(&rs, &mut rng, 1.0, 50, None);
-            let alloc = super::super::by_name(name).unwrap().allocate(&mut c);
+            let alloc = crate::broker::PolicyRegistry::with_builtins()
+                .resolve(name)
+                .unwrap()
+                .allocate(&mut c);
             assert!(
                 !alloc.contains_key(&ResourceId(0)),
                 "{name} allocated a down resource"

@@ -123,18 +123,18 @@ pub trait Policy: Send {
 }
 
 /// Construct a policy by CLI name.
+///
+/// Deprecated shim: policy construction now goes through the open
+/// [`crate::broker::PolicyRegistry`], which supports out-of-crate
+/// registration and `name?key=value` parameter specs.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::broker::PolicyRegistry::with_builtins().resolve(spec)"
+)]
 pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
-    Some(match name {
-        "cost" => Box::new(dbc::CostOpt::default()),
-        "time" => Box::new(dbc::TimeOpt::default()),
-        "conservative-time" => Box::new(dbc::ConservativeTime::default()),
-        "deadline-only" => Box::new(dbc::DeadlineOnly::default()),
-        "round-robin" => Box::new(baselines::RoundRobin::default()),
-        "random" => Box::new(baselines::RandomPick::default()),
-        "perf" => Box::new(baselines::PerfOnly::default()),
-        "fixed-rate" => Box::new(baselines::FixedRate::default()),
-        _ => return None,
-    })
+    crate::broker::PolicyRegistry::with_builtins()
+        .resolve(name)
+        .ok()
 }
 
 /// All policy names (benches iterate these).
@@ -172,12 +172,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn policy_registry_complete() {
+    #[allow(deprecated)]
+    fn by_name_shim_still_resolves_all_policies() {
         for name in ALL_POLICIES {
             let p = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
             assert_eq!(p.name(), name);
         }
         assert!(by_name("nope").is_none());
+        // The shim rides on the registry, so parameter specs work too.
+        assert_eq!(by_name("cost?safety=0.9").unwrap().name(), "cost");
     }
 
     #[test]

@@ -12,16 +12,17 @@
 //!
 //! Python never executes here: artifacts were compiled by `make artifacts`.
 
+use crate::broker::{ScheduleAdvisor, TickCtx, LIVE_WORK_PRIOR_H};
 use crate::client::StatusBoard;
 use crate::config::ExperimentConfig;
 use crate::dispatcher::wrapper::JobWrapper;
-use crate::dispatcher::{plan_actions, Action};
+use crate::dispatcher::Action;
 use crate::economy::{Ledger, PriceModel};
 use crate::engine::Experiment;
 use crate::metrics::{Report, ResourceUsage};
 use crate::plan::JobSpec;
 use crate::runtime::{ChamberOutput, ChamberRuntime};
-use crate::scheduler::{by_name, RateEstimator, ResourceView, SchedCtx};
+use crate::scheduler::ResourceView;
 use crate::types::{JobId, ResourceId};
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
@@ -67,6 +68,9 @@ pub struct LiveRunner {
     pub workdir: std::path::PathBuf,
     /// Optional status board shared with a StatusServer.
     pub board: Option<Arc<StatusBoard>>,
+    /// Pre-resolved schedule advisor (the builder path); `run` resolves
+    /// `cfg.policy` against the built-in registry when absent.
+    advisor: Option<ScheduleAdvisor>,
 }
 
 impl LiveRunner {
@@ -76,6 +80,7 @@ impl LiveRunner {
             cfg,
             workdir: workdir.to_path_buf(),
             board: None,
+            advisor: None,
         }
     }
 
@@ -84,16 +89,28 @@ impl LiveRunner {
         self
     }
 
+    /// Use an explicitly-constructed schedule advisor (the
+    /// [`crate::broker::ExperimentBuilder`] path).
+    pub fn with_advisor(mut self, advisor: ScheduleAdvisor) -> Self {
+        self.advisor = Some(advisor);
+        self
+    }
+
     /// Execute `specs` to completion on real PJRT workers.
-    pub fn run(self, specs: Vec<JobSpec>) -> Result<LiveOutcome> {
+    pub fn run(mut self, specs: Vec<JobSpec>) -> Result<LiveOutcome> {
         // Fail early if artifacts are missing (each worker compiles its own
         // copy below: PJRT handles are not Send, and a real grid node runs
         // its own executable anyway).
         let artifact_dir = ChamberRuntime::default_artifact_dir();
         ChamberRuntime::load(&artifact_dir)
             .context("load AOT artifacts (run `make artifacts`)")?;
-        let mut policy = by_name(&self.cfg.policy)
-            .with_context(|| format!("unknown policy `{}`", self.cfg.policy))?;
+        let mut advisor = match self.advisor.take() {
+            Some(a) => a,
+            None => ScheduleAdvisor::resolve(&self.cfg.policy, LIVE_WORK_PRIOR_H)
+                .with_context(|| {
+                    format!("resolve policy `{}`", self.cfg.policy)
+                })?,
+        };
         let mut rng = Rng::new(self.cfg.seed);
         let root_store = self.workdir.join("rootstore");
         let (done_tx, done_rx) = mpsc::channel::<Completion>();
@@ -156,7 +173,6 @@ impl LiveRunner {
             self.cfg.max_attempts,
         );
         let mut ledger = Ledger::new(self.cfg.budget);
-        let mut estimator = RateEstimator::default();
         let mut report = Report {
             jobs_total,
             deadline_s: self.cfg.deadline,
@@ -165,9 +181,6 @@ impl LiveRunner {
         let mut outputs = BTreeMap::new();
         let mut busy: BTreeMap<ResourceId, u32> = BTreeMap::new();
         let t0 = Instant::now();
-        // Prior work estimate: calibrate from wall time of the first jobs;
-        // start from a tiny prior so the first tick allocates jobs at all.
-        let mut work_prior_h = 1e-4;
 
         while !exp.finished() {
             let now = t0.elapsed().as_secs_f64();
@@ -191,7 +204,10 @@ impl LiveRunner {
                     .store((now * 1000.0) as u64, Ordering::Relaxed);
             }
 
-            // Scheduler tick over live worker views.
+            // Driver-specific view assembly over the live worker pool; the
+            // shared advisor pipeline does selection + assignment.
+            let in_flight =
+                ScheduleAdvisor::in_flight_counts(&exp, workers.len());
             let views: Vec<ResourceView> = workers
                 .iter()
                 .map(|w| ResourceView {
@@ -199,26 +215,24 @@ impl LiveRunner {
                     slots: 1,
                     planning_speed: w.speed,
                     rate: w.rate,
-                    in_flight: exp.in_flight_on(w.rid),
-                    measured_jphps: estimator.measured_jphps(w.rid),
+                    in_flight: in_flight[w.rid.0 as usize],
+                    measured_jphps: advisor.measured_jphps(w.rid),
                     batch_queue: false,
                 })
                 .collect();
-            let job_work = estimator.job_work_ref_h(work_prior_h);
-            let alloc = {
-                let mut ctx = SchedCtx {
+            let job_work = advisor.job_work_ref_h();
+            let actions = advisor.advise(
+                TickCtx {
                     now,
                     deadline: self.cfg.deadline,
                     budget_headroom: ledger.headroom(),
-                    remaining_jobs: exp.remaining(),
-                    job_work_ref_h: job_work,
-                    resources: &views,
-                    rng: &mut rng,
-                };
-                policy.allocate(&mut ctx)
-            };
+                    views: &views,
+                },
+                &exp,
+                &mut rng,
+            );
             report.ticks += 1;
-            for action in plan_actions(&alloc, &exp) {
+            for action in actions {
                 match action {
                     Action::Submit { job, rid } => {
                         let w = &workers[rid.0 as usize];
@@ -249,8 +263,15 @@ impl LiveRunner {
                     let cost = cpu_s * w.rate;
                     ledger.settle(c.jid, cost, &w.name);
                     exp.complete(c.jid, now, cpu_s, cost).expect("legal complete");
-                    estimator.on_complete(c.rid, c.wall_s, c.wall_s / 3600.0 * w.speed);
-                    work_prior_h = estimator.job_work_ref_h(work_prior_h);
+                    advisor.observe_complete(
+                        c.rid,
+                        c.wall_s,
+                        c.wall_s / 3600.0 * w.speed,
+                    );
+                    // Calibrate the prior from measured wall time so later
+                    // ticks plan with real per-job work.
+                    let measured = advisor.job_work_ref_h();
+                    advisor.set_work_prior_h(measured);
                     outputs.insert(c.jid, c.output);
                     if let Some(n) = busy.get_mut(&c.rid) {
                         *n = n.saturating_sub(1);

@@ -3,11 +3,15 @@
 //!
 //! Wires every component the paper's Figure 2 shows: the parametric engine
 //! ([`crate::engine`]) holds job state; each scheduler tick discovers
-//! resources through MDS, quotes prices from the economy, runs the
-//! configured [`Policy`], and reconciles via the dispatcher
-//! ([`crate::dispatcher::plan_actions`]); GRAM job managers enforce queue
-//! semantics; GASS + the cluster proxy time the staging; background load
-//! and availability churn perturb everything.
+//! resources through MDS, quotes prices from the economy, and hands the
+//! assembled views to the shared [`crate::broker::ScheduleAdvisor`] (which
+//! runs the configured policy and reconciles via the dispatcher); GRAM job
+//! managers enforce queue semantics; GASS + the cluster proxy time the
+//! staging; background load and availability churn perturb everything.
+//!
+//! Construct through [`crate::broker::ExperimentBuilder`]
+//! (`Broker::experiment()…simulate()`); the [`GridSimulation::new`] /
+//! [`GridSimulation::gusto_ionization`] constructors remain for direct use.
 //!
 //! Per-job event chain:
 //!
@@ -21,8 +25,9 @@
 
 pub mod live;
 
+use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
-use crate::dispatcher::{plan_actions, Action};
+use crate::dispatcher::Action;
 use crate::economy::Ledger;
 use crate::engine::journal::Journal;
 use crate::engine::{Experiment, JobState};
@@ -35,7 +40,7 @@ use crate::grid::testbed::{local_hour, Testbed};
 use crate::grid::JobManager;
 use crate::metrics::{Report, ResourceUsage};
 use crate::plan::JobSpec;
-use crate::scheduler::{by_name, Policy, RateEstimator, ResourceView, SchedCtx};
+use crate::scheduler::ResourceView;
 use crate::simtime::EventQueue;
 use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
 use crate::util::rng::Rng;
@@ -91,8 +96,7 @@ pub struct GridSimulation {
     managers: Vec<JobManager>,
     pub exp: Experiment,
     pub ledger: Ledger,
-    policy: Box<dyn Policy>,
-    estimator: RateEstimator,
+    advisor: ScheduleAdvisor,
     sampler: WorkSampler,
     q: EventQueue<Ev>,
     rng: Rng,
@@ -107,10 +111,26 @@ pub struct GridSimulation {
 }
 
 impl GridSimulation {
-    /// Build a simulation over `tb` running `specs` under `cfg`.
+    /// Build a simulation over `tb` running `specs` under `cfg`, resolving
+    /// `cfg.policy` (a `name` or `name?key=value` spec) against the
+    /// built-in policy registry. Panics on an unresolvable policy; use
+    /// [`crate::broker::ExperimentBuilder`] for fallible construction.
     pub fn new(tb: Testbed, specs: Vec<JobSpec>, cfg: ExperimentConfig) -> Self {
-        let policy = by_name(&cfg.policy)
-            .unwrap_or_else(|| panic!("unknown policy `{}`", cfg.policy));
+        let advisor =
+            ScheduleAdvisor::resolve(&cfg.policy, cfg.workload.job_work_ref_h)
+                .unwrap_or_else(|e| panic!("{e:#}"));
+        GridSimulation::with_advisor(tb, specs, cfg, advisor)
+    }
+
+    /// Build a simulation with an explicitly-constructed schedule advisor
+    /// (the [`crate::broker::ExperimentBuilder`] path, which supports
+    /// custom policy registries).
+    pub fn with_advisor(
+        tb: Testbed,
+        specs: Vec<JobSpec>,
+        cfg: ExperimentConfig,
+        advisor: ScheduleAdvisor,
+    ) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let dyns: Vec<ResourceDyn> = tb
             .resources
@@ -156,8 +176,7 @@ impl GridSimulation {
             managers,
             exp,
             ledger,
-            policy,
-            estimator: RateEstimator::default(),
+            advisor,
             sampler,
             q,
             rng,
@@ -314,18 +333,12 @@ impl GridSimulation {
     fn on_tick(&mut self) {
         self.report.ticks += 1;
         let now = self.q.now();
-        // 1. discovery + view assembly.
-        let job_work =
-            self.estimator.job_work_ref_h(self.cfg.workload.job_work_ref_h);
-        // Per-resource in-flight counts in one O(jobs) pass (doing
-        // `in_flight_on` per view is O(resources x jobs) and dominates the
-        // tick at scale — see EXPERIMENTS.md §Perf).
-        let mut in_flight = vec![0u32; self.tb.resources.len()];
-        for job in &self.exp.jobs {
-            if let Some(rid) = job.state.resource() {
-                in_flight[rid.0 as usize] += 1;
-            }
-        }
+        // 1. discovery + view assembly — the driver-specific half of the
+        // tick: MDS staleness, GRAM slots, competition-adjusted quotes.
+        let in_flight = ScheduleAdvisor::in_flight_counts(
+            &self.exp,
+            self.tb.resources.len(),
+        );
         // Copy only the scalar fields out of the directory records —
         // cloning whole MdsRecords allocates a String per resource per tick.
         let discovered: Vec<(ResourceId, f64, bool)> = self
@@ -351,25 +364,22 @@ impl GridSimulation {
                 planning_speed,
                 rate,
                 in_flight: in_flight[id.0 as usize],
-                measured_jphps: self.estimator.measured_jphps(id),
+                measured_jphps: self.advisor.measured_jphps(id),
                 batch_queue,
             });
         }
-        // 2. selection.
-        let alloc = {
-            let mut ctx = SchedCtx {
+        // 2+3. selection + assignment: the shared advisor pipeline.
+        let job_work = self.advisor.job_work_ref_h();
+        let actions = self.advisor.advise(
+            TickCtx {
                 now,
                 deadline: self.exp.deadline,
                 budget_headroom: self.ledger.headroom(),
-                remaining_jobs: self.exp.remaining(),
-                job_work_ref_h: job_work,
-                resources: &views,
-                rng: &mut self.rng,
-            };
-            self.policy.allocate(&mut ctx)
-        };
-        // 3. assignment.
-        let actions = plan_actions(&alloc, &self.exp);
+                views: &views,
+            },
+            &self.exp,
+            &mut self.rng,
+        );
         for action in actions {
             match action {
                 Action::Submit { job, rid } => self.submit(job, rid, job_work),
@@ -531,8 +541,8 @@ impl GridSimulation {
         if let Some(j) = &mut self.journal {
             let _ = j.completed(jid, now, inf.cpu_s, cost);
         }
-        self.estimator
-            .on_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
+        self.advisor
+            .observe_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
         let usage = self.report.per_resource.entry(name).or_insert_with(
             ResourceUsage::default,
         );
@@ -565,7 +575,7 @@ impl GridSimulation {
             usage.jobs_failed += 1;
             usage.cost += partial;
         }
-        self.estimator.on_failure(rid);
+        self.advisor.observe_failure(rid);
         if self.exp.fail_attempt(jid).is_ok() {
             if let Some(j) = &mut self.journal {
                 let _ = j.failed_attempt(jid);

@@ -111,6 +111,7 @@ impl Json {
     }
 
     /// Serialize to a compact single-line string.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -173,13 +174,26 @@ fn write_escaped(s: &str, out: &mut String) {
 }
 
 /// JSON parse / access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, &'static str),
-    #[error("missing or mistyped field `{0}`")]
     Field(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(at, what) => {
+                write!(f, "json parse error at byte {at}: {what}")
+            }
+            JsonError::Field(name) => {
+                write!(f, "missing or mistyped field `{name}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// Parse a complete JSON document (trailing whitespace allowed).
 pub fn parse(input: &str) -> Result<Json, JsonError> {

@@ -1,0 +1,354 @@
+//! Integration tests for the `broker` public API: the policy registry
+//! (registration + parameter round-trips), the experiment builder
+//! (defaulting, validation, determinism against the legacy construction
+//! path), and one smoke test per scenario preset.
+
+use nimrod_g::broker::{Broker, PolicyRegistry, ScheduleAdvisor, TickCtx};
+use nimrod_g::config::ExperimentConfig;
+use nimrod_g::metrics::Report;
+use nimrod_g::scheduler::{Allocation, Policy, ResourceView, SchedCtx};
+use nimrod_g::sim::GridSimulation;
+use nimrod_g::types::{JobId, ResourceId, HOUR};
+use nimrod_g::util::rng::Rng;
+
+// -- policy registry ---------------------------------------------------------
+
+/// An out-of-crate policy: allocates one slot on every `stride`-th
+/// resource. Exists to prove the registry seam is open.
+struct EveryNth {
+    stride: usize,
+}
+
+impl Policy for EveryNth {
+    fn name(&self) -> &'static str {
+        "every-nth"
+    }
+
+    fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
+        let mut alloc = Allocation::new();
+        let mut total = 0u32;
+        for r in ctx.resources.iter().step_by(self.stride) {
+            if total >= ctx.remaining_jobs {
+                break;
+            }
+            if r.planning_speed > 0.0 && r.slots > 0 {
+                alloc.insert(r.id, 1);
+                total += 1;
+            }
+        }
+        alloc
+    }
+}
+
+fn registry_with_every_nth() -> PolicyRegistry {
+    let mut reg = PolicyRegistry::with_builtins();
+    reg.register("every-nth", |params| {
+        let stride = params.take_f64("stride")?.unwrap_or(2.0);
+        if stride < 1.0 {
+            anyhow::bail!("stride must be >= 1, got {stride}");
+        }
+        Ok(Box::new(EveryNth {
+            stride: stride as usize,
+        }))
+    });
+    reg
+}
+
+#[test]
+fn out_of_crate_policy_registers_and_resolves_with_params() {
+    let reg = registry_with_every_nth();
+    let p = reg.resolve("every-nth?stride=3").unwrap();
+    assert_eq!(p.name(), "every-nth");
+    // Unknown keys are rejected even on custom policies.
+    assert!(reg.resolve("every-nth?pace=3").is_err());
+    assert!(reg.resolve("every-nth?stride=0").is_err());
+    // Builtins are still present alongside.
+    assert!(reg.resolve("cost?safety=0.9").is_ok());
+}
+
+#[test]
+fn custom_policy_drives_a_full_experiment() {
+    let report = Broker::experiment()
+        .registry(registry_with_every_nth())
+        .policy("every-nth?stride=2")
+        .deadline_h(40.0)
+        .seed(11)
+        .run()
+        .unwrap();
+    assert_eq!(report.jobs_total, 165);
+    assert_eq!(
+        report.jobs_completed + report.jobs_failed,
+        report.jobs_total,
+        "{}",
+        report.summary()
+    );
+    assert!(report.resources_used > 1);
+}
+
+#[test]
+fn cost_safety_parameter_changes_planning() {
+    // Lower safety shrinks the planning window, so the cost optimizer must
+    // hold more capacity for the same deadline.
+    let views: Vec<ResourceView> = (0..3)
+        .map(|i| ResourceView {
+            id: ResourceId(i),
+            slots: 8,
+            planning_speed: 1.0,
+            rate: 1.0 + i as f64,
+            in_flight: 0,
+            measured_jphps: None,
+            batch_queue: false,
+        })
+        .collect();
+    let reg = PolicyRegistry::with_builtins();
+    let slots_with = |spec: &str| -> u32 {
+        let mut policy = reg.resolve(spec).unwrap();
+        let mut rng = Rng::new(1);
+        let mut ctx = SchedCtx {
+            now: 0.0,
+            deadline: 8.0 * HOUR,
+            budget_headroom: None,
+            remaining_jobs: 40,
+            job_work_ref_h: 1.0,
+            resources: &views,
+            rng: &mut rng,
+        };
+        policy.allocate(&mut ctx).values().sum()
+    };
+    let default = slots_with("cost");
+    let cautious = slots_with("cost?safety=0.4");
+    assert!(
+        cautious > default,
+        "safety=0.4 should hold more slots: {cautious} vs {default}"
+    );
+    // An explicit safety equal to the default is exactly the default.
+    assert_eq!(slots_with("cost?safety=0.85"), default);
+}
+
+#[test]
+#[allow(deprecated)]
+fn by_name_shim_delegates_to_registry() {
+    assert!(nimrod_g::scheduler::by_name("cost").is_some());
+    assert!(nimrod_g::scheduler::by_name("cost?safety=0.9").is_some());
+    assert!(nimrod_g::scheduler::by_name("cost?bogus=1").is_none());
+    assert!(nimrod_g::scheduler::by_name("nope").is_none());
+}
+
+// -- experiment builder ------------------------------------------------------
+
+#[test]
+fn builder_defaults_are_the_paper_trial() {
+    let b = Broker::experiment();
+    let d = ExperimentConfig::default();
+    assert_eq!(b.config().policy, d.policy);
+    assert_eq!(b.config().deadline, d.deadline);
+    assert_eq!(b.config().seed, d.seed);
+    assert_eq!(b.config().user, d.user);
+    assert_eq!(b.config().budget, None);
+    assert!(b.config().competition.is_none());
+}
+
+#[test]
+fn builder_validates_before_running() {
+    assert!(Broker::experiment().deadline_h(0.0).simulate().is_err());
+    assert!(Broker::experiment().deadline_h(f64::NAN).simulate().is_err());
+    assert!(Broker::experiment().budget(-5.0).simulate().is_err());
+    assert!(Broker::experiment().policy("typo").simulate().is_err());
+    assert!(Broker::experiment()
+        .policy("cost?safety=nope")
+        .simulate()
+        .is_err());
+    assert!(Broker::experiment().plan("not a plan").simulate().is_err());
+    let err = Broker::experiment()
+        .policy("unknown-policy")
+        .simulate()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unknown policy"),
+        "error should name the problem: {err:#}"
+    );
+}
+
+#[test]
+fn builder_gusto_scenario_matches_legacy_path_exactly() {
+    let seed = 0x5EED;
+    let via_builder: Report = Broker::scenario("gusto")
+        .unwrap()
+        .seed(seed)
+        .run()
+        .unwrap();
+    let legacy: Report = GridSimulation::gusto_ionization(ExperimentConfig {
+        deadline: 15.0 * HOUR,
+        policy: "cost".to_string(),
+        seed,
+        ..Default::default()
+    })
+    .run();
+    // Bit-exact replay: same events, same floating-point trajectories,
+    // same timeline, same rendered summary.
+    assert_eq!(via_builder.events, legacy.events);
+    assert_eq!(via_builder.ticks, legacy.ticks);
+    assert_eq!(via_builder.makespan_s.to_bits(), legacy.makespan_s.to_bits());
+    assert_eq!(via_builder.total_cost.to_bits(), legacy.total_cost.to_bits());
+    assert_eq!(via_builder.busy_cpus.points(), legacy.busy_cpus.points());
+    assert_eq!(via_builder.summary(), legacy.summary());
+}
+
+#[test]
+fn advisor_matches_inlined_pipeline_actions() {
+    // The facade is a refactor, not a behavior change: one tick through
+    // ScheduleAdvisor equals policy.allocate + plan_actions by hand.
+    let src = "parameter i integer range from 1 to 30\ntask main\nexecute r $i\nendtask";
+    let specs =
+        nimrod_g::plan::expand(&nimrod_g::plan::Plan::parse(src).unwrap(), 0)
+            .unwrap();
+    let mut exp =
+        nimrod_g::engine::Experiment::new(specs, 10.0 * HOUR, None, "u", 3);
+    exp.dispatch(JobId(0), ResourceId(0), 0.0).unwrap();
+    let views: Vec<ResourceView> = (0..8)
+        .map(|i| ResourceView {
+            id: ResourceId(i),
+            slots: 2 + i % 3,
+            planning_speed: 0.5 + 0.2 * i as f64,
+            rate: 0.3 * (1 + i) as f64,
+            in_flight: u32::from(i == 0),
+            measured_jphps: None,
+            batch_queue: false,
+        })
+        .collect();
+    let inlined = {
+        let mut policy = PolicyRegistry::with_builtins().resolve("cost").unwrap();
+        let mut rng = Rng::new(9);
+        let alloc = {
+            let mut ctx = SchedCtx {
+                now: 0.0,
+                deadline: 10.0 * HOUR,
+                budget_headroom: None,
+                remaining_jobs: exp.remaining(),
+                job_work_ref_h: 2.0,
+                resources: &views,
+                rng: &mut rng,
+            };
+            policy.allocate(&mut ctx)
+        };
+        nimrod_g::dispatcher::plan_actions(&alloc, &exp)
+    };
+    let via_advisor = {
+        let mut advisor = ScheduleAdvisor::resolve("cost", 2.0).unwrap();
+        let mut rng = Rng::new(9);
+        advisor.advise(
+            TickCtx {
+                now: 0.0,
+                deadline: 10.0 * HOUR,
+                budget_headroom: None,
+                views: &views,
+            },
+            &exp,
+            &mut rng,
+        )
+    };
+    assert_eq!(inlined, via_advisor);
+}
+
+// -- scenario presets --------------------------------------------------------
+
+fn smoke(name: &str) -> Report {
+    let report = Broker::scenario(name)
+        .unwrap()
+        .seed(0xCAFE)
+        .run()
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    assert_eq!(report.jobs_total, 165, "{name}");
+    assert!(
+        report.jobs_completed + report.jobs_failed <= report.jobs_total,
+        "{name}: {}",
+        report.summary()
+    );
+    assert!(report.events > 0 && report.ticks > 0, "{name}");
+    report
+}
+
+/// Scenarios without a binding budget must account for every job.
+fn assert_all_terminal(name: &str, r: &Report) {
+    assert_eq!(
+        r.jobs_completed + r.jobs_failed,
+        r.jobs_total,
+        "{name}: {}",
+        r.summary()
+    );
+}
+
+#[test]
+fn scenario_catalog_is_complete_and_runnable() {
+    let names = nimrod_g::broker::scenarios::names();
+    assert!(names.len() >= 4, "at least four presets required");
+    for name in names {
+        assert!(Broker::scenario(name).is_ok());
+    }
+    assert!(Broker::scenario("no-such-scenario").is_err());
+}
+
+#[test]
+fn smoke_gusto() {
+    let r = smoke("gusto");
+    assert_all_terminal("gusto", &r);
+    assert!(r.jobs_completed >= 160, "{}", r.summary());
+}
+
+#[test]
+fn smoke_peak_offpeak() {
+    let r = smoke("peak-offpeak");
+    assert_all_terminal("peak-offpeak", &r);
+}
+
+#[test]
+fn smoke_flash_crowd() {
+    let r = smoke("flash-crowd");
+    assert_all_terminal("flash-crowd", &r);
+}
+
+#[test]
+fn smoke_cheap_but_flaky() {
+    let r = smoke("cheap-but-flaky");
+    assert_all_terminal("cheap-but-flaky", &r);
+    let failures: u32 = r.per_resource.values().map(|u| u.jobs_failed).sum();
+    assert!(failures > 0, "the flaky grid should produce some failures");
+    assert!(
+        r.jobs_completed >= 150,
+        "retries should carry most jobs through churn: {}",
+        r.summary()
+    );
+}
+
+#[test]
+fn smoke_tight_budget() {
+    // A binding budget may leave jobs unscheduled — the hard invariant is
+    // that spend never exceeds the envelope.
+    let r = smoke("tight-budget");
+    assert!(
+        r.total_cost <= 5.0e5 + 1e-6,
+        "budget invariant violated: {}",
+        r.total_cost
+    );
+}
+
+#[test]
+fn smoke_global_scale() {
+    let r = smoke("global-scale");
+    assert_all_terminal("global-scale", &r);
+    assert!(r.resources_used >= 5, "{}", r.summary());
+}
+
+#[test]
+fn scenarios_are_deterministic_and_seedable() {
+    let a = Broker::scenario("flash-crowd").unwrap().seed(3).run().unwrap();
+    let b = Broker::scenario("flash-crowd").unwrap().seed(3).run().unwrap();
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    let c = Broker::scenario("flash-crowd").unwrap().seed(4).run().unwrap();
+    assert!(
+        a.events != c.events || a.total_cost.to_bits() != c.total_cost.to_bits(),
+        "different seeds should produce different trajectories"
+    );
+}

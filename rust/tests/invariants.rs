@@ -1,13 +1,14 @@
 //! Property-based invariant tests (seeded random cases; see
 //! `nimrod_g::util::prop` — failures report the case seed).
 
+use nimrod_g::broker::PolicyRegistry;
 use nimrod_g::economy::Ledger;
 use nimrod_g::engine::Experiment;
 use nimrod_g::grid::gram::JobManager;
 use nimrod_g::grid::testbed::{AuthPolicy, QueueKind, ResourceSpec, Testbed};
 use nimrod_g::plan::{expand, Plan};
 use nimrod_g::prop_assert;
-use nimrod_g::scheduler::{by_name, ResourceView, SchedCtx, ALL_POLICIES};
+use nimrod_g::scheduler::{ResourceView, SchedCtx, ALL_POLICIES};
 use nimrod_g::simtime::EventQueue;
 use nimrod_g::types::{Arch, JobId, Os, ResourceId, SiteId, HOUR};
 use nimrod_g::util::prop::prop_check;
@@ -291,8 +292,9 @@ fn prop_policies_respect_slots_and_skip_down_resources() {
             })
             .collect();
         let remaining = rng.below(300) as u32 + 1;
+        let registry = PolicyRegistry::with_builtins();
         for name in ALL_POLICIES {
-            let mut policy = by_name(name).unwrap();
+            let mut policy = registry.resolve(name).unwrap();
             let mut prng = Rng::new(rng.next_u64());
             let alloc = {
                 let mut ctx = SchedCtx {

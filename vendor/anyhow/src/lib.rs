@@ -1,0 +1,234 @@
+//! Offline drop-in shim for the parts of `anyhow` this workspace uses.
+//!
+//! The image builds without a crates.io cache, so the real `anyhow` cannot
+//! be fetched. This shim keeps the same surface — [`Error`], [`Result`],
+//! [`Context`], `anyhow!`, `bail!`, `ensure!` — with a simpler
+//! representation: an error is a chain of messages (outermost context
+//! first). Downcasting and backtraces are not supported; nothing in this
+//! workspace needs them.
+
+use std::fmt;
+
+/// A message-chain error type. `Display` shows the outermost message;
+/// `{:#}` (alternate) shows the whole chain joined by `": "`, matching how
+/// anyhow renders context chains.
+pub struct Error {
+    /// Outermost message first.
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = self.chain();
+        if let Some(first) = parts.next() {
+            f.write_str(first)?;
+        }
+        let mut caused = false;
+        for part in parts {
+            if !caused {
+                f.write_str("\n\nCaused by:")?;
+                caused = true;
+            }
+            write!(f, "\n    {part}")?;
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Sealed conversion helper so [`Context`] applies both to foreign error
+/// types and to `anyhow::Result` itself.
+pub trait IntoError: Sized {
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("missing flag").unwrap_err();
+        assert_eq!(e.to_string(), "missing flag");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root {}", 42);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let b = anyhow!("x={}", 7);
+        assert_eq!(b.to_string(), "x=7");
+        fn guarded(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(1)
+        }
+        assert!(guarded(true).is_ok());
+        assert!(guarded(false).is_err());
+    }
+}
