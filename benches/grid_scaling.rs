@@ -1,30 +1,88 @@
 //! Bench: architecture scaling (paper §2/Figure 1-2).
 //!
-//! The component architecture must keep up as the grid grows: this bench
-//! scales the GUSTO-like testbed from ~35 to ~560 machines and measures
-//! (a) end-to-end experiment wall time, (b) simulator event throughput,
-//! and (c) MDS discovery + scheduler tick latency at each size — the
-//! pieces that run on every scheduling cycle in a live deployment.
+//! The component architecture must keep up as the grid grows. Three
+//! sections:
+//!
+//! 1. **End-to-end GUSTO sweep** — scale the GUSTO-like testbed ~35 → ~560
+//!    machines, measure experiment wall time and event throughput.
+//! 2. **Incremental tick sweep (100 → 10,000 machines)** — the headline
+//!    measurement for the event-driven view table: on a *quiet* synthetic
+//!    grid (flat prices, frozen load, no churn) the per-tick view
+//!    maintenance must be O(changed), not O(resources). Each size runs
+//!    twice — the incremental pipeline vs the same simulation forced to
+//!    rebuild every view every tick — and both must replay the identical
+//!    trace. `touched/tick` is the direct sub-linearity evidence: it stays
+//!    flat as machines grow 100×, while the rebuild baseline pays one
+//!    refresh per machine per tick.
+//! 3. **Per-cycle component costs** — MDS refresh/discovery latency.
 //!
 //! ```bash
-//! cargo bench --bench grid_scaling
+//! cargo bench --bench grid_scaling              # full sweep (10k machines)
+//! cargo bench --bench grid_scaling -- --quick   # CI smoke (≤1k machines)
 //! ```
 
 use nimrod_g::broker::Broker;
+use nimrod_g::config::WorkloadConfig;
 use nimrod_g::grid::dynamics::ResourceDyn;
 use nimrod_g::grid::mds::Mds;
 use nimrod_g::grid::Testbed;
+use nimrod_g::metrics::Report;
 use nimrod_g::types::HOUR;
 use nimrod_g::util::bench::Bench;
 use nimrod_g::util::rng::Rng;
 
+/// Make a grid "quiet": flat prices, frozen background load, no failures
+/// inside the run. Nothing dirties the view table except the experiment's
+/// own job traffic, which is what isolates view-maintenance scaling.
+fn quiet(mut tb: Testbed) -> Testbed {
+    for spec in &mut tb.resources {
+        spec.bg_load_mean = 0.0;
+        spec.bg_load_vol = 0.0;
+        spec.mtbf_s = 1e12;
+        spec.price.time_of_day = false;
+    }
+    tb
+}
+
+/// Run the fixed 2,000-job workload over `tb`, returning wall seconds and
+/// the report. `full_rebuild` switches the view table to the
+/// rebuilt-every-tick baseline.
+fn sweep_run(tb: Testbed, full_rebuild: bool) -> (f64, Report) {
+    let mut sim = Broker::experiment()
+        .plan(
+            "parameter i integer range from 1 to 2000\n\
+             task main\nexecute chamber $i\nendtask",
+        )
+        .workload(WorkloadConfig {
+            job_work_ref_h: 0.25,
+            ..WorkloadConfig::default()
+        })
+        .deadline_h(12.0)
+        .policy("cost")
+        .seed(0x10C4)
+        .testbed(tb)
+        .simulate()
+        .expect("sweep sim");
+    sim.set_full_view_rebuild(full_rebuild);
+    let t0 = std::time::Instant::now();
+    let report = sim.run();
+    (t0.elapsed().as_secs_f64(), report)
+}
+
 fn main() {
-    println!("== grid scaling: testbed size sweep ==\n");
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    println!("== grid scaling: GUSTO end-to-end sweep ==\n");
     println!(
         "{:<10} {:>10} {:>8} {:>12} {:>14} {:>12}",
         "scale", "machines", "cpus", "makespan(h)", "sim events", "wall(ms)"
     );
-    for scale in [0.5, 1.0, 2.0, 4.0, 8.0] {
+    let scales: &[f64] = if quick {
+        &[0.5, 1.0]
+    } else {
+        &[0.5, 1.0, 2.0, 4.0, 8.0]
+    };
+    for &scale in scales {
         let tb = Testbed::gusto(3, scale);
         let (machines, cpus) = (tb.resources.len(), tb.total_cpus());
         let t0 = std::time::Instant::now();
@@ -44,24 +102,76 @@ fn main() {
         );
     }
 
-    // Per-cycle costs: MDS refresh + discovery at each testbed size.
-    let mut b = Bench::new("per-cycle component costs");
-    for scale in [1.0, 4.0, 8.0] {
-        let tb = Testbed::gusto(3, scale);
-        let mut rng = Rng::new(1);
-        let dyns: Vec<ResourceDyn> = tb
-            .resources
-            .iter()
-            .map(|s| ResourceDyn::new(s, &mut rng))
-            .collect();
-        let mut mds = Mds::new(&tb, &dyns);
-        let n = tb.resources.len();
-        b.iter(&format!("mds refresh ({n} machines)"), || {
-            mds.refresh(&tb, &dyns, 0.0)
-        });
-        b.iter(&format!("discovery ({n} machines)"), || {
-            mds.discover(&tb, "rajkumar").count()
-        });
+    println!("\n== incremental tick pipeline: quiet-grid sweep ==\n");
+    println!(
+        "{:<10} {:>7} {:>14} {:>14} {:>13} {:>13} {:>9}",
+        "machines",
+        "ticks",
+        "touched/tick",
+        "touched/tick",
+        "µs/tick",
+        "µs/tick",
+        "speedup"
+    );
+    println!(
+        "{:<10} {:>7} {:>14} {:>14} {:>13} {:>13} {:>9}",
+        "", "", "(incremental)", "(rebuild)", "(incremental)", "(rebuild)", ""
+    );
+    // sites × per-site: 100, 1,000, 3,000, 10,000 machines.
+    let shapes: &[(usize, usize)] = if quick {
+        &[(4, 25), (20, 50)]
+    } else {
+        &[(4, 25), (20, 50), (60, 50), (100, 100)]
+    };
+    for &(sites, per_site) in shapes {
+        let tb = quiet(Testbed::synthetic(sites, per_site, 7));
+        let machines = tb.resources.len();
+        let (wall_inc, ri) = sweep_run(tb.clone(), false);
+        let (wall_full, rf) = sweep_run(tb, true);
+        // Same trace, different maintenance cost — anything else is a bug.
+        assert_eq!(ri.events, rf.events, "incremental trace diverged");
+        assert_eq!(ri.ticks, rf.ticks, "incremental tick count diverged");
+        assert_eq!(
+            ri.makespan_s.to_bits(),
+            rf.makespan_s.to_bits(),
+            "incremental timeline diverged"
+        );
+        let ticks = ri.ticks.max(1);
+        println!(
+            "{machines:<10} {ticks:>7} {:>14.1} {:>14.1} {:>13.1} {:>13.1} {:>8.2}x",
+            ri.view_refreshes as f64 / ticks as f64,
+            rf.view_refreshes as f64 / ticks as f64,
+            wall_inc * 1e6 / ticks as f64,
+            wall_full * 1e6 / ticks as f64,
+            wall_full / wall_inc.max(1e-9),
+        );
     }
-    b.report();
+    println!(
+        "\n(touched/tick flat while machines grow 100x ⇒ per-tick view \
+         maintenance is O(changed); the rebuild column pays one refresh \
+         per machine per tick.)"
+    );
+
+    // Per-cycle costs: MDS refresh + discovery at each testbed size.
+    if !quick {
+        let mut b = Bench::new("per-cycle component costs");
+        for scale in [1.0, 4.0, 8.0] {
+            let tb = Testbed::gusto(3, scale);
+            let mut rng = Rng::new(1);
+            let dyns: Vec<ResourceDyn> = tb
+                .resources
+                .iter()
+                .map(|s| ResourceDyn::new(s, &mut rng))
+                .collect();
+            let mut mds = Mds::new(&tb, &dyns);
+            let n = tb.resources.len();
+            b.iter(&format!("mds refresh ({n} machines)"), || {
+                mds.refresh(&tb, &dyns, 0.0)
+            });
+            b.iter(&format!("discovery ({n} machines)"), || {
+                mds.discover(&tb, "rajkumar").count()
+            });
+        }
+        b.report();
+    }
 }

@@ -100,21 +100,6 @@ impl ScheduleAdvisor {
         self.estimator.on_failure(rid);
     }
 
-    /// Per-resource in-flight counts (Dispatched + Running) in one O(jobs)
-    /// pass — the naive per-resource scan is O(resources × jobs) and
-    /// dominates the tick at scale.
-    pub fn in_flight_counts(exp: &Experiment, n_resources: usize) -> Vec<u32> {
-        let mut counts = vec![0u32; n_resources];
-        for job in &exp.jobs {
-            if let Some(rid) = job.state.resource() {
-                if let Some(c) = counts.get_mut(rid.0 as usize) {
-                    *c += 1;
-                }
-            }
-        }
-        counts
-    }
-
     /// One scheduling tick: selection (policy allocation over the views)
     /// followed by assignment planning (dispatcher reconciliation). Returns
     /// the submit/cancel actions the driver must apply.
@@ -191,17 +176,17 @@ mod tests {
     }
 
     #[test]
-    fn in_flight_counts_one_pass() {
+    fn engine_in_flight_counters_track_transitions() {
+        // Drivers read per-resource in-flight counts straight off the
+        // engine's incremental counters; they must track transitions.
         let mut exp = experiment(4);
         exp.dispatch(crate::types::JobId(0), ResourceId(1), 0.0).unwrap();
         exp.dispatch(crate::types::JobId(1), ResourceId(1), 0.0).unwrap();
         exp.dispatch(crate::types::JobId(2), ResourceId(0), 0.0).unwrap();
         exp.start(crate::types::JobId(2), 1.0).unwrap();
-        let counts = ScheduleAdvisor::in_flight_counts(&exp, 3);
-        assert_eq!(counts, vec![1, 2, 0]);
-        for rid in 0..3 {
-            assert_eq!(counts[rid], exp.in_flight_on(ResourceId(rid as u32)));
-        }
+        assert_eq!(exp.in_flight_on(ResourceId(0)), 1);
+        assert_eq!(exp.in_flight_on(ResourceId(1)), 2);
+        assert_eq!(exp.in_flight_on(ResourceId(2)), 0);
     }
 
     #[test]

@@ -88,6 +88,12 @@ enum JobSource {
 enum TestbedSource {
     /// GUSTO-like generated testbed at a machine-count scale.
     Gusto { scale: f64 },
+    /// Regular synthetic grid: `sites` × `resources_per_site` machines
+    /// (see [`Testbed::synthetic`]) — for grids beyond GUSTO scale.
+    Synthetic {
+        sites: usize,
+        resources_per_site: usize,
+    },
     /// An explicit, caller-built testbed.
     Explicit(Testbed),
 }
@@ -252,6 +258,23 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Use a generated synthetic grid of `sites` × `resources_per_site`
+    /// machines (see [`Testbed::synthetic`]): regular shape, open
+    /// authorization, scales to tens of thousands of machines. Seeded from
+    /// the experiment seed, so one scenario still yields a family of
+    /// trials.
+    pub fn synthetic_testbed(
+        mut self,
+        sites: usize,
+        resources_per_site: usize,
+    ) -> Self {
+        self.testbed = TestbedSource::Synthetic {
+            sites,
+            resources_per_site,
+        };
+        self
+    }
+
     /// Apply a transformation to the testbed after generation (scenario
     /// presets use this for e.g. failure-prone or discounted grids).
     pub fn tweak_testbed(
@@ -303,6 +326,16 @@ impl ExperimentBuilder {
                 "testbed scale must be positive, got {scale}"
             );
         }
+        if let TestbedSource::Synthetic {
+            sites,
+            resources_per_site,
+        } = &self.testbed
+        {
+            ensure!(
+                *sites >= 1 && *resources_per_site >= 1,
+                "synthetic testbed needs at least one site and one machine per site, got {sites}×{resources_per_site}"
+            );
+        }
         let policy = match &self.registry {
             Some(reg) => reg.resolve(&cfg.policy)?,
             None => PolicyRegistry::with_builtins().resolve(&cfg.policy)?,
@@ -332,6 +365,14 @@ impl ExperimentBuilder {
             TestbedSource::Gusto { scale } => {
                 Testbed::gusto(self.cfg.seed ^ 0x6057, *scale)
             }
+            TestbedSource::Synthetic {
+                sites,
+                resources_per_site,
+            } => Testbed::synthetic(
+                *sites,
+                *resources_per_site,
+                self.cfg.seed ^ 0x9E6A,
+            ),
             TestbedSource::Explicit(tb) => tb.clone(),
         };
         for tweak in &self.tweaks {

@@ -8,6 +8,7 @@
 //! `nimrod run --scenario <name>`, list with `nimrod scenarios`.
 
 use super::{Broker, ExperimentBuilder};
+use crate::config::WorkloadConfig;
 use crate::grid::competition::CompetitionModel;
 use anyhow::{bail, Result};
 
@@ -19,7 +20,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 6] = [
+pub const CATALOG: [ScenarioInfo; 7] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -50,6 +51,12 @@ pub const CATALOG: [ScenarioInfo; 6] = [
         name: "global-scale",
         summary: "4x-GUSTO testbed (~280 machines) under a tight 10 h \
                   deadline with the time-optimizing scheduler",
+    },
+    ScenarioInfo {
+        name: "mega-grid",
+        summary: "scale stress: 5,400-machine synthetic grid (120 sites), \
+                  50,000-job sweep, time-optimizing DBC — exercises the \
+                  incremental O(changed) tick pipeline",
     },
 ];
 
@@ -90,6 +97,22 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
             }),
         "tight-budget" => b.deadline_h(15.0).policy("cost").budget(5.0e5),
         "global-scale" => b.deadline_h(10.0).policy("time").testbed_scale(4.0),
+        // Far beyond GUSTO: the paper's architecture at the scale the
+        // ROADMAP asks for. Light jobs, long tick, huge open grid — the
+        // incremental view table is what keeps this tractable.
+        "mega-grid" => b
+            .plan(
+                "parameter point integer range from 1 to 50000\n\
+                 task main\nexecute chamber -p $point\nendtask",
+            )
+            .synthetic_testbed(120, 45)
+            .deadline_h(12.0)
+            .policy("time")
+            .tick_period_s(300.0)
+            .workload(WorkloadConfig {
+                job_work_ref_h: 0.25,
+                ..WorkloadConfig::default()
+            }),
         other => bail!(
             "unknown scenario `{other}` (available: {})",
             names().join(", ")

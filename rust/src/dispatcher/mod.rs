@@ -10,9 +10,9 @@
 
 pub mod wrapper;
 
-use crate::engine::{Experiment, JobState};
+use crate::engine::Experiment;
 use crate::scheduler::Allocation;
-use crate::types::{JobId, ResourceId};
+use crate::types::{JobId, ResourceId, SimTime};
 
 /// One reconciliation step.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,36 +24,18 @@ pub enum Action {
     CancelQueued { job: JobId, rid: ResourceId },
 }
 
-/// Reconcile in-flight state with the allocation. `in_flight(rid)` must
-/// count Dispatched + Running jobs on `rid` (the engine view and the GRAM
-/// view agree in both drivers).
+/// Reconcile in-flight state with the allocation. In-flight counts and
+/// queued-job lists come from the engine's incrementally-maintained
+/// rollups, so the cost is O(allocation + affected jobs) — no job-table
+/// scan (the naive scan is O(resources × jobs) and used to dominate the
+/// tick at scale).
 pub fn plan_actions(alloc: &Allocation, exp: &Experiment) -> Vec<Action> {
     let mut actions = Vec::new();
-
-    // One O(jobs) pass builds the per-resource in-flight counts and the
-    // queued-but-not-running job lists (the naive per-resource scan is
-    // O(resources x jobs) and shows up in the tick profile at scale).
-    let mut in_flight: std::collections::BTreeMap<ResourceId, u32> =
-        std::collections::BTreeMap::new();
-    let mut queued: std::collections::BTreeMap<ResourceId, Vec<(f64, JobId)>> =
-        std::collections::BTreeMap::new();
-    for job in &exp.jobs {
-        match job.state {
-            JobState::Dispatched { rid, at } => {
-                *in_flight.entry(rid).or_insert(0) += 1;
-                queued.entry(rid).or_default().push((at, job.spec.id));
-            }
-            JobState::Running { rid, .. } => {
-                *in_flight.entry(rid).or_insert(0) += 1;
-            }
-            _ => {}
-        }
-    }
 
     let mut over_allocated: Vec<(ResourceId, u32)> = Vec::new(); // (rid, excess)
     let mut capacity_gap: Vec<(ResourceId, u32)> = Vec::new(); // (rid, free)
     for (&rid, &target) in alloc {
-        let current = in_flight.get(&rid).copied().unwrap_or(0);
+        let current = exp.in_flight_on(rid);
         if current > target {
             over_allocated.push((rid, current - target));
         } else if current < target {
@@ -61,9 +43,9 @@ pub fn plan_actions(alloc: &Allocation, exp: &Experiment) -> Vec<Action> {
         }
     }
     // Resources with queued jobs but no allocation at all: drain them.
-    for (&rid, jobs) in &queued {
+    for rid in exp.resources_with_queued() {
         if !alloc.contains_key(&rid) {
-            for &(_, job) in jobs {
+            for (_, job) in exp.queued_on(rid) {
                 actions.push(Action::CancelQueued { job, rid });
             }
         }
@@ -72,7 +54,7 @@ pub fn plan_actions(alloc: &Allocation, exp: &Experiment) -> Vec<Action> {
     // Cancel the excess on over-allocated resources, youngest dispatch
     // first (most likely still deep in the queue).
     for (rid, excess) in over_allocated {
-        let mut q = queued.remove(&rid).unwrap_or_default();
+        let mut q: Vec<(SimTime, JobId)> = exp.queued_on(rid).collect();
         q.sort_by(|a, b| b.0.total_cmp(&a.0));
         for (_, job) in q.into_iter().take(excess as usize) {
             actions.push(Action::CancelQueued { job, rid });

@@ -55,9 +55,14 @@ impl Ledger {
         self.settled + self.committed()
     }
 
-    /// Budget remaining against exposure (`None` = unlimited).
+    /// Budget remaining against exposure (`None` = unlimited), clamped at
+    /// zero. Actual settled cost can exceed the committed estimate
+    /// (machines slow down mid-run), pushing exposure past the budget; a
+    /// negative headroom must read as "nothing left" — policy budget
+    /// guards do arithmetic on this figure and a sign flip would corrupt
+    /// per-job caps and projected-spend sheds.
     pub fn headroom(&self) -> Option<GridDollars> {
-        self.budget.map(|b| b - self.exposure())
+        self.budget.map(|b| (b - self.exposure()).max(0.0))
     }
 
     /// Try to commit `estimate` for `job`. Returns false (and commits
@@ -168,5 +173,23 @@ mod tests {
         assert_eq!(l.headroom(), Some(6.0));
         l.settle(JobId(0), 6.0, "a"); // actual over estimate
         assert_eq!(l.headroom(), Some(4.0));
+    }
+
+    #[test]
+    fn headroom_clamps_at_zero_when_actuals_overrun() {
+        // Regression: a job settling above both its estimate and the whole
+        // budget used to drive headroom negative, which flipped signs in
+        // policy budget guards downstream. It must clamp at zero.
+        let mut l = Ledger::new(Some(10.0));
+        assert!(l.commit(JobId(0), 8.0));
+        l.settle(JobId(0), 14.0, "a"); // machine slowed down mid-run
+        assert_eq!(l.headroom(), Some(0.0));
+        // And nothing further can be committed against the blown budget.
+        assert!(!l.commit(JobId(1), 0.1));
+        // Partial billing on a failure can overrun the same way.
+        let mut l2 = Ledger::new(Some(5.0));
+        assert!(l2.commit(JobId(0), 5.0));
+        l2.release(JobId(0), 7.5, "b");
+        assert_eq!(l2.headroom(), Some(0.0));
     }
 }

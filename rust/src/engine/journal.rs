@@ -10,7 +10,7 @@
 //! are rolled back to `Ready` (their attempt still counts — the work was
 //! lost, the bill may not be recoverable, so we re-dispatch conservatively).
 
-use super::{Experiment, JobState};
+use super::Experiment;
 use crate::plan::{expand, Plan};
 use crate::types::{JobId, ResourceId};
 use crate::util::json::{parse, Json};
@@ -181,17 +181,10 @@ pub fn recover(path: &Path) -> Result<Recovered> {
         }
     }
 
-    // Roll in-flight jobs back to Ready: the engine died holding them.
-    for idx in 0..exp.jobs.len() {
-        let state = exp.jobs[idx].state.clone();
-        if matches!(state, JobState::Dispatched { .. } | JobState::Running { .. })
-        {
-            // Attempt already counted at dispatch; a crash must not be able
-            // to exhaust attempts by itself, so refund it.
-            exp.jobs[idx].attempts = exp.jobs[idx].attempts.saturating_sub(1);
-            exp.jobs[idx].state = JobState::Ready;
-        }
-    }
+    // Roll in-flight jobs back to Ready: the engine died holding them. The
+    // attempt is refunded (a crash must not exhaust attempts by itself);
+    // going through the engine keeps its incremental rollups consistent.
+    exp.requeue_in_flight();
     Ok(Recovered {
         experiment: exp,
         plan_src,
@@ -202,6 +195,7 @@ pub fn recover(path: &Path) -> Result<Recovered> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::JobState;
     use crate::plan::Plan;
 
     const PLAN: &str = "parameter i integer range from 1 to 4\ntask main\nexecute run $i\nendtask";

@@ -5,11 +5,22 @@
 //! tracks attempts, and journals every transition to persistent storage so
 //! the experiment "can be restarted if the node running Nimrod goes down"
 //! ([`journal`]).
+//!
+//! Every transition also maintains incremental rollups — terminal-state
+//! counters, the Ready set, and per-resource in-flight/queued tables — so
+//! the per-tick queries the scheduler pipeline hammers
+//! ([`Experiment::remaining`], [`Experiment::finished`],
+//! [`Experiment::in_flight_on`], [`Experiment::ready_jobs`]) are O(1) or
+//! O(answer) instead of O(jobs). This is what keeps scheduler ticks
+//! O(changed) on 10k-resource / 50k-job grids. The rollups are only
+//! consistent while job state is mutated through the transition methods;
+//! code that pokes `jobs[i].state` directly (don't) must re-establish them.
 
 pub mod journal;
 
 use crate::plan::JobSpec;
 use crate::types::{GridDollars, JobId, ResourceId, SimTime};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Job lifecycle. Legal transitions:
 ///
@@ -90,6 +101,17 @@ pub struct Experiment {
     pub budget: Option<GridDollars>,
     pub user: String,
     pub max_attempts: u32,
+    /// Incremental rollups, kept in lockstep by the transition methods.
+    n_done: u32,
+    n_failed: u32,
+    /// Ready job ids (iterates in dispatch order).
+    ready: BTreeSet<JobId>,
+    /// In-flight (Dispatched + Running) count per resource, indexed by
+    /// `ResourceId` and grown on demand.
+    in_flight: Vec<u32>,
+    /// Dispatched-but-not-Running jobs per resource, with dispatch time
+    /// (the dispatcher's cancellation candidates).
+    queued: BTreeMap<ResourceId, BTreeMap<JobId, SimTime>>,
 }
 
 impl Experiment {
@@ -100,6 +122,7 @@ impl Experiment {
         user: &str,
         max_attempts: u32,
     ) -> Experiment {
+        let ready: BTreeSet<JobId> = specs.iter().map(|s| s.id).collect();
         Experiment {
             jobs: specs
                 .into_iter()
@@ -113,6 +136,11 @@ impl Experiment {
             budget,
             user: user.to_string(),
             max_attempts,
+            n_done: 0,
+            n_failed: 0,
+            ready,
+            in_flight: Vec::new(),
+            queued: BTreeMap::new(),
         }
     }
 
@@ -127,35 +155,31 @@ impl Experiment {
     // -- queries -------------------------------------------------------------
 
     /// Jobs not yet in a terminal state (the scheduler's `remaining_jobs`).
+    /// O(1): maintained incrementally by the transitions.
     pub fn remaining(&self) -> u32 {
-        self.jobs.iter().filter(|j| !j.state.is_terminal()).count() as u32
+        self.jobs.len() as u32 - self.n_done - self.n_failed
     }
 
+    /// O(1): maintained incrementally by the transitions.
     pub fn completed(&self) -> u32 {
-        self.jobs
-            .iter()
-            .filter(|j| matches!(j.state, JobState::Done { .. }))
-            .count() as u32
+        self.n_done
     }
 
+    /// O(1): maintained incrementally by the transitions.
     pub fn failed(&self) -> u32 {
-        self.jobs
-            .iter()
-            .filter(|j| matches!(j.state, JobState::Failed))
-            .count() as u32
+        self.n_failed
     }
 
-    /// All terminal ⇒ the experiment is over.
+    /// All terminal ⇒ the experiment is over. O(1); the event loop asks
+    /// after every event.
     pub fn finished(&self) -> bool {
-        self.jobs.iter().all(|j| j.state.is_terminal())
+        (self.n_done + self.n_failed) as usize == self.jobs.len()
     }
 
-    /// Iterator over Ready jobs in id order (dispatch order).
+    /// Iterator over Ready jobs in id order (dispatch order). O(answer):
+    /// walks the maintained Ready set, not the whole job table.
     pub fn ready_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
-        self.jobs
-            .iter()
-            .filter(|j| j.state == JobState::Ready)
-            .map(|j| j.spec.id)
+        self.ready.iter().copied()
     }
 
     /// Total settled cost across Done jobs.
@@ -198,6 +222,13 @@ impl Experiment {
         }
         job.attempts += 1;
         job.state = JobState::Dispatched { rid, at: now };
+        self.ready.remove(&id);
+        let i = rid.0 as usize;
+        if self.in_flight.len() <= i {
+            self.in_flight.resize(i + 1, 0);
+        }
+        self.in_flight[i] += 1;
+        self.queued.entry(rid).or_default().insert(id, now);
         Ok(())
     }
 
@@ -206,6 +237,7 @@ impl Experiment {
         match job.state {
             JobState::Dispatched { rid, .. } => {
                 job.state = JobState::Running { rid, started: now };
+                self.drop_queued(id, rid);
                 Ok(())
             }
             _ => Err(BadTransition {
@@ -232,6 +264,8 @@ impl Experiment {
                     cpu_s,
                     cost,
                 };
+                self.n_done += 1;
+                self.dec_in_flight(rid);
                 Ok(())
             }
             _ => Err(BadTransition {
@@ -245,23 +279,31 @@ impl Experiment {
     /// Failure or cancellation of an in-flight job: re-queues while attempts
     /// remain, otherwise terminal-fails. Returns the resulting state.
     pub fn fail_attempt(&mut self, id: JobId) -> Result<&JobState, BadTransition> {
+        let (rid, was_queued) = match self.job(id).state {
+            JobState::Dispatched { rid, .. } => (rid, true),
+            JobState::Running { rid, .. } => (rid, false),
+            _ => {
+                return Err(BadTransition {
+                    job: id,
+                    from: self.job(id).state.clone(),
+                    to: "Ready/Failed",
+                })
+            }
+        };
+        if was_queued {
+            self.drop_queued(id, rid);
+        }
+        self.dec_in_flight(rid);
         let max = self.max_attempts;
         let job = self.job_mut(id);
-        match job.state {
-            JobState::Dispatched { .. } | JobState::Running { .. } => {
-                job.state = if job.attempts >= max {
-                    JobState::Failed
-                } else {
-                    JobState::Ready
-                };
-                Ok(&job.state)
-            }
-            _ => Err(BadTransition {
-                job: id,
-                from: job.state.clone(),
-                to: "Ready/Failed",
-            }),
+        if job.attempts >= max {
+            job.state = JobState::Failed;
+            self.n_failed += 1;
+        } else {
+            job.state = JobState::Ready;
+            self.ready.insert(id);
         }
+        Ok(&self.job(id).state)
     }
 
     /// Scheduler-initiated withdrawal of a queued (not yet Running) job:
@@ -270,9 +312,12 @@ impl Experiment {
     pub fn release(&mut self, id: JobId) -> Result<(), BadTransition> {
         let job = self.job_mut(id);
         match job.state {
-            JobState::Dispatched { .. } => {
+            JobState::Dispatched { rid, .. } => {
                 job.attempts = job.attempts.saturating_sub(1);
                 job.state = JobState::Ready;
+                self.ready.insert(id);
+                self.drop_queued(id, rid);
+                self.dec_in_flight(rid);
                 Ok(())
             }
             _ => Err(BadTransition {
@@ -283,12 +328,127 @@ impl Experiment {
         }
     }
 
-    /// In-flight job count per resource (drives dispatcher top-ups).
+    /// Journal-recovery support: roll every in-flight (Dispatched/Running)
+    /// job back to Ready, refunding the dispatch attempt — a crash must not
+    /// be able to exhaust attempts by itself. Returns how many rolled back.
+    pub fn requeue_in_flight(&mut self) -> u32 {
+        let mut n = 0;
+        for idx in 0..self.jobs.len() {
+            let Some(rid) = self.jobs[idx].state.resource() else {
+                continue;
+            };
+            let id = self.jobs[idx].spec.id;
+            self.jobs[idx].attempts = self.jobs[idx].attempts.saturating_sub(1);
+            self.jobs[idx].state = JobState::Ready;
+            self.ready.insert(id);
+            self.drop_queued(id, rid);
+            self.dec_in_flight(rid);
+            n += 1;
+        }
+        n
+    }
+
+    /// In-flight job count per resource (drives dispatcher top-ups). O(1):
+    /// read from the maintained counter, not a job-table scan.
     pub fn in_flight_on(&self, rid: ResourceId) -> u32 {
-        self.jobs
+        self.in_flight.get(rid.0 as usize).copied().unwrap_or(0)
+    }
+
+    /// The maintained per-resource in-flight counters, indexed by
+    /// `ResourceId` (may be shorter than the grid — untouched resources are
+    /// implicitly zero).
+    pub fn in_flight_counts(&self) -> &[u32] {
+        &self.in_flight
+    }
+
+    /// Dispatched-but-not-Running jobs on `rid` as `(dispatched_at, job)`,
+    /// in job-id order (the dispatcher's cancellation candidates).
+    pub fn queued_on(
+        &self,
+        rid: ResourceId,
+    ) -> impl Iterator<Item = (SimTime, JobId)> + '_ {
+        self.queued
+            .get(&rid)
+            .into_iter()
+            .flat_map(|m| m.iter().map(|(&id, &at)| (at, id)))
+    }
+
+    /// Resources currently holding at least one queued (Dispatched) job.
+    pub fn resources_with_queued(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.queued.keys().copied()
+    }
+
+    /// Verify the incremental rollups against a full job-table scan
+    /// (test/debug support).
+    pub fn counts_consistent(&self) -> bool {
+        let done = self
+            .jobs
             .iter()
-            .filter(|j| j.state.resource() == Some(rid))
-            .count() as u32
+            .filter(|j| matches!(j.state, JobState::Done { .. }))
+            .count() as u32;
+        let failed = self
+            .jobs
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Failed))
+            .count() as u32;
+        if done != self.n_done || failed != self.n_failed {
+            return false;
+        }
+        let ready: BTreeSet<JobId> = self
+            .jobs
+            .iter()
+            .filter(|j| j.state == JobState::Ready)
+            .map(|j| j.spec.id)
+            .collect();
+        if ready != self.ready {
+            return false;
+        }
+        // Size the scratch to cover every rid the job table references, not
+        // just the maintained vec: a drifted table could hold an in-flight
+        // job on a rid the counters never saw, and the checker must report
+        // that as inconsistent rather than index out of bounds.
+        let max_rid = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.state.resource())
+            .map(|r| r.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let mut in_flight = vec![0u32; self.in_flight.len().max(max_rid)];
+        let mut queued: BTreeMap<ResourceId, BTreeMap<JobId, SimTime>> =
+            BTreeMap::new();
+        for j in &self.jobs {
+            match j.state {
+                JobState::Dispatched { rid, at } => {
+                    in_flight[rid.0 as usize] += 1;
+                    queued.entry(rid).or_default().insert(j.spec.id, at);
+                }
+                JobState::Running { rid, .. } => {
+                    in_flight[rid.0 as usize] += 1;
+                }
+                _ => {}
+            }
+        }
+        // A longer scratch vec means a rid the counters never tracked —
+        // that length mismatch is itself the drift signal.
+        in_flight == self.in_flight && queued == self.queued
+    }
+
+    // -- rollup plumbing -----------------------------------------------------
+
+    fn dec_in_flight(&mut self, rid: ResourceId) {
+        let c = &mut self.in_flight[rid.0 as usize];
+        debug_assert!(*c > 0, "in-flight underflow on {rid}");
+        *c = c.saturating_sub(1);
+    }
+
+    fn drop_queued(&mut self, id: JobId, rid: ResourceId) {
+        if let Some(q) = self.queued.get_mut(&rid) {
+            q.remove(&id);
+            if q.is_empty() {
+                self.queued.remove(&rid);
+            }
+        }
     }
 }
 
@@ -372,5 +532,30 @@ mod tests {
         e.dispatch(JobId(1), ResourceId(0), 0.0).unwrap();
         let ready: Vec<JobId> = e.ready_jobs().collect();
         assert_eq!(ready, vec![JobId(0), JobId(2)]);
+    }
+
+    #[test]
+    fn incremental_rollups_survive_churn_and_recovery() {
+        let mut e = exp(3);
+        e.dispatch(JobId(0), ResourceId(1), 1.0).unwrap();
+        e.dispatch(JobId(1), ResourceId(1), 2.0).unwrap();
+        e.start(JobId(0), 3.0).unwrap();
+        assert!(e.counts_consistent());
+        assert_eq!(e.in_flight_on(ResourceId(1)), 2);
+        assert_eq!(e.queued_on(ResourceId(1)).collect::<Vec<_>>(), vec![(2.0, JobId(1))]);
+        assert_eq!(e.resources_with_queued().collect::<Vec<_>>(), vec![ResourceId(1)]);
+        e.release(JobId(1)).unwrap();
+        assert!(e.counts_consistent());
+        assert_eq!(e.resources_with_queued().count(), 0);
+        e.complete(JobId(0), 4.0, 1.0, 0.5).unwrap();
+        assert!(e.counts_consistent());
+        assert_eq!(e.in_flight_on(ResourceId(1)), 0);
+        // Crash-recovery rollback keeps the rollups aligned too.
+        e.dispatch(JobId(2), ResourceId(0), 5.0).unwrap();
+        assert_eq!(e.requeue_in_flight(), 1);
+        assert_eq!(e.job(JobId(2)).attempts, 0);
+        assert!(e.counts_consistent());
+        assert_eq!(e.remaining(), 2);
+        assert_eq!(e.completed(), 1);
     }
 }

@@ -76,8 +76,14 @@ impl Competition {
     }
 
     /// A new competing experiment lands: claim CPUs across random
-    /// resources. Returns its departure time.
-    pub fn arrive(&mut self, tb: &Testbed, now: SimTime) -> SimTime {
+    /// resources. Returns its departure time and the resources it claimed
+    /// (whose premium/slots just changed — the views an incremental driver
+    /// must dirty).
+    pub fn arrive(
+        &mut self,
+        tb: &Testbed,
+        now: SimTime,
+    ) -> (SimTime, Vec<ResourceId>) {
         let mut remaining =
             self.rng.exponential(self.model.mean_cpus).round().max(1.0) as u32;
         let mut claims = Vec::new();
@@ -96,12 +102,16 @@ impl Competition {
             remaining -= take;
         }
         let departs_at = now + self.rng.exponential(self.model.mean_duration_s);
+        let claimed_rids = claims.iter().map(|&(rid, _)| rid).collect();
         self.active.push(CompetingLoad { claims, departs_at });
-        departs_at
+        (departs_at, claimed_rids)
     }
 
     /// Release every competing experiment whose departure time has passed.
-    pub fn depart_until(&mut self, now: SimTime) {
+    /// Returns the resources whose claims changed (possibly with
+    /// duplicates), so an incremental driver can dirty just those views.
+    pub fn depart_until(&mut self, now: SimTime) -> Vec<ResourceId> {
+        let mut released = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].departs_at <= now {
@@ -109,11 +119,13 @@ impl Competition {
                 for (rid, n) in load.claims {
                     let c = &mut self.claimed[rid.0 as usize];
                     *c = c.saturating_sub(n);
+                    released.push(rid);
                 }
             } else {
                 i += 1;
             }
         }
+        released
     }
 
     /// CPUs currently claimed by competitors on `rid`.
@@ -162,11 +174,16 @@ mod tests {
         let total_before: u32 =
             (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
         assert_eq!(total_before, 0);
-        let departs = comp.arrive(&tb, 0.0);
+        let (departs, claimed) = comp.arrive(&tb, 0.0);
         assert!(comp.active_count() == 1);
+        assert!(!claimed.is_empty(), "arrival must report claimed rids");
+        for rid in &claimed {
+            assert!(comp.claimed(*rid) >= 1);
+        }
         let total: u32 = (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
         assert!(total >= 1);
-        comp.depart_until(departs + 1.0);
+        let released = comp.depart_until(departs + 1.0);
+        assert!(!released.is_empty(), "departure must report touched rids");
         assert_eq!(comp.active_count(), 0);
         let total_after: u32 =
             (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();

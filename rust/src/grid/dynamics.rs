@@ -20,6 +20,12 @@ use crate::util::rng::Rng;
 const LOAD_RHO: f64 = 0.9;
 /// Seconds between background-load updates.
 pub const LOAD_UPDATE_PERIOD_S: f64 = 300.0;
+/// Hard ceiling on background load. Every load sample is clamped into
+/// `[0, MAX_BG_LOAD]` — an unclamped AR(1) excursion past 1.0 would make
+/// `planning_speed` negative and silently drop an overloaded-but-alive
+/// machine from selection, and the small `1 - MAX_BG_LOAD` floor keeps a
+/// saturated machine barely (but positively) fast.
+pub const MAX_BG_LOAD: f64 = 0.95;
 
 /// Dynamic state of one resource.
 #[derive(Debug, Clone)]
@@ -35,7 +41,7 @@ impl ResourceDyn {
     pub fn new(spec: &ResourceSpec, parent_rng: &mut Rng) -> ResourceDyn {
         let mut rng = parent_rng.fork(spec.id.0 as u64);
         let bg_load = (spec.bg_load_mean + rng.normal(0.0, spec.bg_load_vol))
-            .clamp(0.0, 0.95);
+            .clamp(0.0, MAX_BG_LOAD);
         ResourceDyn {
             up: true,
             bg_load,
@@ -49,7 +55,7 @@ impl ResourceDyn {
         self.bg_load = (LOAD_RHO * self.bg_load
             + (1.0 - LOAD_RHO) * spec.bg_load_mean
             + eps)
-            .clamp(0.0, 0.95);
+            .clamp(0.0, MAX_BG_LOAD);
     }
 
     /// Effective speed for a grid job right now.
@@ -107,7 +113,30 @@ mod tests {
         let mut d = ResourceDyn::new(&s, &mut rng);
         for _ in 0..10_000 {
             d.step_load(&s);
-            assert!((0.0..=0.95).contains(&d.bg_load), "load={}", d.bg_load);
+            assert!(
+                (0.0..=MAX_BG_LOAD).contains(&d.bg_load),
+                "load={}",
+                d.bg_load
+            );
+        }
+    }
+
+    #[test]
+    fn extreme_parameters_never_yield_negative_speed() {
+        // A pathological spec (mean load past saturation, huge volatility):
+        // the clamp must keep effective speed non-negative — and strictly
+        // positive while the machine is up, so it stays selectable.
+        let s = spec(5.0, 3.0);
+        let mut rng = Rng::new(17);
+        let mut d = ResourceDyn::new(&s, &mut rng);
+        for _ in 0..2_000 {
+            d.step_load(&s);
+            assert!(d.bg_load <= MAX_BG_LOAD, "load={}", d.bg_load);
+            assert!(
+                d.effective_speed(&s) > 0.0,
+                "up machine lost its speed: load={}",
+                d.bg_load
+            );
         }
     }
 

@@ -8,7 +8,7 @@
 //! staleness is part of the paper's problem setting (resource state decays;
 //! the scheduler must adapt).
 
-use crate::grid::dynamics::ResourceDyn;
+use crate::grid::dynamics::{ResourceDyn, MAX_BG_LOAD};
 use crate::grid::testbed::{QueueKind, ResourceSpec, Testbed};
 use crate::types::{ResourceId, SimTime, SiteId};
 
@@ -33,10 +33,20 @@ pub struct MdsRecord {
 }
 
 impl MdsRecord {
-    /// Effective speed the scheduler plans with (stale view).
+    /// Effective speed the scheduler plans with (stale view). Load is
+    /// clamped into `[0, MAX_BG_LOAD]` so an overloaded-but-alive machine
+    /// still advertises a small positive speed — a negative speed would
+    /// silently drop it from every policy's candidate list.
     pub fn planning_speed(&self) -> f64 {
         if self.up {
-            self.speed * (1.0 - self.bg_load)
+            let ps = self.speed * (1.0 - self.bg_load.clamp(0.0, MAX_BG_LOAD));
+            debug_assert!(
+                ps >= 0.0,
+                "negative planning speed on {} (load {})",
+                self.name,
+                self.bg_load
+            );
+            ps
         } else {
             0.0
         }
@@ -54,22 +64,16 @@ pub struct Mds {
 impl Mds {
     /// Build the initial directory from the testbed (t = 0 snapshot).
     pub fn new(tb: &Testbed, dyns: &[ResourceDyn]) -> Mds {
-        let mut mds = Mds {
-            records: Vec::new(),
-            last_refresh: 0.0,
-        };
-        mds.refresh(tb, dyns, 0.0);
-        mds
-    }
-
-    /// Re-scan ground truth (the simulation driver calls this on the
-    /// refresh period; a live deployment would poll site GRIS daemons).
-    pub fn refresh(&mut self, tb: &Testbed, dyns: &[ResourceDyn], now: SimTime) {
-        self.records = tb
+        let records = tb
             .resources
             .iter()
-            .map(|spec| {
-                let d = &dyns[spec.id.0 as usize];
+            .enumerate()
+            .map(|(i, spec)| {
+                debug_assert_eq!(
+                    spec.id.0 as usize, i,
+                    "testbed resource ids must be dense and ordered"
+                );
+                let d = &dyns[i];
                 MdsRecord {
                     id: spec.id,
                     name: spec.name.clone(),
@@ -79,11 +83,41 @@ impl Mds {
                     bg_load: d.bg_load,
                     up: d.up,
                     batch_queue: matches!(spec.queue, QueueKind::Batch { .. }),
-                    as_of: now,
+                    as_of: 0.0,
                 }
             })
             .collect();
+        Mds {
+            records,
+            last_refresh: 0.0,
+        }
+    }
+
+    /// Re-scan ground truth (the simulation driver calls this on the
+    /// refresh period; a live deployment would poll site GRIS daemons).
+    /// Records are updated in place — no per-refresh allocation — and the
+    /// ids whose scheduler-visible state (up/load) actually changed are
+    /// returned, so an incremental driver dirties only those resources'
+    /// views instead of rebuilding all of them.
+    pub fn refresh(
+        &mut self,
+        tb: &Testbed,
+        dyns: &[ResourceDyn],
+        now: SimTime,
+    ) -> Vec<ResourceId> {
+        debug_assert_eq!(self.records.len(), tb.resources.len());
+        let mut changed = Vec::new();
+        for rec in &mut self.records {
+            let d = &dyns[rec.id.0 as usize];
+            rec.as_of = now;
+            if rec.up != d.up || rec.bg_load != d.bg_load {
+                rec.up = d.up;
+                rec.bg_load = d.bg_load;
+                changed.push(rec.id);
+            }
+        }
         self.last_refresh = now;
+        changed
     }
 
     pub fn last_refresh(&self) -> SimTime {
@@ -109,9 +143,9 @@ impl Mds {
         &self.records
     }
 
-    /// Look up one record.
+    /// Look up one record. O(1): records are stored dense in id order.
     pub fn record(&self, id: ResourceId) -> Option<&MdsRecord> {
-        self.records.iter().find(|r| r.id == id)
+        self.records.get(id.0 as usize)
     }
 }
 
@@ -173,6 +207,37 @@ mod tests {
         assert!(!mds.record(victim).unwrap().up);
         assert_eq!(mds.record(victim).unwrap().as_of, 120.0);
         assert!(mds.discover(&tb, "rajkumar").all(|r| r.id != victim));
+    }
+
+    #[test]
+    fn refresh_reports_only_changed_records() {
+        let (tb, mut dyns) = setup();
+        let mut mds = Mds::new(&tb, &dyns);
+        // Nothing moved since the snapshot: no ids reported.
+        assert!(mds.refresh(&tb, &dyns, 60.0).is_empty());
+        dyns[3].up = false;
+        dyns[5].bg_load = 0.77;
+        let changed = mds.refresh(&tb, &dyns, 120.0);
+        assert_eq!(changed, vec![tb.resources[3].id, tb.resources[5].id]);
+        // Both visible, and a second refresh is quiet again.
+        assert!(!mds.record(tb.resources[3].id).unwrap().up);
+        assert_eq!(mds.record(tb.resources[5].id).unwrap().bg_load, 0.77);
+        assert!(mds.refresh(&tb, &dyns, 180.0).is_empty());
+    }
+
+    #[test]
+    fn planning_speed_never_negative_under_extreme_load() {
+        let (tb, mut dyns) = setup();
+        dyns[0].bg_load = 0.95;
+        let mut mds = Mds::new(&tb, &dyns);
+        mds.refresh(&tb, &dyns, 0.0);
+        let rec = mds.record(tb.resources[0].id).unwrap();
+        // Overloaded-but-alive machines stay selectable (small positive).
+        assert!(rec.planning_speed() > 0.0);
+        // Even a corrupt out-of-range load must not flip the sign.
+        let mut corrupt = rec.clone();
+        corrupt.bg_load = 1.7;
+        assert!(corrupt.planning_speed() >= 0.0);
     }
 
     #[test]

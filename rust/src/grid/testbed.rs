@@ -221,6 +221,89 @@ impl Testbed {
         tb
     }
 
+    /// Synthesize an arbitrarily large testbed: `sites` administrative
+    /// domains of `resources_per_site` machines each, with the same
+    /// heterogeneity axes as [`Testbed::gusto`] (architectures, batch vs
+    /// interactive queues, owner pricing, churn and load parameters) but a
+    /// regular shape that scales to tens of thousands of machines — the
+    /// grids the incremental tick pipeline and the `mega-grid` scenario
+    /// exercise. Every machine is open to all users so the whole grid is
+    /// schedulable; resource ids are dense and ordered, as the directory
+    /// service requires. Deterministic in `seed`.
+    pub fn synthetic(
+        sites: usize,
+        resources_per_site: usize,
+        seed: u64,
+    ) -> Testbed {
+        let mut rng = Rng::new(seed ^ 0x5CA1_AB1E);
+        let archs = [
+            (Arch::Intel, Os::Linux, 1.0),
+            (Arch::Sparc, Os::Solaris, 0.8),
+            (Arch::Mips, Os::Irix, 1.3),
+            (Arch::Alpha, Os::Tru64, 1.5),
+            (Arch::PowerPc, Os::Aix, 1.1),
+        ];
+        let mut tb = Testbed::default();
+        let mut rid = 0u32;
+        for s in 0..sites {
+            let site_id = SiteId(s as u32);
+            // Spread sites over the 24 timezones; link quality varies.
+            tb.sites.push(Site {
+                id: site_id,
+                name: format!("site{s}.grid"),
+                tz_offset_hours: (s % 24) as f64 - 11.0,
+                link: NetLink {
+                    bandwidth_mbps: rng.uniform(5.0, 45.0),
+                    latency_ms: rng.uniform(20.0, 250.0),
+                },
+            });
+            for m in 0..resources_per_site {
+                let (arch, os, speed_base) = *rng.choose(&archs);
+                let cpus = match rng.below(12) {
+                    0 => rng.range(16, 64) as u32, // cluster or big SMP
+                    1..=3 => rng.range(4, 8) as u32,
+                    _ => rng.range(1, 2) as u32,
+                };
+                let speed = speed_base * rng.uniform(0.7, 1.4);
+                let queue = if cpus >= 8 {
+                    QueueKind::Batch {
+                        slots: (cpus as f64 * rng.uniform(0.5, 1.0)).ceil()
+                            as u32,
+                        cycle_s: rng.uniform(15.0, 120.0),
+                    }
+                } else {
+                    QueueKind::Interactive
+                };
+                let price = PriceModel::owner_policy(
+                    speed,
+                    rng.uniform(0.6, 1.8),
+                    rng.uniform(1.2, 3.0),
+                    rng.chance(0.5),
+                );
+                tb.resources.push(ResourceSpec {
+                    id: ResourceId(rid),
+                    name: format!("n{m}.site{s}.grid"),
+                    site: site_id,
+                    arch,
+                    os,
+                    cpus,
+                    speed,
+                    mem_mb: 256 * cpus.max(1),
+                    queue,
+                    auth: AuthPolicy::AllUsers,
+                    price,
+                    mtbf_s: rng.uniform(50.0, 500.0) * 3600.0,
+                    mttr_s: rng.uniform(0.25, 2.0) * 3600.0,
+                    bg_load_mean: rng.uniform(0.05, 0.4),
+                    bg_load_vol: rng.uniform(0.02, 0.1),
+                    private_cluster: false,
+                });
+                rid += 1;
+            }
+        }
+        tb
+    }
+
     // -- JSON config round-trip ---------------------------------------------
 
     /// Serialize to the JSON config format (`nimrod testbed --dump`).
@@ -414,6 +497,33 @@ mod tests {
         let small = Testbed::gusto(1, 0.5);
         let big = Testbed::gusto(1, 4.0);
         assert!(big.resources.len() > 3 * small.resources.len());
+    }
+
+    #[test]
+    fn synthetic_shape_and_determinism() {
+        let tb = Testbed::synthetic(12, 25, 4);
+        assert_eq!(tb.sites.len(), 12);
+        assert_eq!(tb.resources.len(), 300);
+        // Dense, ordered ids (the directory service indexes by id).
+        for (i, r) in tb.resources.iter().enumerate() {
+            assert_eq!(r.id.0 as usize, i);
+            assert!(r.auth.allows("anyone"), "synthetic grids are open");
+            assert!(r.speed > 0.0 && r.cpus >= 1);
+        }
+        // Heterogeneous enough to give schedulers something to choose on.
+        let archs: std::collections::HashSet<_> =
+            tb.resources.iter().map(|r| r.arch).collect();
+        assert!(archs.len() >= 3);
+        let b = Testbed::synthetic(12, 25, 4);
+        for (x, y) in tb.resources.iter().zip(&b.resources) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.speed, y.speed);
+        }
+        let c = Testbed::synthetic(12, 25, 5);
+        assert!(
+            tb.resources.iter().zip(&c.resources).any(|(x, y)| x.speed != y.speed),
+            "different seeds should vary the sampled attributes"
+        );
     }
 
     #[test]

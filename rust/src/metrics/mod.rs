@@ -107,6 +107,10 @@ pub struct Report {
     pub ticks: u64,
     /// Simulator events processed.
     pub events: u64,
+    /// Resource-view entries rebuilt across the run — the incremental
+    /// tick pipeline's work counter (a full-rebuild driver pays
+    /// `ticks × resources` here; the event-driven table pays O(changed)).
+    pub view_refreshes: u64,
 }
 
 impl Report {

@@ -8,19 +8,25 @@
 //! runs ahead of schedule expensive machines are released — "adapts the list
 //! of machines it is using depending on competition for them".
 
-use super::{Allocation, Policy, ResourceView, SchedCtx, DEADLINE_SAFETY};
+use super::{
+    guarded_window_h, Allocation, Policy, ResourceView, SchedCtx,
+    DEADLINE_SAFETY,
+};
 
 /// Hours to the deadline after applying a policy's safety factor (the
 /// tunable generalization of [`SchedCtx::hours_left`], which fixes the
-/// factor at [`DEADLINE_SAFETY`]).
+/// factor at [`DEADLINE_SAFETY`]). Always finite and positive via the
+/// shared [`guarded_window_h`] guard.
 fn hours_left(ctx: &SchedCtx<'_>, safety: f64) -> f64 {
-    ((ctx.deadline - ctx.now) * safety / 3600.0).max(1e-6)
+    guarded_window_h(ctx.now, ctx.deadline, safety)
 }
 
 /// Aggregate throughput (jobs/hour) needed to finish inside the
-/// safety-discounted window.
+/// safety-discounted window. Finite by construction of [`hours_left`].
 fn required_rate_jph(ctx: &SchedCtx<'_>, safety: f64) -> f64 {
-    ctx.remaining_jobs as f64 / hours_left(ctx, safety)
+    let rate = ctx.remaining_jobs as f64 / hours_left(ctx, safety);
+    debug_assert!(rate.is_finite(), "required rate must be finite");
+    rate
 }
 
 /// Tail-feasibility filter: a resource is only eligible while one of its
@@ -82,8 +88,15 @@ fn fill_capacity(
         if per_slot <= 0.0 {
             continue;
         }
-        // Slots needed from this resource to close the gap.
-        let want = ((needed_jph - rate) / per_slot).ceil() as u32;
+        // Slots needed from this resource to close the gap. A non-finite
+        // demand (a NaN gap stalls the greedy fill: `NaN as u32` is 0)
+        // must saturate instead — take everything this resource has.
+        let gap = (needed_jph - rate) / per_slot;
+        let want = if gap.is_finite() {
+            gap.ceil().max(0.0) as u32
+        } else {
+            u32::MAX
+        };
         let take = want
             .min(r.slots)
             .min(remaining_jobs.saturating_sub(slots_total));
@@ -468,6 +481,63 @@ mod tests {
         let total2: u32 = alloc2.values().sum();
         assert!(total2 <= total);
         assert!(total2 >= 1);
+    }
+
+    #[test]
+    fn past_deadline_degrades_to_best_effort() {
+        // Regression: with now past the deadline the window math used to
+        // blow up and fill_capacity allocated nothing, stalling the run.
+        // The guarded window must instead saturate eligible capacity so
+        // the experiment finishes late rather than never.
+        let rs = vec![view(0, 4, 1.0, 1.0), view(1, 4, 2.0, 3.0)];
+        let mut rng = Rng::new(1);
+        let mut c = SchedCtx {
+            now: 20.0 * HOUR,
+            deadline: 15.0 * HOUR,
+            budget_headroom: None,
+            remaining_jobs: 6,
+            job_work_ref_h: 1.0,
+            resources: &rs,
+            rng: &mut rng,
+        };
+        let alloc = CostOpt::default().allocate(&mut c);
+        let total: u32 = alloc.values().sum();
+        assert_eq!(total, 6, "must saturate, not stall: {alloc:?}");
+
+        let mut rng = Rng::new(1);
+        let mut c2 = SchedCtx {
+            now: 20.0 * HOUR,
+            deadline: 15.0 * HOUR,
+            budget_headroom: None,
+            remaining_jobs: 100,
+            job_work_ref_h: 1.0,
+            resources: &rs,
+            rng: &mut rng,
+        };
+        let alloc2 = DeadlineOnly::default().allocate(&mut c2);
+        let total2: u32 = alloc2.values().sum();
+        assert_eq!(total2, 8, "every slot in play past the deadline");
+    }
+
+    #[test]
+    fn non_finite_window_inputs_are_guarded() {
+        // inf - inf = NaN in the window math; the guard must keep the
+        // required rate finite and still hand out capacity.
+        let rs = vec![view(0, 2, 1.0, 1.0)];
+        let mut rng = Rng::new(2);
+        let mut c = SchedCtx {
+            now: f64::INFINITY,
+            deadline: f64::INFINITY,
+            budget_headroom: None,
+            remaining_jobs: 5,
+            job_work_ref_h: 1.0,
+            resources: &rs,
+            rng: &mut rng,
+        };
+        assert!(required_rate_jph(&c, DEADLINE_SAFETY).is_finite());
+        let alloc = CostOpt::default().allocate(&mut c);
+        assert_eq!(alloc.values().sum::<u32>(), 2, "{alloc:?}");
+        assert!(c.hours_left().is_finite());
     }
 
     #[test]

@@ -39,6 +39,32 @@ use std::collections::BTreeMap;
 /// and running stragglers (jobs are never pre-empted once started).
 pub const DEADLINE_SAFETY: f64 = 0.85;
 
+/// Smallest planning window, hours. Once `now` reaches the deadline the
+/// raw window is zero or negative (and NaN with corrupt inputs like
+/// `inf - inf`); dividing remaining work by it would make required rates
+/// non-finite and capacity fills would allocate nothing — the run would
+/// stall forever instead of finishing late. Clamping to a tiny positive
+/// window degrades past-deadline scheduling to best-effort: the required
+/// rate saturates every eligible slot.
+pub(crate) const MIN_PLANNING_WINDOW_H: f64 = 1e-6;
+
+/// Hours left in a safety-discounted planning window, guarded to stay
+/// finite and positive (see [`MIN_PLANNING_WINDOW_H`]). The single window
+/// guard shared by [`SchedCtx::hours_left`] and the DBC schedulers'
+/// tunable-safety variant.
+pub(crate) fn guarded_window_h(
+    now: SimTime,
+    deadline: SimTime,
+    safety: f64,
+) -> f64 {
+    let h = (deadline - now) * safety / 3600.0;
+    if h.is_finite() {
+        h.max(MIN_PLANNING_WINDOW_H)
+    } else {
+        MIN_PLANNING_WINDOW_H
+    }
+}
+
 /// Everything the scheduler knows about one discovered resource at tick
 /// time. Assembled by the driver from MDS (stale), GRAM (in-flight counts),
 /// the economy (current quoted rate for this user) and the rate estimator.
@@ -100,9 +126,10 @@ pub struct SchedCtx<'a> {
 }
 
 impl<'a> SchedCtx<'a> {
-    /// Hours to the (safety-discounted) deadline.
+    /// Hours to the (safety-discounted) deadline. Always finite and
+    /// positive — see [`guarded_window_h`].
     pub fn hours_left(&self) -> f64 {
-        ((self.deadline - self.now) * DEADLINE_SAFETY / 3600.0).max(1e-6)
+        guarded_window_h(self.now, self.deadline, DEADLINE_SAFETY)
     }
 
     /// Aggregate throughput (jobs/hour) needed to finish in time.

@@ -205,9 +205,9 @@ impl LiveRunner {
             }
 
             // Driver-specific view assembly over the live worker pool; the
-            // shared advisor pipeline does selection + assignment.
-            let in_flight =
-                ScheduleAdvisor::in_flight_counts(&exp, workers.len());
+            // shared advisor pipeline does selection + assignment. Per-node
+            // in-flight counts are O(1) reads of the engine's incremental
+            // counters — no job-table scan per tick.
             let views: Vec<ResourceView> = workers
                 .iter()
                 .map(|w| ResourceView {
@@ -215,7 +215,7 @@ impl LiveRunner {
                     slots: 1,
                     planning_speed: w.speed,
                     rate: w.rate,
-                    in_flight: in_flight[w.rid.0 as usize],
+                    in_flight: exp.in_flight_on(w.rid),
                     measured_jphps: advisor.measured_jphps(w.rid),
                     batch_queue: false,
                 })

@@ -20,6 +20,21 @@
 //!    (GASS/proxy)       (GRAM)              (engine Running)           (settle)
 //! ```
 //!
+//! **Incremental view table.** The scheduler tick does not rebuild every
+//! [`ResourceView`] from an MDS sweep: the simulation keeps one persistent
+//! view per resource and the events that actually change scheduler-visible
+//! state dirty exactly the entries they touch — an MDS refresh dirties only
+//! records whose up/load changed (outages and recoveries become visible
+//! there, preserving the paper's stale-directory semantics), job
+//! dispatch/start/completion/failure touches the one resource it ran on,
+//! competitor arrivals/departures touch the claimed machines, and owners
+//! with time-of-day pricing are re-marked only when their local clock
+//! crosses an hour boundary. Each tick then
+//! refreshes the dirty entries (O(changed), not O(resources)) before
+//! handing the table to the shared advisor, which is what lets a quiet
+//! 10k-machine grid tick in near-constant time (see
+//! `benches/grid_scaling.rs`).
+//!
 //! A 20-hour trial replays in a few milliseconds; identical seeds produce
 //! identical traces (see `rust/tests/`).
 
@@ -108,6 +123,23 @@ pub struct GridSimulation {
     competition: Option<Competition>,
     /// Stop even if jobs remain (budget exhaustion, dead grid).
     hard_stop: SimTime,
+    /// Persistent per-resource view table (index = ResourceId). Entries
+    /// are rebuilt only when marked dirty by a state-changing event.
+    views: Vec<ResourceView>,
+    view_dirty: Vec<bool>,
+    dirty_queue: Vec<u32>,
+    /// Static per-resource authorization for `cfg.user`; unauthorized
+    /// entries stay zeroed forever and are never marked.
+    authorized: Vec<bool>,
+    /// Authorized time-of-day-priced resources grouped by site, with the
+    /// site's hour phase (start hour + tz offset) — the only quotes that
+    /// move on their own, and only when the site's local clock crosses an
+    /// integer hour.
+    tod_by_site: Vec<(f64, Vec<u32>)>,
+    /// Virtual time of the previous scheduler tick (repricing check).
+    last_tick_t: SimTime,
+    /// Benchmark baseline: rebuild every entry on every tick.
+    full_rebuild: bool,
 }
 
 impl GridSimulation {
@@ -161,6 +193,42 @@ impl GridSimulation {
             q.schedule_at(1.0, Ev::CompetitorArrive);
         }
         let hard_stop = cfg.deadline * 4.0 + 48.0 * HOUR;
+        // Persistent view table: who this user may schedule on (static),
+        // which owners reprice by local hour, and one zeroed view per
+        // resource that the first tick fills in.
+        let authorized: Vec<bool> = tb
+            .resources
+            .iter()
+            .map(|r| r.auth.allows(&cfg.user))
+            .collect();
+        let mut tod_per_site: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        for r in &tb.resources {
+            if authorized[r.id.0 as usize] && r.price.time_of_day {
+                tod_per_site.entry(r.site.0).or_default().push(r.id.0);
+            }
+        }
+        let tod_by_site: Vec<(f64, Vec<u32>)> = tod_per_site
+            .into_iter()
+            .map(|(sid, rids)| {
+                let theta = cfg.start_utc_hour
+                    + tb.sites[sid as usize].tz_offset_hours;
+                (theta, rids)
+            })
+            .collect();
+        let views: Vec<ResourceView> = tb
+            .resources
+            .iter()
+            .map(|r| ResourceView {
+                id: r.id,
+                slots: 0,
+                planning_speed: 0.0,
+                rate: 0.0,
+                in_flight: 0,
+                measured_jphps: None,
+                batch_queue: false,
+            })
+            .collect();
+        let n = tb.resources.len();
         let mut sim = GridSimulation {
             report: Report {
                 jobs_total,
@@ -185,12 +253,24 @@ impl GridSimulation {
             journal: None,
             competition,
             hard_stop,
+            views,
+            view_dirty: vec![false; n],
+            dirty_queue: Vec::with_capacity(n),
+            authorized,
+            tod_by_site,
+            last_tick_t: 0.0,
+            full_rebuild: false,
         };
         // Seed availability churn per resource.
         for i in 0..sim.tb.resources.len() {
             let spec = sim.tb.resources[i].clone();
             let t = sim.dyns[i].draw_uptime(&spec);
             sim.q.schedule_at(t, Ev::Fail { rid: spec.id });
+        }
+        // Everything schedulable starts dirty; the first tick fills the
+        // table from the t = 0 directory snapshot.
+        for i in 0..sim.tb.resources.len() {
+            sim.mark_view(ResourceId(i as u32));
         }
         sim
     }
@@ -296,11 +376,19 @@ impl GridSimulation {
         match ev {
             Ev::Tick => self.on_tick(),
             Ev::MdsRefresh => {
-                self.mds.refresh(&self.tb, &self.dyns, self.q.now());
+                // Only records whose up/load actually moved invalidate
+                // their view entry.
+                let changed =
+                    self.mds.refresh(&self.tb, &self.dyns, self.q.now());
+                for rid in changed {
+                    self.mark_view(rid);
+                }
                 self.q
                     .schedule_in(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
             }
             Ev::LoadUpdate => {
+                // Ground truth moves; the scheduler keeps seeing the stale
+                // directory until the next MdsRefresh (no view marking).
                 for i in 0..self.dyns.len() {
                     let spec = &self.tb.resources[i];
                     self.dyns[i].step_load(spec);
@@ -314,60 +402,129 @@ impl GridSimulation {
             Ev::Recover { rid } => self.on_recover(rid),
             Ev::CompetitorArrive => {
                 let now = self.q.now();
-                if let Some(comp) = &mut self.competition {
-                    let departs = comp.arrive(&self.tb, now);
-                    self.q.schedule_at(departs, Ev::CompetitorDepart);
-                    let next = comp.draw_interarrival();
-                    self.q.schedule_in(next, Ev::CompetitorArrive);
+                let claimed: Vec<ResourceId> = match &mut self.competition {
+                    Some(comp) => {
+                        let (departs, claimed) = comp.arrive(&self.tb, now);
+                        self.q.schedule_at(departs, Ev::CompetitorDepart);
+                        let next = comp.draw_interarrival();
+                        self.q.schedule_in(next, Ev::CompetitorArrive);
+                        claimed
+                    }
+                    None => Vec::new(),
+                };
+                // Premium and free slots changed on the claimed machines.
+                for rid in claimed {
+                    self.mark_view(rid);
                 }
             }
             Ev::CompetitorDepart => {
                 let now = self.q.now();
-                if let Some(comp) = &mut self.competition {
-                    comp.depart_until(now);
+                let released = match &mut self.competition {
+                    Some(comp) => comp.depart_until(now),
+                    None => Vec::new(),
+                };
+                for rid in released {
+                    self.mark_view(rid);
                 }
             }
         }
     }
 
-    fn on_tick(&mut self) {
-        self.report.ticks += 1;
-        let now = self.q.now();
-        // 1. discovery + view assembly — the driver-specific half of the
-        // tick: MDS staleness, GRAM slots, competition-adjusted quotes.
-        let in_flight = ScheduleAdvisor::in_flight_counts(
-            &self.exp,
-            self.tb.resources.len(),
-        );
-        // Copy only the scalar fields out of the directory records —
-        // cloning whole MdsRecords allocates a String per resource per tick.
-        let discovered: Vec<(ResourceId, f64, bool)> = self
-            .mds
-            .discover(&self.tb, &self.cfg.user)
-            .map(|r| (r.id, r.planning_speed(), r.batch_queue))
-            .collect();
-        let mut views: Vec<ResourceView> = Vec::with_capacity(discovered.len());
-        for (id, planning_speed, batch_queue) in discovered {
-            // Competing experiments shrink the slots open to us and raise
-            // the owner's quoted rate (demand premium).
-            let base_slots = self.managers[id.0 as usize].slots();
+    /// Mark time-of-day-priced entries whose site's local clock crossed an
+    /// integer hour since the previous tick — the only instants owner
+    /// quotes can change (prices are piecewise-constant per local hour).
+    /// Phase-aware, so fractional start hours and timezone offsets reprice
+    /// exactly when the boundary passes, independent of the tick period or
+    /// event ordering. O(sites with time-of-day pricing) per tick.
+    fn mark_repriced(&mut self, now: SimTime) {
+        let prev = self.last_tick_t;
+        self.last_tick_t = now;
+        if self.tod_by_site.is_empty() || now == prev {
+            return;
+        }
+        let sites = std::mem::take(&mut self.tod_by_site);
+        for (theta, rids) in &sites {
+            if (theta + now / 3600.0).floor()
+                > (theta + prev / 3600.0).floor()
+            {
+                for &r in rids {
+                    self.mark_view(ResourceId(r));
+                }
+            }
+        }
+        self.tod_by_site = sites;
+    }
+
+    /// Invalidate one resource's view entry (no-op for machines this user
+    /// cannot schedule on, and for entries already queued for refresh).
+    fn mark_view(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        if i < self.view_dirty.len() && self.authorized[i] && !self.view_dirty[i]
+        {
+            self.view_dirty[i] = true;
+            self.dirty_queue.push(rid.0);
+        }
+    }
+
+    /// Rebuild every dirty view entry from its sources: the (stale) MDS
+    /// record, GRAM slots, competition-adjusted quote, engine in-flight
+    /// count and the advisor's measured service rate. Cost is O(dirty);
+    /// the pre-incremental pipeline paid O(resources) here every tick.
+    fn refresh_dirty_views(&mut self) {
+        if self.full_rebuild {
+            for i in 0..self.views.len() {
+                self.mark_view(ResourceId(i as u32));
+            }
+        }
+        while let Some(r) = self.dirty_queue.pop() {
+            let i = r as usize;
+            self.view_dirty[i] = false;
+            let rid = ResourceId(r);
+            let rec = self.mds.record(rid).expect("record for every resource");
+            let planning_speed = rec.planning_speed();
+            let batch_queue = rec.batch_queue;
+            let base_slots = self.managers[i].slots();
             let (slots, rate) = match &self.competition {
                 Some(comp) => (
-                    comp.free_slots(&self.tb, id, base_slots),
-                    self.quote(id) * comp.demand_premium(&self.tb, id),
+                    comp.free_slots(&self.tb, rid, base_slots),
+                    self.quote(rid) * comp.demand_premium(&self.tb, rid),
                 ),
-                None => (base_slots, self.quote(id)),
+                None => (base_slots, self.quote(rid)),
             };
-            views.push(ResourceView {
-                id,
+            self.views[i] = ResourceView {
+                id: rid,
                 slots,
                 planning_speed,
                 rate,
-                in_flight: in_flight[id.0 as usize],
-                measured_jphps: self.advisor.measured_jphps(id),
+                in_flight: self.exp.in_flight_on(rid),
+                measured_jphps: self.advisor.measured_jphps(rid),
                 batch_queue,
-            });
+            };
+            self.report.view_refreshes += 1;
         }
+    }
+
+    /// Benchmark support: rebuild the whole view table on every tick (the
+    /// pre-incremental behaviour) instead of only dirty entries. The
+    /// resulting trace is bit-identical — entries just get recomputed to
+    /// the same values many more times. (Quotes are piecewise-constant per
+    /// local hour and [`Self::mark_repriced`] dirties them exactly when a
+    /// boundary passes, so the equivalence holds for any start hour,
+    /// timezone offset or tick period.)
+    pub fn set_full_view_rebuild(&mut self, on: bool) {
+        self.full_rebuild = on;
+    }
+
+    fn on_tick(&mut self) {
+        self.report.ticks += 1;
+        let now = self.q.now();
+        // 1. discovery + view maintenance: rebuild only the entries whose
+        // inputs changed since the last tick (MDS deltas, churn, job
+        // transitions, competition claims, local-hour repricing). Down and
+        // unauthorized machines sit in the table with zero speed/slots;
+        // every policy filters them out, exactly as discovery used to.
+        self.mark_repriced(now);
+        self.refresh_dirty_views();
         // 2+3. selection + assignment: the shared advisor pipeline.
         let job_work = self.advisor.job_work_ref_h();
         let actions = self.advisor.advise(
@@ -375,7 +532,7 @@ impl GridSimulation {
                 now,
                 deadline: self.exp.deadline,
                 budget_headroom: self.ledger.headroom(),
-                views: &views,
+                views: &self.views,
             },
             &self.exp,
             &mut self.rng,
@@ -405,6 +562,7 @@ impl GridSimulation {
             self.ledger.release(jid, 0.0, &spec.name);
             return;
         }
+        self.mark_view(rid); // in-flight count changed
         if let Some(j) = &mut self.journal {
             let _ = j.dispatched(jid, rid, now);
         }
@@ -436,6 +594,7 @@ impl GridSimulation {
         let name = self.tb.spec(rid).name.clone();
         self.ledger.release(jid, 0.0, &name);
         if self.exp.release(jid).is_ok() {
+            self.mark_view(rid); // in-flight count changed
             if let Some(j) = &mut self.journal {
                 let _ = j.released(jid);
             }
@@ -493,6 +652,7 @@ impl GridSimulation {
         if !self.ledger.commit(jid, cpu_s * rate) {
             self.managers[rid.0 as usize].cancel(jid);
             let _ = self.exp.release(jid);
+            self.mark_view(rid); // in-flight count changed
             if let Some(j) = &mut self.journal {
                 let _ = j.released(jid);
             }
@@ -543,6 +703,7 @@ impl GridSimulation {
         }
         self.advisor
             .observe_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
+        self.mark_view(rid); // in-flight count + measured service rate changed
         let usage = self.report.per_resource.entry(name).or_insert_with(
             ResourceUsage::default,
         );
@@ -581,6 +742,7 @@ impl GridSimulation {
                 let _ = j.failed_attempt(jid);
             }
         }
+        self.mark_view(rid); // in-flight count + failure history changed
     }
 
     fn on_fail(&mut self, rid: ResourceId) {
@@ -691,6 +853,74 @@ mod tests {
             avg_tight > avg_loose,
             "tight {avg_tight:.1} cpus vs loose {avg_loose:.1}"
         );
+    }
+
+    #[test]
+    fn incremental_views_match_full_rebuild_bit_exactly() {
+        // The dirty-tracking view table is a pure optimization: forcing a
+        // full rebuild every tick must replay the exact same trace, while
+        // touching far more entries.
+        let a = small_sim("cost", 20.0, 12).run();
+        let mut forced = small_sim("cost", 20.0, 12);
+        forced.set_full_view_rebuild(true);
+        let b = forced.run();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+        assert_eq!(a.busy_cpus.points(), b.busy_cpus.points());
+        assert!(
+            a.view_refreshes < b.view_refreshes,
+            "incremental maintenance should touch fewer entries: {} vs {}",
+            a.view_refreshes,
+            b.view_refreshes
+        );
+    }
+
+    #[test]
+    fn incremental_views_match_full_rebuild_under_competition() {
+        // Same bit-exactness with premiums/claims churning the table.
+        let mk = || {
+            let mut cfg = small_cfg("cost", 25.0);
+            cfg.competition =
+                Some(crate::grid::competition::CompetitionModel {
+                    mean_interarrival_s: 1200.0,
+                    mean_duration_s: 2.0 * HOUR,
+                    mean_cpus: 20.0,
+                });
+            let tb = Testbed::gusto(7, 0.5);
+            let specs = crate::workload::ionization_jobs(cfg.seed);
+            GridSimulation::new(tb, specs, cfg)
+        };
+        let a = mk().run();
+        let mut forced = mk();
+        forced.set_full_view_rebuild(true);
+        let b = forced.run();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    }
+
+    #[test]
+    fn incremental_views_match_full_rebuild_with_fractional_start_hour() {
+        // Peak-price boundaries fall off the whole-hour sim-time grid when
+        // the start hour is fractional; phase-aware repricing must still
+        // invalidate quotes exactly when a site's local clock crosses an
+        // hour (regression: a fixed hourly reprice grid missed these).
+        let mk = || {
+            let mut cfg = small_cfg("cost", 20.0);
+            cfg.start_utc_hour = 21.5;
+            let tb = Testbed::gusto(7, 0.5);
+            let specs = crate::workload::ionization_jobs(cfg.seed);
+            GridSimulation::new(tb, specs, cfg)
+        };
+        let a = mk().run();
+        let mut forced = mk();
+        forced.set_full_view_rebuild(true);
+        let b = forced.run();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
     }
 
     #[test]

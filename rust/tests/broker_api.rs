@@ -341,6 +341,31 @@ fn smoke_global_scale() {
 }
 
 #[test]
+fn mega_grid_preset_reaches_contract_scale() {
+    // The scale-stress preset promises ≥5,000 resources and ≥50,000 jobs.
+    // Running it to completion belongs in `cargo bench` (grid_scaling);
+    // here we build it and drive the first scheduler tick to prove the
+    // pipeline fans out at that scale.
+    let mut sim = Broker::scenario("mega-grid")
+        .unwrap()
+        .seed(1)
+        .simulate()
+        .unwrap();
+    assert!(
+        sim.tb.resources.len() >= 5000,
+        "{} machines",
+        sim.tb.resources.len()
+    );
+    assert!(sim.exp.jobs.len() >= 50_000, "{} jobs", sim.exp.jobs.len());
+    sim.run_until(1.0); // the t = 0 tick
+    let in_flight: u32 = sim.exp.in_flight_counts().iter().sum();
+    assert!(
+        in_flight > 1000,
+        "first tick should fan dispatches across the grid, got {in_flight}"
+    );
+}
+
+#[test]
 fn scenarios_are_deterministic_and_seedable() {
     let a = Broker::scenario("flash-crowd").unwrap().seed(3).run().unwrap();
     let b = Broker::scenario("flash-crowd").unwrap().seed(3).run().unwrap();

@@ -154,6 +154,66 @@ fn prop_ledger_never_exceeds_budget_and_conserves() {
 }
 
 #[test]
+fn prop_settled_plus_committed_never_exceeds_budget_under_churn() {
+    // The ledger's core guarantee, stated directly: as long as every
+    // settlement/partial bill stays within its job's committed estimate,
+    // `settled + committed` (exposure) can never pass the budget — across
+    // arbitrary interleavings of dispatch, settle, fail and cancel — and
+    // the clamped headroom never goes negative.
+    prop_check(192, |rng| {
+        let budget = rng.uniform(50.0, 2000.0);
+        let mut ledger = Ledger::new(Some(budget));
+        let mut in_flight: Vec<(JobId, f64)> = Vec::new();
+        let mut next = 0u32;
+        for _ in 0..rng.below(400) {
+            match rng.below(4) {
+                0 => {
+                    // Dispatch: commit the cost estimate.
+                    let est = rng.uniform(0.0, 120.0);
+                    if ledger.commit(JobId(next), est) {
+                        in_flight.push((JobId(next), est));
+                    }
+                    next += 1;
+                }
+                1 if !in_flight.is_empty() => {
+                    // Complete: settle at or below the estimate.
+                    let (j, est) =
+                        in_flight.swap_remove(rng.below(in_flight.len()));
+                    ledger.settle(j, rng.uniform(0.0, est), "r");
+                }
+                2 if !in_flight.is_empty() => {
+                    // Fail: bill partial use, within the estimate.
+                    let (j, est) =
+                        in_flight.swap_remove(rng.below(in_flight.len()));
+                    ledger.release(j, rng.uniform(0.0, est), "r");
+                }
+                3 if !in_flight.is_empty() => {
+                    // Cancel: clean release, nothing billed.
+                    let (j, _) =
+                        in_flight.swap_remove(rng.below(in_flight.len()));
+                    ledger.release(j, 0.0, "r");
+                }
+                _ => {}
+            }
+            prop_assert!(
+                ledger.exposure() <= budget + 1e-9,
+                "settled {} + committed {} exceeds budget {}",
+                ledger.settled(),
+                ledger.committed(),
+                budget
+            );
+            let headroom = ledger.headroom().expect("budgeted ledger");
+            prop_assert!(headroom >= 0.0, "headroom went negative: {headroom}");
+            prop_assert!(
+                ledger.check_conservation(),
+                "per-resource sums diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_job_state_machine_counts_consistent() {
     prop_check(128, |rng| {
         let n = rng.below(30) + 2;
@@ -188,6 +248,24 @@ fn prop_job_state_machine_counts_consistent() {
                 done + failed + remaining == n as u32,
                 "counts diverged: {done}+{failed}+{remaining} != {n}"
             );
+            // The engine's incremental rollups (terminal counters, Ready
+            // set, per-resource in-flight/queued tables) must agree with a
+            // full job-table scan after every transition.
+            prop_assert!(
+                exp.counts_consistent(),
+                "incremental rollups drifted from the job table"
+            );
+            for rid in 0..8u32 {
+                let scan = exp
+                    .jobs
+                    .iter()
+                    .filter(|j| j.state.resource() == Some(ResourceId(rid)))
+                    .count() as u32;
+                prop_assert!(
+                    exp.in_flight_on(ResourceId(rid)) == scan,
+                    "in-flight counter drifted on r{rid}"
+                );
+            }
             // Attempts never exceed max.
             for job in &exp.jobs {
                 prop_assert!(
