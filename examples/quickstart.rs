@@ -47,9 +47,9 @@ fn main() -> anyhow::Result<()> {
         .simulate()?;
     println!(
         "\ntestbed: {} machines / {} cpus across {} sites",
-        sim.tb.resources.len(),
-        sim.tb.total_cpus(),
-        sim.tb.sites.len()
+        sim.tb().resources.len(),
+        sim.tb().total_cpus(),
+        sim.tb().sites.len()
     );
     let report = sim.run();
 

@@ -32,18 +32,18 @@ fn main() -> anyhow::Result<()> {
         .simulate()?;
     println!(
         "experiment: {} jobs, journaling to {}",
-        sim.exp.jobs.len(),
+        sim.exp().jobs.len(),
         journal_path.display()
     );
-    let journal = Journal::create(&journal_path, &plan_src, SEED, &sim.exp)?;
+    let journal = Journal::create(&journal_path, &plan_src, SEED, sim.exp())?;
     sim = sim.with_journal(journal);
     sim.run_until(5.0 * HOUR);
     println!(
         "crash at t=5h: {} done, {} remaining (journal flushed per record)",
-        sim.exp.completed(),
-        sim.exp.remaining()
+        sim.exp().completed(),
+        sim.exp().remaining()
     );
-    let done_before = sim.exp.completed();
+    let done_before = sim.exp().completed();
     drop(sim); // the engine node dies
 
     // Phase 2: recover from the journal and finish. The same seed rebuilds

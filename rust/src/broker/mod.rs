@@ -8,7 +8,13 @@
 //! * [`ExperimentBuilder`] (via [`Broker::experiment`]) — fluent assembly
 //!   of an experiment: plan/workload, deadline, budget, policy spec,
 //!   testbed, seed — finished with [`ExperimentBuilder::simulate`]
-//!   (virtual time) or [`ExperimentBuilder::live`] (real PJRT execution);
+//!   (virtual time) or [`ExperimentBuilder::live`] (real PJRT execution).
+//!   Compose co-scheduled tenants with [`ExperimentBuilder::tenant`] and
+//!   finish with [`ExperimentBuilder::world`] /
+//!   [`ExperimentBuilder::run_world`] to put N competing experiments on
+//!   one shared grid ([`crate::sim::GridWorld`]), optionally with
+//!   demand-responsive pricing
+//!   ([`ExperimentBuilder::demand_pricing`]);
 //! * [`ScheduleAdvisor`] — the shared per-tick
 //!   discovery → selection → assignment pipeline both drivers delegate to;
 //! * [`PolicyRegistry`] — open, parameterized policy construction
@@ -41,10 +47,10 @@ use crate::config::{ExperimentConfig, WorkloadConfig};
 use crate::engine::Experiment;
 use crate::grid::competition::CompetitionModel;
 use crate::grid::Testbed;
-use crate::metrics::Report;
+use crate::metrics::{Report, WorldReport};
 use crate::plan::{expand, JobSpec, Plan};
 use crate::sim::live::{LiveOutcome, LiveRunner};
-use crate::sim::GridSimulation;
+use crate::sim::{GridSimulation, GridWorld, TenantSetup};
 use crate::types::{GridDollars, SimTime, HOUR};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
@@ -98,9 +104,22 @@ enum TestbedSource {
     Explicit(Testbed),
 }
 
+/// One additional co-scheduled tenant: its envelope/identity, job source
+/// and (optionally) custom policy registry, absorbed from another builder
+/// by [`ExperimentBuilder::tenant`]. Testbed/tweak/competition settings of
+/// the absorbed builder are ignored — the grid belongs to the world.
+struct TenantDraft {
+    cfg: ExperimentConfig,
+    jobs: JobSource,
+    registry: Option<PolicyRegistry>,
+}
+
 /// Fluent experiment assembly. Every setter consumes and returns the
 /// builder; finish with [`simulate`](Self::simulate),
-/// [`run`](Self::run) or [`live`](Self::live).
+/// [`run`](Self::run) or [`live`](Self::live) — or compose additional
+/// tenants with [`tenant`](Self::tenant) and finish with
+/// [`world`](Self::world) / [`run_world`](Self::run_world) for a
+/// multi-tenant shared grid.
 pub struct ExperimentBuilder {
     cfg: ExperimentConfig,
     jobs: JobSource,
@@ -108,6 +127,8 @@ pub struct ExperimentBuilder {
     tweaks: Vec<Box<dyn Fn(&mut Testbed) + Send + Sync>>,
     registry: Option<PolicyRegistry>,
     resume: Option<Experiment>,
+    /// Co-scheduled tenants beyond the primary one this builder describes.
+    tenants: Vec<TenantDraft>,
 }
 
 impl Default for ExperimentBuilder {
@@ -119,6 +140,7 @@ impl Default for ExperimentBuilder {
             tweaks: Vec::new(),
             registry: None,
             resume: None,
+            tenants: Vec::new(),
         }
     }
 }
@@ -243,6 +265,44 @@ impl ExperimentBuilder {
         self
     }
 
+    // -- multi-tenant composition ----------------------------------------
+
+    /// Add a co-scheduled tenant: a whole second experiment (own user,
+    /// deadline, budget, policy, workload, journal) competing on **this**
+    /// builder's grid. The absorbed builder contributes its envelope and
+    /// job source; its testbed, tweaks and competition settings are
+    /// ignored. A tenant left on the default seed inherits this builder's
+    /// seed (the world seed), so `…seed(s)…run_world()` reseeds the whole
+    /// contest. Finish with [`world`](Self::world) or
+    /// [`run_world`](Self::run_world).
+    pub fn tenant(mut self, other: ExperimentBuilder) -> Self {
+        self.tenants.push(TenantDraft {
+            cfg: other.cfg,
+            jobs: other.jobs,
+            registry: other.registry,
+        });
+        self
+    }
+
+    /// Number of tenants the finished world will host (primary included).
+    pub fn tenant_count(&self) -> usize {
+        1 + self.tenants.len()
+    }
+
+    /// Enable demand-responsive pricing on every resource: owners multiply
+    /// their posted rate by `1 + slope × utilization`, where utilization is
+    /// the fraction of the machine's CPUs held by tenants' in-flight jobs
+    /// plus background competition claims. This is what makes co-tenant
+    /// demand move prices (paper §3) without the synthetic competition
+    /// process.
+    pub fn demand_pricing(self, slope: f64) -> Self {
+        self.tweak_testbed(move |tb| {
+            for spec in &mut tb.resources {
+                spec.price.demand_slope = slope;
+            }
+        })
+    }
+
     // -- testbed -------------------------------------------------------------
 
     /// Use an explicit testbed instead of the generated GUSTO one.
@@ -294,9 +354,13 @@ impl ExperimentBuilder {
 
     // -- finishers -----------------------------------------------------------
 
-    /// Validate settings and resolve the policy spec into an advisor.
-    fn advisor(&self, work_prior_h: f64) -> Result<ScheduleAdvisor> {
-        let cfg = &self.cfg;
+    /// Validate one tenant's envelope and resolve its policy spec into an
+    /// advisor (the per-tenant half of builder validation).
+    fn validated_advisor(
+        cfg: &ExperimentConfig,
+        registry: Option<&PolicyRegistry>,
+        work_prior_h: f64,
+    ) -> Result<ScheduleAdvisor> {
         ensure!(
             cfg.deadline.is_finite() && cfg.deadline > 0.0,
             "deadline must be positive, got {} s",
@@ -319,6 +383,15 @@ impl ExperimentBuilder {
             "start_utc_hour must be in [0, 24), got {}",
             cfg.start_utc_hour
         );
+        let policy = match registry {
+            Some(reg) => reg.resolve(&cfg.policy)?,
+            None => PolicyRegistry::with_builtins().resolve(&cfg.policy)?,
+        };
+        Ok(ScheduleAdvisor::new(policy, work_prior_h))
+    }
+
+    /// Validate the (world-level) testbed source.
+    fn validate_testbed(&self) -> Result<()> {
         if let TestbedSource::Gusto { scale } = &self.testbed {
             let scale = *scale;
             ensure!(
@@ -336,25 +409,33 @@ impl ExperimentBuilder {
                 "synthetic testbed needs at least one site and one machine per site, got {sites}×{resources_per_site}"
             );
         }
-        let policy = match &self.registry {
-            Some(reg) => reg.resolve(&cfg.policy)?,
-            None => PolicyRegistry::with_builtins().resolve(&cfg.policy)?,
-        };
-        Ok(ScheduleAdvisor::new(policy, work_prior_h))
+        Ok(())
     }
 
-    /// Expand the configured job source.
-    fn specs(&self) -> Result<Vec<JobSpec>> {
-        let specs = match &self.jobs {
-            JobSource::Ionization => crate::workload::ionization_jobs(self.cfg.seed),
+    /// Validate settings and resolve the primary policy spec into an
+    /// advisor.
+    fn advisor(&self, work_prior_h: f64) -> Result<ScheduleAdvisor> {
+        self.validate_testbed()?;
+        Self::validated_advisor(&self.cfg, self.registry.as_ref(), work_prior_h)
+    }
+
+    /// Expand one tenant's job source with its seed.
+    fn expand_specs(jobs: &JobSource, seed: u64) -> Result<Vec<JobSpec>> {
+        let specs = match jobs {
+            JobSource::Ionization => crate::workload::ionization_jobs(seed),
             JobSource::Plan(src) => {
                 let plan = Plan::parse(src).context("parse experiment plan")?;
-                expand(&plan, self.cfg.seed).context("expand experiment plan")?
+                expand(&plan, seed).context("expand experiment plan")?
             }
             JobSource::Specs(specs) => specs.clone(),
         };
         ensure!(!specs.is_empty(), "experiment has no jobs");
         Ok(specs)
+    }
+
+    /// Expand the primary job source.
+    fn specs(&self) -> Result<Vec<JobSpec>> {
+        Self::expand_specs(&self.jobs, self.cfg.seed)
     }
 
     /// Build the testbed (generated or explicit) with tweaks applied.
@@ -381,8 +462,13 @@ impl ExperimentBuilder {
         tb
     }
 
-    /// Finish as a virtual-time simulation driver.
+    /// Finish as a (single-tenant) virtual-time simulation driver.
     pub fn simulate(mut self) -> Result<GridSimulation> {
+        ensure!(
+            self.tenants.is_empty(),
+            "builder has {} tenants: finish multi-tenant experiments with world()/run_world()",
+            self.tenant_count()
+        );
         let advisor = self.advisor(self.cfg.workload.job_work_ref_h)?;
         let resume = self.resume.take();
         // A resumed experiment carries its own job table.
@@ -400,6 +486,61 @@ impl ExperimentBuilder {
         Ok(self.simulate()?.run())
     }
 
+    /// Finish as a multi-tenant shared-grid world: this builder's
+    /// experiment is tenant 0 and every [`tenant`](Self::tenant) rides
+    /// along on the same testbed, event queue and economy. Works for
+    /// N = 1 too (a world with a single tenant is exactly
+    /// [`simulate`](Self::simulate)'s driver).
+    pub fn world(mut self) -> Result<GridWorld> {
+        ensure!(
+            self.resume.is_none(),
+            "resume() is only supported by the single-tenant simulate() driver"
+        );
+        self.validate_testbed()?;
+        let default_seed = ExperimentConfig::default().seed;
+        let mut setups = Vec::with_capacity(self.tenant_count());
+        let advisor = Self::validated_advisor(
+            &self.cfg,
+            self.registry.as_ref(),
+            self.cfg.workload.job_work_ref_h,
+        )
+        .context("tenant 0")?;
+        setups.push(TenantSetup {
+            specs: self.specs().context("tenant 0")?,
+            cfg: self.cfg.clone(),
+            advisor,
+        });
+        for (i, draft) in self.tenants.drain(..).enumerate() {
+            let TenantDraft {
+                mut cfg,
+                jobs,
+                registry,
+            } = draft;
+            // Tenants that kept the default seed inherit the world seed, so
+            // reseeding the outer builder reseeds the whole contest.
+            if cfg.seed == default_seed {
+                cfg.seed = self.cfg.seed;
+            }
+            let advisor = Self::validated_advisor(
+                &cfg,
+                registry.as_ref(),
+                cfg.workload.job_work_ref_h,
+            )
+            .with_context(|| format!("tenant {}", i + 1))?;
+            let specs = Self::expand_specs(&jobs, cfg.seed)
+                .with_context(|| format!("tenant {}", i + 1))?;
+            setups.push(TenantSetup { cfg, specs, advisor });
+        }
+        let tb = self.build_testbed();
+        Ok(GridWorld::new(tb, setups))
+    }
+
+    /// Convenience: run the multi-tenant world to completion and return
+    /// the per-tenant + cross-tenant report.
+    pub fn run_world(self) -> Result<WorldReport> {
+        Ok(self.world()?.run_world())
+    }
+
     /// Finish as a live (real PJRT execution) experiment on `workers`
     /// worker threads under `workdir`. The deadline/budget envelope applies
     /// on the wall clock.
@@ -408,6 +549,10 @@ impl ExperimentBuilder {
         ensure!(
             self.resume.is_none(),
             "resume() is only supported by the simulation driver"
+        );
+        ensure!(
+            self.tenants.is_empty(),
+            "multi-tenant brokering is simulation-only (use world()/run_world())"
         );
         let advisor = self.advisor(LIVE_WORK_PRIOR_H)?;
         let specs = self.specs()?;
@@ -471,6 +616,45 @@ mod tests {
         assert!(Broker::experiment().testbed_scale(0.0).simulate().is_err());
         assert!(Broker::experiment().start_utc_hour(24.5).simulate().is_err());
         assert!(Broker::experiment().jobs(Vec::new()).simulate().is_err());
+    }
+
+    #[test]
+    fn tenant_composition_validates_and_counts() {
+        let b = Broker::experiment()
+            .tenant(Broker::experiment().user("davida").policy("time"))
+            .tenant(Broker::experiment().user("astro").policy("deadline-only"));
+        assert_eq!(b.tenant_count(), 3);
+        // Multi-tenant builders refuse the single-tenant finishers...
+        assert!(Broker::experiment()
+            .tenant(Broker::experiment())
+            .simulate()
+            .is_err());
+        // ...and tenant validation errors surface with the tenant index.
+        let err = Broker::experiment()
+            .tenant(Broker::experiment().policy("nope"))
+            .world()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("tenant 1"), "{err:#}");
+        assert!(Broker::experiment()
+            .tenant(Broker::experiment().deadline_h(-4.0))
+            .world()
+            .is_err());
+        // A single-tenant world is fine.
+        assert!(Broker::experiment().world().is_ok());
+    }
+
+    #[test]
+    fn tenants_inherit_world_seed_unless_set() {
+        let world = Broker::experiment()
+            .seed(77)
+            .tenant(Broker::experiment().user("davida"))
+            .tenant(Broker::experiment().user("astro").seed(5))
+            .world()
+            .unwrap();
+        assert_eq!(world.tenant_cfg(0).seed, 77);
+        assert_eq!(world.tenant_cfg(1).seed, 77, "default seed inherits");
+        assert_eq!(world.tenant_cfg(2).seed, 5, "explicit seed sticks");
     }
 
     #[test]

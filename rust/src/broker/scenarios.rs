@@ -6,6 +6,11 @@
 //! [`crate::broker::ExperimentBuilder::seed`], so one scenario yields a
 //! whole family of trials). Run from the CLI with
 //! `nimrod run --scenario <name>`, list with `nimrod scenarios`.
+//!
+//! Multi-tenant presets (`contested-gusto`, `auction-rush`) compose extra
+//! tenants via [`crate::broker::ExperimentBuilder::tenant`]; finish them
+//! with `run_world()` (the CLI does this automatically when a scenario has
+//! more than one tenant).
 
 use super::{Broker, ExperimentBuilder};
 use crate::config::WorkloadConfig;
@@ -20,7 +25,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 7] = [
+pub const CATALOG: [ScenarioInfo; 9] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -57,6 +62,20 @@ pub const CATALOG: [ScenarioInfo; 7] = [
         summary: "scale stress: 5,400-machine synthetic grid (120 sites), \
                   50,000-job sweep, time-optimizing DBC — exercises the \
                   incremental O(changed) tick pipeline",
+    },
+    ScenarioInfo {
+        name: "contested-gusto",
+        summary: "multi-tenant: cost- vs time- vs deadline-only brokers \
+                  race their own 165-job studies on ONE shared GUSTO grid \
+                  — real contention, not the synthetic Poisson load \
+                  (finish with run --scenario or run_world())",
+    },
+    ScenarioInfo {
+        name: "auction-rush",
+        summary: "multi-tenant: 8 brokers with staggered 6-20 h deadlines \
+                  pile onto a demand-priced grid — owners reprice with \
+                  utilization, so every tenant's demand moves everyone's \
+                  quotes",
     },
 ];
 
@@ -113,6 +132,55 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
                 job_work_ref_h: 0.25,
                 ..WorkloadConfig::default()
             }),
+        // Three brokers, three policies, one grid: contention is real
+        // co-scheduled demand, and realized cost/makespan diverge by
+        // policy (the acceptance experiment for GridWorld).
+        "contested-gusto" => b
+            .ionization_study()
+            .deadline_h(15.0)
+            .policy("cost")
+            .user("rajkumar")
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida"),
+            )
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(12.0)
+                    .policy("deadline-only")
+                    .user("john"),
+            ),
+        // Eight brokers with staggered deadlines rushing a demand-priced
+        // grid: owners reprice with utilization (demand_slope), so each
+        // arrival raises everyone's quotes — the companion economy paper's
+        // "cost changes as competing experiments are put on the grid",
+        // driven by real tenants instead of a Poisson process.
+        "auction-rush" => {
+            let rush_plan = "parameter point integer range from 1 to 48\n\
+                             task main\nexecute chamber -p $point\nendtask";
+            let policies =
+                ["time", "cost", "deadline-only", "conservative-time"];
+            let mut b = b
+                .plan(rush_plan)
+                .deadline_h(6.0)
+                .policy("time")
+                .user("trader0")
+                .demand_pricing(0.8);
+            for k in 1..8usize {
+                b = b.tenant(
+                    Broker::experiment()
+                        .plan(rush_plan)
+                        .deadline_h(6.0 + 2.0 * k as f64)
+                        .policy(policies[k % policies.len()])
+                        .user(&format!("trader{k}")),
+                );
+            }
+            b
+        }
         other => bail!(
             "unknown scenario `{other}` (available: {})",
             names().join(", ")
@@ -140,5 +208,12 @@ mod tests {
     fn scenarios_stay_seedable() {
         let a = builder("gusto").unwrap().seed(9).config().seed;
         assert_eq!(a, 9);
+    }
+
+    #[test]
+    fn multi_tenant_presets_compose_tenants() {
+        assert_eq!(builder("contested-gusto").unwrap().tenant_count(), 3);
+        assert_eq!(builder("auction-rush").unwrap().tenant_count(), 8);
+        assert_eq!(builder("gusto").unwrap().tenant_count(), 1);
     }
 }

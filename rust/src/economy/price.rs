@@ -11,7 +11,12 @@
 //!   owners of faster machines typically (but not always) charge more;
 //! * a **peak multiplier** applied during the owner's local business hours
 //!   ("high @ daytime and low @ night");
-//! * optional **per-user discounts** negotiated out of band.
+//! * optional **per-user discounts** negotiated out of band;
+//! * an optional **demand slope** — the owner reprices with utilization of
+//!   the machine (tenant jobs + background claims), so "the cost changes as
+//!   other competing experiments are put on the grid" holds when real
+//!   co-scheduled brokers, not just the synthetic background process,
+//!   contend for a resource. Disabled (slope 0) by default.
 
 use crate::types::GridDollars;
 use crate::util::json::Json;
@@ -32,6 +37,11 @@ pub struct PriceModel {
     pub time_of_day: bool,
     /// Per-user rate multipliers (e.g. 0.8 = 20% discount).
     pub user_discounts: BTreeMap<String, f64>,
+    /// Demand-responsive repricing slope: the quoted rate is multiplied by
+    /// `1 + demand_slope × utilization` where utilization ∈ [0, 1] is the
+    /// fraction of the machine's CPUs occupied (all tenants' in-flight jobs
+    /// plus background competition claims). 0 disables demand pricing.
+    pub demand_slope: f64,
 }
 
 impl PriceModel {
@@ -42,6 +52,7 @@ impl PriceModel {
             peak_multiplier: 1.0,
             time_of_day: false,
             user_discounts: BTreeMap::new(),
+            demand_slope: 0.0,
         }
     }
 
@@ -62,6 +73,7 @@ impl PriceModel {
             peak_multiplier,
             time_of_day,
             user_discounts: BTreeMap::new(),
+            demand_slope: 0.0,
         }
     }
 
@@ -83,11 +95,23 @@ impl PriceModel {
         self.time_of_day && (PEAK_START_H..PEAK_END_H).contains(&local_hour)
     }
 
+    /// Demand-responsive premium multiplier for the given machine
+    /// `utilization` (fraction of CPUs occupied by tenants + competition):
+    /// 1.0 when idle or when demand pricing is off, up to
+    /// `1 + demand_slope` when fully occupied.
+    pub fn demand_premium(&self, utilization: f64) -> f64 {
+        if self.demand_slope <= 0.0 {
+            return 1.0;
+        }
+        1.0 + self.demand_slope * utilization.clamp(0.0, 1.0)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("base", Json::num(self.base_rate)),
             ("peak_mult", Json::num(self.peak_multiplier)),
             ("tod", Json::Bool(self.time_of_day)),
+            ("demand_slope", Json::num(self.demand_slope)),
             (
                 "discounts",
                 Json::Obj(
@@ -115,6 +139,7 @@ impl PriceModel {
             peak_multiplier: v.req_f64("peak_mult")?,
             time_of_day: v.get("tod").as_bool().unwrap_or(false),
             user_discounts,
+            demand_slope: v.get("demand_slope").as_f64().unwrap_or(0.0),
         })
     }
 }
@@ -137,6 +162,7 @@ mod tests {
             peak_multiplier: 2.5,
             time_of_day: true,
             user_discounts: BTreeMap::new(),
+            demand_slope: 0.0,
         };
         assert_eq!(p.rate_at(12.0, "u"), 2.5); // noon local = peak
         assert_eq!(p.rate_at(3.0, "u"), 1.0); // 3am local = off-peak
@@ -162,6 +188,7 @@ mod tests {
             peak_multiplier: 3.0,
             time_of_day: true,
             user_discounts: BTreeMap::new(),
+            demand_slope: 0.0,
         };
         p.user_discounts.insert("u".into(), 0.5);
         assert_eq!(p.rate_at(10.0, "u"), 1.5);
@@ -178,10 +205,29 @@ mod tests {
     fn json_roundtrip() {
         let mut p = PriceModel::owner_policy(1.3, 0.9, 2.2, true);
         p.user_discounts.insert("davida".into(), 0.75);
+        p.demand_slope = 0.6;
         let j = p.to_json().to_string();
         let back = PriceModel::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
         assert!((back.base_rate - p.base_rate).abs() < 1e-12);
         assert_eq!(back.time_of_day, p.time_of_day);
         assert_eq!(back.user_discounts.get("davida"), Some(&0.75));
+        assert!((back.demand_slope - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demand_premium_rises_with_utilization_and_defaults_off() {
+        // Slope 0 (the default everywhere): premium pinned at 1 so every
+        // pre-demand-pricing trace replays unchanged.
+        let flat = PriceModel::flat(2.0);
+        assert_eq!(flat.demand_premium(0.0), 1.0);
+        assert_eq!(flat.demand_premium(1.0), 1.0);
+        let mut p = PriceModel::flat(2.0);
+        p.demand_slope = 0.8;
+        assert_eq!(p.demand_premium(0.0), 1.0);
+        assert!((p.demand_premium(0.5) - 1.4).abs() < 1e-12);
+        assert!((p.demand_premium(1.0) - 1.8).abs() < 1e-12);
+        // Utilization is clamped into [0, 1].
+        assert!((p.demand_premium(3.0) - 1.8).abs() < 1e-12);
+        assert_eq!(p.demand_premium(-1.0), 1.0);
     }
 }

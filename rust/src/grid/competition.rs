@@ -79,10 +79,18 @@ impl Competition {
     /// resources. Returns its departure time and the resources it claimed
     /// (whose premium/slots just changed — the views an incremental driver
     /// must dirty).
+    ///
+    /// `occupied` is the per-resource count of CPUs already held by real
+    /// tenants (all experiments' in-flight jobs, indexed by `ResourceId`;
+    /// missing entries read as 0). Competitors only claim genuinely free
+    /// CPUs, so `Σ tenants' in-flight + claims ≤ CPUs` is a per-resource
+    /// invariant, not a hope — previously arrivals ignored the foreground
+    /// experiment and could oversubscribe a machine.
     pub fn arrive(
         &mut self,
         tb: &Testbed,
         now: SimTime,
+        occupied: &[u32],
     ) -> (SimTime, Vec<ResourceId>) {
         let mut remaining =
             self.rng.exponential(self.model.mean_cpus).round().max(1.0) as u32;
@@ -92,7 +100,11 @@ impl Competition {
             guard += 1;
             let idx = self.rng.below(tb.resources.len());
             let spec = &tb.resources[idx];
-            let free = spec.cpus.saturating_sub(self.claimed[idx]);
+            let busy = occupied.get(idx).copied().unwrap_or(0);
+            let free = spec
+                .cpus
+                .saturating_sub(self.claimed[idx])
+                .saturating_sub(busy);
             if free == 0 {
                 continue;
             }
@@ -138,11 +150,24 @@ impl Competition {
         self.active.len()
     }
 
-    /// Slots left for the foreground experiment on a resource.
-    pub fn free_slots(&self, tb: &Testbed, rid: ResourceId, base_slots: u32) -> u32 {
-        let spec = tb.spec(rid);
-        let free_cpus = spec.cpus.saturating_sub(self.claimed(rid));
-        base_slots.min(free_cpus)
+    /// Slots left for one experiment on a resource, accounting for **both**
+    /// occupancy sources in one place — synthetic competition claims and
+    /// the other tenants' real in-flight jobs (`foreign_in_flight`) — so no
+    /// driver can double-count or miss one of them. Single-tenant drivers
+    /// pass `foreign_in_flight = 0` and get the legacy behaviour.
+    pub fn free_slots(
+        &self,
+        tb: &Testbed,
+        rid: ResourceId,
+        base_slots: u32,
+        foreign_in_flight: u32,
+    ) -> u32 {
+        visible_slots(
+            base_slots,
+            tb.spec(rid).cpus,
+            self.claimed(rid),
+            foreign_in_flight,
+        )
     }
 
     /// Demand premium multiplier on the owner's quoted rate: 1.0 when idle,
@@ -155,6 +180,22 @@ impl Competition {
         let frac = self.claimed(rid) as f64 / spec.cpus as f64;
         1.0 + (DEMAND_PREMIUM_MAX - 1.0) * frac.min(1.0)
     }
+}
+
+/// The one formula for "how many GRAM slots can this experiment still
+/// see": the queue's admit limit, capped by CPUs not claimed by
+/// competitors, minus CPUs held by other tenants' in-flight jobs. Shared
+/// by [`Competition::free_slots`] and the no-competition path in
+/// [`crate::sim::GridWorld`] so both agree by construction.
+pub fn visible_slots(
+    base_slots: u32,
+    cpus: u32,
+    competition_claimed: u32,
+    foreign_in_flight: u32,
+) -> u32 {
+    base_slots
+        .min(cpus.saturating_sub(competition_claimed))
+        .saturating_sub(foreign_in_flight)
 }
 
 #[cfg(test)]
@@ -174,7 +215,7 @@ mod tests {
         let total_before: u32 =
             (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
         assert_eq!(total_before, 0);
-        let (departs, claimed) = comp.arrive(&tb, 0.0);
+        let (departs, claimed) = comp.arrive(&tb, 0.0, &[]);
         assert!(comp.active_count() == 1);
         assert!(!claimed.is_empty(), "arrival must report claimed rids");
         for rid in &claimed {
@@ -194,7 +235,7 @@ mod tests {
     fn claims_never_exceed_cpus() {
         let (tb, mut comp) = setup();
         for k in 0..50 {
-            comp.arrive(&tb, k as f64);
+            comp.arrive(&tb, k as f64, &[]);
         }
         for spec in &tb.resources {
             assert!(
@@ -214,7 +255,7 @@ mod tests {
         assert_eq!(comp.demand_premium(&tb, rid), 1.0);
         // Saturate the grid with competitors.
         for k in 0..100 {
-            comp.arrive(&tb, k as f64);
+            comp.arrive(&tb, k as f64, &[]);
         }
         let contended = tb
             .resources
@@ -224,8 +265,57 @@ mod tests {
         let premium = comp.demand_premium(&tb, contended.id);
         assert!(premium > 1.0 && premium <= DEMAND_PREMIUM_MAX);
         // Slots shrink accordingly.
-        let slots = comp.free_slots(&tb, contended.id, contended.cpus);
+        let slots = comp.free_slots(&tb, contended.id, contended.cpus, 0);
         assert!(slots < contended.cpus);
+    }
+
+    #[test]
+    fn arrivals_respect_tenant_occupancy() {
+        // With every CPU already held by tenants, competitors can claim
+        // nothing: the global slot-conservation invariant has no synthetic
+        // loophole.
+        let (tb, mut comp) = setup();
+        let full: Vec<u32> = tb.resources.iter().map(|s| s.cpus).collect();
+        for k in 0..20 {
+            let (_, claimed) = comp.arrive(&tb, k as f64, &full);
+            assert!(claimed.is_empty(), "claimed through full occupancy");
+        }
+        let total: u32 = (0..tb.resources.len()).map(|i| comp.claimed[i]).sum();
+        assert_eq!(total, 0);
+        // Partial occupancy: claims + occupancy never exceed CPUs.
+        let half: Vec<u32> = tb.resources.iter().map(|s| s.cpus / 2).collect();
+        for k in 0..50 {
+            comp.arrive(&tb, k as f64, &half);
+        }
+        for spec in &tb.resources {
+            let i = spec.id.0 as usize;
+            assert!(
+                comp.claimed(spec.id) + half[i] <= spec.cpus,
+                "{}: {} + {} > {}",
+                spec.name,
+                comp.claimed(spec.id),
+                half[i],
+                spec.cpus
+            );
+        }
+    }
+
+    #[test]
+    fn free_slots_subtracts_foreign_tenants() {
+        let (tb, comp) = setup();
+        let spec = &tb.resources[0];
+        let base = spec.cpus;
+        assert_eq!(comp.free_slots(&tb, spec.id, base, 0), base);
+        assert_eq!(
+            comp.free_slots(&tb, spec.id, base, 3),
+            base.saturating_sub(3)
+        );
+        // Foreign occupancy can zero a machine out, never underflow.
+        assert_eq!(comp.free_slots(&tb, spec.id, base, base + 5), 0);
+        // The shared formula is the same one the no-competition path uses.
+        assert_eq!(visible_slots(8, 10, 4, 2), 4);
+        assert_eq!(visible_slots(8, 10, 0, 2), 6);
+        assert_eq!(visible_slots(8, 10, 10, 0), 0);
     }
 
     #[test]

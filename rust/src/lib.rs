@@ -46,6 +46,14 @@
 //! [`broker::ScheduleAdvisor`]; scheduling policies are constructed through
 //! the open, parameterized [`broker::PolicyRegistry`].
 //!
+//! Multi-tenant brokering — the paper's *many users competing under a
+//! computational economy* — composes through
+//! [`broker::ExperimentBuilder::tenant`]: N full experiments (own deadline,
+//! budget, policy, journal) share one [`sim::GridWorld`] where tenant
+//! occupancy shrinks everyone's visible slots and demand-priced owners
+//! reprice with utilization. Try
+//! `Broker::scenario("contested-gusto")?.run_world()?`.
+//!
 //! See `examples/quickstart.rs` for the plan-language path and
 //! `examples/ionization_study.rs` for live execution end to end.
 

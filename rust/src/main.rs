@@ -188,7 +188,9 @@ fn print_usage() {
     println!(
         "nimrod — Nimrod/G grid resource management and scheduling\n\n\
          usage:\n  nimrod run --plan FILE | --scenario NAME [--deadline-h H] [--budget G$]\n             [--policy NAME[?key=value]] [--seed S] [--scale X] [--user U]\n             [--journal FILE] [--csv DIR]\n  nimrod resume --journal FILE [--policy NAME] [--scale X] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod scenarios\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--seed S] [--workdir DIR]\n\n\
-         global flags: --help (per subcommand), --verbose"
+         global flags: --help (per subcommand), --verbose\n\n\
+         multi-tenant: `nimrod run --scenario contested-gusto` puts N competing\n\
+         brokers on one shared grid and reports per-tenant + fairness metrics"
     );
 }
 
@@ -234,7 +236,11 @@ fn cmd_run(opts: &Opts) -> Result<()> {
         println!(
             "nimrod run — simulate an experiment on the GUSTO-like testbed\n\n\
              usage: nimrod run --plan FILE | --scenario NAME [flags]\n\n\
-             flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery\n  --csv DIR          write timeline/per-resource CSVs"
+             flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery (single-tenant)\n  --csv DIR          write timeline/per-resource CSVs\n\n\
+             multi-tenant scenarios (N brokers on one shared grid, per-tenant\n\
+             report + fairness/price metrics):\n  nimrod run --scenario contested-gusto\n  nimrod run --scenario auction-rush\n\
+             (--seed/--scale affect the whole world; --policy/--deadline-h/\n\
+             --budget/--user retarget tenant 0 only)"
         );
         return Ok(());
     }
@@ -276,10 +282,49 @@ fn cmd_run(opts: &Opts) -> Result<()> {
         let info = scenarios::describe(name).expect("scenario resolved above");
         println!("scenario {}: {}", info.name, info.summary);
     }
+    // Multi-tenant scenarios (contested-gusto, auction-rush) run the whole
+    // shared-grid world and report per tenant.
+    if b.tenant_count() > 1 {
+        if opts.value("journal")?.is_some() {
+            bail!("--journal is single-tenant only (multi-tenant scenarios have one journal per tenant, unsupported from the CLI)");
+        }
+        // Per-tenant envelope flags only retarget the primary broker; say
+        // so instead of letting the user believe all tenants changed.
+        // (--seed reseeds the whole world; --scale rescales the shared
+        // grid.)
+        for flag in ["policy", "deadline-h", "budget", "user"] {
+            if opts.value(flag)?.is_some() {
+                println!(
+                    "note: --{flag} applies to tenant 0 only; the other {} tenants keep their preset envelopes",
+                    b.tenant_count() - 1
+                );
+            }
+        }
+        let world = b.world()?;
+        println!(
+            "world: {} tenants on {} resources / {} cpus across {} sites",
+            world.tenant_count(),
+            world.tb.resources.len(),
+            world.tb.total_cpus(),
+            world.tb.sites.len()
+        );
+        let wr = world.run_world();
+        println!("{}", wr.summary());
+        if let Some(dir) = opts.path("csv")? {
+            std::fs::create_dir_all(&dir)?;
+            std::fs::write(dir.join("run_tenants.csv"), wr.per_tenant_csv())?;
+            std::fs::write(dir.join("run_prices.csv"), wr.price_csv())?;
+            println!(
+                "wrote {}/{{run_tenants,run_prices}}.csv",
+                dir.display()
+            );
+        }
+        return Ok(());
+    }
     let mut sim = b.simulate()?;
     println!(
         "experiment: {} jobs, deadline {:.1} h, policy {}, budget {}",
-        sim.exp.jobs.len(),
+        sim.exp().jobs.len(),
         cfg.deadline / HOUR,
         cfg.policy,
         cfg.budget
@@ -288,12 +333,13 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     );
     println!(
         "testbed: {} resources / {} cpus across {} sites",
-        sim.tb.resources.len(),
-        sim.tb.total_cpus(),
-        sim.tb.sites.len()
+        sim.tb().resources.len(),
+        sim.tb().total_cpus(),
+        sim.tb().sites.len()
     );
     if let Some(journal_path) = opts.path("journal")? {
-        let journal = Journal::create(&journal_path, &plan_src, cfg.seed, &sim.exp)?;
+        let journal =
+            Journal::create(&journal_path, &plan_src, cfg.seed, sim.exp())?;
         sim = sim.with_journal(journal);
     }
     let report = sim.run();

@@ -1,5 +1,7 @@
 //! Experiment metrics: the processors-in-use timeline (the y-axis of the
-//! paper's Figure 3), cost/makespan summaries, and CSV emission.
+//! paper's Figure 3), cost/makespan summaries, CSV emission, and — for
+//! multi-tenant worlds — the per-tenant breakdown with cross-tenant
+//! fairness and price-trajectory figures ([`WorldReport`]).
 
 use crate::types::{GridDollars, SimTime};
 use std::collections::BTreeMap;
@@ -114,6 +116,11 @@ pub struct Report {
 }
 
 impl Report {
+    /// Total CPU-seconds consumed across resources (completed jobs).
+    pub fn cpu_seconds(&self) -> f64 {
+        self.per_resource.values().map(|u| u.cpu_seconds).sum()
+    }
+
     /// One-line summary (CLI output).
     pub fn summary(&self) -> String {
         format!(
@@ -153,6 +160,146 @@ impl Report {
                 u.cpu_seconds / 3600.0,
                 u.cost
             );
+        }
+        out
+    }
+}
+
+/// One tenant's outcome inside a multi-tenant world run.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// Grid identity the tenant ran as.
+    pub user: String,
+    /// Policy spec the tenant scheduled with (e.g. `cost?safety=0.9`).
+    pub policy: String,
+    pub report: Report,
+}
+
+/// Final report for a [`crate::sim::GridWorld`] run: every tenant's
+/// [`Report`] plus the cross-tenant figures a shared grid produces —
+/// fairness of the CPU split and the demand-driven price trajectory.
+#[derive(Debug, Clone)]
+pub struct WorldReport {
+    pub tenants: Vec<TenantOutcome>,
+    /// Simulator events processed across the whole world.
+    pub events: u64,
+    /// Mean posted effective G$/CPU-second across up machines (competition
+    /// + demand premiums included), sampled at each directory refresh.
+    pub price_index: Vec<(SimTime, GridDollars)>,
+    /// Highest combined premium factor observed at any sample (1.0 = no
+    /// repricing ever happened).
+    pub peak_premium: f64,
+}
+
+impl Default for WorldReport {
+    /// Manual impl so `peak_premium` starts at its documented no-repricing
+    /// value of 1.0 (a derived 0.0 would read as "below posted rates").
+    fn default() -> Self {
+        WorldReport {
+            tenants: Vec::new(),
+            events: 0,
+            price_index: Vec::new(),
+            peak_premium: 1.0,
+        }
+    }
+}
+
+impl WorldReport {
+    /// Collapse a single-tenant world into its tenant's report (the
+    /// [`crate::sim::GridSimulation`] return path).
+    pub fn into_single(mut self) -> Report {
+        assert_eq!(self.tenants.len(), 1, "into_single on a multi-tenant run");
+        self.tenants.remove(0).report
+    }
+
+    /// Jain's fairness index over the tenants' realized CPU-second shares:
+    /// 1.0 when every tenant got the same grid share, → 1/N under total
+    /// capture by one tenant. 1.0 for empty/idle worlds by convention.
+    pub fn fairness_jain(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .tenants
+            .iter()
+            .map(|t| t.report.cpu_seconds())
+            .collect();
+        let n = xs.len() as f64;
+        let sum: f64 = xs.iter().sum();
+        let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+        if n == 0.0 || sum <= 0.0 || sumsq <= 0.0 {
+            return 1.0;
+        }
+        (sum * sum) / (n * sumsq)
+    }
+
+    /// Relative swing of the price index over the run: `max/min - 1`
+    /// (0 when prices never moved, or with fewer than two samples).
+    pub fn price_swing(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &(_, p) in &self.price_index {
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo <= 0.0 {
+            return 0.0;
+        }
+        hi / lo - 1.0
+    }
+
+    /// Multi-line summary: one line per tenant plus the cross-tenant
+    /// fairness/pricing figures (CLI output).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "tenant {:<12} [{}] {}",
+                t.user,
+                t.policy,
+                t.report.summary()
+            );
+        }
+        let _ = write!(
+            out,
+            "world: {} tenants, {} events, fairness {:.3} (Jain), price swing {:+.1}%, peak premium {:.2}x",
+            self.tenants.len(),
+            self.events,
+            self.fairness_jain(),
+            self.price_swing() * 100.0,
+            self.peak_premium,
+        );
+        out
+    }
+
+    /// CSV of per-tenant outcomes.
+    pub fn per_tenant_csv(&self) -> String {
+        let mut out = String::from(
+            "user,policy,jobs_total,jobs_completed,jobs_failed,makespan_h,deadline_h,deadline_met,cost_gd,cpu_hours\n",
+        );
+        for t in &self.tenants {
+            let r = &t.report;
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{:.3},{:.1},{},{:.2},{:.3}",
+                t.user,
+                t.policy,
+                r.jobs_total,
+                r.jobs_completed,
+                r.jobs_failed,
+                r.makespan_s / 3600.0,
+                r.deadline_s / 3600.0,
+                r.deadline_met,
+                r.total_cost,
+                r.cpu_seconds() / 3600.0,
+            );
+        }
+        out
+    }
+
+    /// CSV of the price trajectory: `hours,mean_rate_gd_per_cpu_s` rows.
+    pub fn price_csv(&self) -> String {
+        let mut out = String::from("hours,mean_rate_gd_per_cpu_s\n");
+        for &(t, p) in &self.price_index {
+            let _ = writeln!(out, "{:.3},{p:.6}", t / 3600.0);
         }
         out
     }
@@ -241,5 +388,60 @@ mod tests {
         let pr = r.per_resource_csv();
         assert!(pr.contains("lemon0.anl.gov,2,0,1.000,12.50"));
         assert!(r.summary().contains("met"));
+    }
+
+    fn tenant(user: &str, cpu_s: f64) -> TenantOutcome {
+        let mut report = Report::default();
+        report.per_resource.insert(
+            "m".into(),
+            ResourceUsage {
+                jobs_completed: 1,
+                jobs_failed: 0,
+                cpu_seconds: cpu_s,
+                cost: 1.0,
+            },
+        );
+        TenantOutcome {
+            user: user.into(),
+            policy: "cost".into(),
+            report,
+        }
+    }
+
+    #[test]
+    fn jain_fairness_bounds() {
+        let even = WorldReport {
+            tenants: vec![tenant("a", 100.0), tenant("b", 100.0)],
+            ..Default::default()
+        };
+        assert!((even.fairness_jain() - 1.0).abs() < 1e-12);
+        let skewed = WorldReport {
+            tenants: vec![tenant("a", 1000.0), tenant("b", 0.0)],
+            ..Default::default()
+        };
+        assert!((skewed.fairness_jain() - 0.5).abs() < 1e-12);
+        // Empty world: 1.0 by convention, never NaN.
+        assert_eq!(WorldReport::default().fairness_jain(), 1.0);
+    }
+
+    #[test]
+    fn price_swing_and_csvs() {
+        let wr = WorldReport {
+            tenants: vec![tenant("a", 10.0)],
+            events: 5,
+            price_index: vec![(0.0, 1.0), (3600.0, 1.5), (7200.0, 1.2)],
+            peak_premium: 1.5,
+        };
+        assert!((wr.price_swing() - 0.5).abs() < 1e-12);
+        assert!(wr.summary().contains("fairness"));
+        assert!(wr.summary().contains("tenant a"));
+        let csv = wr.per_tenant_csv();
+        assert!(csv.starts_with("user,policy,"));
+        assert_eq!(csv.lines().count(), 2);
+        let pcsv = wr.price_csv();
+        assert_eq!(pcsv.lines().count(), 4);
+        assert!(pcsv.contains("1.000,1.500000"));
+        // No samples ⇒ no swing, not NaN.
+        assert_eq!(WorldReport::default().price_swing(), 0.0);
     }
 }

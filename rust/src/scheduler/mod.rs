@@ -164,7 +164,15 @@ pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
         .ok()
 }
 
-/// All policy names (benches iterate these).
+/// All built-in policy names (benches and smoke tests iterate these).
+///
+/// Kept as a const so `no_std`-ish call sites and array iteration stay
+/// cheap, but the single source of truth is
+/// [`crate::broker::PolicyRegistry::with_builtins`]: the
+/// `all_policies_is_exactly_the_registry` test asserts set equality in
+/// both directions, so registering a new policy without listing it here
+/// (or vice versa) fails the build's test run instead of silently missing
+/// benches/smokes.
 pub const ALL_POLICIES: [&str; 8] = [
     "cost",
     "time",
@@ -208,6 +216,25 @@ mod tests {
         assert!(by_name("nope").is_none());
         // The shim rides on the registry, so parameter specs work too.
         assert_eq!(by_name("cost?safety=0.9").unwrap().name(), "cost");
+    }
+
+    #[test]
+    fn all_policies_is_exactly_the_registry() {
+        // The de-drift guard: ALL_POLICIES and the builtin registry must
+        // name the same set, both directions, so a policy added to one
+        // cannot silently miss the other (benches, smokes, CLI listings).
+        let mut listed: Vec<&str> = ALL_POLICIES.to_vec();
+        listed.sort_unstable();
+        let reg = crate::broker::PolicyRegistry::with_builtins();
+        let registered = reg.names(); // BTreeMap keys: already sorted
+        assert_eq!(
+            listed, registered,
+            "scheduler::ALL_POLICIES drifted from PolicyRegistry::with_builtins()"
+        );
+        // And every listed name constructs a policy answering to it.
+        for name in ALL_POLICIES {
+            assert_eq!(reg.resolve(name).unwrap().name(), name);
+        }
     }
 
     #[test]

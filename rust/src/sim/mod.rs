@@ -1,17 +1,24 @@
-//! The discrete-event experiment driver: Nimrod/G running over the
+//! The discrete-event experiment drivers: Nimrod/G running over the
 //! simulated GUSTO testbed in virtual time.
 //!
-//! Wires every component the paper's Figure 2 shows: the parametric engine
-//! ([`crate::engine`]) holds job state; each scheduler tick discovers
-//! resources through MDS, quotes prices from the economy, and hands the
-//! assembled views to the shared [`crate::broker::ScheduleAdvisor`] (which
-//! runs the configured policy and reconciles via the dispatcher); GRAM job
-//! managers enforce queue semantics; GASS + the cluster proxy time the
-//! staging; background load and availability churn perturb everything.
+//! The simulation core lives in [`world`]: a shared [`GridWorld`] (testbed
+//! + MDS + event queue + pricing + residual background competition) hosts
+//! **N concurrent tenants**, each a full experiment with its own engine,
+//! ledger, rate estimator, policy, deadline and journal. Contention is
+//! real — tenant A's in-flight jobs shrink the `free_slots` tenant B sees,
+//! and demand-priced owners reprice with total machine utilization.
 //!
+//! [`GridSimulation`] is the single-tenant surface the rest of the crate
+//! (and the paper's Figure-3 experiments) use: a thin wrapper over a
+//! one-tenant world, bit-identical to the pre-world driver at equal seeds
+//! for competition-free configurations. (With background competition
+//! enabled, traces intentionally differ from the pre-world driver:
+//! competitor arrivals now respect the experiment's own occupancy instead
+//! of oversubscribing machines — see
+//! [`crate::grid::competition::Competition::arrive`].)
 //! Construct through [`crate::broker::ExperimentBuilder`]
-//! (`Broker::experiment()…simulate()`); the [`GridSimulation::new`] /
-//! [`GridSimulation::gusto_ionization`] constructors remain for direct use.
+//! (`Broker::experiment()…simulate()`); multi-tenant worlds come from
+//! `Broker::experiment()…tenant(..)…world()`.
 //!
 //! Per-job event chain:
 //!
@@ -21,15 +28,16 @@
 //! ```
 //!
 //! **Incremental view table.** The scheduler tick does not rebuild every
-//! [`ResourceView`] from an MDS sweep: the simulation keeps one persistent
-//! view per resource and the events that actually change scheduler-visible
-//! state dirty exactly the entries they touch — an MDS refresh dirties only
-//! records whose up/load changed (outages and recoveries become visible
-//! there, preserving the paper's stale-directory semantics), job
-//! dispatch/start/completion/failure touches the one resource it ran on,
-//! competitor arrivals/departures touch the claimed machines, and owners
-//! with time-of-day pricing are re-marked only when their local clock
-//! crosses an hour boundary. Each tick then
+//! [`crate::scheduler::ResourceView`] from an MDS sweep: each tenant keeps
+//! one persistent view per resource and the events that actually change
+//! scheduler-visible state dirty exactly the entries they touch — an MDS
+//! refresh dirties only records whose up/load changed (outages and
+//! recoveries become visible there, preserving the paper's stale-directory
+//! semantics), any tenant's job dispatch/start/completion/failure touches
+//! the one resource it ran on (in every tenant's table: occupancy and
+//! demand premiums are shared state), competitor arrivals/departures touch
+//! the claimed machines, and owners with time-of-day pricing are re-marked
+//! only when their local clock crosses an hour boundary. Each tick then
 //! refreshes the dirty entries (O(changed), not O(resources)) before
 //! handing the table to the shared advisor, which is what lets a quiet
 //! 10k-machine grid tick in near-constant time (see
@@ -39,107 +47,25 @@
 //! identical traces (see `rust/tests/`).
 
 pub mod live;
+pub mod world;
 
-use crate::broker::{ScheduleAdvisor, TickCtx};
+pub use world::{GridWorld, TenantSetup};
+
+use crate::broker::ScheduleAdvisor;
 use crate::config::ExperimentConfig;
-use crate::dispatcher::Action;
 use crate::economy::Ledger;
 use crate::engine::journal::Journal;
-use crate::engine::{Experiment, JobState};
-use crate::grid::competition::Competition;
-use crate::grid::dynamics::{ResourceDyn, LOAD_UPDATE_PERIOD_S};
-use crate::grid::gass::Gass;
-use crate::grid::mds::{Mds, MDS_REFRESH_PERIOD_S};
-use crate::grid::proxy::ClusterProxy;
-use crate::grid::testbed::{local_hour, Testbed};
-use crate::grid::JobManager;
-use crate::metrics::{Report, ResourceUsage};
+use crate::engine::Experiment;
+use crate::grid::testbed::Testbed;
+use crate::metrics::Report;
 use crate::plan::JobSpec;
-use crate::scheduler::ResourceView;
-use crate::simtime::EventQueue;
-use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
-use crate::util::rng::Rng;
-use crate::workload::WorkSampler;
-use std::collections::BTreeMap;
+use crate::types::SimTime;
 
-/// Simulation events.
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Ev {
-    /// Scheduler tick (discovery → selection → dispatch).
-    Tick,
-    /// Directory refresh.
-    MdsRefresh,
-    /// Background-load AR(1) step on all resources.
-    LoadUpdate,
-    /// Stage-in finished; hand the job to GRAM.
-    StagedIn { rid: ResourceId, jid: JobId },
-    /// GRAM started the job (queue delay elapsed).
-    BeginExec { rid: ResourceId, jid: JobId },
-    /// Execution + stage-out finished.
-    Complete { rid: ResourceId, jid: JobId },
-    /// Availability churn.
-    Fail { rid: ResourceId },
-    Recover { rid: ResourceId },
-    /// A competing experiment lands on the grid (paper §3).
-    CompetitorArrive,
-    /// Competing experiments holding until `now` leave.
-    CompetitorDepart,
-}
-
-/// Per-in-flight-job bookkeeping.
-#[derive(Debug, Clone, Copy)]
-struct InFlight {
-    dispatched_at: SimTime,
-    exec_started: Option<SimTime>,
-    /// G$/CPU-second locked at execution start.
-    rate: GridDollars,
-    /// Work drawn for this job, reference CPU-hours.
-    work_ref_h: f64,
-    /// CPU seconds this job will consume on its machine.
-    cpu_s: f64,
-}
-
-/// The simulation. Construct with [`GridSimulation::new`], call
-/// [`GridSimulation::run`] for the final [`Report`].
+/// The single-tenant simulation: the N = 1 case of [`GridWorld`].
+/// Construct with [`GridSimulation::new`], call [`GridSimulation::run`] for
+/// the final [`Report`].
 pub struct GridSimulation {
-    pub tb: Testbed,
-    cfg: ExperimentConfig,
-    dyns: Vec<ResourceDyn>,
-    mds: Mds,
-    gass: Gass,
-    proxy: ClusterProxy,
-    managers: Vec<JobManager>,
-    pub exp: Experiment,
-    pub ledger: Ledger,
-    advisor: ScheduleAdvisor,
-    sampler: WorkSampler,
-    q: EventQueue<Ev>,
-    rng: Rng,
-    busy_cpus: u32,
-    inflight: BTreeMap<JobId, InFlight>,
-    report: Report,
-    journal: Option<Journal>,
-    /// Background competing-experiment process, if configured.
-    competition: Option<Competition>,
-    /// Stop even if jobs remain (budget exhaustion, dead grid).
-    hard_stop: SimTime,
-    /// Persistent per-resource view table (index = ResourceId). Entries
-    /// are rebuilt only when marked dirty by a state-changing event.
-    views: Vec<ResourceView>,
-    view_dirty: Vec<bool>,
-    dirty_queue: Vec<u32>,
-    /// Static per-resource authorization for `cfg.user`; unauthorized
-    /// entries stay zeroed forever and are never marked.
-    authorized: Vec<bool>,
-    /// Authorized time-of-day-priced resources grouped by site, with the
-    /// site's hour phase (start hour + tz offset) — the only quotes that
-    /// move on their own, and only when the site's local clock crosses an
-    /// integer hour.
-    tod_by_site: Vec<(f64, Vec<u32>)>,
-    /// Virtual time of the previous scheduler tick (repricing check).
-    last_tick_t: SimTime,
-    /// Benchmark baseline: rebuild every entry on every tick.
-    full_rebuild: bool,
+    world: GridWorld,
 }
 
 impl GridSimulation {
@@ -163,116 +89,9 @@ impl GridSimulation {
         cfg: ExperimentConfig,
         advisor: ScheduleAdvisor,
     ) -> Self {
-        let mut rng = Rng::new(cfg.seed);
-        let dyns: Vec<ResourceDyn> = tb
-            .resources
-            .iter()
-            .map(|s| ResourceDyn::new(s, &mut rng))
-            .collect();
-        let mds = Mds::new(&tb, &dyns);
-        let managers = tb.resources.iter().map(JobManager::new).collect();
-        let gass = Gass::new(&tb);
-        let jobs_total = specs.len() as u32;
-        let exp = Experiment::new(
-            specs,
-            cfg.deadline,
-            cfg.budget,
-            &cfg.user,
-            cfg.max_attempts,
-        );
-        let ledger = Ledger::new(cfg.budget);
-        let sampler = WorkSampler::new(&cfg.workload, cfg.seed ^ 0xF00D);
-        let mut q = EventQueue::new();
-        q.schedule_at(0.0, Ev::Tick);
-        q.schedule_at(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
-        q.schedule_at(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
-        let competition = cfg.competition.clone().map(|model| {
-            Competition::new(&tb, model, rng.fork(0xC0117E7E))
-        });
-        if competition.is_some() {
-            q.schedule_at(1.0, Ev::CompetitorArrive);
+        GridSimulation {
+            world: GridWorld::new(tb, vec![TenantSetup { cfg, specs, advisor }]),
         }
-        let hard_stop = cfg.deadline * 4.0 + 48.0 * HOUR;
-        // Persistent view table: who this user may schedule on (static),
-        // which owners reprice by local hour, and one zeroed view per
-        // resource that the first tick fills in.
-        let authorized: Vec<bool> = tb
-            .resources
-            .iter()
-            .map(|r| r.auth.allows(&cfg.user))
-            .collect();
-        let mut tod_per_site: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
-        for r in &tb.resources {
-            if authorized[r.id.0 as usize] && r.price.time_of_day {
-                tod_per_site.entry(r.site.0).or_default().push(r.id.0);
-            }
-        }
-        let tod_by_site: Vec<(f64, Vec<u32>)> = tod_per_site
-            .into_iter()
-            .map(|(sid, rids)| {
-                let theta = cfg.start_utc_hour
-                    + tb.sites[sid as usize].tz_offset_hours;
-                (theta, rids)
-            })
-            .collect();
-        let views: Vec<ResourceView> = tb
-            .resources
-            .iter()
-            .map(|r| ResourceView {
-                id: r.id,
-                slots: 0,
-                planning_speed: 0.0,
-                rate: 0.0,
-                in_flight: 0,
-                measured_jphps: None,
-                batch_queue: false,
-            })
-            .collect();
-        let n = tb.resources.len();
-        let mut sim = GridSimulation {
-            report: Report {
-                jobs_total,
-                deadline_s: cfg.deadline,
-                ..Default::default()
-            },
-            tb,
-            cfg,
-            dyns,
-            mds,
-            gass,
-            proxy: ClusterProxy::default(),
-            managers,
-            exp,
-            ledger,
-            advisor,
-            sampler,
-            q,
-            rng,
-            busy_cpus: 0,
-            inflight: BTreeMap::new(),
-            journal: None,
-            competition,
-            hard_stop,
-            views,
-            view_dirty: vec![false; n],
-            dirty_queue: Vec::with_capacity(n),
-            authorized,
-            tod_by_site,
-            last_tick_t: 0.0,
-            full_rebuild: false,
-        };
-        // Seed availability churn per resource.
-        for i in 0..sim.tb.resources.len() {
-            let spec = sim.tb.resources[i].clone();
-            let t = sim.dyns[i].draw_uptime(&spec);
-            sim.q.schedule_at(t, Ev::Fail { rid: spec.id });
-        }
-        // Everything schedulable starts dirty; the first tick fills the
-        // table from the t = 0 directory snapshot.
-        for i in 0..sim.tb.resources.len() {
-            sim.mark_view(ResourceId(i as u32));
-        }
-        sim
     }
 
     /// Convenience: paper-scale Figure-3 experiment over the GUSTO testbed.
@@ -284,488 +103,65 @@ impl GridSimulation {
 
     /// Attach a persistence journal (restart support).
     pub fn with_journal(mut self, journal: Journal) -> Self {
-        self.journal = Some(journal);
+        self.world.attach_journal(0, journal);
         self
     }
 
     /// Replace the experiment (restart-from-journal path).
     pub fn with_experiment(mut self, exp: Experiment) -> Self {
-        self.report.jobs_total = exp.jobs.len() as u32;
-        self.exp = exp;
+        self.world.replace_experiment(0, exp);
         self
     }
 
     /// Current virtual time.
     pub fn now(&self) -> SimTime {
-        self.q.now()
+        self.world.now()
     }
 
-    /// Posted G$/CPU-second on `rid` for the experiment user right now
-    /// (owner price at the owner's local hour, before demand premium).
-    fn quote(&self, rid: ResourceId) -> GridDollars {
-        let spec = self.tb.spec(rid);
-        let lh = local_hour(
-            self.cfg.start_utc_hour + self.q.now() / 3600.0,
-            self.tb.site(spec.site).tz_offset_hours,
-        );
-        spec.price.rate_at(lh, &self.cfg.user)
+    /// The experiment engine (job table + envelope).
+    pub fn exp(&self) -> &Experiment {
+        self.world.exp(0)
     }
 
-    /// Effective rate including any competition demand premium — what jobs
-    /// are actually billed at.
-    fn effective_rate(&self, rid: ResourceId) -> GridDollars {
-        let premium = self
-            .competition
-            .as_ref()
-            .map(|c| c.demand_premium(&self.tb, rid))
-            .unwrap_or(1.0);
-        self.quote(rid) * premium
+    /// The spend ledger.
+    pub fn ledger(&self) -> &Ledger {
+        self.world.ledger(0)
+    }
+
+    /// The testbed this simulation runs over.
+    pub fn tb(&self) -> &Testbed {
+        &self.world.tb
+    }
+
+    /// The underlying one-tenant world (shared-grid introspection).
+    pub fn world(&self) -> &GridWorld {
+        &self.world
     }
 
     /// Run to completion (or hard stop); consume the sim, return the report.
-    pub fn run(mut self) -> Report {
-        while !self.exp.finished() {
-            if self.q.now() > self.hard_stop {
-                break;
-            }
-            let Some((_, ev)) = self.q.pop() else {
-                break; // queue drained with jobs unfinished (dead grid)
-            };
-            self.handle(ev);
-        }
-        self.finalize()
+    pub fn run(self) -> Report {
+        self.world.run_world().into_single()
     }
 
     /// Run until `t` (for incremental inspection in tests/examples).
     pub fn run_until(&mut self, t: SimTime) {
-        while !self.exp.finished() {
-            match self.q.next_time() {
-                Some(nt) if nt <= t => {
-                    let (_, ev) = self.q.pop().unwrap();
-                    self.handle(ev);
-                }
-                _ => break,
-            }
-        }
+        self.world.run_until(t);
     }
 
     /// Finalize the report after the event loop.
-    pub fn finalize(mut self) -> Report {
-        self.report.makespan_s = self.exp.makespan();
-        self.report.jobs_completed = self.exp.completed();
-        self.report.jobs_failed = self.exp.failed();
-        self.report.deadline_met = self.report.jobs_completed
-            + self.report.jobs_failed
-            == self.report.jobs_total
-            && self.report.makespan_s <= self.exp.deadline
-            && self.report.jobs_failed == 0;
-        self.report.total_cost = self.ledger.settled();
-        self.report.resources_used = self
-            .report
-            .per_resource
-            .values()
-            .filter(|u| u.jobs_completed > 0)
-            .count() as u32;
-        self.report.events = self.q.processed();
-        self.report
-    }
-
-    // -- event handlers ------------------------------------------------------
-
-    fn handle(&mut self, ev: Ev) {
-        match ev {
-            Ev::Tick => self.on_tick(),
-            Ev::MdsRefresh => {
-                // Only records whose up/load actually moved invalidate
-                // their view entry.
-                let changed =
-                    self.mds.refresh(&self.tb, &self.dyns, self.q.now());
-                for rid in changed {
-                    self.mark_view(rid);
-                }
-                self.q
-                    .schedule_in(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
-            }
-            Ev::LoadUpdate => {
-                // Ground truth moves; the scheduler keeps seeing the stale
-                // directory until the next MdsRefresh (no view marking).
-                for i in 0..self.dyns.len() {
-                    let spec = &self.tb.resources[i];
-                    self.dyns[i].step_load(spec);
-                }
-                self.q.schedule_in(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
-            }
-            Ev::StagedIn { rid, jid } => self.on_staged_in(rid, jid),
-            Ev::BeginExec { rid, jid } => self.on_begin_exec(rid, jid),
-            Ev::Complete { rid, jid } => self.on_complete(rid, jid),
-            Ev::Fail { rid } => self.on_fail(rid),
-            Ev::Recover { rid } => self.on_recover(rid),
-            Ev::CompetitorArrive => {
-                let now = self.q.now();
-                let claimed: Vec<ResourceId> = match &mut self.competition {
-                    Some(comp) => {
-                        let (departs, claimed) = comp.arrive(&self.tb, now);
-                        self.q.schedule_at(departs, Ev::CompetitorDepart);
-                        let next = comp.draw_interarrival();
-                        self.q.schedule_in(next, Ev::CompetitorArrive);
-                        claimed
-                    }
-                    None => Vec::new(),
-                };
-                // Premium and free slots changed on the claimed machines.
-                for rid in claimed {
-                    self.mark_view(rid);
-                }
-            }
-            Ev::CompetitorDepart => {
-                let now = self.q.now();
-                let released = match &mut self.competition {
-                    Some(comp) => comp.depart_until(now),
-                    None => Vec::new(),
-                };
-                for rid in released {
-                    self.mark_view(rid);
-                }
-            }
-        }
-    }
-
-    /// Mark time-of-day-priced entries whose site's local clock crossed an
-    /// integer hour since the previous tick — the only instants owner
-    /// quotes can change (prices are piecewise-constant per local hour).
-    /// Phase-aware, so fractional start hours and timezone offsets reprice
-    /// exactly when the boundary passes, independent of the tick period or
-    /// event ordering. O(sites with time-of-day pricing) per tick.
-    fn mark_repriced(&mut self, now: SimTime) {
-        let prev = self.last_tick_t;
-        self.last_tick_t = now;
-        if self.tod_by_site.is_empty() || now == prev {
-            return;
-        }
-        let sites = std::mem::take(&mut self.tod_by_site);
-        for (theta, rids) in &sites {
-            if (theta + now / 3600.0).floor()
-                > (theta + prev / 3600.0).floor()
-            {
-                for &r in rids {
-                    self.mark_view(ResourceId(r));
-                }
-            }
-        }
-        self.tod_by_site = sites;
-    }
-
-    /// Invalidate one resource's view entry (no-op for machines this user
-    /// cannot schedule on, and for entries already queued for refresh).
-    fn mark_view(&mut self, rid: ResourceId) {
-        let i = rid.0 as usize;
-        if i < self.view_dirty.len() && self.authorized[i] && !self.view_dirty[i]
-        {
-            self.view_dirty[i] = true;
-            self.dirty_queue.push(rid.0);
-        }
-    }
-
-    /// Rebuild every dirty view entry from its sources: the (stale) MDS
-    /// record, GRAM slots, competition-adjusted quote, engine in-flight
-    /// count and the advisor's measured service rate. Cost is O(dirty);
-    /// the pre-incremental pipeline paid O(resources) here every tick.
-    fn refresh_dirty_views(&mut self) {
-        if self.full_rebuild {
-            for i in 0..self.views.len() {
-                self.mark_view(ResourceId(i as u32));
-            }
-        }
-        while let Some(r) = self.dirty_queue.pop() {
-            let i = r as usize;
-            self.view_dirty[i] = false;
-            let rid = ResourceId(r);
-            let rec = self.mds.record(rid).expect("record for every resource");
-            let planning_speed = rec.planning_speed();
-            let batch_queue = rec.batch_queue;
-            let base_slots = self.managers[i].slots();
-            let (slots, rate) = match &self.competition {
-                Some(comp) => (
-                    comp.free_slots(&self.tb, rid, base_slots),
-                    self.quote(rid) * comp.demand_premium(&self.tb, rid),
-                ),
-                None => (base_slots, self.quote(rid)),
-            };
-            self.views[i] = ResourceView {
-                id: rid,
-                slots,
-                planning_speed,
-                rate,
-                in_flight: self.exp.in_flight_on(rid),
-                measured_jphps: self.advisor.measured_jphps(rid),
-                batch_queue,
-            };
-            self.report.view_refreshes += 1;
-        }
+    pub fn finalize(self) -> Report {
+        self.world.finalize_world().into_single()
     }
 
     /// Benchmark support: rebuild the whole view table on every tick (the
     /// pre-incremental behaviour) instead of only dirty entries. The
     /// resulting trace is bit-identical — entries just get recomputed to
     /// the same values many more times. (Quotes are piecewise-constant per
-    /// local hour and [`Self::mark_repriced`] dirties them exactly when a
-    /// boundary passes, so the equivalence holds for any start hour,
-    /// timezone offset or tick period.)
+    /// local hour and repricing marks them exactly when a boundary passes,
+    /// so the equivalence holds for any start hour, timezone offset or
+    /// tick period.)
     pub fn set_full_view_rebuild(&mut self, on: bool) {
-        self.full_rebuild = on;
-    }
-
-    fn on_tick(&mut self) {
-        self.report.ticks += 1;
-        let now = self.q.now();
-        // 1. discovery + view maintenance: rebuild only the entries whose
-        // inputs changed since the last tick (MDS deltas, churn, job
-        // transitions, competition claims, local-hour repricing). Down and
-        // unauthorized machines sit in the table with zero speed/slots;
-        // every policy filters them out, exactly as discovery used to.
-        self.mark_repriced(now);
-        self.refresh_dirty_views();
-        // 2+3. selection + assignment: the shared advisor pipeline.
-        let job_work = self.advisor.job_work_ref_h();
-        let actions = self.advisor.advise(
-            TickCtx {
-                now,
-                deadline: self.exp.deadline,
-                budget_headroom: self.ledger.headroom(),
-                views: &self.views,
-            },
-            &self.exp,
-            &mut self.rng,
-        );
-        for action in actions {
-            match action {
-                Action::Submit { job, rid } => self.submit(job, rid, job_work),
-                Action::CancelQueued { job, rid } => self.cancel_queued(job, rid),
-            }
-        }
-        if !self.exp.finished() {
-            self.q.schedule_in(self.cfg.tick_period_s, Ev::Tick);
-        }
-    }
-
-    fn submit(&mut self, jid: JobId, rid: ResourceId, job_work: f64) {
-        let now = self.q.now();
-        // Budget commit against the expected cost here.
-        let spec = self.tb.spec(rid);
-        let d = &self.dyns[rid.0 as usize];
-        let speed = d.effective_speed(spec).max(0.05);
-        let est_cost = self.effective_rate(rid) * job_work / speed * 3600.0;
-        if !self.ledger.commit(jid, est_cost) {
-            return; // budget headroom exhausted: leave the job Ready
-        }
-        if self.exp.dispatch(jid, rid, now).is_err() {
-            self.ledger.release(jid, 0.0, &spec.name);
-            return;
-        }
-        self.mark_view(rid); // in-flight count changed
-        if let Some(j) = &mut self.journal {
-            let _ = j.dispatched(jid, rid, now);
-        }
-        self.inflight.insert(
-            jid,
-            InFlight {
-                dispatched_at: now,
-                exec_started: None,
-                rate: 0.0,
-                work_ref_h: self.sampler.work_ref_h(jid),
-                cpu_s: 0.0,
-            },
-        );
-        // Stage-in through GASS (and the cluster proxy if private).
-        let spec = self.tb.spec(rid).clone();
-        let t_stage = self.proxy.begin(
-            &mut self.gass,
-            &self.tb,
-            &spec,
-            self.cfg.workload.input_bytes,
-        );
-        self.q.schedule_in(t_stage, Ev::StagedIn { rid, jid });
-    }
-
-    fn cancel_queued(&mut self, jid: JobId, rid: ResourceId) {
-        // Withdraw from GRAM if it got there; mid-stage-in jobs are caught
-        // at their StagedIn event by the state check.
-        self.managers[rid.0 as usize].cancel(jid);
-        let name = self.tb.spec(rid).name.clone();
-        self.ledger.release(jid, 0.0, &name);
-        if self.exp.release(jid).is_ok() {
-            self.mark_view(rid); // in-flight count changed
-            if let Some(j) = &mut self.journal {
-                let _ = j.released(jid);
-            }
-        }
-        self.inflight.remove(&jid);
-    }
-
-    fn on_staged_in(&mut self, rid: ResourceId, jid: JobId) {
-        let spec = self.tb.spec(rid).clone();
-        self.proxy.end(&mut self.gass, &spec);
-        // The job may have been cancelled or the resource may have died
-        // while staging.
-        if self.exp.job(jid).state.resource() != Some(rid) {
-            return;
-        }
-        if !self.dyns[rid.0 as usize].up {
-            self.fail_in_flight(jid, rid);
-            return;
-        }
-        self.managers[rid.0 as usize].submit(jid);
-        self.try_start(rid);
-    }
-
-    /// Pump GRAM: start whatever the queue admits.
-    fn try_start(&mut self, rid: ResourceId) {
-        let now = self.q.now();
-        let started = self.managers[rid.0 as usize].start_eligible(now);
-        for (jid, delay) in started {
-            self.q.schedule_in(delay, Ev::BeginExec { rid, jid });
-        }
-    }
-
-    fn on_begin_exec(&mut self, rid: ResourceId, jid: JobId) {
-        let now = self.q.now();
-        if self.exp.job(jid).state.resource() != Some(rid) {
-            return; // cancelled while waiting on the queue cycle
-        }
-        if !self.dyns[rid.0 as usize].up {
-            return; // Fail handler already requeued it
-        }
-        let spec = self.tb.spec(rid);
-        let speed = self.dyns[rid.0 as usize].effective_speed(spec).max(0.01);
-        let rate = self.effective_rate(rid);
-        let name = spec.name.clone();
-        // CPU time on this machine: drawn work scaled by effective speed at
-        // start (load drift during the run is absorbed into the draw).
-        let work_ref_h = self.inflight[&jid].work_ref_h;
-        let cpu_s = work_ref_h * 3600.0 / speed;
-        // Replace the dispatch-time *estimate* with the now-known actual
-        // cost. If the budget headroom no longer carries it, withdraw the
-        // job (still Dispatched — a clean release, not a burned attempt)
-        // instead of running over budget: this is what makes "spend never
-        // exceeds budget" a hard invariant in virtual mode.
-        self.ledger.release(jid, 0.0, &name);
-        if !self.ledger.commit(jid, cpu_s * rate) {
-            self.managers[rid.0 as usize].cancel(jid);
-            let _ = self.exp.release(jid);
-            self.mark_view(rid); // in-flight count changed
-            if let Some(j) = &mut self.journal {
-                let _ = j.released(jid);
-            }
-            self.inflight.remove(&jid);
-            return;
-        }
-        if self.exp.start(jid, now).is_err() {
-            return;
-        }
-        if let Some(j) = &mut self.journal {
-            let _ = j.started(jid, now);
-        }
-        let inf = self.inflight.get_mut(&jid).expect("inflight record");
-        inf.exec_started = Some(now);
-        inf.rate = rate;
-        inf.cpu_s = cpu_s;
-        let exec_wall = inf.cpu_s;
-        self.busy_cpus += 1;
-        self.report.busy_cpus.record(now, self.busy_cpus);
-        // Stage-out folded into the completion event.
-        let t_out = self
-            .tb
-            .site(spec.site)
-            .link
-            .transfer_seconds(self.cfg.workload.output_bytes);
-        self.q
-            .schedule_in(exec_wall + t_out, Ev::Complete { rid, jid });
-    }
-
-    fn on_complete(&mut self, rid: ResourceId, jid: JobId) {
-        let now = self.q.now();
-        if !matches!(self.exp.job(jid).state, JobState::Running { rid: r, .. } if r == rid)
-        {
-            return; // failed/cancelled meanwhile
-        }
-        let inf = self.inflight.remove(&jid).expect("inflight record");
-        self.managers[rid.0 as usize].complete(jid);
-        self.busy_cpus -= 1;
-        self.report.busy_cpus.record(now, self.busy_cpus);
-        let cost = inf.cpu_s * inf.rate;
-        let name = self.tb.spec(rid).name.clone();
-        self.ledger.settle(jid, cost, &name);
-        self.exp
-            .complete(jid, now, inf.cpu_s, cost)
-            .expect("legal complete");
-        if let Some(j) = &mut self.journal {
-            let _ = j.completed(jid, now, inf.cpu_s, cost);
-        }
-        self.advisor
-            .observe_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
-        self.mark_view(rid); // in-flight count + measured service rate changed
-        let usage = self.report.per_resource.entry(name).or_insert_with(
-            ResourceUsage::default,
-        );
-        usage.jobs_completed += 1;
-        usage.cpu_seconds += inf.cpu_s;
-        usage.cost += cost;
-        self.try_start(rid);
-    }
-
-    /// Shared failure path for one in-flight job on `rid`.
-    fn fail_in_flight(&mut self, jid: JobId, rid: ResourceId) {
-        let now = self.q.now();
-        let name = self.tb.spec(rid).name.clone();
-        if let Some(inf) = self.inflight.remove(&jid) {
-            // Owners bill for cycles consumed before the crash.
-            let partial = match inf.exec_started {
-                Some(t0) => (now - t0).max(0.0) * inf.rate,
-                None => 0.0,
-            };
-            if inf.exec_started.is_some() {
-                self.busy_cpus = self.busy_cpus.saturating_sub(1);
-                self.report.busy_cpus.record(now, self.busy_cpus);
-            }
-            self.ledger.release(jid, partial, &name);
-            let usage = self
-                .report
-                .per_resource
-                .entry(name)
-                .or_insert_with(ResourceUsage::default);
-            usage.jobs_failed += 1;
-            usage.cost += partial;
-        }
-        self.advisor.observe_failure(rid);
-        if self.exp.fail_attempt(jid).is_ok() {
-            if let Some(j) = &mut self.journal {
-                let _ = j.failed_attempt(jid);
-            }
-        }
-        self.mark_view(rid); // in-flight count + failure history changed
-    }
-
-    fn on_fail(&mut self, rid: ResourceId) {
-        let i = rid.0 as usize;
-        if !self.dyns[i].up {
-            return;
-        }
-        self.dyns[i].up = false;
-        let victims = self.managers[i].fail_all();
-        for (jid, _started) in victims {
-            self.fail_in_flight(jid, rid);
-        }
-        let spec = self.tb.resources[i].clone();
-        let downtime = self.dyns[i].draw_downtime(&spec);
-        self.q.schedule_in(downtime, Ev::Recover { rid });
-    }
-
-    fn on_recover(&mut self, rid: ResourceId) {
-        let i = rid.0 as usize;
-        self.dyns[i].up = true;
-        let spec = self.tb.resources[i].clone();
-        let uptime = self.dyns[i].draw_uptime(&spec);
-        self.q.schedule_in(uptime, Ev::Fail { rid });
+        self.world.set_full_view_rebuild(on);
     }
 }
 
@@ -936,5 +332,38 @@ mod tests {
             "spent {} over budget",
             report.total_cost
         );
+    }
+
+    #[test]
+    fn single_tenant_wrapper_is_the_n1_world() {
+        // The legacy GridSimulation surface and a directly-built one-tenant
+        // GridWorld must replay the identical trace: the wrapper is the
+        // N = 1 case of the world, not a parallel implementation.
+        let mk_setup = || {
+            let cfg = small_cfg("cost", 20.0);
+            let advisor = ScheduleAdvisor::resolve(
+                &cfg.policy,
+                cfg.workload.job_work_ref_h,
+            )
+            .unwrap();
+            let tb = Testbed::gusto(cfg.seed ^ 0x6057, 1.0);
+            let specs = crate::workload::ionization_jobs(cfg.seed);
+            (tb, specs, cfg, advisor)
+        };
+        let (tb, specs, cfg, advisor) = mk_setup();
+        let via_wrapper =
+            GridSimulation::gusto_ionization(small_cfg("cost", 20.0)).run();
+        let via_world = GridWorld::new(
+            tb,
+            vec![TenantSetup { cfg, specs, advisor }],
+        )
+        .run_world();
+        assert_eq!(via_world.tenants.len(), 1);
+        let w = &via_world.tenants[0].report;
+        assert_eq!(via_wrapper.events, w.events);
+        assert_eq!(via_wrapper.ticks, w.ticks);
+        assert_eq!(via_wrapper.makespan_s.to_bits(), w.makespan_s.to_bits());
+        assert_eq!(via_wrapper.total_cost.to_bits(), w.total_cost.to_bits());
+        assert_eq!(via_wrapper.busy_cpus.points(), w.busy_cpus.points());
     }
 }

@@ -1,0 +1,1302 @@
+//! The shared grid world: one testbed + directory + event queue + economy
+//! hosting **N concurrent tenant experiments** (paper §3: many users with
+//! independent deadlines, budgets and policies competing for
+//! distributedly-owned resources).
+//!
+//! [`GridWorld`] owns everything that belongs to the *grid* — the
+//! [`Testbed`], ground-truth dynamics, MDS directory, GRAM job managers,
+//! GASS/proxy staging, availability churn, the residual background
+//! [`Competition`] process and the single discrete-event queue. Each
+//! [`Tenant`] is a complete Nimrod/G broker instance over that world: its
+//! own [`Experiment`] engine, [`Ledger`], schedule advisor (policy + rate
+//! estimator), work sampler, journal and report, plus its own persistent
+//! incremental view table (prices are per-user, in-flight counts are
+//! per-experiment, so the table cannot be shared).
+//!
+//! Contention between tenants is *real*, not synthetic: tenant A's
+//! in-flight jobs reduce the `free_slots` tenant B sees (one formula —
+//! [`crate::grid::competition::visible_slots`] — covers tenant occupancy
+//! and background claims together), and owners with a demand-responsive
+//! [`crate::economy::PriceModel`] (`demand_slope > 0`) reprice with total
+//! machine utilization, so demand from any tenant moves every tenant's
+//! quotes.
+//!
+//! **Incrementality is preserved.** Every state-changing event dirties
+//! exactly the view entries it touches, now across *all* tenants' tables:
+//! MDS deltas, churn and competition claims mark the affected resource for
+//! every tenant; a job transition marks that resource for every tenant too
+//! (the owning tenant's in-flight count changed, everyone else's visible
+//! slots and demand premium changed). Ticks stay O(changed), and the
+//! single-tenant [`super::GridSimulation`] is literally the N = 1 case of
+//! this code — bit-exact against the pre-world driver at equal seeds for
+//! competition-free configurations (competition-enabled traces differ by
+//! design: arrivals now respect real occupancy).
+
+use crate::broker::{ScheduleAdvisor, TickCtx};
+use crate::config::ExperimentConfig;
+use crate::dispatcher::Action;
+use crate::economy::Ledger;
+use crate::engine::journal::Journal;
+use crate::engine::{Experiment, JobState};
+use crate::grid::competition::{visible_slots, Competition};
+use crate::grid::dynamics::{ResourceDyn, LOAD_UPDATE_PERIOD_S};
+use crate::grid::gass::Gass;
+use crate::grid::mds::{Mds, MDS_REFRESH_PERIOD_S};
+use crate::grid::proxy::ClusterProxy;
+use crate::grid::testbed::{local_hour, Testbed};
+use crate::grid::JobManager;
+use crate::metrics::{Report, ResourceUsage, TenantOutcome, WorldReport};
+use crate::plan::JobSpec;
+use crate::scheduler::ResourceView;
+use crate::simtime::EventQueue;
+use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
+use crate::util::rng::Rng;
+use crate::workload::WorkSampler;
+use std::collections::BTreeMap;
+
+/// Bits of a GRAM-level job id reserved for the per-tenant job number;
+/// the tenant index lives above them. Tenant 0's grid ids equal its engine
+/// ids, which is what keeps the N = 1 world bit-identical to the legacy
+/// single-tenant driver.
+const TENANT_ID_SHIFT: u32 = 24;
+
+/// Encode a tenant-local job id into the world-unique id shared GRAM
+/// managers key on.
+fn grid_jid(tid: usize, jid: JobId) -> JobId {
+    JobId(((tid as u32) << TENANT_ID_SHIFT) | jid.0)
+}
+
+/// Decode a world-unique GRAM job id back into (tenant, local job).
+fn split_jid(gid: JobId) -> (usize, JobId) {
+    (
+        (gid.0 >> TENANT_ID_SHIFT) as usize,
+        JobId(gid.0 & ((1 << TENANT_ID_SHIFT) - 1)),
+    )
+}
+
+/// Simulation events. Per-tenant events carry the tenant index; grid-level
+/// events (directory refresh, load drift, churn, background competition)
+/// affect every tenant's view table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Scheduler tick for one tenant (discovery → selection → dispatch).
+    Tick { tid: u32 },
+    /// Directory refresh.
+    MdsRefresh,
+    /// Background-load AR(1) step on all resources.
+    LoadUpdate,
+    /// Stage-in finished; hand the job to GRAM.
+    StagedIn {
+        tid: u32,
+        rid: ResourceId,
+        jid: JobId,
+    },
+    /// GRAM started the job (queue delay elapsed).
+    BeginExec {
+        tid: u32,
+        rid: ResourceId,
+        jid: JobId,
+    },
+    /// Execution + stage-out finished.
+    Complete {
+        tid: u32,
+        rid: ResourceId,
+        jid: JobId,
+    },
+    /// Availability churn.
+    Fail { rid: ResourceId },
+    Recover { rid: ResourceId },
+    /// A background competing experiment lands on the grid (paper §3).
+    CompetitorArrive,
+    /// Background competing experiments holding until `now` leave.
+    CompetitorDepart,
+}
+
+/// Per-in-flight-job bookkeeping.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    dispatched_at: SimTime,
+    exec_started: Option<SimTime>,
+    /// G$/CPU-second locked at execution start.
+    rate: GridDollars,
+    /// Work drawn for this job, reference CPU-hours.
+    work_ref_h: f64,
+    /// CPU seconds this job will consume on its machine.
+    cpu_s: f64,
+}
+
+/// Everything one co-scheduled experiment owns: a full Nimrod/G broker
+/// instance (engine, economy, advisor, journal) plus its private
+/// incremental view table over the shared grid.
+pub struct Tenant {
+    cfg: ExperimentConfig,
+    exp: Experiment,
+    ledger: Ledger,
+    advisor: ScheduleAdvisor,
+    sampler: WorkSampler,
+    journal: Option<Journal>,
+    inflight: BTreeMap<JobId, InFlight>,
+    report: Report,
+    busy_cpus: u32,
+    /// Persistent per-resource view table (index = ResourceId). Entries
+    /// are rebuilt only when marked dirty by a state-changing event.
+    views: Vec<ResourceView>,
+    view_dirty: Vec<bool>,
+    dirty_queue: Vec<u32>,
+    /// Static per-resource authorization for `cfg.user`; unauthorized
+    /// entries stay zeroed forever and are never marked.
+    authorized: Vec<bool>,
+    /// Authorized time-of-day-priced resources grouped by site, with the
+    /// site's hour phase (start hour + tz offset) — the only quotes that
+    /// move on their own, and only when the site's local clock crosses an
+    /// integer hour.
+    tod_by_site: Vec<(f64, Vec<u32>)>,
+    /// Virtual time of this tenant's previous scheduler tick (repricing).
+    last_tick_t: SimTime,
+}
+
+impl Tenant {
+    /// Invalidate one resource's view entry (no-op for machines this user
+    /// cannot schedule on, and for entries already queued for refresh).
+    fn mark_view(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        if i < self.view_dirty.len() && self.authorized[i] && !self.view_dirty[i]
+        {
+            self.view_dirty[i] = true;
+            self.dirty_queue.push(rid.0);
+        }
+    }
+
+    /// Mark time-of-day-priced entries whose site's local clock crossed an
+    /// integer hour since this tenant's previous tick — the only instants
+    /// owner quotes can change on their own (prices are piecewise-constant
+    /// per local hour; demand premiums move only with marked occupancy
+    /// events). Phase-aware, so fractional start hours and timezone offsets
+    /// reprice exactly when the boundary passes, independent of the tick
+    /// period or event ordering. O(sites with time-of-day pricing) per tick.
+    fn mark_repriced(&mut self, now: SimTime) {
+        let prev = self.last_tick_t;
+        self.last_tick_t = now;
+        if self.tod_by_site.is_empty() || now == prev {
+            return;
+        }
+        let sites = std::mem::take(&mut self.tod_by_site);
+        for (theta, rids) in &sites {
+            if (theta + now / 3600.0).floor() > (theta + prev / 3600.0).floor()
+            {
+                for &r in rids {
+                    self.mark_view(ResourceId(r));
+                }
+            }
+        }
+        self.tod_by_site = sites;
+    }
+}
+
+/// One tenant's construction inputs for [`GridWorld::new`].
+pub struct TenantSetup {
+    /// Envelope + identity. `competition` and `start_utc_hour` are
+    /// world-level: only tenant 0's are honoured.
+    pub cfg: ExperimentConfig,
+    pub specs: Vec<JobSpec>,
+    pub advisor: ScheduleAdvisor,
+}
+
+/// The shared world: grid state + event queue + N tenants. Construct with
+/// [`GridWorld::new`] (or through
+/// [`crate::broker::ExperimentBuilder::world`]), run with
+/// [`GridWorld::run_world`].
+pub struct GridWorld {
+    pub tb: Testbed,
+    dyns: Vec<ResourceDyn>,
+    mds: Mds,
+    gass: Gass,
+    proxy: ClusterProxy,
+    managers: Vec<JobManager>,
+    tenants: Vec<Tenant>,
+    q: EventQueue<Ev>,
+    /// World RNG: seeds dynamics/churn and serves every tenant's policy —
+    /// one stream, so the N = 1 world draws exactly like the legacy driver.
+    rng: Rng,
+    /// Background competing-experiment process, if configured.
+    competition: Option<Competition>,
+    /// Per-resource total in-flight jobs across all tenants (index =
+    /// ResourceId), maintained in lockstep with the engines' transitions.
+    /// This is what makes foreign-occupancy lookups O(1) inside the
+    /// O(changed) view refresh.
+    total_in_flight: Vec<u32>,
+    /// UTC hour-of-day at world start (tenant 0's; drives all pricing).
+    start_utc_hour: f64,
+    /// Stop even if jobs remain (budget exhaustion, dead grid).
+    hard_stop: SimTime,
+    /// Benchmark baseline: rebuild every entry on every tick.
+    full_rebuild: bool,
+    /// Mean posted effective rate across up machines (base quote ×
+    /// competition premium × demand premium), sampled at each directory
+    /// refresh — the cross-tenant price trajectory.
+    price_index: Vec<(SimTime, f64)>,
+    /// Highest combined premium factor observed at any sample.
+    peak_premium: f64,
+}
+
+impl GridWorld {
+    /// Build a world over `tb` hosting one tenant per [`TenantSetup`].
+    /// Panics on empty tenant lists, more than 255 tenants, or a tenant
+    /// with ≥ 2^24 jobs (the GRAM id-space partition).
+    pub fn new(tb: Testbed, setups: Vec<TenantSetup>) -> GridWorld {
+        assert!(!setups.is_empty(), "a world needs at least one tenant");
+        assert!(
+            setups.len() < (1 << (32 - TENANT_ID_SHIFT)),
+            "at most {} tenants per world",
+            (1 << (32 - TENANT_ID_SHIFT)) - 1
+        );
+        let world_seed = setups[0].cfg.seed;
+        let start_utc_hour = setups[0].cfg.start_utc_hour;
+        let competition_model = setups[0].cfg.competition.clone();
+        let mut rng = Rng::new(world_seed);
+        let dyns: Vec<ResourceDyn> = tb
+            .resources
+            .iter()
+            .map(|s| ResourceDyn::new(s, &mut rng))
+            .collect();
+        let mds = Mds::new(&tb, &dyns);
+        let managers: Vec<JobManager> =
+            tb.resources.iter().map(JobManager::new).collect();
+        let gass = Gass::new(&tb);
+        let n = tb.resources.len();
+
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(setups.len());
+        let mut hard_stop: SimTime = 0.0;
+        for (tid, setup) in setups.into_iter().enumerate() {
+            let TenantSetup { cfg, specs, advisor } = setup;
+            assert!(
+                specs.len() < (1 << TENANT_ID_SHIFT) as usize,
+                "tenant {tid} has too many jobs for the GRAM id space"
+            );
+            let jobs_total = specs.len() as u32;
+            let exp = Experiment::new(
+                specs,
+                cfg.deadline,
+                cfg.budget,
+                &cfg.user,
+                cfg.max_attempts,
+            );
+            let ledger = Ledger::new(cfg.budget);
+            // Tenant 0 draws per-job work exactly like the legacy driver;
+            // later tenants perturb the stream by index so co-tenants with
+            // equal seeds still draw independent workloads.
+            let sampler_seed = cfg.seed
+                ^ 0xF00D
+                ^ (tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let sampler = WorkSampler::new(&cfg.workload, sampler_seed);
+            let authorized: Vec<bool> = tb
+                .resources
+                .iter()
+                .map(|r| r.auth.allows(&cfg.user))
+                .collect();
+            let mut tod_per_site: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+            for r in &tb.resources {
+                if authorized[r.id.0 as usize] && r.price.time_of_day {
+                    tod_per_site.entry(r.site.0).or_default().push(r.id.0);
+                }
+            }
+            let tod_by_site: Vec<(f64, Vec<u32>)> = tod_per_site
+                .into_iter()
+                .map(|(sid, rids)| {
+                    let theta =
+                        start_utc_hour + tb.sites[sid as usize].tz_offset_hours;
+                    (theta, rids)
+                })
+                .collect();
+            let views: Vec<ResourceView> = tb
+                .resources
+                .iter()
+                .map(|r| ResourceView {
+                    id: r.id,
+                    slots: 0,
+                    planning_speed: 0.0,
+                    rate: 0.0,
+                    in_flight: 0,
+                    measured_jphps: None,
+                    batch_queue: false,
+                })
+                .collect();
+            hard_stop = hard_stop.max(cfg.deadline * 4.0 + 48.0 * HOUR);
+            tenants.push(Tenant {
+                report: Report {
+                    jobs_total,
+                    deadline_s: cfg.deadline,
+                    ..Default::default()
+                },
+                cfg,
+                exp,
+                ledger,
+                advisor,
+                sampler,
+                journal: None,
+                inflight: BTreeMap::new(),
+                busy_cpus: 0,
+                views,
+                view_dirty: vec![false; n],
+                dirty_queue: Vec::with_capacity(n),
+                authorized,
+                tod_by_site,
+                last_tick_t: 0.0,
+            });
+        }
+
+        let mut q = EventQueue::new();
+        for tid in 0..tenants.len() {
+            q.schedule_at(0.0, Ev::Tick { tid: tid as u32 });
+        }
+        q.schedule_at(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
+        q.schedule_at(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
+        let competition = competition_model
+            .map(|model| Competition::new(&tb, model, rng.fork(0xC0117E7E)));
+        if competition.is_some() {
+            q.schedule_at(1.0, Ev::CompetitorArrive);
+        }
+
+        let mut world = GridWorld {
+            tb,
+            dyns,
+            mds,
+            gass,
+            proxy: ClusterProxy::default(),
+            managers,
+            tenants,
+            q,
+            rng,
+            competition,
+            total_in_flight: vec![0; n],
+            start_utc_hour,
+            hard_stop,
+            full_rebuild: false,
+            price_index: Vec::new(),
+            peak_premium: 1.0,
+        };
+        // Seed availability churn per resource.
+        for i in 0..world.tb.resources.len() {
+            let spec = world.tb.resources[i].clone();
+            let t = world.dyns[i].draw_uptime(&spec);
+            world.q.schedule_at(t, Ev::Fail { rid: spec.id });
+        }
+        // Everything schedulable starts dirty; each tenant's first tick
+        // fills its table from the t = 0 directory snapshot.
+        for tenant in &mut world.tenants {
+            for i in 0..n {
+                tenant.mark_view(ResourceId(i as u32));
+            }
+        }
+        world.sample_price_index(0.0);
+        world
+    }
+
+    // -- accessors -----------------------------------------------------------
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    /// Number of co-scheduled tenants.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// One tenant's experiment engine.
+    pub fn exp(&self, tid: usize) -> &Experiment {
+        &self.tenants[tid].exp
+    }
+
+    /// One tenant's spend ledger.
+    pub fn ledger(&self, tid: usize) -> &Ledger {
+        &self.tenants[tid].ledger
+    }
+
+    /// One tenant's configuration.
+    pub fn tenant_cfg(&self, tid: usize) -> &ExperimentConfig {
+        &self.tenants[tid].cfg
+    }
+
+    /// Attach a persistence journal to one tenant (restart support).
+    pub fn attach_journal(&mut self, tid: usize, journal: Journal) {
+        self.tenants[tid].journal = Some(journal);
+    }
+
+    /// Replace one tenant's experiment (restart-from-journal path) and
+    /// re-derive the world occupancy table from every tenant's counters.
+    pub fn replace_experiment(&mut self, tid: usize, exp: Experiment) {
+        self.tenants[tid].report.jobs_total = exp.jobs.len() as u32;
+        self.tenants[tid].exp = exp;
+        let n = self.tb.resources.len();
+        self.total_in_flight = vec![0; n];
+        for t in &self.tenants {
+            for (i, &c) in t.exp.in_flight_counts().iter().enumerate() {
+                if i < n {
+                    self.total_in_flight[i] += c;
+                }
+            }
+        }
+    }
+
+    /// Benchmark support: rebuild each tenant's whole view table on every
+    /// one of its ticks (the pre-incremental behaviour) instead of only
+    /// dirty entries. The resulting trace is bit-identical — entries just
+    /// get recomputed to the same values many more times.
+    pub fn set_full_view_rebuild(&mut self, on: bool) {
+        self.full_rebuild = on;
+    }
+
+    /// All tenants finished ⇒ the world run is over.
+    pub fn finished(&self) -> bool {
+        self.tenants.iter().all(|t| t.exp.finished())
+    }
+
+    /// Per-resource invariant: tenants' in-flight jobs plus background
+    /// competition claims never oversubscribe a machine's CPUs. Policies
+    /// cap allocations at the contention-adjusted `free_slots` and
+    /// competitor arrivals respect tenant occupancy, so this holds at every
+    /// tick by construction; tests (and debug builds) verify it.
+    pub fn slot_conservation_ok(&self) -> bool {
+        self.tb.resources.iter().all(|spec| {
+            let i = spec.id.0 as usize;
+            let claimed = self
+                .competition
+                .as_ref()
+                .map(|c| c.claimed(spec.id))
+                .unwrap_or(0);
+            self.total_in_flight[i] + claimed <= spec.cpus
+        })
+    }
+
+    // -- economy helpers -----------------------------------------------------
+
+    /// Fraction of `rid`'s CPUs occupied by tenants' in-flight jobs plus
+    /// background competition claims — the demand signal owners reprice on.
+    fn utilization(&self, rid: ResourceId) -> f64 {
+        let claimed = self
+            .competition
+            .as_ref()
+            .map(|c| c.claimed(rid))
+            .unwrap_or(0);
+        utilization_of(
+            self.total_in_flight[rid.0 as usize],
+            claimed,
+            self.tb.spec(rid).cpus,
+        )
+    }
+
+    /// Effective rate tenant `tid` is billed on `rid` right now: the
+    /// owner's posted per-user quote at the owner's local hour, times the
+    /// background-competition premium, times the owner's demand-responsive
+    /// premium on total utilization.
+    fn effective_rate(&self, tid: usize, rid: ResourceId) -> GridDollars {
+        let quote = posted_quote(
+            &self.tb,
+            self.start_utc_hour,
+            self.q.now(),
+            &self.tenants[tid].cfg.user,
+            rid,
+        );
+        let comp_premium = self
+            .competition
+            .as_ref()
+            .map(|c| c.demand_premium(&self.tb, rid))
+            .unwrap_or(1.0);
+        let demand_premium =
+            self.tb.spec(rid).price.demand_premium(self.utilization(rid));
+        quote * comp_premium * demand_premium
+    }
+
+    /// Record the world price trajectory: mean effective posted rate over
+    /// up machines and the peak combined premium. Piggybacks on directory
+    /// refreshes, which already walk every resource.
+    fn sample_price_index(&mut self, now: SimTime) {
+        let mut sum = 0.0;
+        let mut up = 0u32;
+        let mut peak = self.peak_premium;
+        for (i, spec) in self.tb.resources.iter().enumerate() {
+            if !self.dyns[i].up {
+                continue;
+            }
+            let lh = local_hour(
+                self.start_utc_hour + now / 3600.0,
+                self.tb.site(spec.site).tz_offset_hours,
+            );
+            let comp_premium = self
+                .competition
+                .as_ref()
+                .map(|c| c.demand_premium(&self.tb, spec.id))
+                .unwrap_or(1.0);
+            let claimed = self
+                .competition
+                .as_ref()
+                .map(|c| c.claimed(spec.id))
+                .unwrap_or(0);
+            let util =
+                utilization_of(self.total_in_flight[i], claimed, spec.cpus);
+            let demand_premium = spec.price.demand_premium(util);
+            // Posted rate for an undiscounted user.
+            sum += spec.price.rate_at(lh, "") * comp_premium * demand_premium;
+            peak = peak.max(comp_premium * demand_premium);
+            up += 1;
+        }
+        if up > 0 {
+            self.price_index.push((now, sum / up as f64));
+        }
+        self.peak_premium = peak;
+    }
+
+    // -- run loop ------------------------------------------------------------
+
+    /// Run to completion (or hard stop); consume the world, return the
+    /// per-tenant + cross-tenant report.
+    pub fn run_world(mut self) -> WorldReport {
+        while !self.finished() {
+            if self.q.now() > self.hard_stop {
+                break;
+            }
+            let Some((_, ev)) = self.q.pop() else {
+                break; // queue drained with jobs unfinished (dead grid)
+            };
+            self.handle(ev);
+        }
+        self.finalize_world()
+    }
+
+    /// Run until `t` (for incremental inspection in tests/examples).
+    pub fn run_until(&mut self, t: SimTime) {
+        while !self.finished() {
+            match self.q.next_time() {
+                Some(nt) if nt <= t => {
+                    let (_, ev) = self.q.pop().unwrap();
+                    self.handle(ev);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Finalize every tenant's report after the event loop.
+    pub fn finalize_world(mut self) -> WorldReport {
+        let events = self.q.processed();
+        let mut outcomes = Vec::with_capacity(self.tenants.len());
+        for t in &mut self.tenants {
+            t.report.makespan_s = t.exp.makespan();
+            t.report.jobs_completed = t.exp.completed();
+            t.report.jobs_failed = t.exp.failed();
+            t.report.deadline_met = t.report.jobs_completed
+                + t.report.jobs_failed
+                == t.report.jobs_total
+                && t.report.makespan_s <= t.exp.deadline
+                && t.report.jobs_failed == 0;
+            t.report.total_cost = t.ledger.settled();
+            t.report.resources_used = t
+                .report
+                .per_resource
+                .values()
+                .filter(|u| u.jobs_completed > 0)
+                .count() as u32;
+            t.report.events = events;
+        }
+        for t in self.tenants {
+            outcomes.push(TenantOutcome {
+                user: t.cfg.user,
+                policy: t.cfg.policy,
+                report: t.report,
+            });
+        }
+        WorldReport {
+            tenants: outcomes,
+            events,
+            price_index: self.price_index,
+            peak_premium: self.peak_premium,
+        }
+    }
+
+    // -- event handlers ------------------------------------------------------
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Tick { tid } => self.on_tick(tid as usize),
+            Ev::MdsRefresh => {
+                // Only records whose up/load actually moved invalidate
+                // their view entries (in every tenant's table).
+                let now = self.q.now();
+                let changed =
+                    self.mds.refresh(&self.tb, &self.dyns, now);
+                for rid in changed {
+                    self.mark_view_all(rid);
+                }
+                self.sample_price_index(now);
+                self.q.schedule_in(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
+            }
+            Ev::LoadUpdate => {
+                // Ground truth moves; schedulers keep seeing the stale
+                // directory until the next MdsRefresh (no view marking).
+                for i in 0..self.dyns.len() {
+                    let spec = &self.tb.resources[i];
+                    self.dyns[i].step_load(spec);
+                }
+                self.q.schedule_in(LOAD_UPDATE_PERIOD_S, Ev::LoadUpdate);
+            }
+            Ev::StagedIn { tid, rid, jid } => {
+                self.on_staged_in(tid as usize, rid, jid)
+            }
+            Ev::BeginExec { tid, rid, jid } => {
+                self.on_begin_exec(tid as usize, rid, jid)
+            }
+            Ev::Complete { tid, rid, jid } => {
+                self.on_complete(tid as usize, rid, jid)
+            }
+            Ev::Fail { rid } => self.on_fail(rid),
+            Ev::Recover { rid } => self.on_recover(rid),
+            Ev::CompetitorArrive => {
+                let now = self.q.now();
+                let claimed: Vec<ResourceId> = match &mut self.competition {
+                    Some(comp) => {
+                        let (departs, claimed) =
+                            comp.arrive(&self.tb, now, &self.total_in_flight);
+                        self.q.schedule_at(departs, Ev::CompetitorDepart);
+                        let next = comp.draw_interarrival();
+                        self.q.schedule_in(next, Ev::CompetitorArrive);
+                        claimed
+                    }
+                    None => Vec::new(),
+                };
+                // Premium and free slots changed on the claimed machines.
+                for rid in claimed {
+                    self.mark_view_all(rid);
+                }
+            }
+            Ev::CompetitorDepart => {
+                let now = self.q.now();
+                let released = match &mut self.competition {
+                    Some(comp) => comp.depart_until(now),
+                    None => Vec::new(),
+                };
+                for rid in released {
+                    self.mark_view_all(rid);
+                }
+            }
+        }
+    }
+
+    /// Invalidate one resource's view entry in every tenant's table: the
+    /// occupancy, visible slots and demand premium of a machine are shared
+    /// state, so any change there is scheduler-visible to all tenants.
+    fn mark_view_all(&mut self, rid: ResourceId) {
+        for t in &mut self.tenants {
+            t.mark_view(rid);
+        }
+    }
+
+    /// Rebuild every dirty view entry of one tenant from its sources: the
+    /// (stale) MDS record, GRAM slots net of competition claims and other
+    /// tenants' occupancy, the demand-adjusted quote, the tenant engine's
+    /// in-flight count and its advisor's measured service rate. Cost is
+    /// O(dirty); the pre-incremental pipeline paid O(resources) here every
+    /// tick.
+    fn refresh_dirty_views(&mut self, tid: usize) {
+        if self.full_rebuild {
+            let n = self.tenants[tid].views.len();
+            for i in 0..n {
+                self.tenants[tid].mark_view(ResourceId(i as u32));
+            }
+        }
+        let now = self.q.now();
+        let tb = &self.tb;
+        let mds = &self.mds;
+        let managers = &self.managers;
+        let competition = self.competition.as_ref();
+        let total_in_flight = &self.total_in_flight;
+        let start_utc_hour = self.start_utc_hour;
+        let tenant = &mut self.tenants[tid];
+        while let Some(r) = tenant.dirty_queue.pop() {
+            let i = r as usize;
+            tenant.view_dirty[i] = false;
+            let rid = ResourceId(r);
+            let rec = mds.record(rid).expect("record for every resource");
+            let planning_speed = rec.planning_speed();
+            let batch_queue = rec.batch_queue;
+            let spec = tb.spec(rid);
+            let own = tenant.exp.in_flight_on(rid);
+            let foreign = total_in_flight[i].saturating_sub(own);
+            let quote =
+                posted_quote(tb, start_utc_hour, now, &tenant.cfg.user, rid);
+            let base_slots = managers[i].slots();
+            let (slots, rate) = match competition {
+                Some(comp) => (
+                    comp.free_slots(tb, rid, base_slots, foreign),
+                    quote * comp.demand_premium(tb, rid),
+                ),
+                None => (
+                    visible_slots(base_slots, spec.cpus, 0, foreign),
+                    quote,
+                ),
+            };
+            let claimed =
+                competition.map(|c| c.claimed(rid)).unwrap_or(0);
+            let util =
+                utilization_of(total_in_flight[i], claimed, spec.cpus);
+            let rate = rate * spec.price.demand_premium(util);
+            tenant.views[i] = ResourceView {
+                id: rid,
+                slots,
+                planning_speed,
+                rate,
+                in_flight: own,
+                measured_jphps: tenant.advisor.measured_jphps(rid),
+                batch_queue,
+            };
+            tenant.report.view_refreshes += 1;
+        }
+    }
+
+    fn on_tick(&mut self, tid: usize) {
+        if self.tenants[tid].exp.finished() {
+            return; // other tenants may still be running
+        }
+        self.tenants[tid].report.ticks += 1;
+        let now = self.q.now();
+        // 1. discovery + view maintenance: rebuild only the entries whose
+        // inputs changed since this tenant's last tick (MDS deltas, churn,
+        // any tenant's job transitions, competition claims, local-hour
+        // repricing). Down and unauthorized machines sit in the table with
+        // zero speed/slots; every policy filters them out.
+        self.tenants[tid].mark_repriced(now);
+        self.refresh_dirty_views(tid);
+        debug_assert!(
+            self.slot_conservation_ok(),
+            "slot conservation violated at t={now}"
+        );
+        // 2+3. selection + assignment: the shared advisor pipeline.
+        let job_work = self.tenants[tid].advisor.job_work_ref_h();
+        let actions = {
+            let tenant = &mut self.tenants[tid];
+            tenant.advisor.advise(
+                TickCtx {
+                    now,
+                    deadline: tenant.exp.deadline,
+                    budget_headroom: tenant.ledger.headroom(),
+                    views: &tenant.views,
+                },
+                &tenant.exp,
+                &mut self.rng,
+            )
+        };
+        for action in actions {
+            match action {
+                Action::Submit { job, rid } => {
+                    self.submit(tid, job, rid, job_work)
+                }
+                Action::CancelQueued { job, rid } => {
+                    self.cancel_queued(tid, job, rid)
+                }
+            }
+        }
+        if !self.tenants[tid].exp.finished() {
+            let period = self.tenants[tid].cfg.tick_period_s;
+            self.q.schedule_in(period, Ev::Tick { tid: tid as u32 });
+        }
+    }
+
+    fn submit(&mut self, tid: usize, jid: JobId, rid: ResourceId, job_work: f64) {
+        let now = self.q.now();
+        // Budget commit against the expected cost here.
+        let rate = self.effective_rate(tid, rid);
+        let spec = self.tb.spec(rid);
+        let d = &self.dyns[rid.0 as usize];
+        let speed = d.effective_speed(spec).max(0.05);
+        let est_cost = rate * job_work / speed * 3600.0;
+        let name = spec.name.clone();
+        let tenant = &mut self.tenants[tid];
+        if !tenant.ledger.commit(jid, est_cost) {
+            return; // budget headroom exhausted: leave the job Ready
+        }
+        if tenant.exp.dispatch(jid, rid, now).is_err() {
+            tenant.ledger.release(jid, 0.0, &name);
+            return;
+        }
+        if let Some(j) = &mut tenant.journal {
+            let _ = j.dispatched(jid, rid, now);
+        }
+        let work_ref_h = tenant.sampler.work_ref_h(jid);
+        tenant.inflight.insert(
+            jid,
+            InFlight {
+                dispatched_at: now,
+                exec_started: None,
+                rate: 0.0,
+                work_ref_h,
+                cpu_s: 0.0,
+            },
+        );
+        self.total_in_flight[rid.0 as usize] += 1;
+        self.mark_view_all(rid); // occupancy changed for everyone
+        // Stage-in through GASS (and the cluster proxy if private).
+        let spec = self.tb.spec(rid).clone();
+        let input_bytes = self.tenants[tid].cfg.workload.input_bytes;
+        let t_stage =
+            self.proxy
+                .begin(&mut self.gass, &self.tb, &spec, input_bytes);
+        self.q.schedule_in(
+            t_stage,
+            Ev::StagedIn {
+                tid: tid as u32,
+                rid,
+                jid,
+            },
+        );
+    }
+
+    fn cancel_queued(&mut self, tid: usize, jid: JobId, rid: ResourceId) {
+        // Withdraw from GRAM if it got there; mid-stage-in jobs are caught
+        // at their StagedIn event by the state check.
+        self.managers[rid.0 as usize].cancel(grid_jid(tid, jid));
+        let name = self.tb.spec(rid).name.clone();
+        let tenant = &mut self.tenants[tid];
+        tenant.ledger.release(jid, 0.0, &name);
+        if tenant.exp.release(jid).is_ok() {
+            if let Some(j) = &mut tenant.journal {
+                let _ = j.released(jid);
+            }
+            self.dec_total_in_flight(rid);
+            self.mark_view_all(rid); // occupancy changed for everyone
+        }
+        self.tenants[tid].inflight.remove(&jid);
+    }
+
+    fn on_staged_in(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
+        let spec = self.tb.spec(rid).clone();
+        self.proxy.end(&mut self.gass, &spec);
+        // The job may have been cancelled or the resource may have died
+        // while staging.
+        if self.tenants[tid].exp.job(jid).state.resource() != Some(rid) {
+            return;
+        }
+        if !self.dyns[rid.0 as usize].up {
+            self.fail_in_flight(tid, jid, rid);
+            return;
+        }
+        self.managers[rid.0 as usize].submit(grid_jid(tid, jid));
+        self.try_start(rid);
+    }
+
+    /// Pump GRAM: start whatever the queue admits, routing each started
+    /// job back to its owning tenant.
+    fn try_start(&mut self, rid: ResourceId) {
+        let now = self.q.now();
+        let started = self.managers[rid.0 as usize].start_eligible(now);
+        for (gid, delay) in started {
+            let (tid, jid) = split_jid(gid);
+            self.q.schedule_in(
+                delay,
+                Ev::BeginExec {
+                    tid: tid as u32,
+                    rid,
+                    jid,
+                },
+            );
+        }
+    }
+
+    fn on_begin_exec(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
+        let now = self.q.now();
+        if self.tenants[tid].exp.job(jid).state.resource() != Some(rid) {
+            return; // cancelled while waiting on the queue cycle
+        }
+        if !self.dyns[rid.0 as usize].up {
+            return; // Fail handler already requeued it
+        }
+        let spec = self.tb.spec(rid);
+        let speed = self.dyns[rid.0 as usize].effective_speed(spec).max(0.01);
+        let rate = self.effective_rate(tid, rid);
+        let name = spec.name.clone();
+        let t_out = self
+            .tb
+            .site(spec.site)
+            .link
+            .transfer_seconds(self.tenants[tid].cfg.workload.output_bytes);
+        let tenant = &mut self.tenants[tid];
+        // CPU time on this machine: drawn work scaled by effective speed at
+        // start (load drift during the run is absorbed into the draw).
+        let work_ref_h = tenant.inflight[&jid].work_ref_h;
+        let cpu_s = work_ref_h * 3600.0 / speed;
+        // Replace the dispatch-time *estimate* with the now-known actual
+        // cost. If the budget headroom no longer carries it, withdraw the
+        // job (still Dispatched — a clean release, not a burned attempt)
+        // instead of running over budget: this is what makes "spend never
+        // exceeds budget" a hard invariant in virtual mode.
+        tenant.ledger.release(jid, 0.0, &name);
+        if !tenant.ledger.commit(jid, cpu_s * rate) {
+            self.managers[rid.0 as usize].cancel(grid_jid(tid, jid));
+            let tenant = &mut self.tenants[tid];
+            let _ = tenant.exp.release(jid);
+            if let Some(j) = &mut tenant.journal {
+                let _ = j.released(jid);
+            }
+            tenant.inflight.remove(&jid);
+            self.dec_total_in_flight(rid);
+            self.mark_view_all(rid); // occupancy changed for everyone
+            return;
+        }
+        if tenant.exp.start(jid, now).is_err() {
+            return;
+        }
+        if let Some(j) = &mut tenant.journal {
+            let _ = j.started(jid, now);
+        }
+        let inf = tenant.inflight.get_mut(&jid).expect("inflight record");
+        inf.exec_started = Some(now);
+        inf.rate = rate;
+        inf.cpu_s = cpu_s;
+        let exec_wall = inf.cpu_s;
+        tenant.busy_cpus += 1;
+        tenant.report.busy_cpus.record(now, tenant.busy_cpus);
+        // Stage-out folded into the completion event.
+        self.q.schedule_in(
+            exec_wall + t_out,
+            Ev::Complete {
+                tid: tid as u32,
+                rid,
+                jid,
+            },
+        );
+    }
+
+    fn on_complete(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
+        let now = self.q.now();
+        if !matches!(self.tenants[tid].exp.job(jid).state, JobState::Running { rid: r, .. } if r == rid)
+        {
+            return; // failed/cancelled meanwhile
+        }
+        let name = self.tb.spec(rid).name.clone();
+        self.managers[rid.0 as usize].complete(grid_jid(tid, jid));
+        let tenant = &mut self.tenants[tid];
+        let inf = tenant.inflight.remove(&jid).expect("inflight record");
+        tenant.busy_cpus -= 1;
+        tenant.report.busy_cpus.record(now, tenant.busy_cpus);
+        let cost = inf.cpu_s * inf.rate;
+        tenant.ledger.settle(jid, cost, &name);
+        tenant
+            .exp
+            .complete(jid, now, inf.cpu_s, cost)
+            .expect("legal complete");
+        if let Some(j) = &mut tenant.journal {
+            let _ = j.completed(jid, now, inf.cpu_s, cost);
+        }
+        tenant
+            .advisor
+            .observe_complete(rid, now - inf.dispatched_at, inf.work_ref_h);
+        let usage = tenant
+            .report
+            .per_resource
+            .entry(name)
+            .or_insert_with(ResourceUsage::default);
+        usage.jobs_completed += 1;
+        usage.cpu_seconds += inf.cpu_s;
+        usage.cost += cost;
+        self.dec_total_in_flight(rid);
+        self.mark_view_all(rid); // occupancy + measured service rate changed
+        self.try_start(rid);
+    }
+
+    /// Shared failure path for one in-flight job of tenant `tid` on `rid`.
+    fn fail_in_flight(&mut self, tid: usize, jid: JobId, rid: ResourceId) {
+        let now = self.q.now();
+        let name = self.tb.spec(rid).name.clone();
+        let tenant = &mut self.tenants[tid];
+        if let Some(inf) = tenant.inflight.remove(&jid) {
+            // Owners bill for cycles consumed before the crash, capped at
+            // the job's full CPU demand (a crash during stage-out must not
+            // bill the wire time as CPU time — that could push settled
+            // spend past the committed envelope).
+            let partial = match inf.exec_started {
+                Some(t0) => (now - t0).max(0.0).min(inf.cpu_s) * inf.rate,
+                None => 0.0,
+            };
+            if inf.exec_started.is_some() {
+                tenant.busy_cpus = tenant.busy_cpus.saturating_sub(1);
+                tenant.report.busy_cpus.record(now, tenant.busy_cpus);
+            }
+            tenant.ledger.release(jid, partial, &name);
+            let usage = tenant
+                .report
+                .per_resource
+                .entry(name)
+                .or_insert_with(ResourceUsage::default);
+            usage.jobs_failed += 1;
+            usage.cost += partial;
+        }
+        tenant.advisor.observe_failure(rid);
+        if tenant.exp.fail_attempt(jid).is_ok() {
+            if let Some(j) = &mut tenant.journal {
+                let _ = j.failed_attempt(jid);
+            }
+            self.dec_total_in_flight(rid);
+        }
+        self.mark_view_all(rid); // occupancy + failure history changed
+    }
+
+    fn on_fail(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        if !self.dyns[i].up {
+            return;
+        }
+        self.dyns[i].up = false;
+        let victims = self.managers[i].fail_all();
+        for (gid, _started) in victims {
+            let (tid, jid) = split_jid(gid);
+            self.fail_in_flight(tid, jid, rid);
+        }
+        let spec = self.tb.resources[i].clone();
+        let downtime = self.dyns[i].draw_downtime(&spec);
+        self.q.schedule_in(downtime, Ev::Recover { rid });
+    }
+
+    fn on_recover(&mut self, rid: ResourceId) {
+        let i = rid.0 as usize;
+        self.dyns[i].up = true;
+        let spec = self.tb.resources[i].clone();
+        let uptime = self.dyns[i].draw_uptime(&spec);
+        self.q.schedule_in(uptime, Ev::Fail { rid });
+    }
+
+    fn dec_total_in_flight(&mut self, rid: ResourceId) {
+        let c = &mut self.total_in_flight[rid.0 as usize];
+        debug_assert!(*c > 0, "world in-flight underflow on {rid}");
+        *c = c.saturating_sub(1);
+    }
+}
+
+/// The one demand-signal formula: fraction of a machine's CPUs occupied by
+/// tenants' in-flight jobs plus background competition claims, clamped to
+/// [0, 1]. Shared by billing ([`GridWorld::utilization`]), the scheduler's
+/// view refresh and the price-index sampler, so tenants are always
+/// scheduled on the same rate they are billed at.
+fn utilization_of(in_flight: u32, claimed: u32, cpus: u32) -> f64 {
+    if cpus == 0 {
+        return 0.0;
+    }
+    ((in_flight + claimed) as f64 / cpus as f64).min(1.0)
+}
+
+/// Posted G$/CPU-second on `rid` for `user` right now (owner price at the
+/// owner's local hour, before competition/demand premiums).
+fn posted_quote(
+    tb: &Testbed,
+    start_utc_hour: f64,
+    now: SimTime,
+    user: &str,
+    rid: ResourceId,
+) -> GridDollars {
+    let spec = tb.spec(rid);
+    let lh = local_hour(
+        start_utc_hour + now / 3600.0,
+        tb.site(spec.site).tz_offset_hours,
+    );
+    spec.price.rate_at(lh, user)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::Broker;
+
+    fn three_tenant_world(seed: u64) -> GridWorld {
+        Broker::experiment()
+            .plan(
+                "parameter i integer range from 1 to 40\n\
+                 task main\nexecute icc $i\nendtask",
+            )
+            .deadline_h(18.0)
+            .policy("cost")
+            .user("rajkumar")
+            .seed(seed)
+            .testbed_scale(0.5)
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida"),
+            )
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(14.0)
+                    .policy("deadline-only")
+                    .user("stranger"),
+            )
+            .world()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_jid_roundtrip() {
+        for tid in [0usize, 1, 7, 200] {
+            for j in [0u32, 1, 165, (1 << TENANT_ID_SHIFT) - 1] {
+                let g = grid_jid(tid, JobId(j));
+                assert_eq!(split_jid(g), (tid, JobId(j)));
+            }
+        }
+        // Tenant 0 ids are identical to engine ids (N = 1 bit-exactness).
+        assert_eq!(grid_jid(0, JobId(42)), JobId(42));
+    }
+
+    #[test]
+    fn multi_tenant_world_completes_all_tenants() {
+        let wr = three_tenant_world(11).run_world();
+        assert_eq!(wr.tenants.len(), 3);
+        for t in &wr.tenants {
+            assert_eq!(
+                t.report.jobs_completed + t.report.jobs_failed,
+                t.report.jobs_total,
+                "{} ({}): {}",
+                t.user,
+                t.policy,
+                t.report.summary()
+            );
+            assert!(t.report.jobs_completed >= 35, "{}", t.report.summary());
+        }
+        assert!(wr.events > 100);
+    }
+
+    #[test]
+    fn tenants_diverge_by_policy() {
+        // Same workload, different policies: the time optimizer must finish
+        // no later than the cost optimizer, and realized costs must differ
+        // — tenants are real competitors, not clones.
+        let wr = three_tenant_world(5).run_world();
+        let cost = &wr.tenants[0].report;
+        let time = &wr.tenants[1].report;
+        assert!(
+            time.makespan_s <= cost.makespan_s,
+            "time-opt {:.2}h vs cost-opt {:.2}h",
+            time.makespan_s / HOUR,
+            cost.makespan_s / HOUR
+        );
+        assert!(
+            (cost.total_cost - time.total_cost).abs() > 1e-9,
+            "policies should realize different costs"
+        );
+    }
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = three_tenant_world(9).run_world();
+        let b = three_tenant_world(9).run_world();
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(
+                x.report.makespan_s.to_bits(),
+                y.report.makespan_s.to_bits()
+            );
+            assert_eq!(
+                x.report.total_cost.to_bits(),
+                y.report.total_cost.to_bits()
+            );
+            assert_eq!(x.report.busy_cpus.points(), y.report.busy_cpus.points());
+        }
+    }
+
+    #[test]
+    fn multi_tenant_incremental_views_match_full_rebuild_bit_exactly() {
+        // The per-tenant dirty-tracking tables are a pure optimization even
+        // under cross-tenant dirtying: forcing full rebuilds every tick
+        // must replay the exact same world trace while touching far more
+        // entries.
+        let a = three_tenant_world(7).run_world();
+        let mut forced = three_tenant_world(7);
+        forced.set_full_view_rebuild(true);
+        let b = forced.run_world();
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.report.ticks, y.report.ticks);
+            assert_eq!(
+                x.report.makespan_s.to_bits(),
+                y.report.makespan_s.to_bits()
+            );
+            assert_eq!(
+                x.report.total_cost.to_bits(),
+                y.report.total_cost.to_bits()
+            );
+            assert_eq!(x.report.busy_cpus.points(), y.report.busy_cpus.points());
+            assert!(
+                x.report.view_refreshes < y.report.view_refreshes,
+                "incremental should touch fewer entries: {} vs {}",
+                x.report.view_refreshes,
+                y.report.view_refreshes
+            );
+        }
+    }
+
+    #[test]
+    fn slot_conservation_holds_throughout_a_contended_run() {
+        let mut world = three_tenant_world(3);
+        let mut t = 0.0;
+        while !world.finished() && t < 30.0 * HOUR {
+            t += 0.5 * HOUR;
+            world.run_until(t);
+            assert!(
+                world.slot_conservation_ok(),
+                "slot conservation violated at t={t}"
+            );
+        }
+        assert!(world.finished(), "tenants should finish inside 30h");
+    }
+
+    #[test]
+    fn demand_pricing_moves_the_price_index() {
+        let base = |slope: f64| {
+            Broker::experiment()
+                .plan(
+                    "parameter i integer range from 1 to 60\n\
+                     task main\nexecute icc $i\nendtask",
+                )
+                .deadline_h(8.0)
+                .policy("time")
+                .seed(21)
+                .testbed_scale(0.5)
+                .demand_pricing(slope)
+                .tenant(
+                    Broker::experiment()
+                        .plan(
+                            "parameter i integer range from 1 to 60\n\
+                             task main\nexecute icc $i\nendtask",
+                        )
+                        .deadline_h(8.0)
+                        .policy("time")
+                        .user("davida"),
+                )
+                .world()
+                .unwrap()
+                .run_world()
+        };
+        let flat = base(0.0);
+        let priced = base(0.9);
+        assert!(flat.peak_premium <= 1.0 + 1e-9, "no premium without slope");
+        assert!(
+            priced.peak_premium > 1.0,
+            "busy machines must reprice: peak {}",
+            priced.peak_premium
+        );
+        let total = |wr: &WorldReport| -> f64 {
+            wr.tenants.iter().map(|t| t.report.total_cost).sum()
+        };
+        assert!(
+            total(&priced) > total(&flat),
+            "demand pricing must raise realized spend: {} vs {}",
+            total(&priced),
+            total(&flat)
+        );
+    }
+}

@@ -352,16 +352,128 @@ fn mega_grid_preset_reaches_contract_scale() {
         .simulate()
         .unwrap();
     assert!(
-        sim.tb.resources.len() >= 5000,
+        sim.tb().resources.len() >= 5000,
         "{} machines",
-        sim.tb.resources.len()
+        sim.tb().resources.len()
     );
-    assert!(sim.exp.jobs.len() >= 50_000, "{} jobs", sim.exp.jobs.len());
+    assert!(
+        sim.exp().jobs.len() >= 50_000,
+        "{} jobs",
+        sim.exp().jobs.len()
+    );
     sim.run_until(1.0); // the t = 0 tick
-    let in_flight: u32 = sim.exp.in_flight_counts().iter().sum();
+    let in_flight: u32 = sim.exp().in_flight_counts().iter().sum();
     assert!(
         in_flight > 1000,
         "first tick should fan dispatches across the grid, got {in_flight}"
+    );
+}
+
+#[test]
+fn smoke_contested_gusto() {
+    // Three tenants (cost / time / deadline-only), one shared GUSTO grid:
+    // every tenant accounts for every job, and realized costs/makespans
+    // diverge by policy — the contention is real.
+    let wr = Broker::scenario("contested-gusto")
+        .unwrap()
+        .seed(0xCAFE)
+        .run_world()
+        .unwrap();
+    assert_eq!(wr.tenants.len(), 3);
+    for t in &wr.tenants {
+        assert_eq!(t.report.jobs_total, 165, "{}", t.user);
+        assert_eq!(
+            t.report.jobs_completed + t.report.jobs_failed,
+            t.report.jobs_total,
+            "{} ({}): {}",
+            t.user,
+            t.policy,
+            t.report.summary()
+        );
+        assert!(t.report.jobs_completed >= 150, "{}", t.report.summary());
+    }
+    let cost = &wr.tenants[0].report;
+    let time = &wr.tenants[1].report;
+    assert!(
+        (cost.total_cost - time.total_cost).abs() > 1.0,
+        "cost-opt and time-opt tenants must realize different spends: {} vs {}",
+        cost.total_cost,
+        time.total_cost
+    );
+    assert!(
+        (cost.makespan_s - time.makespan_s).abs() > 60.0,
+        "policies must realize different makespans: {} vs {}",
+        cost.makespan_s,
+        time.makespan_s
+    );
+    let fairness = wr.fairness_jain();
+    assert!(
+        fairness > 0.3 && fairness <= 1.0 + 1e-9,
+        "fairness out of range: {fairness}"
+    );
+}
+
+#[test]
+fn smoke_auction_rush() {
+    // Eight staggered-deadline tenants on a demand-priced grid: the rush
+    // must move prices (peak premium > 1) and every tenant must finish.
+    let wr = Broker::scenario("auction-rush")
+        .unwrap()
+        .seed(0xCAFE)
+        .run_world()
+        .unwrap();
+    assert_eq!(wr.tenants.len(), 8);
+    for t in &wr.tenants {
+        assert_eq!(t.report.jobs_total, 48, "{}", t.user);
+        assert_eq!(
+            t.report.jobs_completed + t.report.jobs_failed,
+            t.report.jobs_total,
+            "{} ({}): {}",
+            t.user,
+            t.policy,
+            t.report.summary()
+        );
+    }
+    assert!(
+        wr.peak_premium > 1.0,
+        "demand pricing must reprice busy machines: peak {}",
+        wr.peak_premium
+    );
+    assert!(!wr.price_index.is_empty(), "price trajectory must be sampled");
+    // Deadlines are staggered 6..20 h in tenant order.
+    let d0 = wr.tenants[0].report.deadline_s;
+    let d7 = wr.tenants[7].report.deadline_s;
+    assert!(d0 < d7, "staggered deadlines: {d0} vs {d7}");
+}
+
+#[test]
+fn multi_tenant_scenarios_are_deterministic_and_seedable() {
+    let run = |seed: u64| {
+        Broker::scenario("contested-gusto")
+            .unwrap()
+            .seed(seed)
+            .run_world()
+            .unwrap()
+    };
+    let a = run(3);
+    let b = run(3);
+    assert_eq!(a.events, b.events);
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(
+            x.report.total_cost.to_bits(),
+            y.report.total_cost.to_bits()
+        );
+        assert_eq!(
+            x.report.makespan_s.to_bits(),
+            y.report.makespan_s.to_bits()
+        );
+    }
+    let c = run(4);
+    assert!(
+        a.events != c.events
+            || a.tenants[0].report.total_cost.to_bits()
+                != c.tenants[0].report.total_cost.to_bits(),
+        "different seeds should produce different trajectories"
     );
 }
 

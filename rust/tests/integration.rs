@@ -88,12 +88,12 @@ fn journal_restart_roundtrip_at_scale() {
     let tb = Testbed::gusto(c.seed ^ 0x6057, 1.0);
 
     let mut sim = GridSimulation::new(tb.clone(), specs, c.clone());
-    let journal = Journal::create(&path, &plan_src, c.seed, &sim.exp).unwrap();
+    let journal = Journal::create(&path, &plan_src, c.seed, sim.exp()).unwrap();
     sim = sim.with_journal(journal);
     sim.run_until(4.0 * HOUR);
-    let done_at_crash = sim.exp.completed();
+    let done_at_crash = sim.exp().completed();
     assert!(done_at_crash > 5, "some progress before the crash");
-    assert!(!sim.exp.finished());
+    assert!(!sim.exp().finished());
     drop(sim);
 
     let rec = recover(&path).unwrap();

@@ -1,7 +1,7 @@
 //! Property-based invariant tests (seeded random cases; see
 //! `nimrod_g::util::prop` — failures report the case seed).
 
-use nimrod_g::broker::PolicyRegistry;
+use nimrod_g::broker::{Broker, PolicyRegistry};
 use nimrod_g::economy::Ledger;
 use nimrod_g::engine::Experiment;
 use nimrod_g::grid::gram::JobManager;
@@ -412,6 +412,123 @@ fn prop_policies_respect_slots_and_skip_down_resources() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_multi_tenant_worlds_conserve_slots_and_budgets_under_churn() {
+    // The GridWorld invariants, checked mid-flight at every step of a
+    // contended run with availability churn, background competition AND
+    // demand pricing:
+    //  * per resource: Σ tenants' in-flight + competition claims ≤ CPUs;
+    //  * per tenant: settled + committed (ledger exposure) ≤ budget.
+    prop_check(6, |rng| {
+        let seed = rng.next_u64();
+        let n_tenants = rng.below(3) + 2; // 2..4
+        let policies = ["cost", "time", "deadline-only", "conservative-time"];
+        let mut b = Broker::experiment()
+            .plan(
+                "parameter i integer range from 1 to 30\n\
+                 task main\nexecute icc $i\nendtask",
+            )
+            .deadline_h(12.0)
+            .policy(policies[0])
+            .budget(2.0e5)
+            .seed(seed)
+            .testbed_scale(0.4)
+            .demand_pricing(0.7)
+            .competition(nimrod_g::grid::competition::CompetitionModel {
+                mean_interarrival_s: 1500.0,
+                mean_duration_s: 2.0 * HOUR,
+                mean_cpus: 30.0,
+            })
+            .tweak_testbed(|tb| {
+                for spec in &mut tb.resources {
+                    spec.mtbf_s = 4.0 * 3600.0; // flaky: real churn mid-run
+                    spec.mttr_s = 0.5 * 3600.0;
+                }
+            });
+        for k in 1..n_tenants {
+            b = b.tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 30\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(8.0 + 3.0 * k as f64)
+                    .policy(policies[k % policies.len()])
+                    .budget(2.0e5)
+                    .user(&format!("user{k}")),
+            );
+        }
+        let mut world = b.world().map_err(|e| format!("{e:#}"))?;
+        let mut t = 0.0;
+        while !world.finished() && t < 60.0 * HOUR {
+            t += 20.0 * 60.0; // 20-minute steps
+            world.run_until(t);
+            prop_assert!(
+                world.slot_conservation_ok(),
+                "slot conservation violated at t={t}"
+            );
+            for tid in 0..world.tenant_count() {
+                let ledger = world.ledger(tid);
+                prop_assert!(
+                    ledger.exposure() <= 2.0e5 + 1e-6,
+                    "tenant {tid}: exposure {} past budget at t={t}",
+                    ledger.exposure()
+                );
+                prop_assert!(
+                    ledger.check_conservation(),
+                    "tenant {tid}: per-resource spend rollup diverged"
+                );
+            }
+        }
+        // Whatever terminal state the budget allowed, spend never exceeds
+        // the envelope and the engine rollups stay consistent.
+        for tid in 0..world.tenant_count() {
+            prop_assert!(
+                world.ledger(tid).settled() <= 2.0e5 + 1e-6,
+                "tenant {tid} overspent: {}",
+                world.ledger(tid).settled()
+            );
+            prop_assert!(
+                world.exp(tid).counts_consistent(),
+                "tenant {tid} engine rollups drifted"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contested_gusto_conserves_slots_every_tick() {
+    // The acceptance experiment: step the contested-gusto preset through
+    // its whole run, checking global slot conservation at a fine grain
+    // (every tick also re-checks it via debug_assert inside the world).
+    let mut world = Broker::scenario("contested-gusto")
+        .unwrap()
+        .seed(0xC0117)
+        .world()
+        .unwrap();
+    let mut t = 0.0;
+    while !world.finished() && t < 40.0 * HOUR {
+        t += 10.0 * 60.0; // 10-minute steps
+        world.run_until(t);
+        assert!(
+            world.slot_conservation_ok(),
+            "slot conservation violated at t={t}"
+        );
+    }
+    assert!(world.finished(), "contested-gusto should finish inside 40h");
+    let wr = world.finalize_world();
+    for tenant in &wr.tenants {
+        assert_eq!(
+            tenant.report.jobs_completed + tenant.report.jobs_failed,
+            tenant.report.jobs_total,
+            "{}: {}",
+            tenant.user,
+            tenant.report.summary()
+        );
+    }
 }
 
 #[test]
