@@ -29,6 +29,7 @@
 
 use nimrod_g::broker::Broker;
 use nimrod_g::config::WorkloadConfig;
+use nimrod_g::economy::market::GraceConfig;
 use nimrod_g::grid::dynamics::ResourceDyn;
 use nimrod_g::grid::mds::Mds;
 use nimrod_g::grid::Testbed;
@@ -36,6 +37,7 @@ use nimrod_g::metrics::{Report, WorldReport};
 use nimrod_g::types::HOUR;
 use nimrod_g::util::bench::Bench;
 use nimrod_g::util::rng::Rng;
+use std::collections::BTreeMap;
 
 /// Make a grid "quiet": flat prices, frozen background load, no failures
 /// inside the run. Nothing dirties the view table except the experiment's
@@ -76,11 +78,13 @@ fn sweep_run(tb: Testbed, full_rebuild: bool) -> (f64, Report) {
 }
 
 /// Run `tenants` co-scheduled 500-job time-optimizing brokers on one quiet
-/// synthetic grid; returns wall seconds and the world report.
+/// synthetic grid; returns wall seconds and the world report. `market`
+/// switches the world from posted prices to periodic GRACE auctions.
 fn tenant_sweep_run(
     tb: Testbed,
     tenants: usize,
     full_rebuild: bool,
+    market: Option<GraceConfig>,
 ) -> (f64, WorldReport) {
     let plan = "parameter i integer range from 1 to 500\n\
                 task main\nexecute chamber $i\nendtask";
@@ -95,6 +99,9 @@ fn tenant_sweep_run(
         .policy("time")
         .seed(0x7E4A)
         .testbed(tb);
+    if let Some(cfg) = market {
+        b = b.grace_market(cfg);
+    }
     for k in 1..tenants {
         b = b.tenant(
             Broker::experiment()
@@ -211,10 +218,14 @@ fn main() {
         "", "", "(incremental)", "(rebuild)", "(incremental)", "(rebuild)", ""
     );
     let tenant_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    // Posted-price incremental runs, kept for the auction sweep below so
+    // the same (tenant count, grid) baseline is not simulated twice.
+    let mut posted_cache: BTreeMap<usize, (f64, WorldReport)> = BTreeMap::new();
     for &tenants in tenant_counts {
         let tb = quiet(Testbed::synthetic(20, 50, 7)); // 1,000 machines
-        let (wall_inc, wi) = tenant_sweep_run(tb.clone(), tenants, false);
-        let (wall_full, wf) = tenant_sweep_run(tb, tenants, true);
+        let (wall_inc, wi) = tenant_sweep_run(tb.clone(), tenants, false, None);
+        let (wall_full, wf) = tenant_sweep_run(tb, tenants, true, None);
+        posted_cache.insert(tenants, (wall_inc, wi.clone()));
         // Same world trace, different maintenance cost.
         assert_eq!(wi.events, wf.events, "multi-tenant trace diverged");
         let totals = |wr: &WorldReport| {
@@ -246,6 +257,79 @@ fn main() {
         "\n(cross-tenant dirtying stays O(changed): touched/tick grows with \
          contention, not with tenants × machines — the rebuild column pays \
          every tenant a full table per tick.)"
+    );
+
+    println!("\n== GRACE market: auction vs posted tenant sweep ==\n");
+    println!(
+        "{:<8} {:>13} {:>13} {:>10} {:>12} {:>12} {:>11}",
+        "tenants",
+        "µs/tick",
+        "µs/tick",
+        "overhead",
+        "agreements",
+        "rounds/agr",
+        "clearing"
+    );
+    println!(
+        "{:<8} {:>13} {:>13} {:>10} {:>12} {:>12} {:>11}",
+        "", "(posted)", "(auction)", "", "", "", "samples"
+    );
+    let auction_counts: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    for &tenants in auction_counts {
+        let tb = quiet(Testbed::synthetic(20, 50, 7)); // 1,000 machines
+        // The posted baseline is the multi-tenant sweep's incremental run;
+        // reuse it when that section already produced it.
+        let (wall_posted, wp) = posted_cache
+            .remove(&tenants)
+            .unwrap_or_else(|| tenant_sweep_run(tb.clone(), tenants, false, None));
+        let (wall_auction, wa) = tenant_sweep_run(
+            tb,
+            tenants,
+            false,
+            Some(GraceConfig::default()),
+        );
+        assert!(
+            !wp.has_market_data(),
+            "posted sweep must not trade on the market"
+        );
+        assert!(
+            wa.agreements_won() > 0,
+            "auction sweep must strike agreements"
+        );
+        for t in wa.tenants.iter().chain(&wp.tenants) {
+            assert_eq!(
+                t.report.jobs_completed + t.report.jobs_failed,
+                t.report.jobs_total,
+                "{}: every tenant accounts for every job",
+                t.user
+            );
+        }
+        let ticks = |wr: &WorldReport| {
+            wr.tenants
+                .iter()
+                .map(|t| t.report.ticks)
+                .sum::<u64>()
+                .max(1)
+        };
+        let (tp, ta) = (ticks(&wp), ticks(&wa));
+        // Overhead is per-tick vs per-tick: auction worlds schedule
+        // differently and run different tick counts, so a total-wall ratio
+        // would not match the two columns beside it.
+        let us_posted = wall_posted * 1e6 / tp as f64;
+        let us_auction = wall_auction * 1e6 / ta as f64;
+        println!(
+            "{tenants:<8} {us_posted:>13.1} {us_auction:>13.1} {:>9.2}x {:>12} {:>12.1} {:>11}",
+            us_auction / us_posted.max(1e-9),
+            wa.agreements_won(),
+            wa.rounds_per_agreement(),
+            wa.clearing_prices.len(),
+        );
+    }
+    println!(
+        "\n(auction overhead = negotiation at every MDS refresh: tender \
+         derivation + per-owner quoting + cheapest-set selection, all \
+         RNG-free; the posted column is the same world with the market \
+         switched off.)"
     );
 
     // Per-cycle costs: MDS refresh + discovery at each testbed size.

@@ -4,6 +4,10 @@
 //! user knows before the experiment is started whether the system can
 //! deliver the results and what the cost will be".
 //!
+//! For the *live* market — auctions running inside a multi-tenant world
+//! with awards feeding the scheduler — run
+//! `cargo run --release --bin nimrod -- run --scenario grace-auction`.
+//!
 //! ```bash
 //! cargo run --release --example economy_market
 //! ```
@@ -31,13 +35,14 @@ fn main() -> anyhow::Result<()> {
                 1 => BidStrategy::ListPrice,
                 _ => BidStrategy::Premium,
             };
+            let utilization = rng.uniform(0.0, 0.9);
             BidServer {
                 resource: spec.id,
-                resource_name: spec.name.clone(),
                 speed: spec.speed,
-                cpus: spec.cpus,
+                free_slots: ((1.0 - utilization) * spec.cpus as f64).floor()
+                    as u32,
                 posted_rate: spec.price.rate_at(lh, "rajkumar"),
-                utilization: rng.uniform(0.0, 0.9),
+                utilization,
                 strategy,
             }
         })
@@ -51,17 +56,17 @@ fn main() -> anyhow::Result<()> {
 
     let broker = Broker::default();
     println!("\n-- scenario 1: relaxed deadline, low reservation rate --");
-    run_tender(&broker, &servers, 165, 20.0, 0.4);
+    run_tender(&broker, &tb, &servers, 165, 20.0, 0.4);
 
     println!("\n-- scenario 2: tight deadline, same reservation rate --");
-    run_tender(&broker, &servers, 165, 6.0, 0.4);
+    run_tender(&broker, &tb, &servers, 165, 6.0, 0.4);
 
     println!("\n-- scenario 3: impossible ask (escalation exhausts) --");
     let broke = Broker {
         max_rounds: 3,
         escalation: 1.05,
     };
-    run_tender(&broke, &servers, 5000, 1.0, 0.01);
+    run_tender(&broke, &tb, &servers, 5000, 1.0, 0.01);
 
     // Show the peak/off-peak effect the §3 parameter list calls out
     // (pick an owner that actually uses time-of-day pricing).
@@ -75,38 +80,56 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn run_tender(broker: &Broker, servers: &[BidServer], jobs: u32, hours: f64, rate: f64) {
+fn run_tender(
+    broker: &Broker,
+    tb: &Testbed,
+    servers: &[BidServer],
+    jobs: u32,
+    hours: f64,
+    rate: f64,
+) {
     let tender = Tender {
         user: "rajkumar".into(),
         jobs,
         job_work_ref_h: 2.0,
         time_to_deadline_s: hours * 3600.0,
         max_rate: rate,
+        hard_rate_cap: None,
     };
     println!(
         "tender: {jobs} jobs x {}h work, deadline {hours} h, reservation {rate} G$/cpu-s",
         tender.job_work_ref_h
     );
-    match broker.negotiate(tender, servers, 0.0) {
-        Some(outcome) => {
+    let outcome = broker.negotiate(tender, servers);
+    if outcome.is_deal() {
+        println!(
+            "  deal after {} round(s) at max rate {:.3}: {} resources, est. {:.0} G$",
+            outcome.rounds,
+            outcome.final_max_rate,
+            outcome.selected.len(),
+            outcome.est_total_cost
+        );
+        for bid in outcome.selected.iter().take(5) {
             println!(
-                "  deal after {} round(s) at max rate {:.3}: {} resources, est. {:.0} G$",
-                outcome.rounds,
-                outcome.final_max_rate,
-                outcome.selected.len(),
-                outcome.est_total_cost
+                "    {} @ {:.3} G$/cpu-s x{} (speed {:.2})",
+                tb.spec(bid.resource).name,
+                bid.rate,
+                bid.capacity,
+                bid.speed
             );
-            for bid in outcome.selected.iter().take(5) {
-                println!(
-                    "    {} @ {:.3} G$/cpu-s x{} (speed {:.2})",
-                    bid.resource_name, bid.rate, bid.capacity, bid.speed
-                );
-            }
-            if outcome.selected.len() > 5 {
-                println!("    ... {} more", outcome.selected.len() - 5);
-            }
         }
-        None => println!("  NO DEAL — renegotiate deadline or price (paper §3)"),
+        if outcome.selected.len() > 5 {
+            println!("    ... {} more", outcome.selected.len() - 5);
+        }
+    } else {
+        // The failed loop reports its best offer, not a bare None: the
+        // caller can tell the user what the market refused (paper §3's
+        // "renegotiate deadline and/or cost").
+        let rejected = outcome.best_rejected.expect("failure carries tender");
+        println!(
+            "  NO DEAL after {} round(s) — even {:.3} G$/cpu-s for {} jobs in {hours} h was refused; renegotiate deadline or price (paper §3)",
+            outcome.rounds, rejected.max_rate, rejected.jobs
+        );
     }
 }
 

@@ -14,7 +14,9 @@
 //!   [`ExperimentBuilder::run_world`] to put N competing experiments on
 //!   one shared grid ([`crate::sim::GridWorld`]), optionally with
 //!   demand-responsive pricing
-//!   ([`ExperimentBuilder::demand_pricing`]);
+//!   ([`ExperimentBuilder::demand_pricing`]) and a pluggable market —
+//!   posted prices by default, or periodic GRACE tender/bid auctions via
+//!   [`ExperimentBuilder::grace_market`];
 //! * [`ScheduleAdvisor`] — the shared per-tick
 //!   discovery → selection → assignment pipeline both drivers delegate to;
 //! * [`PolicyRegistry`] — open, parameterized policy construction
@@ -44,6 +46,7 @@ pub use registry::{PolicyFactory, PolicyParams, PolicyRegistry};
 
 use crate::client::StatusBoard;
 use crate::config::{ExperimentConfig, WorkloadConfig};
+use crate::economy::market::{GraceConfig, MarketKind};
 use crate::engine::Experiment;
 use crate::grid::competition::CompetitionModel;
 use crate::grid::Testbed;
@@ -265,6 +268,28 @@ impl ExperimentBuilder {
         self
     }
 
+    // -- market --------------------------------------------------------------
+
+    /// Select the market mechanism the world prices resources through.
+    /// World-level like [`competition`](Self::competition): in a
+    /// multi-tenant world only tenant 0's (the outer builder's) setting is
+    /// honoured. The default, [`MarketKind::PostedPrice`], replays
+    /// bit-exactly with pre-market traces.
+    pub fn market(mut self, market: MarketKind) -> Self {
+        self.cfg.market = market;
+        self
+    }
+
+    /// Run the economy through periodic GRACE tender/bid auctions (paper
+    /// §7): at every directory refresh each tenant tenders its remaining
+    /// work, owners bid on real utilization, and awards become time-limited
+    /// price agreements the scheduler and billing both honour. Shorthand
+    /// for [`market`](Self::market) with
+    /// [`MarketKind::GraceAuction`].
+    pub fn grace_market(self, cfg: GraceConfig) -> Self {
+        self.market(MarketKind::GraceAuction(cfg))
+    }
+
     // -- multi-tenant composition ----------------------------------------
 
     /// Add a co-scheduled tenant: a whole second experiment (own user,
@@ -390,7 +415,7 @@ impl ExperimentBuilder {
         Ok(ScheduleAdvisor::new(policy, work_prior_h))
     }
 
-    /// Validate the (world-level) testbed source.
+    /// Validate the (world-level) testbed source and market selection.
     fn validate_testbed(&self) -> Result<()> {
         if let TestbedSource::Gusto { scale } = &self.testbed {
             let scale = *scale;
@@ -409,6 +434,7 @@ impl ExperimentBuilder {
                 "synthetic testbed needs at least one site and one machine per site, got {sites}×{resources_per_site}"
             );
         }
+        self.cfg.market.validate().context("market")?;
         Ok(())
     }
 
@@ -554,6 +580,10 @@ impl ExperimentBuilder {
             self.tenants.is_empty(),
             "multi-tenant brokering is simulation-only (use world()/run_world())"
         );
+        ensure!(
+            self.cfg.market == MarketKind::PostedPrice,
+            "GRACE auction markets are simulation-only (the live driver has no shared-grid economy)"
+        );
         let advisor = self.advisor(LIVE_WORK_PRIOR_H)?;
         let specs = self.specs()?;
         let runner =
@@ -642,6 +672,36 @@ mod tests {
             .is_err());
         // A single-tenant world is fine.
         assert!(Broker::experiment().world().is_ok());
+    }
+
+    #[test]
+    fn market_selection_validates_and_defaults_posted() {
+        assert_eq!(
+            Broker::experiment().config().market,
+            MarketKind::PostedPrice
+        );
+        // Grace market flows into the config and validates its tuning.
+        let b = Broker::experiment().grace_market(GraceConfig::default());
+        assert!(matches!(b.config().market, MarketKind::GraceAuction(_)));
+        assert!(Broker::experiment()
+            .grace_market(GraceConfig {
+                escalation: 0.5,
+                ..GraceConfig::default()
+            })
+            .world()
+            .is_err());
+        assert!(Broker::experiment()
+            .grace_market(GraceConfig {
+                agreement_ttl_s: -1.0,
+                ..GraceConfig::default()
+            })
+            .simulate()
+            .is_err());
+        // The live driver has no shared-grid economy to auction over.
+        assert!(Broker::experiment()
+            .grace_market(GraceConfig::default())
+            .live(1, std::path::Path::new("/tmp/nimrod-live-test"))
+            .is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use super::{Broker, ExperimentBuilder};
 use crate::config::WorkloadConfig;
+use crate::economy::market::GraceConfig;
 use crate::grid::competition::CompetitionModel;
 use anyhow::{bail, Result};
 
@@ -25,7 +26,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 9] = [
+pub const CATALOG: [ScenarioInfo; 11] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -76,6 +77,19 @@ pub const CATALOG: [ScenarioInfo; 9] = [
                   pile onto a demand-priced grid — owners reprice with \
                   utilization, so every tenant's demand moves everyone's \
                   quotes",
+    },
+    ScenarioInfo {
+        name: "grace-auction",
+        summary: "GRACE market (paper §7): 3 tenants tender their remaining \
+                  work at every directory refresh, owners bid on real \
+                  utilization, and awards become time-limited price \
+                  agreements DBC schedules and settles against",
+    },
+    ScenarioInfo {
+        name: "grace-rush",
+        summary: "GRACE at rush hour: the 8-tenant staggered-deadline crowd \
+                  of auction-rush, but bidding through the tender/bid \
+                  market instead of taking posted demand prices",
     },
 ];
 
@@ -181,6 +195,59 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
             }
             b
         }
+        // The §7 economy end to end: three brokers tender their remaining
+        // work at every MDS refresh, per-owner bid servers quote on real
+        // utilization (demand slope 0.6), and awards become time-limited
+        // price agreements that override posted rates for the winner —
+        // WorldReport carries the clearing-price trajectory and per-tenant
+        // award shares.
+        "grace-auction" => b
+            .ionization_study()
+            .deadline_h(15.0)
+            .policy("cost")
+            .user("rajkumar")
+            .demand_pricing(0.6)
+            .grace_market(GraceConfig::default())
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida"),
+            )
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(12.0)
+                    .policy("deadline-only")
+                    .user("john"),
+            ),
+        // auction-rush's staggered 8-tenant crowd, bidding instead of
+        // taking posted demand prices: the multi-tenant stress case for the
+        // market layer.
+        "grace-rush" => {
+            let rush_plan = "parameter point integer range from 1 to 48\n\
+                             task main\nexecute chamber -p $point\nendtask";
+            let policies =
+                ["time", "cost", "deadline-only", "conservative-time"];
+            let mut b = b
+                .plan(rush_plan)
+                .deadline_h(6.0)
+                .policy("time")
+                .user("trader0")
+                .demand_pricing(0.8)
+                .grace_market(GraceConfig::default());
+            for k in 1..8usize {
+                b = b.tenant(
+                    Broker::experiment()
+                        .plan(rush_plan)
+                        .deadline_h(6.0 + 2.0 * k as f64)
+                        .policy(policies[k % policies.len()])
+                        .user(&format!("trader{k}")),
+                );
+            }
+            b
+        }
         other => bail!(
             "unknown scenario `{other}` (available: {})",
             names().join(", ")
@@ -214,6 +281,24 @@ mod tests {
     fn multi_tenant_presets_compose_tenants() {
         assert_eq!(builder("contested-gusto").unwrap().tenant_count(), 3);
         assert_eq!(builder("auction-rush").unwrap().tenant_count(), 8);
+        assert_eq!(builder("grace-auction").unwrap().tenant_count(), 3);
+        assert_eq!(builder("grace-rush").unwrap().tenant_count(), 8);
         assert_eq!(builder("gusto").unwrap().tenant_count(), 1);
+    }
+
+    #[test]
+    fn grace_presets_select_the_auction_market() {
+        use crate::economy::market::MarketKind;
+        for name in ["grace-auction", "grace-rush"] {
+            let b = builder(name).unwrap();
+            assert!(
+                matches!(b.config().market, MarketKind::GraceAuction(_)),
+                "{name} must run the GRACE market"
+            );
+        }
+        assert_eq!(
+            builder("gusto").unwrap().config().market,
+            MarketKind::PostedPrice
+        );
     }
 }

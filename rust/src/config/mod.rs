@@ -1,5 +1,6 @@
 //! Experiment configuration (what the client hands the parametric engine).
 
+use crate::economy::market::{GraceConfig, MarketKind};
 use crate::grid::competition::CompetitionModel;
 use crate::types::{GridDollars, SimTime, HOUR};
 use crate::util::json::Json;
@@ -58,6 +59,10 @@ pub struct ExperimentConfig {
     /// as other competing experiments are put on the grid"); None = the
     /// foreground experiment has the grid to itself.
     pub competition: Option<CompetitionModel>,
+    /// Market mechanism the world prices resources through (paper §7).
+    /// World-level like `competition`: in a multi-tenant world only
+    /// tenant 0's setting is honoured.
+    pub market: MarketKind,
 }
 
 impl Default for ExperimentConfig {
@@ -73,6 +78,7 @@ impl Default for ExperimentConfig {
             seed: 0xD15EA5E,
             workload: WorkloadConfig::default(),
             competition: None,
+            market: MarketKind::PostedPrice,
         }
     }
 }
@@ -109,6 +115,22 @@ impl ExperimentConfig {
                     ]),
                 },
             ),
+            (
+                "market",
+                match &self.market {
+                    MarketKind::PostedPrice => Json::Null,
+                    MarketKind::GraceAuction(g) => Json::obj(vec![
+                        ("max_rounds", Json::num(g.max_rounds as f64)),
+                        ("escalation", Json::num(g.escalation)),
+                        ("agreement_ttl_s", Json::num(g.agreement_ttl_s)),
+                        (
+                            "opening_rate_factor",
+                            Json::num(g.opening_rate_factor),
+                        ),
+                        ("idle_discount", Json::num(g.idle_discount)),
+                    ]),
+                },
+            ),
         ])
     }
 
@@ -135,6 +157,23 @@ impl ExperimentConfig {
                     mean_duration_s: c.req_f64("mean_duration_s")?,
                     mean_cpus: c.req_f64("mean_cpus")?,
                 }),
+            },
+            // Absent/null (pre-market configs included) reads posted-price.
+            market: match v.get("market") {
+                Json::Null => MarketKind::PostedPrice,
+                m => {
+                    let cfg = GraceConfig {
+                        max_rounds: m.req_f64("max_rounds")? as u32,
+                        escalation: m.req_f64("escalation")?,
+                        agreement_ttl_s: m.req_f64("agreement_ttl_s")?,
+                        opening_rate_factor: m.req_f64("opening_rate_factor")?,
+                        idle_discount: m.req_f64("idle_discount")?,
+                    };
+                    // Same guard the builder applies: a corrupted config
+                    // must not load a market the builder would refuse.
+                    cfg.validate()?;
+                    MarketKind::GraceAuction(cfg)
+                }
             },
         })
     }
@@ -179,5 +218,33 @@ mod tests {
             ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())
                 .unwrap();
         assert_eq!(back.budget, None);
+        assert_eq!(back.market, MarketKind::PostedPrice);
+    }
+
+    #[test]
+    fn grace_market_roundtrips() {
+        let c = ExperimentConfig {
+            market: MarketKind::GraceAuction(GraceConfig {
+                max_rounds: 7,
+                escalation: 1.25,
+                agreement_ttl_s: 480.0,
+                opening_rate_factor: 0.4,
+                idle_discount: 0.3,
+            }),
+            ..Default::default()
+        };
+        let j = c.to_json().to_string();
+        let back =
+            ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())
+                .unwrap();
+        assert_eq!(back.market, c.market);
+        // Corrupted market tuning is rejected at load, like the builder
+        // rejects it at construction.
+        let bad = j.replace("\"agreement_ttl_s\":480", "\"agreement_ttl_s\":-1");
+        assert_ne!(bad, j, "replacement must hit the serialized TTL");
+        assert!(ExperimentConfig::from_json(
+            &crate::util::json::parse(&bad).unwrap()
+        )
+        .is_err());
     }
 }

@@ -6,18 +6,27 @@
 //! implements that layer over the simulated testbed:
 //!
 //! * the **broker** posts a [`Tender`] describing the work (jobs, work per
-//!   job, deadline, reservation rate);
+//!   job, deadline, reservation rate, and an optional budget-derived hard
+//!   cap on how far the reservation may concede);
 //! * each owner's [`BidServer`] answers with a [`Bid`] priced by its
 //!   strategy (idle machines discount, busy machines charge a premium,
-//!   premium owners never discount);
+//!   demand-responsive owners compose both through their
+//!   [`crate::economy::PriceModel`] demand slope);
 //! * the **bid-manager** ([`select_bids`]) picks the cheapest bid set whose
-//!   aggregate rate meets the deadline;
+//!   aggregate rate meets the deadline, deterministically — ties break by
+//!   (cost, rate, resource id), never input order;
 //! * [`Broker::negotiate`] runs tender → bids → select rounds, raising the
-//!   reservation rate between rounds if no feasible set exists — the
-//!   "renegotiate either by changing the deadline and/or the cost" loop of
-//!   §3, with the answer known *before* the experiment starts.
+//!   reservation rate between rounds — the "renegotiate either by changing
+//!   the deadline and/or the cost" loop of §3. Concessions are capped by
+//!   both the round limit and [`Tender::hard_rate_cap`], and a failed
+//!   negotiation returns the final rejected tender so callers can report
+//!   *why* the market said no.
+//!
+//! [`crate::sim::GridWorld`] runs this negotiation as a periodic auction
+//! when the world's [`crate::economy::market::MarketKind`] is
+//! `GraceAuction` — see [`crate::economy::market`] for the wiring.
 
-use crate::types::{GridDollars, ResourceId, SimTime};
+use crate::types::{GridDollars, ResourceId};
 
 /// A broker's call for offers.
 #[derive(Debug, Clone)]
@@ -32,13 +41,21 @@ pub struct Tender {
     /// Reservation rate: maximum acceptable G$/CPU-second. Bids above this
     /// are rejected in the current round.
     pub max_rate: GridDollars,
+    /// Absolute ceiling on concession: renegotiation rounds never raise
+    /// `max_rate` past this (typically a budget-derived affordability cap).
+    /// `None` leaves escalation bounded only by the round limit.
+    pub hard_rate_cap: Option<GridDollars>,
 }
 
-/// One owner's offer against a tender.
+/// One owner's offer against a tender. Carries only the [`ResourceId`] —
+/// display names resolve at the presentation edge (the negotiation path
+/// runs per tenant at every directory refresh, so the offer structs stay
+/// allocation-free). An offer binds for the synchronous negotiation that
+/// solicited it; the *award's* lifetime is the market's agreement TTL
+/// ([`crate::economy::market::GraceConfig::agreement_ttl_s`]).
 #[derive(Debug, Clone)]
 pub struct Bid {
     pub resource: ResourceId,
-    pub resource_name: String,
     /// Offered price, G$/CPU-second.
     pub rate: GridDollars,
     /// Concurrent job slots offered.
@@ -46,8 +63,6 @@ pub struct Bid {
     /// Relative speed of the offering machine (jobs of work w take
     /// `w / speed` reference-hours each).
     pub speed: f64,
-    /// Offer expiry (virtual time).
-    pub valid_until: SimTime,
 }
 
 impl Bid {
@@ -64,7 +79,7 @@ impl Bid {
 }
 
 /// Owner bidding temperament.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BidStrategy {
     /// Fills idle cycles: discounts up to 40% when lightly loaded.
     Aggressive,
@@ -72,18 +87,29 @@ pub enum BidStrategy {
     ListPrice,
     /// Charges a scarcity premium as the machine fills.
     Premium,
+    /// Demand-responsive owner (the live-market strategy §3 + §7 compose):
+    /// discounts idle cycles by up to `idle_discount`, and charges the
+    /// [`crate::economy::PriceModel`] demand premium (`1 + slope × util`)
+    /// as the machine fills — so auction offers move on the same real
+    /// utilization signal posted-price quotes do.
+    Demand { slope: f64, idle_discount: f64 },
 }
 
 /// A per-owner bid server: quotes offers for this resource.
 #[derive(Debug, Clone)]
 pub struct BidServer {
     pub resource: ResourceId,
-    pub resource_name: String,
     pub speed: f64,
-    pub cpus: u32,
-    /// Posted G$/CPU-second at quote time (already time-of-day adjusted).
+    /// Concurrent job slots this owner can actually offer — already net of
+    /// every occupancy source (all tenants' in-flight jobs plus background
+    /// competition claims; drivers compute this with the one shared
+    /// [`crate::grid::competition::visible_slots`] formula).
+    pub free_slots: u32,
+    /// Posted G$/CPU-second at quote time (time-of-day and per-user
+    /// adjusted, before the bidding strategy moves it).
     pub posted_rate: GridDollars,
-    /// Fraction of CPUs currently busy (0..1).
+    /// Fraction of the machine occupied (0..1) — the demand signal the
+    /// strategy prices on.
     pub utilization: f64,
     pub strategy: BidStrategy,
 }
@@ -92,43 +118,56 @@ impl BidServer {
     /// Produce an offer, or `None` if the tender is not worth bidding on
     /// (reservation rate below what this owner would ever accept, or no
     /// spare capacity).
-    pub fn quote(&self, tender: &Tender, now: SimTime) -> Option<Bid> {
-        let free = ((1.0 - self.utilization) * self.cpus as f64).floor() as u32;
-        if free == 0 {
+    pub fn quote(&self, tender: &Tender) -> Option<Bid> {
+        if self.free_slots == 0 {
             return None;
         }
+        let util = self.utilization.clamp(0.0, 1.0);
         let rate = match self.strategy {
             BidStrategy::Aggressive => {
                 // Idle machines shave the price to win work.
-                self.posted_rate * (0.6 + 0.4 * self.utilization)
+                self.posted_rate * (0.6 + 0.4 * util)
             }
             BidStrategy::ListPrice => self.posted_rate,
-            BidStrategy::Premium => self.posted_rate * (1.0 + self.utilization),
+            BidStrategy::Premium => self.posted_rate * (1.0 + util),
+            BidStrategy::Demand {
+                slope,
+                idle_discount,
+            } => {
+                self.posted_rate
+                    * (1.0 - idle_discount * (1.0 - util))
+                    * (1.0 + slope.max(0.0) * util)
+            }
         };
         if rate > tender.max_rate {
             return None;
         }
         Some(Bid {
             resource: self.resource,
-            resource_name: self.resource_name.clone(),
             rate,
-            capacity: free.min(tender.jobs),
+            capacity: self.free_slots.min(tender.jobs),
             speed: self.speed,
-            valid_until: now + 600.0,
         })
     }
 }
 
 /// Bid-manager selection: cheapest-per-job-first subset whose aggregate
 /// throughput meets the deadline. Returns `None` when even all bids together
-/// cannot finish in time.
+/// cannot finish in time. A zero-job tender is trivially satisfiable: it
+/// selects nothing and succeeds.
 pub fn select_bids(tender: &Tender, bids: &[Bid]) -> Option<Vec<Bid>> {
     let needed_jobs_per_h =
         tender.jobs as f64 / (tender.time_to_deadline_s / 3600.0);
     let mut sorted: Vec<&Bid> = bids.iter().collect();
+    // Deterministic order: cheapest per job first, ties broken by offered
+    // rate and then resource id — never input order, so grids full of
+    // identically-priced machines replay the same selection whatever order
+    // the quotes arrived in.
     sorted.sort_by(|a, b| {
         a.cost_per_job(tender.job_work_ref_h)
             .total_cmp(&b.cost_per_job(tender.job_work_ref_h))
+            .then(a.rate.total_cmp(&b.rate))
+            .then(a.resource.0.cmp(&b.resource.0))
     });
     let mut chosen = Vec::new();
     let mut rate = 0.0;
@@ -146,16 +185,30 @@ pub fn select_bids(tender: &Tender, bids: &[Bid]) -> Option<Vec<Bid>> {
     }
 }
 
-/// Outcome of a negotiation.
+/// Outcome of a negotiation. Always returned — a failed negotiation is an
+/// outcome too, carrying the final rejected tender instead of a bid set.
 #[derive(Debug, Clone)]
 pub struct NegotiationOutcome {
+    /// The winning bid set (empty when no deal was reached).
     pub selected: Vec<Bid>,
     /// Tender rounds used (1 = first call succeeded).
     pub rounds: u32,
-    /// Final reservation rate that produced a feasible set.
+    /// Final reservation rate offered (the feasible rate on a deal; the
+    /// highest rejected rate otherwise).
     pub final_max_rate: GridDollars,
     /// Estimated total cost of the experiment under the selected bids.
     pub est_total_cost: GridDollars,
+    /// `None` on a deal; on failure, the final escalated tender the market
+    /// still rejected — the best offer the broker made, so callers can
+    /// report exactly what was refused and at what price.
+    pub best_rejected: Option<Tender>,
+}
+
+impl NegotiationOutcome {
+    /// True when negotiation produced a feasible bid set.
+    pub fn is_deal(&self) -> bool {
+        self.best_rejected.is_none()
+    }
 }
 
 /// The GRACE broker: runs up to `max_rounds` tender rounds, escalating the
@@ -177,15 +230,21 @@ impl Default for Broker {
 }
 
 impl Broker {
+    /// Run tender → bids → select rounds. Concessions are capped twice
+    /// over: at most `max_rounds` rounds, and the reservation rate never
+    /// rises past [`Tender::hard_rate_cap`] — once the rate can no longer
+    /// move, remaining rounds would be identical, so the loop stops early.
     pub fn negotiate(
         &self,
         mut tender: Tender,
         servers: &[BidServer],
-        now: SimTime,
-    ) -> Option<NegotiationOutcome> {
-        for round in 1..=self.max_rounds {
+    ) -> NegotiationOutcome {
+        let max_rounds = self.max_rounds.max(1);
+        let mut rounds = 0;
+        for round in 1..=max_rounds {
+            rounds = round;
             let bids: Vec<Bid> =
-                servers.iter().filter_map(|s| s.quote(&tender, now)).collect();
+                servers.iter().filter_map(|s| s.quote(&tender)).collect();
             if let Some(selected) = select_bids(&tender, &bids) {
                 // Cost estimate: spread jobs over the selected set
                 // proportionally to throughput.
@@ -193,25 +252,51 @@ impl Broker {
                     .iter()
                     .map(|b| b.throughput_jobs_per_h(tender.job_work_ref_h))
                     .sum();
-                let est_total_cost = selected
-                    .iter()
-                    .map(|b| {
-                        let share = b.throughput_jobs_per_h(tender.job_work_ref_h)
-                            / total_rate;
-                        share * tender.jobs as f64
-                            * b.cost_per_job(tender.job_work_ref_h)
-                    })
-                    .sum();
-                return Some(NegotiationOutcome {
+                let est_total_cost = if total_rate > 0.0 {
+                    selected
+                        .iter()
+                        .map(|b| {
+                            let share = b
+                                .throughput_jobs_per_h(tender.job_work_ref_h)
+                                / total_rate;
+                            share
+                                * tender.jobs as f64
+                                * b.cost_per_job(tender.job_work_ref_h)
+                        })
+                        .sum()
+                } else {
+                    0.0
+                };
+                return NegotiationOutcome {
                     selected,
-                    rounds: round,
+                    rounds,
                     final_max_rate: tender.max_rate,
                     est_total_cost,
-                });
+                    best_rejected: None,
+                };
             }
-            tender.max_rate *= self.escalation;
+            if round == max_rounds {
+                // Out of rounds: leave the tender at the rate that was
+                // actually quoted and refused, not one escalation past it.
+                break;
+            }
+            // Concede: raise the reservation rate, clamped to the hard cap.
+            let mut next = tender.max_rate * self.escalation;
+            if let Some(cap) = tender.hard_rate_cap {
+                next = next.min(cap);
+            }
+            if next <= tender.max_rate {
+                break; // concession exhausted: further rounds are identical
+            }
+            tender.max_rate = next;
         }
-        None
+        NegotiationOutcome {
+            selected: Vec::new(),
+            rounds,
+            final_max_rate: tender.max_rate,
+            est_total_cost: 0.0,
+            best_rejected: Some(tender),
+        }
     }
 }
 
@@ -228,9 +313,8 @@ mod tests {
     ) -> BidServer {
         BidServer {
             resource: ResourceId(id),
-            resource_name: format!("r{id}"),
             speed: 1.0,
-            cpus,
+            free_slots: ((1.0 - util) * cpus as f64).floor() as u32,
             posted_rate: rate,
             utilization: util,
             strategy,
@@ -244,86 +328,150 @@ mod tests {
             job_work_ref_h: 1.0,
             time_to_deadline_s: hours * 3600.0,
             max_rate,
+            hard_rate_cap: None,
+        }
+    }
+
+    fn bid(id: u32, rate: f64, capacity: u32) -> Bid {
+        Bid {
+            resource: ResourceId(id),
+            rate,
+            capacity,
+            speed: 1.0,
         }
     }
 
     #[test]
     fn aggressive_idle_discounts() {
         let s = server(0, 1.0, 4, 0.0, BidStrategy::Aggressive);
-        let bid = s.quote(&tender(10, 10.0, 5.0), 0.0).unwrap();
+        let bid = s.quote(&tender(10, 10.0, 5.0)).unwrap();
         assert!((bid.rate - 0.6).abs() < 1e-9);
     }
 
     #[test]
     fn premium_busy_charges_more() {
         let s = server(0, 1.0, 8, 0.5, BidStrategy::Premium);
-        let bid = s.quote(&tender(10, 10.0, 5.0), 0.0).unwrap();
+        let bid = s.quote(&tender(10, 10.0, 5.0)).unwrap();
         assert!((bid.rate - 1.5).abs() < 1e-9);
         assert_eq!(bid.capacity, 4); // half the cpus are busy
     }
 
     #[test]
+    fn demand_strategy_discounts_idle_and_prices_contention() {
+        let strat = BidStrategy::Demand {
+            slope: 0.8,
+            idle_discount: 0.25,
+        };
+        // Idle machine: 25% off the posted rate.
+        let idle = server(0, 2.0, 4, 0.0, strat);
+        let b = idle.quote(&tender(10, 10.0, 5.0)).unwrap();
+        assert!((b.rate - 1.5).abs() < 1e-9, "idle rate {}", b.rate);
+        // Half-busy: discount shrinks, demand premium grows.
+        let half = server(1, 2.0, 8, 0.5, strat);
+        let b = half.quote(&tender(10, 10.0, 5.0)).unwrap();
+        // 2.0 × (1 − 0.25 × 0.5) × (1 + 0.8 × 0.5) = 2.0 × 0.875 × 1.4
+        assert!((b.rate - 2.45).abs() < 1e-9, "half rate {}", b.rate);
+        // Slope 0 (flat owner) degenerates to a pure idle discount.
+        let flat = server(
+            2,
+            2.0,
+            4,
+            0.0,
+            BidStrategy::Demand {
+                slope: 0.0,
+                idle_discount: 0.25,
+            },
+        );
+        let b = flat.quote(&tender(10, 10.0, 5.0)).unwrap();
+        assert!((b.rate - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
     fn no_bid_above_reservation_rate() {
         let s = server(0, 10.0, 4, 0.0, BidStrategy::ListPrice);
-        assert!(s.quote(&tender(10, 10.0, 5.0), 0.0).is_none());
+        assert!(s.quote(&tender(10, 10.0, 5.0)).is_none());
     }
 
     #[test]
     fn saturated_machine_does_not_bid() {
         let s = server(0, 1.0, 4, 1.0, BidStrategy::Aggressive);
-        assert!(s.quote(&tender(10, 10.0, 5.0), 0.0).is_none());
+        assert!(s.quote(&tender(10, 10.0, 5.0)).is_none());
     }
 
     #[test]
     fn selection_prefers_cheap_bids() {
         let t = tender(16, 4.0, 100.0); // need 4 jobs/h
-        let bids = vec![
-            Bid {
-                resource: ResourceId(0),
-                resource_name: "cheap".into(),
-                rate: 0.5,
-                capacity: 4,
-                speed: 1.0,
-                valid_until: 600.0,
-            },
-            Bid {
-                resource: ResourceId(1),
-                resource_name: "dear".into(),
-                rate: 5.0,
-                capacity: 16,
-                speed: 1.0,
-                valid_until: 600.0,
-            },
-        ];
-        let sel = select_bids(&t, &bids).unwrap();
-        assert_eq!(sel[0].resource_name, "cheap");
+        let cheap = bid(0, 0.5, 4);
+        let dear = bid(1, 5.0, 16);
+        let sel = select_bids(&t, &[cheap, dear]).unwrap();
+        assert_eq!(sel[0].resource, ResourceId(0), "cheap bid wins");
         // The cheap bid alone gives 4 jobs/h — exactly enough.
         assert_eq!(sel.len(), 1);
     }
 
     #[test]
+    fn selection_tie_breaks_by_resource_id_not_input_order() {
+        // Regression: equal-priced bids used to keep input order, so the
+        // same market replayed differently depending on quote arrival
+        // order. Ties must break by resource id.
+        let t = tender(8, 4.0, 100.0); // need 2 jobs/h
+        let forward = vec![bid(3, 1.0, 1), bid(1, 1.0, 1), bid(2, 1.0, 1)];
+        let mut reversed = forward.clone();
+        reversed.reverse();
+        let sel_f = select_bids(&t, &forward).unwrap();
+        let sel_r = select_bids(&t, &reversed).unwrap();
+        let ids = |sel: &[Bid]| sel.iter().map(|b| b.resource.0).collect::<Vec<_>>();
+        assert_eq!(ids(&sel_f), vec![1, 2], "lowest ids win ties");
+        assert_eq!(ids(&sel_f), ids(&sel_r), "input order must not matter");
+    }
+
+    #[test]
     fn selection_fails_when_infeasible() {
         let t = tender(1000, 1.0, 100.0); // need 1000 jobs/h
-        let bids = vec![Bid {
-            resource: ResourceId(0),
-            resource_name: "small".into(),
-            rate: 0.1,
-            capacity: 2,
-            speed: 1.0,
-            valid_until: 600.0,
-        }];
+        let bids = vec![bid(0, 0.1, 2)];
         assert!(select_bids(&t, &bids).is_none());
     }
 
     #[test]
+    fn zero_job_tender_is_a_trivial_deal() {
+        // Nothing to place ⇒ nothing needed ⇒ empty selection succeeds
+        // (callers with real work skip the market instead, but the
+        // bid-manager must not misreport an empty tender as infeasible).
+        let t = tender(0, 4.0, 100.0);
+        let sel = select_bids(&t, &[bid(0, 1.0, 4)]).unwrap();
+        assert!(sel.is_empty());
+        let out = Broker::default().negotiate(t, &[]);
+        assert!(out.is_deal());
+        assert_eq!(out.rounds, 1);
+        assert_eq!(out.est_total_cost, 0.0);
+    }
+
+    #[test]
+    fn single_bidder_market() {
+        // One owner with enough capacity: the deal is that single bid.
+        let servers = vec![server(0, 1.0, 64, 0.0, BidStrategy::ListPrice)];
+        let out = Broker::default().negotiate(tender(10, 10.0, 2.0), &servers);
+        assert!(out.is_deal());
+        assert_eq!(out.selected.len(), 1);
+        // The same single owner, far too small for the deadline: no amount
+        // of escalation conjures capacity — failure reports the final
+        // rejected tender.
+        let small = vec![server(0, 1.0, 1, 0.0, BidStrategy::ListPrice)];
+        let out = Broker::default().negotiate(tender(1000, 1.0, 2.0), &small);
+        assert!(!out.is_deal());
+        let rejected = out.best_rejected.expect("failed outcome carries tender");
+        assert_eq!(rejected.jobs, 1000);
+        assert!(rejected.max_rate > 2.0, "tender escalated before giving up");
+    }
+
+    #[test]
     fn broker_escalates_until_feasible() {
-        // Owner prices at 2.0; tender starts at 0.5 ⇒ needs 2 escalations
-        // of 1.5x (0.5 → 0.75 → 1.125 → 1.6875... wait for >= 2.0 needs 3).
+        // Owner prices at 2.0; tender starts at 0.5 ⇒ needs escalations of
+        // 1.5x until the reservation clears 2.0.
         let servers = vec![server(0, 2.0, 64, 0.0, BidStrategy::ListPrice)];
         let broker = Broker::default();
-        let out = broker
-            .negotiate(tender(10, 10.0, 0.5), &servers, 0.0)
-            .unwrap();
+        let out = broker.negotiate(tender(10, 10.0, 0.5), &servers);
+        assert!(out.is_deal());
         assert!(out.rounds > 1, "should need escalation, rounds={}", out.rounds);
         assert!(out.final_max_rate >= 2.0);
         assert_eq!(out.selected.len(), 1);
@@ -337,20 +485,68 @@ mod tests {
             max_rounds: 3,
             escalation: 1.1,
         };
-        assert!(broker.negotiate(tender(10, 10.0, 0.01), &servers, 0.0).is_none());
+        let out = broker.negotiate(tender(10, 10.0, 0.01), &servers);
+        assert!(!out.is_deal());
+        assert_eq!(out.rounds, 3);
+        assert!(out.selected.is_empty());
+        let rejected = out.best_rejected.expect("failure carries the tender");
+        assert!(
+            rejected.max_rate > 0.01 && rejected.max_rate < 1e9,
+            "escalated but still far below the ask: {}",
+            rejected.max_rate
+        );
+    }
+
+    #[test]
+    fn hard_rate_cap_stops_concessions_early() {
+        // Budget affords at most 1.0 G$/CPU-s; the only owner wants 2.0.
+        // Escalation hits the cap on round one and round two proves the
+        // capped rate still fails — further rounds would be identical, so
+        // the broker stops at 2 of its 10 rounds.
+        let servers = vec![server(0, 2.0, 64, 0.0, BidStrategy::ListPrice)];
+        let broker = Broker {
+            max_rounds: 10,
+            escalation: 2.0,
+        };
+        let mut t = tender(10, 10.0, 0.5);
+        t.hard_rate_cap = Some(1.0);
+        let out = broker.negotiate(t, &servers);
+        assert!(!out.is_deal());
+        assert_eq!(out.rounds, 2, "capped concession must stop early");
+        let rejected = out.best_rejected.unwrap();
+        assert!((rejected.max_rate - 1.0).abs() < 1e-12, "clamped at the cap");
+    }
+
+    #[test]
+    fn budget_below_every_reserve_price_never_deals() {
+        // Every owner's floor exceeds the affordability cap: negotiation
+        // must fail however generous the round limit, reporting the capped
+        // tender.
+        let servers = vec![
+            server(0, 5.0, 8, 0.0, BidStrategy::ListPrice),
+            server(1, 7.0, 8, 0.0, BidStrategy::Premium),
+        ];
+        let broker = Broker {
+            max_rounds: 50,
+            escalation: 1.5,
+        };
+        let mut t = tender(4, 10.0, 0.1);
+        t.hard_rate_cap = Some(2.0); // all reserves are above 2.0
+        let out = broker.negotiate(t, &servers);
+        assert!(!out.is_deal());
+        assert!(out.rounds < 50, "cap must short-circuit the round budget");
+        assert!((out.best_rejected.unwrap().max_rate - 2.0).abs() < 1e-12);
     }
 
     #[test]
     fn cost_per_job_accounts_for_speed() {
-        let bid = Bid {
+        let b = Bid {
             resource: ResourceId(0),
-            resource_name: "fast".into(),
             rate: 1.0,
             capacity: 1,
             speed: 2.0,
-            valid_until: 0.0,
         };
         // 1 ref-hour of work at speed 2 = 1800 cpu-seconds = 1800 G$.
-        assert!((bid.cost_per_job(1.0) - 1800.0).abs() < 1e-9);
+        assert!((b.cost_per_job(1.0) - 1800.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,196 @@
+//! The pluggable market layer: *how* tenants acquire prices on the grid.
+//!
+//! The paper's §3 economy is posted-price — owners quote, brokers take.
+//! §7 sketches GRACE, where brokers instead "enter into bidding and
+//! negotiate for the best possible resources". This module is the seam
+//! between the two: a world runs under one [`MarketKind`], selected through
+//! [`crate::broker::ExperimentBuilder::market`] (or the
+//! [`crate::broker::ExperimentBuilder::grace_market`] shorthand) and
+//! honoured by [`crate::sim::GridWorld`]:
+//!
+//! * [`MarketKind::PostedPrice`] (the default) — the pre-GRACE economy:
+//!   every quote is the owner's posted rate times competition/demand
+//!   premiums. Traces are bit-exact with the pre-market-layer code.
+//! * [`MarketKind::GraceAuction`] — periodic tender/bid auctions at
+//!   directory-refresh boundaries: each tenant derives a
+//!   [`crate::economy::grace::Tender`] from its live DBC state, per-owner
+//!   bid servers quote on real utilization, and awards become time-limited
+//!   [`PriceAgreement`]s that both the scheduler's resource views and the
+//!   billing path honour until they expire.
+
+use crate::types::{GridDollars, SimTime};
+use anyhow::ensure;
+
+/// Which market mechanism a world runs its economy through. World-level:
+/// in a multi-tenant world only tenant 0's setting is honoured (the market
+/// belongs to the grid, like competition and the start hour).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum MarketKind {
+    /// Owners post rates; tenants take them (paper §3, the default).
+    #[default]
+    PostedPrice,
+    /// Periodic GRACE tender/bid auctions (paper §7) at every MDS refresh.
+    GraceAuction(GraceConfig),
+}
+
+impl MarketKind {
+    /// Validate tuning values (builder construction guard).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            MarketKind::PostedPrice => Ok(()),
+            MarketKind::GraceAuction(cfg) => cfg.validate(),
+        }
+    }
+}
+
+/// Tuning for the periodic GRACE auction market.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraceConfig {
+    /// Max tender rounds per negotiation before the broker gives up.
+    pub max_rounds: u32,
+    /// Reservation-rate escalation factor between rounds (≥ 1).
+    pub escalation: f64,
+    /// Seconds an awarded price agreement stays in force. Shorter than the
+    /// directory-refresh period means every agreement lapses mid-sweep and
+    /// pricing falls back to posted rates until the next auction.
+    pub agreement_ttl_s: SimTime,
+    /// Opening reservation rate as a fraction of the mean posted rate
+    /// across bidding owners (< 1 starts the haggling below list price).
+    pub opening_rate_factor: f64,
+    /// Largest idle-cycle discount owners offer (0..1): a fully idle
+    /// machine bids `posted × (1 − idle_discount)`; the discount vanishes
+    /// as the machine fills and the owner's demand slope takes over.
+    pub idle_discount: f64,
+}
+
+impl Default for GraceConfig {
+    fn default() -> Self {
+        GraceConfig {
+            max_rounds: 5,
+            escalation: 1.5,
+            agreement_ttl_s: 600.0,
+            opening_rate_factor: 0.5,
+            idle_discount: 0.25,
+        }
+    }
+}
+
+impl GraceConfig {
+    /// Validate tuning values.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        ensure!(
+            self.max_rounds >= 1,
+            "grace market needs at least one tender round"
+        );
+        ensure!(
+            self.escalation.is_finite() && self.escalation >= 1.0,
+            "grace escalation must be >= 1, got {}",
+            self.escalation
+        );
+        ensure!(
+            self.agreement_ttl_s.is_finite() && self.agreement_ttl_s > 0.0,
+            "grace agreement TTL must be positive, got {} s",
+            self.agreement_ttl_s
+        );
+        ensure!(
+            self.opening_rate_factor.is_finite()
+                && self.opening_rate_factor > 0.0,
+            "grace opening rate factor must be positive, got {}",
+            self.opening_rate_factor
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.idle_discount),
+            "grace idle discount must be in [0, 1), got {}",
+            self.idle_discount
+        );
+        Ok(())
+    }
+}
+
+/// A won, time-limited price. Scoped to one (tenant, resource) pair:
+/// recorded by the world when a GRACE award lands, honoured by both the
+/// scheduler's resource views and the billing path until it expires, then
+/// pricing reverts to posted rates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriceAgreement {
+    /// Agreed G$/CPU-second.
+    pub rate: GridDollars,
+    /// Virtual time the agreement lapses (exclusive: billing at exactly
+    /// this instant already falls back to posted rates).
+    pub valid_until: SimTime,
+}
+
+impl PriceAgreement {
+    /// Whether the agreement still binds at `now`.
+    pub fn active(&self, now: SimTime) -> bool {
+        self.valid_until > now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_market_is_posted_price() {
+        assert_eq!(MarketKind::default(), MarketKind::PostedPrice);
+        assert!(MarketKind::default().validate().is_ok());
+    }
+
+    #[test]
+    fn default_grace_config_validates() {
+        let cfg = GraceConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert!(MarketKind::GraceAuction(cfg).validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let ok = GraceConfig::default();
+        assert!(GraceConfig { max_rounds: 0, ..ok.clone() }.validate().is_err());
+        assert!(GraceConfig { escalation: 0.9, ..ok.clone() }
+            .validate()
+            .is_err());
+        assert!(GraceConfig {
+            escalation: f64::NAN,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(GraceConfig {
+            agreement_ttl_s: 0.0,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(GraceConfig {
+            opening_rate_factor: 0.0,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(GraceConfig {
+            idle_discount: 1.0,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(GraceConfig {
+            idle_discount: -0.1,
+            ..ok
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn agreement_expiry_is_exclusive() {
+        let a = PriceAgreement {
+            rate: 1.0,
+            valid_until: 100.0,
+        };
+        assert!(a.active(99.9));
+        assert!(!a.active(100.0));
+        assert!(!a.active(100.1));
+    }
+}

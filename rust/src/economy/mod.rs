@@ -1,20 +1,30 @@
-//! The computational economy (paper §3).
+//! The computational economy (paper §3, §7).
 //!
 //! * [`price`] — owner-set resource pricing: base rate scaled by machine
 //!   speed, peak/off-peak time-of-day multipliers in the *owner's* timezone,
-//!   and per-user discounts ("cost can vary from one user to another").
+//!   per-user discounts ("cost can vary from one user to another"), and an
+//!   optional demand slope that reprices with real machine utilization.
 //! * [`ledger`] — double-entry accounting of experiment spend: funds are
 //!   *committed* when a job is dispatched (so the scheduler can never
 //!   over-commit a budget) and *settled* to actual CPU-time cost when the
 //!   job completes.
-//! * [`grace`] — the GRACE trading layer sketched in §7 (future work in the
-//!   paper, implemented here as the extension feature): broker posts
+//! * [`market`] — the pluggable market layer: a world prices resources
+//!   either by posted rates (the default, [`market::MarketKind::PostedPrice`])
+//!   or through periodic GRACE tender/bid auctions
+//!   ([`market::MarketKind::GraceAuction`]) whose awards become
+//!   time-limited per-(tenant, resource) [`market::PriceAgreement`]s.
+//! * [`grace`] — the GRACE trading layer sketched in §7: broker posts
 //!   tenders, per-owner bid-servers answer with priced offers, and the
-//!   bid-manager runs a deadline-aware selection over the offers.
+//!   bid-manager runs a deterministic deadline-aware selection over the
+//!   offers, with capped concession rounds. [`crate::sim::GridWorld`] runs
+//!   this negotiation at every directory refresh when the market is
+//!   `GraceAuction`, deriving each tenant's tender from its live DBC state.
 
 pub mod grace;
 pub mod ledger;
+pub mod market;
 pub mod price;
 
 pub use ledger::Ledger;
+pub use market::{GraceConfig, MarketKind, PriceAgreement};
 pub use price::PriceModel;

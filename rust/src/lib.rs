@@ -54,6 +54,13 @@
 //! reprice with utilization. Try
 //! `Broker::scenario("contested-gusto")?.run_world()?`.
 //!
+//! The economy's market layer is pluggable ([`economy::market`]): posted
+//! prices by default, or the paper's §7 GRACE trading layer via
+//! [`broker::ExperimentBuilder::grace_market`] — periodic tender/bid
+//! auctions whose awards become time-limited price agreements the
+//! scheduler and billing both honour. Try
+//! `Broker::scenario("grace-auction")?.run_world()?`.
+//!
 //! See `examples/quickstart.rs` for the plan-language path and
 //! `examples/ionization_study.rs` for live execution end to end.
 

@@ -190,7 +190,9 @@ fn print_usage() {
          usage:\n  nimrod run --plan FILE | --scenario NAME [--deadline-h H] [--budget G$]\n             [--policy NAME[?key=value]] [--seed S] [--scale X] [--user U]\n             [--journal FILE] [--csv DIR]\n  nimrod resume --journal FILE [--policy NAME] [--scale X] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod scenarios\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--seed S] [--workdir DIR]\n\n\
          global flags: --help (per subcommand), --verbose\n\n\
          multi-tenant: `nimrod run --scenario contested-gusto` puts N competing\n\
-         brokers on one shared grid and reports per-tenant + fairness metrics"
+         brokers on one shared grid and reports per-tenant + fairness metrics;\n\
+         `nimrod run --scenario grace-auction` runs the GRACE tender/bid market\n\
+         (paper §7) and reports agreements + clearing prices"
     );
 }
 
@@ -239,6 +241,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
              flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery (single-tenant)\n  --csv DIR          write timeline/per-resource CSVs\n\n\
              multi-tenant scenarios (N brokers on one shared grid, per-tenant\n\
              report + fairness/price metrics):\n  nimrod run --scenario contested-gusto\n  nimrod run --scenario auction-rush\n\
+             GRACE tender/bid market scenarios (agreements + clearing prices):\n  nimrod run --scenario grace-auction\n  nimrod run --scenario grace-rush\n\
              (--seed/--scale affect the whole world; --policy/--deadline-h/\n\
              --budget/--user retarget tenant 0 only)"
         );
@@ -314,10 +317,12 @@ fn cmd_run(opts: &Opts) -> Result<()> {
             std::fs::create_dir_all(&dir)?;
             std::fs::write(dir.join("run_tenants.csv"), wr.per_tenant_csv())?;
             std::fs::write(dir.join("run_prices.csv"), wr.price_csv())?;
-            println!(
-                "wrote {}/{{run_tenants,run_prices}}.csv",
-                dir.display()
-            );
+            let mut wrote = "run_tenants,run_prices".to_string();
+            if wr.has_market_data() {
+                std::fs::write(dir.join("run_auction.csv"), wr.auction_csv())?;
+                wrote.push_str(",run_auction");
+            }
+            println!("wrote {}/{{{wrote}}}.csv", dir.display());
         }
         return Ok(());
     }

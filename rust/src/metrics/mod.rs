@@ -172,6 +172,17 @@ pub struct TenantOutcome {
     pub user: String,
     /// Policy spec the tenant scheduled with (e.g. `cost?safety=0.9`).
     pub policy: String,
+    /// GRACE market: price agreements this tenant won across the run
+    /// (0 in posted-price worlds).
+    pub agreements_won: u32,
+    /// Total tender rounds this tenant's negotiations used, successful or
+    /// not (the tenant's whole market effort).
+    pub negotiation_rounds: u64,
+    /// Tender rounds spent by *successful* negotiations only — the figure
+    /// behind [`WorldReport::rounds_per_agreement`].
+    pub deal_rounds: u64,
+    /// Negotiations that ended without a feasible bid set.
+    pub failed_negotiations: u32,
     pub report: Report,
 }
 
@@ -189,6 +200,10 @@ pub struct WorldReport {
     /// Highest combined premium factor observed at any sample (1.0 = no
     /// repricing ever happened).
     pub peak_premium: f64,
+    /// GRACE market: mean awarded G$/CPU-second per auction sweep that
+    /// produced at least one agreement — the clearing-price trajectory.
+    /// Empty in posted-price worlds.
+    pub clearing_prices: Vec<(SimTime, GridDollars)>,
 }
 
 impl Default for WorldReport {
@@ -200,6 +215,7 @@ impl Default for WorldReport {
             events: 0,
             price_index: Vec::new(),
             peak_premium: 1.0,
+            clearing_prices: Vec::new(),
         }
     }
 }
@@ -245,6 +261,52 @@ impl WorldReport {
         hi / lo - 1.0
     }
 
+    /// True when the world ran a GRACE market: any tender activity at all
+    /// (won agreements, failed negotiations, or clearing-price samples).
+    pub fn has_market_data(&self) -> bool {
+        !self.clearing_prices.is_empty()
+            || self.tenants.iter().any(|t| {
+                t.agreements_won > 0
+                    || t.failed_negotiations > 0
+                    || t.negotiation_rounds > 0
+            })
+    }
+
+    /// Agreements won across all tenants.
+    pub fn agreements_won(&self) -> u32 {
+        self.tenants.iter().map(|t| t.agreements_won).sum()
+    }
+
+    /// Mean tender rounds behind each won agreement (0 when none), counting
+    /// only the rounds of negotiations that actually produced a deal —
+    /// failed negotiations' rounds live in
+    /// [`TenantOutcome::negotiation_rounds`] instead. Can sit below 1: a
+    /// single negotiation round may award a whole bid set.
+    pub fn rounds_per_agreement(&self) -> f64 {
+        let agreements = self.agreements_won();
+        if agreements == 0 {
+            return 0.0;
+        }
+        let rounds: u64 = self.tenants.iter().map(|t| t.deal_rounds).sum();
+        rounds as f64 / agreements as f64
+    }
+
+    /// Each tenant's share of all agreements won, in tenant order (all
+    /// zeros when no agreements were struck).
+    pub fn award_share(&self) -> Vec<f64> {
+        let total = self.agreements_won();
+        self.tenants
+            .iter()
+            .map(|t| {
+                if total == 0 {
+                    0.0
+                } else {
+                    t.agreements_won as f64 / total as f64
+                }
+            })
+            .collect()
+    }
+
     /// Multi-line summary: one line per tenant plus the cross-tenant
     /// fairness/pricing figures (CLI output).
     pub fn summary(&self) -> String {
@@ -267,19 +329,38 @@ impl WorldReport {
             self.price_swing() * 100.0,
             self.peak_premium,
         );
+        if self.has_market_data() {
+            let shares = self
+                .award_share()
+                .iter()
+                .map(|s| format!("{:.0}%", s * 100.0))
+                .collect::<Vec<_>>()
+                .join("/");
+            let failed: u32 =
+                self.tenants.iter().map(|t| t.failed_negotiations).sum();
+            let _ = write!(
+                out,
+                "\ngrace: {} agreements ({:.1} rounds/agreement), {} failed negotiations, award share {}",
+                self.agreements_won(),
+                self.rounds_per_agreement(),
+                failed,
+                shares,
+            );
+        }
         out
     }
 
-    /// CSV of per-tenant outcomes.
+    /// CSV of per-tenant outcomes (auction columns are zero in
+    /// posted-price worlds).
     pub fn per_tenant_csv(&self) -> String {
         let mut out = String::from(
-            "user,policy,jobs_total,jobs_completed,jobs_failed,makespan_h,deadline_h,deadline_met,cost_gd,cpu_hours\n",
+            "user,policy,jobs_total,jobs_completed,jobs_failed,makespan_h,deadline_h,deadline_met,cost_gd,cpu_hours,agreements_won,negotiation_rounds,deal_rounds,failed_negotiations\n",
         );
         for t in &self.tenants {
             let r = &t.report;
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{:.3},{:.1},{},{:.2},{:.3}",
+                "{},{},{},{},{},{:.3},{:.1},{},{:.2},{:.3},{},{},{},{}",
                 t.user,
                 t.policy,
                 r.jobs_total,
@@ -290,6 +371,10 @@ impl WorldReport {
                 r.deadline_met,
                 r.total_cost,
                 r.cpu_seconds() / 3600.0,
+                t.agreements_won,
+                t.negotiation_rounds,
+                t.deal_rounds,
+                t.failed_negotiations,
             );
         }
         out
@@ -299,6 +384,17 @@ impl WorldReport {
     pub fn price_csv(&self) -> String {
         let mut out = String::from("hours,mean_rate_gd_per_cpu_s\n");
         for &(t, p) in &self.price_index {
+            let _ = writeln!(out, "{:.3},{p:.6}", t / 3600.0);
+        }
+        out
+    }
+
+    /// CSV of the auction clearing-price trajectory:
+    /// `hours,mean_clearing_rate_gd_per_cpu_s` rows (header only in
+    /// posted-price worlds).
+    pub fn auction_csv(&self) -> String {
+        let mut out = String::from("hours,mean_clearing_rate_gd_per_cpu_s\n");
+        for &(t, p) in &self.clearing_prices {
             let _ = writeln!(out, "{:.3},{p:.6}", t / 3600.0);
         }
         out
@@ -404,6 +500,10 @@ mod tests {
         TenantOutcome {
             user: user.into(),
             policy: "cost".into(),
+            agreements_won: 0,
+            negotiation_rounds: 0,
+            deal_rounds: 0,
+            failed_negotiations: 0,
             report,
         }
     }
@@ -431,6 +531,7 @@ mod tests {
             events: 5,
             price_index: vec![(0.0, 1.0), (3600.0, 1.5), (7200.0, 1.2)],
             peak_premium: 1.5,
+            ..Default::default()
         };
         assert!((wr.price_swing() - 0.5).abs() < 1e-12);
         assert!(wr.summary().contains("fairness"));
@@ -443,5 +544,57 @@ mod tests {
         assert!(pcsv.contains("1.000,1.500000"));
         // No samples ⇒ no swing, not NaN.
         assert_eq!(WorldReport::default().price_swing(), 0.0);
+    }
+
+    #[test]
+    fn auction_figures_and_csv() {
+        // Posted-price worlds carry no market data and say nothing about it.
+        let posted = WorldReport {
+            tenants: vec![tenant("a", 10.0)],
+            ..Default::default()
+        };
+        assert!(!posted.has_market_data());
+        assert!(!posted.summary().contains("grace:"));
+        assert_eq!(posted.rounds_per_agreement(), 0.0);
+        assert_eq!(posted.award_share(), vec![0.0]);
+        assert_eq!(posted.auction_csv().lines().count(), 1); // header only
+
+        // An auction world reports agreements, rounds and award shares.
+        let mut a = tenant("a", 10.0);
+        a.agreements_won = 6;
+        a.deal_rounds = 9;
+        a.negotiation_rounds = 9;
+        let mut b = tenant("b", 10.0);
+        b.agreements_won = 2;
+        b.deal_rounds = 7;
+        // Failed negotiations burn rounds too, but those must not inflate
+        // the rounds-per-agreement figure.
+        b.negotiation_rounds = 7 + 15;
+        b.failed_negotiations = 3;
+        let wr = WorldReport {
+            tenants: vec![a, b],
+            clearing_prices: vec![(3600.0, 0.8), (7200.0, 1.1)],
+            ..Default::default()
+        };
+        assert!(wr.has_market_data());
+        assert_eq!(wr.agreements_won(), 8);
+        assert!((wr.rounds_per_agreement() - 2.0).abs() < 1e-12);
+        let share = wr.award_share();
+        assert!((share[0] - 0.75).abs() < 1e-12);
+        assert!((share[1] - 0.25).abs() < 1e-12);
+        let s = wr.summary();
+        assert!(s.contains("grace: 8 agreements"), "{s}");
+        assert!(s.contains("3 failed negotiations"), "{s}");
+        let acsv = wr.auction_csv();
+        assert_eq!(acsv.lines().count(), 3);
+        assert!(acsv.contains("1.000,0.800000"));
+        // Per-tenant CSV carries the auction columns, deal_rounds included
+        // so rounds_per_agreement is reproducible from the export.
+        let tcsv = wr.per_tenant_csv();
+        assert!(tcsv.lines().next().unwrap().ends_with(
+            "agreements_won,negotiation_rounds,deal_rounds,failed_negotiations"
+        ));
+        assert!(tcsv.contains(",6,9,9,0"), "{tcsv}");
+        assert!(tcsv.contains(",2,22,7,3"), "{tcsv}");
     }
 }

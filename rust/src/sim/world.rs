@@ -31,10 +31,27 @@
 //! this code — bit-exact against the pre-world driver at equal seeds for
 //! competition-free configurations (competition-enabled traces differ by
 //! design: arrivals now respect real occupancy).
+//!
+//! **The market layer is pluggable.** Under the default
+//! [`MarketKind::PostedPrice`] every quote is the owner's posted rate times
+//! competition/demand premiums — bit-exact with the pre-market code. Under
+//! [`MarketKind::GraceAuction`] the world additionally runs one GRACE
+//! tender/bid round per tenant at every directory refresh: the tender is
+//! derived from the tenant's live DBC state (remaining jobs, deadline
+//! slack, budget headroom), per-owner bid servers quote on *real*
+//! utilization (the same [`visible_slots`] occupancy and
+//! [`crate::economy::PriceModel::demand_slope`] signals the posted path
+//! uses), and awards become time-limited [`PriceAgreement`]s per
+//! (tenant, resource). Both the scheduler's resource views and the billing
+//! path honour a live agreement over the posted quote, and awards/expiries
+//! dirty only the winning tenant's views of the touched resources, so the
+//! O(changed) tick survives the auction layer.
 
 use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
 use crate::dispatcher::Action;
+use crate::economy::grace::{BidServer, BidStrategy, Broker as GraceBroker, Tender};
+use crate::economy::market::{GraceConfig, MarketKind, PriceAgreement};
 use crate::economy::Ledger;
 use crate::engine::journal::Journal;
 use crate::engine::{Experiment, JobState};
@@ -47,7 +64,7 @@ use crate::grid::testbed::{local_hour, Testbed};
 use crate::grid::JobManager;
 use crate::metrics::{Report, ResourceUsage, TenantOutcome, WorldReport};
 use crate::plan::JobSpec;
-use crate::scheduler::ResourceView;
+use crate::scheduler::{guarded_window_h, ResourceView, DEADLINE_SAFETY};
 use crate::simtime::EventQueue;
 use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
 use crate::util::rng::Rng;
@@ -153,6 +170,17 @@ pub struct Tenant {
     tod_by_site: Vec<(f64, Vec<u32>)>,
     /// Virtual time of this tenant's previous scheduler tick (repricing).
     last_tick_t: SimTime,
+    /// Active GRACE price agreements by resource (index = ResourceId).
+    /// All-`None` forever in posted-price worlds.
+    agreements: Vec<Option<PriceAgreement>>,
+    /// Earliest `valid_until` among active agreements (∞ when none), so the
+    /// tick-time expiry sweep is O(1) until something is actually due.
+    next_agreement_expiry: SimTime,
+    /// Auction accounting for the world report.
+    agreements_won: u32,
+    negotiation_rounds: u64,
+    deal_rounds: u64,
+    failed_negotiations: u32,
 }
 
 impl Tenant {
@@ -190,6 +218,33 @@ impl Tenant {
             }
         }
         self.tod_by_site = sites;
+    }
+
+    /// Drop agreements whose validity ended at or before `now`, marking the
+    /// affected view entries so pricing reverts to posted rates. Runs at
+    /// tick start; O(1) until an expiry is actually due, then O(resources)
+    /// for that one sweep. Billing paths never consult an expired agreement
+    /// regardless ([`PriceAgreement::active`] is checked at use), so a
+    /// mid-sweep lapse can at worst leave one tick scheduling on a price
+    /// that just expired — the same staleness window posted quotes already
+    /// have between directory refreshes.
+    fn expire_agreements(&mut self, now: SimTime) {
+        if now < self.next_agreement_expiry {
+            return;
+        }
+        let mut next = SimTime::INFINITY;
+        for i in 0..self.agreements.len() {
+            let Some(a) = self.agreements[i] else {
+                continue;
+            };
+            if a.active(now) {
+                next = next.min(a.valid_until);
+            } else {
+                self.agreements[i] = None;
+                self.mark_view(ResourceId(i as u32));
+            }
+        }
+        self.next_agreement_expiry = next;
     }
 }
 
@@ -237,6 +292,12 @@ pub struct GridWorld {
     price_index: Vec<(SimTime, f64)>,
     /// Highest combined premium factor observed at any sample.
     peak_premium: f64,
+    /// GRACE auction market, if the world runs one (tenant 0's
+    /// `cfg.market`; world-level like competition). `None` = posted-price,
+    /// bit-exact with the pre-market pipeline.
+    market: Option<GraceConfig>,
+    /// Mean awarded rate per auction sweep that produced agreements.
+    clearing_prices: Vec<(SimTime, f64)>,
 }
 
 impl GridWorld {
@@ -253,6 +314,10 @@ impl GridWorld {
         let world_seed = setups[0].cfg.seed;
         let start_utc_hour = setups[0].cfg.start_utc_hour;
         let competition_model = setups[0].cfg.competition.clone();
+        let market = match setups[0].cfg.market.clone() {
+            MarketKind::PostedPrice => None,
+            MarketKind::GraceAuction(cfg) => Some(cfg),
+        };
         let mut rng = Rng::new(world_seed);
         let dyns: Vec<ResourceDyn> = tb
             .resources
@@ -342,6 +407,12 @@ impl GridWorld {
                 authorized,
                 tod_by_site,
                 last_tick_t: 0.0,
+                agreements: vec![None; n],
+                next_agreement_expiry: SimTime::INFINITY,
+                agreements_won: 0,
+                negotiation_rounds: 0,
+                deal_rounds: 0,
+                failed_negotiations: 0,
             });
         }
 
@@ -374,6 +445,8 @@ impl GridWorld {
             full_rebuild: false,
             price_index: Vec::new(),
             peak_premium: 1.0,
+            market,
+            clearing_prices: Vec::new(),
         };
         // Seed availability churn per resource.
         for i in 0..world.tb.resources.len() {
@@ -417,6 +490,17 @@ impl GridWorld {
     /// One tenant's configuration.
     pub fn tenant_cfg(&self, tid: usize) -> &ExperimentConfig {
         &self.tenants[tid].cfg
+    }
+
+    /// Number of tenant `tid`'s recorded GRACE agreements still in force
+    /// at `now` (always 0 in posted-price worlds) — time-explicit so
+    /// callers between events can ask about a specific instant.
+    pub fn active_agreements_at(&self, tid: usize, now: SimTime) -> usize {
+        self.tenants[tid]
+            .agreements
+            .iter()
+            .filter(|a| matches!(a, Some(a) if a.active(now)))
+            .count()
     }
 
     /// Attach a persistence journal to one tenant (restart support).
@@ -487,11 +571,17 @@ impl GridWorld {
         )
     }
 
-    /// Effective rate tenant `tid` is billed on `rid` right now: the
-    /// owner's posted per-user quote at the owner's local hour, times the
-    /// background-competition premium, times the owner's demand-responsive
-    /// premium on total utilization.
+    /// Effective rate tenant `tid` is billed on `rid` right now: a live
+    /// GRACE agreement if the tenant won one (scheduling and billing must
+    /// agree on won prices), else the owner's posted per-user quote at the
+    /// owner's local hour, times the background-competition premium, times
+    /// the owner's demand-responsive premium on total utilization.
     fn effective_rate(&self, tid: usize, rid: ResourceId) -> GridDollars {
+        if let Some(a) = self.tenants[tid].agreements[rid.0 as usize] {
+            if a.active(self.q.now()) {
+                return a.rate;
+            }
+        }
         let quote = posted_quote(
             &self.tb,
             self.start_utc_hour,
@@ -546,6 +636,193 @@ impl GridWorld {
             self.price_index.push((now, sum / up as f64));
         }
         self.peak_premium = peak;
+    }
+
+    // -- GRACE market --------------------------------------------------------
+
+    /// Owner-side bid servers for one tenant's tender: every authorized,
+    /// up machine with free capacity quotes through a [`BidServer`].
+    /// Capacity is the real contention-adjusted slot count — the same
+    /// [`visible_slots`] occupancy formula (and the same foreign-only
+    /// subtraction) the scheduler's view refresh uses, because the tender
+    /// asks for capacity for *all* remaining jobs including the tenant's
+    /// own in-flight ones, which already hold their slots. Pricing runs
+    /// the owner's demand slope over *total* real utilization, so auction
+    /// offers move on the very signals posted quotes do. Owners quote from
+    /// ground truth (their own machine), not the stale directory.
+    fn bid_servers(
+        &self,
+        tid: usize,
+        now: SimTime,
+        idle_discount: f64,
+    ) -> Vec<BidServer> {
+        let tenant = &self.tenants[tid];
+        let mut servers = Vec::new();
+        for spec in &self.tb.resources {
+            let i = spec.id.0 as usize;
+            if !tenant.authorized[i] || !self.dyns[i].up {
+                continue;
+            }
+            let claimed = self
+                .competition
+                .as_ref()
+                .map(|c| c.claimed(spec.id))
+                .unwrap_or(0);
+            let own = tenant.exp.in_flight_on(spec.id);
+            let foreign = self.total_in_flight[i].saturating_sub(own);
+            let free = visible_slots(
+                self.managers[i].slots(),
+                spec.cpus,
+                claimed,
+                foreign,
+            );
+            if free == 0 {
+                continue;
+            }
+            let util =
+                utilization_of(self.total_in_flight[i], claimed, spec.cpus);
+            let posted = posted_quote(
+                &self.tb,
+                self.start_utc_hour,
+                now,
+                &tenant.cfg.user,
+                spec.id,
+            );
+            servers.push(BidServer {
+                resource: spec.id,
+                speed: self.dyns[i].effective_speed(spec).max(0.05),
+                free_slots: free,
+                posted_rate: posted,
+                utilization: util,
+                strategy: BidStrategy::Demand {
+                    slope: spec.price.demand_slope,
+                    idle_discount,
+                },
+            });
+        }
+        servers
+    }
+
+    /// GRACE market: one tender/bid negotiation per tenant at this
+    /// directory refresh (no-op in posted-price worlds). The tender is
+    /// derived from the tenant's live DBC state — remaining jobs, the
+    /// safety-discounted deadline window, and a budget-headroom cap on how
+    /// far the reservation rate may concede. Awards become time-limited
+    /// [`PriceAgreement`]s, dirtying only the winning tenant's views of the
+    /// awarded resources; failures are counted with the final rejected
+    /// tender's evidence. Deterministic: no RNG is drawn, so posted-price
+    /// traces are untouched and auction traces replay bit-exactly.
+    fn run_auction(&mut self, now: SimTime) {
+        let Some(cfg) = self.market.clone() else {
+            return;
+        };
+        let broker = GraceBroker {
+            max_rounds: cfg.max_rounds,
+            escalation: cfg.escalation,
+        };
+        let mut awarded_rates: Vec<GridDollars> = Vec::new();
+        for tid in 0..self.tenants.len() {
+            if self.tenants[tid].exp.finished() {
+                continue;
+            }
+            let remaining = self.tenants[tid].exp.remaining();
+            // finished() above is exactly remaining() == 0, so every tender
+            // that reaches the market has work in it (the zero-job tender
+            // path is still covered at the grace unit-test level).
+            debug_assert!(remaining > 0, "unfinished tenant with no jobs");
+            let servers = self.bid_servers(tid, now, cfg.idle_discount);
+            if servers.is_empty() {
+                // A dead/saturated grid cannot even open a market.
+                self.tenants[tid].failed_negotiations += 1;
+                continue;
+            }
+            let job_work = self.tenants[tid].advisor.job_work_ref_h();
+            let window_h = guarded_window_h(
+                now,
+                self.tenants[tid].exp.deadline,
+                DEADLINE_SAFETY,
+            );
+            // Budget headroom caps concession. Headroom already nets out
+            // the committed estimates of in-flight jobs, so only the jobs
+            // still waiting to dispatch draw on it: with U un-dispatched
+            // jobs of w reference hours each, the best case is every job
+            // running on the fastest bidding machine (CPU-seconds
+            // w/speed·3600 each), so a rate above
+            // headroom·speed_best / (U·w·3600) could not be paid even
+            // then and escalation stops there. (All-in-flight tenants keep
+            // a loose one-job cap — agreements still reprice their jobs at
+            // execution start.)
+            let in_flight: u32 =
+                self.tenants[tid].exp.in_flight_counts().iter().sum();
+            let undispatched = remaining.saturating_sub(in_flight).max(1);
+            let best_speed = servers
+                .iter()
+                .map(|s| s.speed)
+                .fold(0.0f64, f64::max)
+                .max(0.05);
+            let budget_cap = self.tenants[tid].ledger.headroom().map(|h| {
+                h * best_speed
+                    / (undispatched as f64 * job_work * 3600.0).max(1e-9)
+            });
+            let mean_posted = servers.iter().map(|s| s.posted_rate).sum::<f64>()
+                / servers.len() as f64;
+            let mut opening = mean_posted * cfg.opening_rate_factor;
+            if let Some(cap) = budget_cap {
+                opening = opening.min(cap);
+            }
+            let tender = Tender {
+                user: self.tenants[tid].cfg.user.clone(),
+                jobs: remaining,
+                job_work_ref_h: job_work,
+                time_to_deadline_s: window_h * 3600.0,
+                max_rate: opening,
+                hard_rate_cap: budget_cap,
+            };
+            let outcome = broker.negotiate(tender, &servers);
+            let tenant = &mut self.tenants[tid];
+            tenant.negotiation_rounds += outcome.rounds as u64;
+            if !outcome.is_deal() {
+                tenant.failed_negotiations += 1;
+                continue;
+            }
+            let mut awarded_any = false;
+            for bid in &outcome.selected {
+                let i = bid.resource.0 as usize;
+                // A renewal must never worsen a price the tenant still
+                // holds: an active cheaper (or equal) agreement stands
+                // until it lapses on its own — otherwise rising utilization
+                // would let each sweep re-bill above a still-binding rate,
+                // and every renewal would inflate agreements_won.
+                if let Some(existing) = tenant.agreements[i] {
+                    if existing.active(now) && existing.rate <= bid.rate {
+                        continue;
+                    }
+                }
+                tenant.agreements[i] = Some(PriceAgreement {
+                    rate: bid.rate,
+                    valid_until: now + cfg.agreement_ttl_s,
+                });
+                tenant.next_agreement_expiry = tenant
+                    .next_agreement_expiry
+                    .min(now + cfg.agreement_ttl_s);
+                tenant.agreements_won += 1;
+                awarded_any = true;
+                awarded_rates.push(bid.rate);
+                // Only the winner's view of the awarded machine changed —
+                // other tenants still see posted rates there.
+                tenant.mark_view(bid.resource);
+            }
+            // Deals that only reaffirm still-standing (cheaper) agreements
+            // land nothing new and must not inflate rounds-per-agreement.
+            if awarded_any {
+                tenant.deal_rounds += outcome.rounds as u64;
+            }
+        }
+        if !awarded_rates.is_empty() {
+            let mean =
+                awarded_rates.iter().sum::<f64>() / awarded_rates.len() as f64;
+            self.clearing_prices.push((now, mean));
+        }
     }
 
     // -- run loop ------------------------------------------------------------
@@ -604,6 +881,10 @@ impl GridWorld {
             outcomes.push(TenantOutcome {
                 user: t.cfg.user,
                 policy: t.cfg.policy,
+                agreements_won: t.agreements_won,
+                negotiation_rounds: t.negotiation_rounds,
+                deal_rounds: t.deal_rounds,
+                failed_negotiations: t.failed_negotiations,
                 report: t.report,
             });
         }
@@ -612,6 +893,7 @@ impl GridWorld {
             events,
             price_index: self.price_index,
             peak_premium: self.peak_premium,
+            clearing_prices: self.clearing_prices,
         }
     }
 
@@ -629,6 +911,10 @@ impl GridWorld {
                 for rid in changed {
                     self.mark_view_all(rid);
                 }
+                // GRACE worlds auction at directory-refresh boundaries:
+                // the freshest owner state is exactly what bid servers
+                // quote on.
+                self.run_auction(now);
                 self.sample_price_index(now);
                 self.q.schedule_in(MDS_REFRESH_PERIOD_S, Ev::MdsRefresh);
             }
@@ -741,6 +1027,12 @@ impl GridWorld {
             let util =
                 utilization_of(total_in_flight[i], claimed, spec.cpus);
             let rate = rate * spec.price.demand_premium(util);
+            // A live GRACE agreement overrides the posted/premium quote:
+            // DBC schedules against the price the tenant actually won.
+            let rate = match tenant.agreements[i] {
+                Some(a) if a.active(now) => a.rate,
+                _ => rate,
+            };
             tenant.views[i] = ResourceView {
                 id: rid,
                 slots,
@@ -763,9 +1055,11 @@ impl GridWorld {
         // 1. discovery + view maintenance: rebuild only the entries whose
         // inputs changed since this tenant's last tick (MDS deltas, churn,
         // any tenant's job transitions, competition claims, local-hour
-        // repricing). Down and unauthorized machines sit in the table with
-        // zero speed/slots; every policy filters them out.
+        // repricing, GRACE agreement expiries). Down and unauthorized
+        // machines sit in the table with zero speed/slots; every policy
+        // filters them out.
         self.tenants[tid].mark_repriced(now);
+        self.tenants[tid].expire_agreements(now);
         self.refresh_dirty_views(tid);
         debug_assert!(
             self.slot_conservation_ok(),
@@ -1252,6 +1546,267 @@ mod tests {
             );
         }
         assert!(world.finished(), "tenants should finish inside 30h");
+    }
+
+    fn grace_world(seed: u64, market: GraceConfig) -> GridWorld {
+        Broker::experiment()
+            .plan(
+                "parameter i integer range from 1 to 40\n\
+                 task main\nexecute icc $i\nendtask",
+            )
+            .deadline_h(18.0)
+            .policy("cost")
+            .user("rajkumar")
+            .budget(2.0e6)
+            .seed(seed)
+            .testbed_scale(0.5)
+            .demand_pricing(0.5)
+            .grace_market(market)
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida"),
+            )
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(14.0)
+                    .policy("deadline-only")
+                    .user("stranger"),
+            )
+            .world()
+            .unwrap()
+    }
+
+    #[test]
+    fn posted_price_worlds_carry_no_market_data() {
+        let wr = three_tenant_world(11).run_world();
+        assert!(!wr.has_market_data());
+        assert!(wr.clearing_prices.is_empty());
+        for t in &wr.tenants {
+            assert_eq!(t.agreements_won, 0);
+            assert_eq!(t.negotiation_rounds, 0);
+            assert_eq!(t.failed_negotiations, 0);
+        }
+    }
+
+    #[test]
+    fn grace_world_completes_with_agreements() {
+        let wr = grace_world(13, GraceConfig::default()).run_world();
+        assert_eq!(wr.tenants.len(), 3);
+        for t in &wr.tenants {
+            assert_eq!(
+                t.report.jobs_completed + t.report.jobs_failed,
+                t.report.jobs_total,
+                "{} ({}): {}",
+                t.user,
+                t.policy,
+                t.report.summary()
+            );
+        }
+        assert!(wr.has_market_data());
+        assert!(
+            wr.agreements_won() > 0,
+            "auctions must strike agreements: {}",
+            wr.summary()
+        );
+        assert!(
+            !wr.clearing_prices.is_empty(),
+            "clearing-price trajectory must be sampled"
+        );
+        // One negotiation round can award many agreements, so the figure
+        // can sit below 1 — it just has to be a real positive ratio.
+        assert!(
+            wr.rounds_per_agreement() > 0.0,
+            "agreements imply tender rounds: {}",
+            wr.rounds_per_agreement()
+        );
+        let share_sum: f64 = wr.award_share().iter().sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to 1");
+    }
+
+    #[test]
+    fn grace_world_is_deterministic() {
+        let a = grace_world(9, GraceConfig::default()).run_world();
+        let b = grace_world(9, GraceConfig::default()).run_world();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.agreements_won(), b.agreements_won());
+        assert_eq!(a.clearing_prices.len(), b.clearing_prices.len());
+        for ((ta, pa), (tb, pb)) in
+            a.clearing_prices.iter().zip(&b.clearing_prices)
+        {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(pa.to_bits(), pb.to_bits());
+        }
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(
+                x.report.total_cost.to_bits(),
+                y.report.total_cost.to_bits()
+            );
+            assert_eq!(
+                x.report.makespan_s.to_bits(),
+                y.report.makespan_s.to_bits()
+            );
+            assert_eq!(x.agreements_won, y.agreements_won);
+        }
+    }
+
+    #[test]
+    fn grace_incremental_views_match_full_rebuild_bit_exactly() {
+        // Award/expiry dirtying must be exact, including agreements that
+        // lapse *between* directory refreshes (TTL below the refresh
+        // period): a missed or late mark would diverge from the
+        // rebuild-every-tick baseline.
+        let short_ttl = GraceConfig {
+            agreement_ttl_s: 90.0, // < MDS_REFRESH_PERIOD_S: lapses mid-sweep
+            ..GraceConfig::default()
+        };
+        for cfg in [GraceConfig::default(), short_ttl] {
+            let a = grace_world(7, cfg.clone()).run_world();
+            let mut forced = grace_world(7, cfg);
+            forced.set_full_view_rebuild(true);
+            let b = forced.run_world();
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.agreements_won(), b.agreements_won());
+            for (x, y) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(
+                    x.report.makespan_s.to_bits(),
+                    y.report.makespan_s.to_bits()
+                );
+                assert_eq!(
+                    x.report.total_cost.to_bits(),
+                    y.report.total_cost.to_bits()
+                );
+                assert!(
+                    x.report.view_refreshes < y.report.view_refreshes,
+                    "incremental should touch fewer entries: {} vs {}",
+                    x.report.view_refreshes,
+                    y.report.view_refreshes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grace_agreements_expire_mid_sweep() {
+        // TTL below the refresh period: every award lapses before the next
+        // auction can renew it. The first auction runs at the first MDS
+        // refresh (t = 120 s); its agreements must be live just after and
+        // dead before the next refresh.
+        let mut world = grace_world(
+            5,
+            GraceConfig {
+                agreement_ttl_s: 60.0,
+                ..GraceConfig::default()
+            },
+        );
+        world.run_until(121.0);
+        let live: usize = (0..world.tenant_count())
+            .map(|tid| world.active_agreements_at(tid, 121.0))
+            .sum();
+        assert!(live > 0, "first auction should strike agreements");
+        let lapsed: usize = (0..world.tenant_count())
+            .map(|tid| world.active_agreements_at(tid, 200.0))
+            .sum();
+        assert_eq!(lapsed, 0, "TTL 60 s awards from t=120 lapse by t=200");
+        // And the run still finishes with every invariant intact.
+        let mut t = 200.0;
+        while !world.finished() && t < 40.0 * HOUR {
+            t += 0.5 * HOUR;
+            world.run_until(t);
+            assert!(world.slot_conservation_ok(), "slots violated at {t}");
+            let ledger = world.ledger(0);
+            if let Some(budget) = ledger.budget() {
+                assert!(
+                    ledger.exposure() <= budget + 1e-6,
+                    "exposure {} over budget {budget}",
+                    ledger.exposure()
+                );
+            }
+        }
+        assert!(world.finished(), "grace world should finish inside 40h");
+    }
+
+    #[test]
+    fn grace_invariants_hold_every_tick() {
+        // Slot conservation and settled+committed ≤ budget, sampled densely
+        // across a whole auction-market run (the ISSUE-4 acceptance gate).
+        let mut world = grace_world(3, GraceConfig::default());
+        let mut t = 0.0;
+        while !world.finished() && t < 40.0 * HOUR {
+            t += 0.25 * HOUR;
+            world.run_until(t);
+            assert!(
+                world.slot_conservation_ok(),
+                "slot conservation violated at t={t}"
+            );
+            for tid in 0..world.tenant_count() {
+                let ledger = world.ledger(tid);
+                if let Some(budget) = ledger.budget() {
+                    assert!(
+                        ledger.exposure() <= budget + 1e-6,
+                        "tenant {tid} exposure {} over budget {budget} at t={t}",
+                        ledger.exposure()
+                    );
+                }
+            }
+        }
+        assert!(world.finished(), "grace world should finish inside 40h");
+    }
+
+    #[test]
+    fn grace_agreements_change_realized_prices() {
+        // Same seed, same grid, market on vs off: an auction world must
+        // realize a different total spend than the posted-price world —
+        // won prices, not posted rates, are what DBC schedules and settles
+        // against.
+        let build = |grace: bool| {
+            let mut b = Broker::experiment()
+                .plan(
+                    "parameter i integer range from 1 to 40\n\
+                     task main\nexecute icc $i\nendtask",
+                )
+                .deadline_h(18.0)
+                .policy("cost")
+                .seed(21)
+                .testbed_scale(0.5)
+                .demand_pricing(0.5)
+                .tenant(
+                    Broker::experiment()
+                        .plan(
+                            "parameter i integer range from 1 to 40\n\
+                             task main\nexecute icc $i\nendtask",
+                        )
+                        .deadline_h(10.0)
+                        .policy("time")
+                        .user("davida"),
+                );
+            if grace {
+                b = b.grace_market(GraceConfig::default());
+            }
+            b.run_world().unwrap()
+        };
+        let auction = build(true);
+        let flat = build(false);
+        assert!(auction.agreements_won() > 0);
+        assert_eq!(flat.agreements_won(), 0);
+        let total = |wr: &WorldReport| -> f64 {
+            wr.tenants.iter().map(|t| t.report.total_cost).sum()
+        };
+        assert!(
+            (total(&auction) - total(&flat)).abs() > 1e-6,
+            "agreement pricing must move realized spend: {} vs {}",
+            total(&auction),
+            total(&flat)
+        );
     }
 
     #[test]

@@ -447,6 +447,105 @@ fn smoke_auction_rush() {
 }
 
 #[test]
+fn smoke_grace_auction() {
+    // Three tenants trading through the GRACE market: every tenant
+    // accounts for every job, agreements are struck and visible in the
+    // world report, and the clearing-price trajectory is sampled.
+    let wr = Broker::scenario("grace-auction")
+        .unwrap()
+        .seed(0xCAFE)
+        .run_world()
+        .unwrap();
+    assert_eq!(wr.tenants.len(), 3);
+    for t in &wr.tenants {
+        assert_eq!(t.report.jobs_total, 165, "{}", t.user);
+        assert_eq!(
+            t.report.jobs_completed + t.report.jobs_failed,
+            t.report.jobs_total,
+            "{} ({}): {}",
+            t.user,
+            t.policy,
+            t.report.summary()
+        );
+    }
+    assert!(wr.has_market_data(), "grace world must trade");
+    assert!(
+        wr.agreements_won() > 0,
+        "auctions must strike agreements: {}",
+        wr.summary()
+    );
+    assert!(
+        !wr.clearing_prices.is_empty(),
+        "clearing prices must be sampled"
+    );
+    // One round can award many agreements, so the ratio may sit below 1;
+    // it just has to be a real positive figure.
+    assert!(wr.rounds_per_agreement() > 0.0);
+    let shares = wr.award_share();
+    assert_eq!(shares.len(), 3);
+    assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    assert!(wr.summary().contains("grace:"), "{}", wr.summary());
+}
+
+#[test]
+fn smoke_grace_rush() {
+    // The 8-tenant staggered crowd bidding instead of taking posted
+    // prices: the multi-tenant stress case for the market layer.
+    let wr = Broker::scenario("grace-rush")
+        .unwrap()
+        .seed(0xCAFE)
+        .run_world()
+        .unwrap();
+    assert_eq!(wr.tenants.len(), 8);
+    for t in &wr.tenants {
+        assert_eq!(t.report.jobs_total, 48, "{}", t.user);
+        assert_eq!(
+            t.report.jobs_completed + t.report.jobs_failed,
+            t.report.jobs_total,
+            "{} ({}): {}",
+            t.user,
+            t.policy,
+            t.report.summary()
+        );
+    }
+    assert!(wr.agreements_won() > 0, "{}", wr.summary());
+}
+
+#[test]
+fn grace_scenarios_are_deterministic_and_seedable() {
+    let run = |seed: u64| {
+        Broker::scenario("grace-auction")
+            .unwrap()
+            .seed(seed)
+            .run_world()
+            .unwrap()
+    };
+    let a = run(6);
+    let b = run(6);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.agreements_won(), b.agreements_won());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.agreements_won, y.agreements_won);
+        assert_eq!(x.negotiation_rounds, y.negotiation_rounds);
+        assert_eq!(
+            x.report.total_cost.to_bits(),
+            y.report.total_cost.to_bits()
+        );
+        assert_eq!(
+            x.report.makespan_s.to_bits(),
+            y.report.makespan_s.to_bits()
+        );
+    }
+    let c = run(7);
+    assert!(
+        a.events != c.events
+            || a.tenants[0].report.total_cost.to_bits()
+                != c.tenants[0].report.total_cost.to_bits(),
+        "different seeds should produce different trajectories"
+    );
+}
+
+#[test]
 fn multi_tenant_scenarios_are_deterministic_and_seedable() {
     let run = |seed: u64| {
         Broker::scenario("contested-gusto")
