@@ -17,7 +17,7 @@ use nimrod_g::engine::Experiment;
 use nimrod_g::plan::{expand, Plan};
 use nimrod_g::protocol::{read_frame, write_frame, Message};
 use nimrod_g::runtime::ChamberRuntime;
-use nimrod_g::scheduler::{ResourceView, SchedCtx};
+use nimrod_g::scheduler::{CandidateIndex, ResourceView, SchedCtx};
 use nimrod_g::simtime::EventQueue;
 use nimrod_g::types::{ResourceId, HOUR};
 use nimrod_g::util::bench::Bench;
@@ -49,10 +49,12 @@ fn main() {
     let registry = PolicyRegistry::with_builtins();
     let mut b = Bench::new("dispatch hot path");
 
-    // Scheduler tick at GUSTO and 8x-GUSTO sizes.
+    // Scheduler tick at GUSTO and 8x-GUSTO sizes, index-backed (the index
+    // is built once, as the drivers maintain it persistently).
     for n in [70, 280, 560] {
         let mut rng = Rng::new(1);
         let vs = views(n, &mut rng);
+        let ix = CandidateIndex::from_views(&vs);
         let mut policy = registry.resolve("cost").unwrap();
         b.iter(&format!("cost-opt allocate ({n} resources)"), || {
             let mut ctx = SchedCtx {
@@ -62,9 +64,19 @@ fn main() {
                 remaining_jobs: 165,
                 job_work_ref_h: 2.0,
                 resources: &vs,
+                candidates: &ix,
                 rng: &mut rng,
             };
             policy.allocate(&mut ctx)
+        });
+        b.iter(&format!("candidate-index full re-rank ({n} resources)"), || {
+            CandidateIndex::from_views(&vs).len()
+        });
+        b.iter(&format!("ranked walks, all dims ({n} resources)"), || {
+            ix.cost_ranked().count()
+                + ix.speed_ranked().count()
+                + ix.rate_ranked().count()
+                + ix.service_ranked().count()
         });
     }
 
@@ -73,6 +85,7 @@ fn main() {
         let exp = experiment(165);
         let mut rng = Rng::new(2);
         let vs = views(70, &mut rng);
+        let ix = CandidateIndex::from_views(&vs);
         let mut policy = registry.resolve("cost").unwrap();
         let alloc = {
             let mut ctx = SchedCtx {
@@ -82,6 +95,7 @@ fn main() {
                 remaining_jobs: 165,
                 job_work_ref_h: 2.0,
                 resources: &vs,
+                candidates: &ix,
                 rng: &mut rng,
             };
             policy.allocate(&mut ctx)
@@ -98,6 +112,7 @@ fn main() {
         let exp = experiment(165);
         let mut rng = Rng::new(3);
         let vs = views(70, &mut rng);
+        let ix = CandidateIndex::from_views(&vs);
         let mut policy = registry.resolve("cost").unwrap();
         b.iter("tick inlined (policy + plan_actions, 70 res)", || {
             let alloc = {
@@ -108,6 +123,7 @@ fn main() {
                     remaining_jobs: exp.remaining(),
                     job_work_ref_h: 2.0,
                     resources: &vs,
+                    candidates: &ix,
                     rng: &mut rng,
                 };
                 policy.allocate(&mut ctx)
@@ -122,6 +138,7 @@ fn main() {
                     deadline: 15.0 * HOUR,
                     budget_headroom: Some(1e9),
                     views: &vs,
+                    candidates: &ix,
                 },
                 &exp,
                 &mut rng,

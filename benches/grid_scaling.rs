@@ -1,26 +1,32 @@
 //! Bench: architecture scaling (paper §2/Figure 1-2).
 //!
-//! The component architecture must keep up as the grid grows. Three
-//! sections:
+//! The component architecture must keep up as the grid grows. Sections:
 //!
 //! 1. **End-to-end GUSTO sweep** — scale the GUSTO-like testbed ~35 → ~560
 //!    machines, measure experiment wall time and event throughput.
 //! 2. **Incremental tick sweep (100 → 10,000 machines)** — the headline
-//!    measurement for the event-driven view table: on a *quiet* synthetic
-//!    grid (flat prices, frozen load, no churn) the per-tick view
-//!    maintenance must be O(changed), not O(resources). Each size runs
-//!    twice — the incremental pipeline vs the same simulation forced to
-//!    rebuild every view every tick — and both must replay the identical
-//!    trace. `touched/tick` is the direct sub-linearity evidence: it stays
-//!    flat as machines grow 100×, while the rebuild baseline pays one
-//!    refresh per machine per tick.
+//!    measurement for the event-driven pipeline: on a *quiet* synthetic
+//!    grid (flat prices, frozen load, no churn) per-tick view maintenance
+//!    must be O(changed), not O(resources), and policy allocation must run
+//!    off the incrementally re-keyed candidate index, not per-tick sorts.
+//!    Each size runs three times — the incremental pipeline, the same
+//!    simulation forced to rebuild every view every tick
+//!    (`set_full_view_rebuild`), and the same simulation forced to re-rank
+//!    the whole candidate index every tick (`set_full_allocation_sort`,
+//!    the sort-every-tick allocation baseline) — and all three must replay
+//!    the identical trace. `touched/tick` is the direct sub-linearity
+//!    evidence for discovery; the index-vs-full-sort µs/tick ratio is the
+//!    allocation-phase evidence.
 //! 3. **Multi-tenant sweep (1 → 8 tenants, one shared 1,000-machine
-//!    grid)** — N co-scheduled brokers dirty each other's view tables
-//!    (occupancy and demand premiums are shared state), so this measures
-//!    that cross-tenant dirtying keeps per-tick maintenance O(changed)
-//!    instead of reverting to O(tenants × resources); the rebuild baseline
-//!    must replay bit-identically here too.
-//! 4. **Per-cycle component costs** — MDS refresh/discovery latency.
+//!    grid)** — N co-scheduled brokers dirty each other's view tables and
+//!    indexes, so this measures that cross-tenant dirtying keeps per-tick
+//!    maintenance O(changed) instead of O(tenants × resources).
+//! 4. **GRACE auction vs posted sweep** — market-layer overhead per tick.
+//! 5. **Per-cycle component costs** — MDS refresh/discovery latency.
+//!
+//! Results are also written to `BENCH_grid_scaling.json` (machine-readable:
+//! µs/tick, touched/tick, allocation-phase share, index-vs-full-sort
+//! speedup per size) — CI archives it as the perf-trajectory artifact.
 //!
 //! ```bash
 //! cargo bench --bench grid_scaling              # full sweep (10k machines)
@@ -36,6 +42,7 @@ use nimrod_g::grid::Testbed;
 use nimrod_g::metrics::{Report, WorldReport};
 use nimrod_g::types::HOUR;
 use nimrod_g::util::bench::Bench;
+use nimrod_g::util::json::Json;
 use nimrod_g::util::rng::Rng;
 use std::collections::BTreeMap;
 
@@ -53,9 +60,14 @@ fn quiet(mut tb: Testbed) -> Testbed {
 }
 
 /// Run the fixed 2,000-job workload over `tb`, returning wall seconds and
-/// the report. `full_rebuild` switches the view table to the
-/// rebuilt-every-tick baseline.
-fn sweep_run(tb: Testbed, full_rebuild: bool) -> (f64, Report) {
+/// the report. `full_view_rebuild` switches the view table to the
+/// rebuilt-every-tick baseline; `full_alloc_sort` switches allocation to
+/// the sort-every-tick candidate-ranking baseline.
+fn sweep_run(
+    tb: Testbed,
+    full_view_rebuild: bool,
+    full_alloc_sort: bool,
+) -> (f64, Report) {
     let mut sim = Broker::experiment()
         .plan(
             "parameter i integer range from 1 to 2000\n\
@@ -71,7 +83,8 @@ fn sweep_run(tb: Testbed, full_rebuild: bool) -> (f64, Report) {
         .testbed(tb)
         .simulate()
         .expect("sweep sim");
-    sim.set_full_view_rebuild(full_rebuild);
+    sim.set_full_view_rebuild(full_view_rebuild);
+    sim.set_full_allocation_sort(full_alloc_sort);
     let t0 = std::time::Instant::now();
     let report = sim.run();
     (t0.elapsed().as_secs_f64(), report)
@@ -83,7 +96,7 @@ fn sweep_run(tb: Testbed, full_rebuild: bool) -> (f64, Report) {
 fn tenant_sweep_run(
     tb: Testbed,
     tenants: usize,
-    full_rebuild: bool,
+    full_view_rebuild: bool,
     market: Option<GraceConfig>,
 ) -> (f64, WorldReport) {
     let plan = "parameter i integer range from 1 to 500\n\
@@ -113,14 +126,25 @@ fn tenant_sweep_run(
         );
     }
     let mut world = b.world().expect("tenant sweep world");
-    world.set_full_view_rebuild(full_rebuild);
+    world.set_full_view_rebuild(full_view_rebuild);
     let t0 = std::time::Instant::now();
     let report = world.run_world();
     (t0.elapsed().as_secs_f64(), report)
 }
 
+/// Allocation-phase share of a run's wall time (policy selection +
+/// dispatcher reconciliation nanoseconds over total wall seconds).
+fn alloc_share(report: &Report, wall_s: f64) -> f64 {
+    if wall_s <= 0.0 {
+        return 0.0;
+    }
+    (report.alloc_ns as f64 / 1e9) / wall_s
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let mut grid_rows: Vec<Json> = Vec::new();
+    let mut tenant_rows: Vec<Json> = Vec::new();
 
     println!("== grid scaling: GUSTO end-to-end sweep ==\n");
     println!(
@@ -152,20 +176,30 @@ fn main() {
         );
     }
 
-    println!("\n== incremental tick pipeline: quiet-grid sweep ==\n");
+    println!("\n== incremental pipeline: quiet-grid sweep ==\n");
     println!(
-        "{:<10} {:>7} {:>14} {:>14} {:>13} {:>13} {:>9}",
+        "{:<10} {:>7} {:>13} {:>13} {:>11} {:>11} {:>11} {:>9} {:>9}",
         "machines",
         "ticks",
         "touched/tick",
         "touched/tick",
         "µs/tick",
         "µs/tick",
-        "speedup"
+        "µs/tick",
+        "view",
+        "alloc"
     );
     println!(
-        "{:<10} {:>7} {:>14} {:>14} {:>13} {:>13} {:>9}",
-        "", "", "(incremental)", "(rebuild)", "(incremental)", "(rebuild)", ""
+        "{:<10} {:>7} {:>13} {:>13} {:>11} {:>11} {:>11} {:>9} {:>9}",
+        "",
+        "",
+        "(increm.)",
+        "(rebuild)",
+        "(increm.)",
+        "(rebuild)",
+        "(fullsort)",
+        "speedup",
+        "speedup"
     );
     // sites × per-site: 100, 1,000, 3,000, 10,000 machines.
     let shapes: &[(usize, usize)] = if quick {
@@ -176,8 +210,9 @@ fn main() {
     for &(sites, per_site) in shapes {
         let tb = quiet(Testbed::synthetic(sites, per_site, 7));
         let machines = tb.resources.len();
-        let (wall_inc, ri) = sweep_run(tb.clone(), false);
-        let (wall_full, rf) = sweep_run(tb, true);
+        let (wall_inc, ri) = sweep_run(tb.clone(), false, false);
+        let (wall_full, rf) = sweep_run(tb.clone(), true, false);
+        let (wall_sort, rs) = sweep_run(tb, false, true);
         // Same trace, different maintenance cost — anything else is a bug.
         assert_eq!(ri.events, rf.events, "incremental trace diverged");
         assert_eq!(ri.ticks, rf.ticks, "incremental tick count diverged");
@@ -186,20 +221,59 @@ fn main() {
             rf.makespan_s.to_bits(),
             "incremental timeline diverged"
         );
+        assert_eq!(ri.events, rs.events, "full-sort trace diverged");
+        assert_eq!(ri.ticks, rs.ticks, "full-sort tick count diverged");
+        assert_eq!(
+            ri.makespan_s.to_bits(),
+            rs.makespan_s.to_bits(),
+            "full-sort timeline diverged"
+        );
         let ticks = ri.ticks.max(1);
+        let us_inc = wall_inc * 1e6 / ticks as f64;
+        let us_full = wall_full * 1e6 / ticks as f64;
+        let us_sort = wall_sort * 1e6 / ticks as f64;
         println!(
-            "{machines:<10} {ticks:>7} {:>14.1} {:>14.1} {:>13.1} {:>13.1} {:>8.2}x",
+            "{machines:<10} {ticks:>7} {:>13.1} {:>13.1} {us_inc:>11.1} {us_full:>11.1} {us_sort:>11.1} {:>8.2}x {:>8.2}x",
             ri.view_refreshes as f64 / ticks as f64,
             rf.view_refreshes as f64 / ticks as f64,
-            wall_inc * 1e6 / ticks as f64,
-            wall_full * 1e6 / ticks as f64,
             wall_full / wall_inc.max(1e-9),
+            wall_sort / wall_inc.max(1e-9),
         );
+        grid_rows.push(Json::obj(vec![
+            ("machines", Json::num(machines as f64)),
+            ("ticks", Json::num(ticks as f64)),
+            (
+                "touched_per_tick_incremental",
+                Json::num(ri.view_refreshes as f64 / ticks as f64),
+            ),
+            (
+                "touched_per_tick_rebuild",
+                Json::num(rf.view_refreshes as f64 / ticks as f64),
+            ),
+            ("us_per_tick_index", Json::num(us_inc)),
+            ("us_per_tick_view_rebuild", Json::num(us_full)),
+            ("us_per_tick_full_sort", Json::num(us_sort)),
+            ("alloc_share_index", Json::num(alloc_share(&ri, wall_inc))),
+            (
+                "alloc_share_full_sort",
+                Json::num(alloc_share(&rs, wall_sort)),
+            ),
+            (
+                "view_rebuild_speedup",
+                Json::num(wall_full / wall_inc.max(1e-9)),
+            ),
+            (
+                "index_vs_full_sort_speedup",
+                Json::num(wall_sort / wall_inc.max(1e-9)),
+            ),
+        ]));
     }
     println!(
         "\n(touched/tick flat while machines grow 100x ⇒ per-tick view \
-         maintenance is O(changed); the rebuild column pays one refresh \
-         per machine per tick.)"
+         maintenance is O(changed); the fullsort column re-ranks every \
+         candidate every tick, which is the allocation cost the index \
+         retires — its speedup over the incremental column is the \
+         acceptance figure in BENCH_grid_scaling.json.)"
     );
 
     println!("\n== multi-tenant brokering: shared-grid sweep ==\n");
@@ -223,6 +297,7 @@ fn main() {
     let mut posted_cache: BTreeMap<usize, (f64, WorldReport)> = BTreeMap::new();
     for &tenants in tenant_counts {
         let tb = quiet(Testbed::synthetic(20, 50, 7)); // 1,000 machines
+        let machines = tb.resources.len();
         let (wall_inc, wi) = tenant_sweep_run(tb.clone(), tenants, false, None);
         let (wall_full, wf) = tenant_sweep_run(tb, tenants, true, None);
         posted_cache.insert(tenants, (wall_inc, wi.clone()));
@@ -252,6 +327,41 @@ fn main() {
             wall_full * 1e6 / ticks as f64,
             wall_full / wall_inc.max(1e-9),
         );
+        let alloc_ns: u64 =
+            wi.tenants.iter().map(|t| t.report.alloc_ns).sum();
+        tenant_rows.push(Json::obj(vec![
+            ("tenants", Json::num(tenants as f64)),
+            ("machines", Json::num(machines as f64)),
+            ("ticks", Json::num(ticks as f64)),
+            (
+                "touched_per_tick_incremental",
+                Json::num(touched_i as f64 / ticks as f64),
+            ),
+            (
+                "touched_per_tick_rebuild",
+                Json::num(touched_f as f64 / ticks as f64),
+            ),
+            (
+                "us_per_tick_incremental",
+                Json::num(wall_inc * 1e6 / ticks as f64),
+            ),
+            (
+                "us_per_tick_rebuild",
+                Json::num(wall_full * 1e6 / ticks as f64),
+            ),
+            (
+                "alloc_share_incremental",
+                Json::num(if wall_inc > 0.0 {
+                    (alloc_ns as f64 / 1e9) / wall_inc
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "view_rebuild_speedup",
+                Json::num(wall_full / wall_inc.max(1e-9)),
+            ),
+        ]));
     }
     println!(
         "\n(cross-tenant dirtying stays O(changed): touched/tick grows with \
@@ -331,6 +441,18 @@ fn main() {
          RNG-free; the posted column is the same world with the market \
          switched off.)"
     );
+
+    // Machine-readable perf trajectory (archived by CI).
+    let out = Json::obj(vec![
+        ("bench", Json::str("grid_scaling")),
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        ("grid_sweep", Json::arr(grid_rows)),
+        ("tenant_sweep", Json::arr(tenant_rows)),
+    ]);
+    match std::fs::write("BENCH_grid_scaling.json", out.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_grid_scaling.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_grid_scaling.json: {e}"),
+    }
 
     // Per-cycle costs: MDS refresh + discovery at each testbed size.
     if !quick {

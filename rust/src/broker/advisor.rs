@@ -11,14 +11,18 @@
 
 use crate::dispatcher::{plan_actions, Action};
 use crate::engine::Experiment;
-use crate::scheduler::{Policy, RateEstimator, ResourceView, SchedCtx};
+use crate::scheduler::{
+    CandidateIndex, Policy, RateEstimator, ResourceView, SchedCtx,
+};
 use crate::types::{GridDollars, ResourceId, SimTime};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
 /// Driver-agnostic inputs for one scheduling tick. The views carry
 /// everything discovery produced (MDS capability, GRAM slots, economy
-/// quotes); experiment state is read from the engine directly.
+/// quotes); the candidate index carries the ranked orderings the driver
+/// maintains over those views (see [`crate::scheduler::index`]);
+/// experiment state is read from the engine directly.
 #[derive(Debug)]
 pub struct TickCtx<'a> {
     /// Current time (virtual seconds or wall seconds since start).
@@ -29,6 +33,10 @@ pub struct TickCtx<'a> {
     pub budget_headroom: Option<GridDollars>,
     /// Discovered resources, one view per schedulable machine.
     pub views: &'a [ResourceView],
+    /// Ranked orderings over `views` — the driver must keep this in
+    /// lockstep with the view table (every rebuilt entry goes through
+    /// [`CandidateIndex::update`]).
+    pub candidates: &'a CandidateIndex,
 }
 
 /// The schedule advisor: the pluggable selection component plus the
@@ -118,6 +126,7 @@ impl ScheduleAdvisor {
                 remaining_jobs: exp.remaining(),
                 job_work_ref_h: job_work,
                 resources: tick.views,
+                candidates: tick.candidates,
                 rng,
             };
             self.policy.allocate(&mut ctx)
@@ -157,6 +166,7 @@ mod tests {
         let exp = experiment(6);
         let mut adv = ScheduleAdvisor::resolve("time", 1.0).unwrap();
         let views = vec![view(0, 4), view(1, 4)];
+        let candidates = CandidateIndex::from_views(&views);
         let mut rng = Rng::new(1);
         let actions = adv.advise(
             TickCtx {
@@ -164,6 +174,7 @@ mod tests {
                 deadline: 10.0 * HOUR,
                 budget_headroom: None,
                 views: &views,
+                candidates: &candidates,
             },
             &exp,
             &mut rng,

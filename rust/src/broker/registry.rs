@@ -1,8 +1,8 @@
 //! Open policy registry with parameterized construction.
 //!
-//! Replaces the closed `match` that used to live in
-//! [`crate::scheduler::by_name`]: policies are looked up by name in a
-//! registry that out-of-crate code can extend with
+//! Replaces the closed `match` (and the long-gone `scheduler::by_name`
+//! shim) that policy construction used to run through: policies are looked
+//! up by name in a registry that out-of-crate code can extend with
 //! [`PolicyRegistry::register`], and each factory receives the parameters
 //! parsed from a `name?key=value&key2=value2` spec, so tunables like the
 //! cost-optimizer's deadline safety factor can be set per experiment
@@ -81,8 +81,8 @@ impl PolicyParams {
 pub type PolicyFactory =
     Box<dyn Fn(&mut PolicyParams) -> Result<Box<dyn Policy>> + Send + Sync>;
 
-/// Name → factory table. The single source of policy construction; the
-/// legacy [`crate::scheduler::by_name`] is a deprecated shim over this.
+/// Name → factory table. The single source of policy construction (the
+/// deprecated `scheduler::by_name` shim that used to wrap it is removed).
 pub struct PolicyRegistry {
     factories: BTreeMap<String, PolicyFactory>,
 }

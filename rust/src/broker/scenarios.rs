@@ -26,7 +26,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 11] = [
+pub const CATALOG: [ScenarioInfo; 12] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -90,6 +90,13 @@ pub const CATALOG: [ScenarioInfo; 11] = [
         summary: "GRACE at rush hour: the 8-tenant staggered-deadline crowd \
                   of auction-rush, but bidding through the tender/bid \
                   market instead of taking posted demand prices",
+    },
+    ScenarioInfo {
+        name: "index-storm",
+        summary: "candidate-index stress: 4 tenants on a 10,000-machine \
+                  synthetic grid with heavy churn and demand repricing — \
+                  the dirty-view firehose where per-tick full sorts are \
+                  worst and incremental re-keying must stay O(changed)",
     },
 ];
 
@@ -248,6 +255,48 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
             }
             b
         }
+        // The allocation-scaling stress case: a 10,000-machine open grid
+        // whose views churn constantly (2.5 h MTBF availability churn plus
+        // demand repricing on every occupancy move), shared by four
+        // brokers. Full per-tick sorts pay 4 × 10,000 log 10,000 here;
+        // the candidate index re-keys only the dirtied entries — this is
+        // the preset the grid_scaling bench and CI smoke lean on to keep
+        // that property honest.
+        "index-storm" => {
+            let storm_plan = "parameter point integer range from 1 to 600\n\
+                              task main\nexecute chamber -p $point\nendtask";
+            let light = WorkloadConfig {
+                job_work_ref_h: 0.25,
+                ..WorkloadConfig::default()
+            };
+            let policies = ["time", "cost", "deadline-only"];
+            let mut b = b
+                .plan(storm_plan)
+                .workload(light.clone())
+                .synthetic_testbed(100, 100)
+                .deadline_h(8.0)
+                .policy("cost")
+                .user("storm0")
+                .tick_period_s(300.0)
+                .demand_pricing(0.7)
+                .tweak_testbed(|tb| {
+                    for spec in &mut tb.resources {
+                        spec.mtbf_s = 2.5 * 3600.0;
+                        spec.mttr_s = 0.5 * 3600.0;
+                    }
+                });
+            for k in 1..4usize {
+                b = b.tenant(
+                    Broker::experiment()
+                        .plan(storm_plan)
+                        .workload(light.clone())
+                        .deadline_h(8.0 + 2.0 * k as f64)
+                        .policy(policies[k - 1])
+                        .user(&format!("storm{k}")),
+                );
+            }
+            b
+        }
         other => bail!(
             "unknown scenario `{other}` (available: {})",
             names().join(", ")
@@ -283,6 +332,7 @@ mod tests {
         assert_eq!(builder("auction-rush").unwrap().tenant_count(), 8);
         assert_eq!(builder("grace-auction").unwrap().tenant_count(), 3);
         assert_eq!(builder("grace-rush").unwrap().tenant_count(), 8);
+        assert_eq!(builder("index-storm").unwrap().tenant_count(), 4);
         assert_eq!(builder("gusto").unwrap().tenant_count(), 1);
     }
 

@@ -44,7 +44,10 @@
 //! ([`sim::live::LiveRunner`]). Both drivers delegate their per-tick
 //! discovery → selection → assignment pipeline to the shared
 //! [`broker::ScheduleAdvisor`]; scheduling policies are constructed through
-//! the open, parameterized [`broker::PolicyRegistry`].
+//! the open, parameterized [`broker::PolicyRegistry`] and allocate off the
+//! persistent [`scheduler::CandidateIndex`] — ranked candidate orderings
+//! re-keyed incrementally from the same dirty-view deltas that drive
+//! discovery, so selection stays sub-linear on 10k-machine grids.
 //!
 //! Multi-tenant brokering — the paper's *many users competing under a
 //! computational economy* — composes through

@@ -242,6 +242,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
              multi-tenant scenarios (N brokers on one shared grid, per-tenant\n\
              report + fairness/price metrics):\n  nimrod run --scenario contested-gusto\n  nimrod run --scenario auction-rush\n\
              GRACE tender/bid market scenarios (agreements + clearing prices):\n  nimrod run --scenario grace-auction\n  nimrod run --scenario grace-rush\n\
+             candidate-index stress (10k machines, churn, 4 tenants):\n  nimrod run --scenario index-storm\n\
              (--seed/--scale affect the whole world; --policy/--deadline-h/\n\
              --budget/--user retarget tenant 0 only)"
         );

@@ -113,6 +113,11 @@ pub struct Report {
     /// tick pipeline's work counter (a full-rebuild driver pays
     /// `ticks × resources` here; the event-driven table pays O(changed)).
     pub view_refreshes: u64,
+    /// Wall nanoseconds spent in the allocation phase (policy selection +
+    /// dispatcher reconciliation) across all ticks. A host-clock figure
+    /// for the perf benches — it never feeds back into the simulation, so
+    /// traces stay deterministic; exclude it from bit-exact comparisons.
+    pub alloc_ns: u64,
 }
 
 impl Report {

@@ -1,12 +1,19 @@
 //! Baseline schedulers from the paper's related-work section (§6), used by
 //! the comparison benches: none of these understand the computational
 //! economy, which is exactly the gap the paper's DBC schedulers fill.
+//!
+//! Like the DBC family, the baselines consume the driver's persistent
+//! [`crate::scheduler::CandidateIndex`] instead of filtering/sorting the
+//! view table per tick: the speed-ordered policies walk the shared
+//! fastest-first ranking, and the rotation policies walk the id-ordered
+//! eligible set.
 
 use super::{Allocation, Policy, ResourceView, SchedCtx};
 
 /// Classic round-robin: hand slots out one at a time cycling over the
-/// resource list until remaining jobs are covered. Position persists across
-/// ticks so the rotation is fair over the experiment.
+/// eligible resources (ascending id) until remaining jobs are covered.
+/// Position persists across ticks so the rotation is fair over the
+/// experiment.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
     cursor: usize,
@@ -18,11 +25,7 @@ impl Policy for RoundRobin {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .collect();
+        let rs: Vec<&ResourceView> = ctx.eligible_views().collect();
         let mut alloc = Allocation::new();
         if rs.is_empty() {
             return alloc;
@@ -45,8 +48,8 @@ impl Policy for RoundRobin {
     }
 }
 
-/// Random subset: sample resources uniformly until remaining jobs are
-/// covered. The "no scheduler" straw-man.
+/// Random subset: sample eligible resources uniformly until remaining jobs
+/// are covered. The "no scheduler" straw-man.
 #[derive(Debug, Default)]
 pub struct RandomPick;
 
@@ -56,11 +59,7 @@ impl Policy for RandomPick {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .collect();
+        let rs: Vec<&ResourceView> = ctx.eligible_views().collect();
         let mut alloc = Allocation::new();
         if rs.is_empty() {
             return alloc;
@@ -93,15 +92,9 @@ impl Policy for PerfOnly {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let mut rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .collect();
-        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
         let mut alloc = Allocation::new();
         let mut total = 0u32;
-        for r in rs {
+        for r in ctx.ranked_by_speed() {
             if total >= ctx.remaining_jobs {
                 break;
             }
@@ -133,18 +126,20 @@ impl Policy for FixedRate {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let mut rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .filter(|r| r.rate <= self.max_rate)
-            .collect();
-        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
         let mut alloc = Allocation::new();
+        // O(1) bail when even the cheapest quote sits above the cap (the
+        // index's rate ranking answers this without a walk).
+        match ctx.candidates.min_rate() {
+            Some(min) if min <= self.max_rate => {}
+            _ => return alloc,
+        }
         let mut total = 0u32;
-        for r in rs {
+        for r in ctx.ranked_by_speed() {
             if total >= ctx.remaining_jobs {
                 break;
+            }
+            if r.rate > self.max_rate {
+                continue;
             }
             let take = r.slots.min(ctx.remaining_jobs - total);
             alloc.insert(r.id, take);
@@ -156,13 +151,15 @@ impl Policy for FixedRate {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::view;
+    use super::super::testutil::{index_of, view};
     use super::*;
+    use crate::scheduler::{CandidateIndex, ResourceView};
     use crate::types::{ResourceId, HOUR};
     use crate::util::rng::Rng;
 
     fn ctx<'a>(
         resources: &'a [ResourceView],
+        candidates: &'a CandidateIndex,
         rng: &'a mut Rng,
         jobs: u32,
     ) -> SchedCtx<'a> {
@@ -173,6 +170,7 @@ mod tests {
             remaining_jobs: jobs,
             job_work_ref_h: 1.0,
             resources,
+            candidates,
             rng,
         }
     }
@@ -180,8 +178,9 @@ mod tests {
     #[test]
     fn round_robin_spreads_evenly() {
         let rs = vec![view(0, 4, 1.0, 1.0), view(1, 4, 1.0, 1.0), view(2, 4, 1.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 6);
+        let mut c = ctx(&rs, &ix, &mut rng, 6);
         let alloc = RoundRobin::default().allocate(&mut c);
         assert_eq!(alloc.len(), 3);
         assert!(alloc.values().all(|&n| n == 2), "{alloc:?}");
@@ -190,8 +189,9 @@ mod tests {
     #[test]
     fn round_robin_caps_at_slots() {
         let rs = vec![view(0, 1, 1.0, 1.0), view(1, 2, 1.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 100);
+        let mut c = ctx(&rs, &ix, &mut rng, 100);
         let alloc = RoundRobin::default().allocate(&mut c);
         assert_eq!(alloc[&ResourceId(0)], 1);
         assert_eq!(alloc[&ResourceId(1)], 2);
@@ -200,8 +200,9 @@ mod tests {
     #[test]
     fn random_total_never_exceeds_jobs_or_slots() {
         let rs = vec![view(0, 3, 1.0, 1.0), view(1, 2, 1.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(42);
-        let mut c = ctx(&rs, &mut rng, 4);
+        let mut c = ctx(&rs, &ix, &mut rng, 4);
         let alloc = RandomPick.allocate(&mut c);
         let total: u32 = alloc.values().sum();
         assert!(total <= 4);
@@ -214,8 +215,9 @@ mod tests {
     #[test]
     fn perf_only_picks_fastest() {
         let rs = vec![view(0, 8, 0.5, 0.01), view(1, 8, 3.0, 50.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 4);
+        let mut c = ctx(&rs, &ix, &mut rng, 4);
         let alloc = PerfOnly.allocate(&mut c);
         assert_eq!(alloc.get(&ResourceId(1)), Some(&4));
         assert!(!alloc.contains_key(&ResourceId(0)));
@@ -224,10 +226,41 @@ mod tests {
     #[test]
     fn fixed_rate_excludes_expensive() {
         let rs = vec![view(0, 8, 1.0, 0.5), view(1, 8, 5.0, 2.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 16);
+        let mut c = ctx(&rs, &ix, &mut rng, 16);
         let alloc = FixedRate { max_rate: 1.0 }.allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(!alloc.contains_key(&ResourceId(1)));
+    }
+
+    #[test]
+    fn fixed_rate_bails_when_every_quote_exceeds_the_cap() {
+        let rs = vec![view(0, 8, 1.0, 3.0), view(1, 8, 5.0, 2.0)];
+        let ix = index_of(&rs);
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &ix, &mut rng, 16);
+        let alloc = FixedRate { max_rate: 1.0 }.allocate(&mut c);
+        assert!(alloc.is_empty(), "{alloc:?}");
+    }
+
+    #[test]
+    fn speed_ties_rank_by_resource_id() {
+        // Regression for the shared ranking keys: stable (key, id) order.
+        // Three machines at identical speed must be walked in id order, so
+        // a perf allocation smaller than total capacity lands on the
+        // lowest ids — exactly what the old stable sort produced.
+        let rs = vec![
+            view(0, 2, 2.0, 1.0),
+            view(1, 2, 2.0, 1.0),
+            view(2, 2, 2.0, 1.0),
+        ];
+        let ix = index_of(&rs);
+        let mut rng = Rng::new(1);
+        let mut c = ctx(&rs, &ix, &mut rng, 3);
+        let alloc = PerfOnly.allocate(&mut c);
+        assert_eq!(alloc.get(&ResourceId(0)), Some(&2));
+        assert_eq!(alloc.get(&ResourceId(1)), Some(&1));
+        assert!(!alloc.contains_key(&ResourceId(2)), "{alloc:?}");
     }
 }

@@ -7,6 +7,13 @@
 //! fail, or get expensive) the resource set grows, and when the experiment
 //! runs ahead of schedule expensive machines are released — "adapts the list
 //! of machines it is using depending on competition for them".
+//!
+//! Selection walks the ranked iterators of the driver's persistent
+//! [`crate::scheduler::CandidateIndex`] (cheapest-cost order for the cost
+//! optimizer, fastest-speed order for the rest) instead of sorting the
+//! view table: the greedy capacity fills consume only as many candidates
+//! as the required rate demands, so a tick's allocation cost no longer
+//! scales with grid size.
 
 use super::{
     guarded_window_h, Allocation, Policy, ResourceView, SchedCtx,
@@ -38,46 +45,22 @@ fn finishes_in_window(r: &ResourceView, ctx: &SchedCtx<'_>, safety: f64) -> bool
     r.jphps(ctx.job_work_ref_h) * hours_left(ctx, safety) >= 1.0
 }
 
-/// Order resources by expected cost per job, cheapest first; ties (same
-/// price) break toward the faster machine.
-fn by_cost<'a>(
-    ctx: &SchedCtx<'a>,
-    safety: f64,
-) -> Vec<&'a ResourceView> {
-    let mut rs: Vec<&ResourceView> = ctx
-        .resources
-        .iter()
-        .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-        .filter(|r| finishes_in_window(r, ctx, safety))
-        .collect();
-    if rs.is_empty() {
-        // Deadline infeasible on every machine: run best-effort rather than
-        // stall (the user renegotiates the deadline, §3).
-        rs = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .collect();
-    }
-    rs.sort_by(|a, b| {
-        a.cost_per_job(ctx.job_work_ref_h)
-            .total_cmp(&b.cost_per_job(ctx.job_work_ref_h))
-            .then(b.planning_speed.total_cmp(&a.planning_speed))
-    });
-    rs
-}
-
 /// Greedy capacity fill: walk `ordered`, allocating slots until the
-/// aggregate planned throughput reaches `needed_jph` (or resources run out).
-/// Never allocates more total slots than `remaining_jobs` (no point
-/// holding capacity that can't receive a job).
-fn fill_capacity(
-    ordered: &[&ResourceView],
+/// aggregate planned throughput reaches `needed_jph` (or candidates run
+/// out). Never allocates more total slots than `remaining_jobs` (no point
+/// holding capacity that can't receive a job). The iterator is consumed
+/// lazily — once the target rate is met no further candidates are pulled,
+/// which is what makes index-backed allocation sub-linear. Returns the
+/// allocation plus the resources it landed on, in ranked order (the
+/// cost optimizer's budget shed walks that list backwards).
+fn fill_capacity<'a>(
+    ordered: impl Iterator<Item = &'a ResourceView>,
     needed_jph: f64,
     remaining_jobs: u32,
     job_work_ref_h: f64,
-) -> Allocation {
+) -> (Allocation, Vec<&'a ResourceView>) {
     let mut alloc = Allocation::new();
+    let mut used: Vec<&ResourceView> = Vec::new();
     let mut rate = 0.0;
     let mut slots_total = 0u32;
     for r in ordered {
@@ -104,10 +87,11 @@ fn fill_capacity(
             continue;
         }
         alloc.insert(r.id, take);
+        used.push(r);
         rate += take as f64 * per_slot;
         slots_total += take;
     }
-    alloc
+    (alloc, used)
 }
 
 /// **Cost-optimizing DBC** — the paper's headline scheduler: select the
@@ -136,29 +120,41 @@ impl Policy for CostOpt {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let ordered = by_cost(ctx, self.safety);
-        let mut alloc = fill_capacity(
-            &ordered,
-            required_rate_jph(ctx, self.safety),
+        let needed = required_rate_jph(ctx, self.safety);
+        let safety = self.safety;
+        // Cheapest-first (the index's cost ranking), feasible-in-window
+        // machines only. An empty result means the deadline is infeasible
+        // on every machine: re-fill best-effort over all eligible machines
+        // rather than stall (the user renegotiates the deadline, §3).
+        let (mut alloc, mut used) = fill_capacity(
+            ctx.ranked_by_cost()
+                .filter(|r| finishes_in_window(r, ctx, safety)),
+            needed,
             ctx.remaining_jobs,
             ctx.job_work_ref_h,
         );
+        if alloc.is_empty() {
+            (alloc, used) = fill_capacity(
+                ctx.ranked_by_cost(),
+                needed,
+                ctx.remaining_jobs,
+                ctx.job_work_ref_h,
+            );
+        }
         // Budget guard: projected spend for remaining jobs under this
         // allocation must fit in the headroom; if it does not, shed the
-        // most expensive allocated resources (jobs they would have taken
-        // run later on cheaper machines — the deadline may slip, which is
-        // the correct economic outcome when the budget binds).
+        // most expensive allocated resources — the tail of the ranked
+        // fill, walked backwards (jobs they would have taken run later on
+        // cheaper machines; the deadline may slip, which is the correct
+        // economic outcome when the budget binds). Exact-tie order is
+        // intentionally the reverse of the ranked fill: equal-cost
+        // resources shed slower/higher-id first, where the pre-index code
+        // (a second stable descending sort) shed faster-first. Traces are
+        // bit-exact against the `set_full_allocation_sort` baseline, not
+        // against pre-index recorded runs in cost-tie cases.
         if let Some(headroom) = ctx.budget_headroom {
-            let mut allocated: Vec<&&ResourceView> = ordered
-                .iter()
-                .filter(|r| alloc.contains_key(&r.id))
-                .collect();
-            allocated.sort_by(|a, b| {
-                b.cost_per_job(ctx.job_work_ref_h)
-                    .total_cmp(&a.cost_per_job(ctx.job_work_ref_h))
-            });
             let mut projected = projected_spend(ctx, &alloc);
-            for r in allocated {
+            for r in used.iter().rev() {
                 if projected <= headroom {
                     break;
                 }
@@ -172,27 +168,22 @@ impl Policy for CostOpt {
 }
 
 /// Projected spend: remaining jobs split across the allocation
-/// proportionally to throughput, each priced at its resource.
+/// proportionally to throughput, each priced at its resource. O(allocated),
+/// not O(resources).
 fn projected_spend(ctx: &SchedCtx<'_>, alloc: &Allocation) -> f64 {
-    let total_rate: f64 = ctx
-        .resources
+    let total_rate: f64 = alloc
         .iter()
-        .filter_map(|r| {
-            alloc
-                .get(&r.id)
-                .map(|&n| n as f64 * r.jphps(ctx.job_work_ref_h))
-        })
+        .map(|(rid, &n)| n as f64 * ctx.view(*rid).jphps(ctx.job_work_ref_h))
         .sum();
     if total_rate <= 0.0 {
         return 0.0;
     }
-    ctx.resources
+    alloc
         .iter()
-        .filter_map(|r| {
-            alloc.get(&r.id).map(|&n| {
-                let share = n as f64 * r.jphps(ctx.job_work_ref_h) / total_rate;
-                share * ctx.remaining_jobs as f64 * r.cost_per_job(ctx.job_work_ref_h)
-            })
+        .map(|(rid, &n)| {
+            let r = ctx.view(*rid);
+            let share = n as f64 * r.jphps(ctx.job_work_ref_h) / total_rate;
+            share * ctx.remaining_jobs as f64 * r.cost_per_job(ctx.job_work_ref_h)
         })
         .sum()
 }
@@ -205,13 +196,9 @@ fn share_of(
     rest: &Allocation,
 ) -> f64 {
     let r_rate = slots as f64 * r.jphps(ctx.job_work_ref_h);
-    let rest_rate: f64 = ctx
-        .resources
+    let rest_rate: f64 = rest
         .iter()
-        .filter_map(|x| {
-            rest.get(&x.id)
-                .map(|&n| n as f64 * x.jphps(ctx.job_work_ref_h))
-        })
+        .map(|(rid, &n)| n as f64 * ctx.view(*rid).jphps(ctx.job_work_ref_h))
         .sum();
     if r_rate + rest_rate <= 0.0 {
         0.0
@@ -232,16 +219,10 @@ impl Policy for TimeOpt {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let mut rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .collect();
-        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
         let mut alloc = Allocation::new();
         let mut slots_total = 0u32;
         let mut projected = 0.0;
-        for r in rs {
+        for r in ctx.ranked_by_speed() {
             if slots_total >= ctx.remaining_jobs {
                 break;
             }
@@ -277,21 +258,16 @@ impl Policy for ConservativeTime {
         let per_job_cap = ctx
             .budget_headroom
             .map(|h| h / ctx.remaining_jobs.max(1) as f64);
-        let mut rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .filter(|r| match per_job_cap {
-                Some(cap) => r.cost_per_job(ctx.job_work_ref_h) <= cap,
-                None => true,
-            })
-            .collect();
-        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
         let mut alloc = Allocation::new();
         let mut slots_total = 0u32;
-        for r in rs {
+        for r in ctx.ranked_by_speed() {
             if slots_total >= ctx.remaining_jobs {
                 break;
+            }
+            if let Some(cap) = per_job_cap {
+                if r.cost_per_job(ctx.job_work_ref_h) > cap {
+                    continue;
+                }
             }
             let take = r.slots.min(ctx.remaining_jobs - slots_total);
             alloc.insert(r.id, take);
@@ -326,38 +302,41 @@ impl Policy for DeadlineOnly {
     }
 
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation {
-        let mut rs: Vec<&ResourceView> = ctx
-            .resources
-            .iter()
-            .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-            .filter(|r| finishes_in_window(r, ctx, self.safety))
-            .collect();
-        if rs.is_empty() {
-            rs = ctx
-                .resources
-                .iter()
-                .filter(|r| r.planning_speed > 0.0 && r.slots > 0)
-                .collect();
-        }
-        rs.sort_by(|a, b| b.planning_speed.total_cmp(&a.planning_speed));
-        fill_capacity(
-            &rs,
-            required_rate_jph(ctx, self.safety),
+        let needed = required_rate_jph(ctx, self.safety);
+        let safety = self.safety;
+        let (mut alloc, _) = fill_capacity(
+            ctx.ranked_by_speed()
+                .filter(|r| finishes_in_window(r, ctx, safety)),
+            needed,
             ctx.remaining_jobs,
             ctx.job_work_ref_h,
-        )
+        );
+        if alloc.is_empty() {
+            // Deadline infeasible everywhere: best-effort over every
+            // eligible machine, fastest first.
+            alloc = fill_capacity(
+                ctx.ranked_by_speed(),
+                needed,
+                ctx.remaining_jobs,
+                ctx.job_work_ref_h,
+            )
+            .0;
+        }
+        alloc
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::view;
+    use super::super::testutil::{index_of, view};
     use super::*;
+    use crate::scheduler::CandidateIndex;
     use crate::types::{ResourceId, HOUR};
     use crate::util::rng::Rng;
 
     fn ctx<'a>(
         resources: &'a [ResourceView],
+        candidates: &'a CandidateIndex,
         rng: &'a mut Rng,
         deadline_h: f64,
         jobs: u32,
@@ -370,6 +349,7 @@ mod tests {
             remaining_jobs: jobs,
             job_work_ref_h: 1.0,
             resources,
+            candidates,
             rng,
         }
     }
@@ -378,8 +358,9 @@ mod tests {
     fn cost_opt_prefers_cheap_resources() {
         // cheap-slow vs dear-fast; relaxed deadline ⇒ cheap only.
         let rs = vec![view(0, 10, 1.0, 0.5), view(1, 10, 2.0, 5.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 20.0, 10, None);
+        let mut c = ctx(&rs, &ix, &mut rng, 20.0, 10, None);
         let alloc = CostOpt::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(!alloc.contains_key(&ResourceId(1)), "{alloc:?}");
@@ -388,11 +369,12 @@ mod tests {
     #[test]
     fn cost_opt_adds_resources_as_deadline_tightens() {
         let rs = vec![view(0, 4, 1.0, 0.5), view(1, 8, 1.0, 2.0), view(2, 8, 1.0, 6.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut loose = ctx(&rs, &mut rng, 40.0, 40, None);
+        let mut loose = ctx(&rs, &ix, &mut rng, 40.0, 40, None);
         let a_loose: u32 = CostOpt::default().allocate(&mut loose).values().sum();
         let mut rng = Rng::new(1);
-        let mut tight = ctx(&rs, &mut rng, 4.0, 40, None);
+        let mut tight = ctx(&rs, &ix, &mut rng, 4.0, 40, None);
         let a_tight: u32 = CostOpt::default().allocate(&mut tight).values().sum();
         assert!(
             a_tight > a_loose,
@@ -403,10 +385,11 @@ mod tests {
     #[test]
     fn cost_opt_respects_budget() {
         let rs = vec![view(0, 2, 1.0, 0.001), view(1, 50, 1.0, 10.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
         // Tight deadline wants the expensive machine, but the budget can
         // only carry the cheap one (100 jobs × 36000 G$/job ≫ 1000).
-        let mut c = ctx(&rs, &mut rng, 1.0, 100, Some(1000.0));
+        let mut c = ctx(&rs, &ix, &mut rng, 1.0, 100, Some(1000.0));
         let alloc = CostOpt::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(
@@ -418,8 +401,9 @@ mod tests {
     #[test]
     fn time_opt_saturates_fastest_first() {
         let rs = vec![view(0, 4, 1.0, 0.1), view(1, 4, 3.0, 9.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 10.0, 100, None);
+        let mut c = ctx(&rs, &ix, &mut rng, 10.0, 100, None);
         let alloc = TimeOpt.allocate(&mut c);
         assert_eq!(alloc[&ResourceId(1)], 4); // fastest fully used
         assert_eq!(alloc[&ResourceId(0)], 4);
@@ -428,8 +412,9 @@ mod tests {
     #[test]
     fn time_opt_never_allocates_beyond_remaining_jobs() {
         let rs = vec![view(0, 64, 1.0, 1.0), view(1, 64, 2.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 10.0, 5, None);
+        let mut c = ctx(&rs, &ix, &mut rng, 10.0, 5, None);
         let alloc = TimeOpt.allocate(&mut c);
         let total: u32 = alloc.values().sum();
         assert_eq!(total, 5);
@@ -439,8 +424,9 @@ mod tests {
     fn conservative_time_filters_by_per_job_share() {
         // Budget 100 over 10 jobs ⇒ 10 G$/job cap. Machine 1 costs 36 G$/job.
         let rs = vec![view(0, 8, 1.0, 0.001), view(1, 8, 1.0, 0.01)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 10.0, 10, Some(100.0));
+        let mut c = ctx(&rs, &ix, &mut rng, 10.0, 10, Some(100.0));
         let alloc = ConservativeTime.allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(0)));
         assert!(!alloc.contains_key(&ResourceId(1)), "{alloc:?}");
@@ -451,8 +437,9 @@ mod tests {
         // Same speeds, wildly different prices: deadline-only picks by speed
         // order, so the expensive-fast machine is first.
         let rs = vec![view(0, 8, 1.0, 0.001), view(1, 8, 2.0, 100.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
-        let mut c = ctx(&rs, &mut rng, 2.0, 8, None);
+        let mut c = ctx(&rs, &ix, &mut rng, 2.0, 8, None);
         let alloc = DeadlineOnly::default().allocate(&mut c);
         assert!(alloc.contains_key(&ResourceId(1)), "{alloc:?}");
     }
@@ -460,9 +447,10 @@ mod tests {
     #[test]
     fn allocations_shrink_when_ahead_of_schedule() {
         let rs = vec![view(0, 16, 1.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
         // 16 jobs, 16 hours: needs ~1 job/h ⇒ 2 slots at 1 jph/slot (ceil).
-        let mut c = ctx(&rs, &mut rng, 16.0, 16, None);
+        let mut c = ctx(&rs, &ix, &mut rng, 16.0, 16, None);
         let alloc = CostOpt::default().allocate(&mut c);
         let total: u32 = alloc.values().sum();
         assert!(total <= 3, "should not saturate: {alloc:?}");
@@ -475,6 +463,7 @@ mod tests {
             remaining_jobs: 2,
             job_work_ref_h: 1.0,
             resources: &rs,
+            candidates: &ix,
             rng: &mut rng,
         };
         let alloc2 = CostOpt::default().allocate(&mut c2);
@@ -490,6 +479,7 @@ mod tests {
         // The guarded window must instead saturate eligible capacity so
         // the experiment finishes late rather than never.
         let rs = vec![view(0, 4, 1.0, 1.0), view(1, 4, 2.0, 3.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(1);
         let mut c = SchedCtx {
             now: 20.0 * HOUR,
@@ -498,6 +488,7 @@ mod tests {
             remaining_jobs: 6,
             job_work_ref_h: 1.0,
             resources: &rs,
+            candidates: &ix,
             rng: &mut rng,
         };
         let alloc = CostOpt::default().allocate(&mut c);
@@ -512,6 +503,7 @@ mod tests {
             remaining_jobs: 100,
             job_work_ref_h: 1.0,
             resources: &rs,
+            candidates: &ix,
             rng: &mut rng,
         };
         let alloc2 = DeadlineOnly::default().allocate(&mut c2);
@@ -524,6 +516,7 @@ mod tests {
         // inf - inf = NaN in the window math; the guard must keep the
         // required rate finite and still hand out capacity.
         let rs = vec![view(0, 2, 1.0, 1.0)];
+        let ix = index_of(&rs);
         let mut rng = Rng::new(2);
         let mut c = SchedCtx {
             now: f64::INFINITY,
@@ -532,6 +525,7 @@ mod tests {
             remaining_jobs: 5,
             job_work_ref_h: 1.0,
             resources: &rs,
+            candidates: &ix,
             rng: &mut rng,
         };
         assert!(required_rate_jph(&c, DEADLINE_SAFETY).is_finite());
@@ -545,9 +539,10 @@ mod tests {
         let mut down = view(0, 8, 0.0, 0.1);
         down.planning_speed = 0.0;
         let rs = vec![down, view(1, 2, 1.0, 1.0)];
+        let ix = index_of(&rs);
         for name in ["cost", "time", "conservative-time", "deadline-only"] {
             let mut rng = Rng::new(1);
-            let mut c = ctx(&rs, &mut rng, 1.0, 50, None);
+            let mut c = ctx(&rs, &ix, &mut rng, 1.0, 50, None);
             let alloc = crate::broker::PolicyRegistry::with_builtins()
                 .resolve(name)
                 .unwrap()

@@ -1,0 +1,383 @@
+//! The persistent candidate index: incrementally-maintained ranked
+//! orderings of eligible resources.
+//!
+//! Every builtin policy used to re-sort the full `Vec<ResourceView>` on
+//! every scheduling tick — the O(R log R) cost the ROADMAP flags as the
+//! allocation bottleneck once discovery went O(changed). The paper's
+//! schedule advisor re-evaluates *selection* at every scheduling event,
+//! but the *rankings* selection walks (cheapest-first for the
+//! cost-optimizing DBC, fastest-first for the time-optimizing family) only
+//! change when a resource's scheduler-visible state changes — exactly the
+//! dirty-view deltas the incremental tick pipeline already computes.
+//!
+//! [`CandidateIndex`] keeps one ordered set per ranking dimension
+//! ([`RankKeys`]): a view that did not change keeps its rank for free, and
+//! a dirtied view is re-keyed and repositioned in O(log R)
+//! ([`CandidateIndex::update`]). Policies then consume ranked iterators
+//! from [`super::SchedCtx`] instead of sorting, so a tick's allocation
+//! cost is O(candidates actually walked · log R) — sub-linear on big
+//! grids, where the greedy capacity fills stop after a handful of
+//! machines.
+//!
+//! **Ordering contract.** Every dimension totally orders `(key,
+//! ResourceId)`, so equal keys always tie-break toward the lower resource
+//! id — the same order the old stable sorts produced over the id-ordered
+//! view table. The shared key helpers ([`cost_rank_key`],
+//! [`service_rank_key`]) replace the five hand-rolled `sort_by`
+//! comparators the DBC and baseline policies used to duplicate; policies
+//! and the index *must* rank through them, or the
+//! `set_full_allocation_sort` baseline stops being bit-exact.
+//!
+//! **Maintenance contract.** Whatever refreshes a tenant's view table must
+//! hand every rebuilt entry to [`CandidateIndex::update`] (the sim world
+//! does this inside `refresh_dirty_views`; the live driver rebuilds its
+//! tiny index per tick with [`CandidateIndex::from_views`]). A driver that
+//! mutates views without updating the index desynchronizes ranking from
+//! state, and the `allocation_matches_full_sort_bit_exactly` equivalence
+//! tests fail.
+
+use super::ResourceView;
+use crate::types::ResourceId;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BTreeSet;
+
+/// `f64` wrapper ordered by [`f64::total_cmp`], so ranking keys can live
+/// in `BTreeSet`s. Consistent `Eq`/`Ord` (equality is `total_cmp ==
+/// Equal`, which distinguishes `-0.0` from `0.0` exactly like the sorts
+/// the policies used to run).
+#[derive(Debug, Clone, Copy)]
+pub struct TotalF64(pub f64);
+
+impl PartialEq for TotalF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Cost-ranking key: G$ per reference-CPU-hour on this machine
+/// (`rate × 3600 / planning_speed`). [`ResourceView::cost_per_job`] is
+/// this key times the per-job work estimate — a positive scalar common to
+/// every resource at a given tick — so ranking by this key *is* ranking by
+/// expected cost per job, while the key itself stays work-independent.
+/// That independence is what lets the index persist across ticks as the
+/// work estimate moves with completion history.
+pub fn cost_rank_key(v: &ResourceView) -> f64 {
+    if v.planning_speed <= 0.0 {
+        f64::INFINITY
+    } else {
+        v.rate * 3600.0 / v.planning_speed
+    }
+}
+
+/// Service-ranking key: the measured jobs/hour/slot when completion
+/// history exists, else the capability-prior planning speed. Orders
+/// resources by observed delivery within the measured subset and by
+/// advertised capability within the unmeasured one. No builtin policy
+/// walks [`CandidateIndex::service_ranked`] yet — the dimension exists
+/// for history-aware out-of-crate policies, and costs one extra O(log R)
+/// set touch per re-key.
+pub fn service_rank_key(v: &ResourceView) -> f64 {
+    match v.measured_jphps {
+        Some(m) if m > 0.0 => m,
+        _ => v.planning_speed,
+    }
+}
+
+/// The ranking keys one resource is currently filed under (so an update
+/// can remove the exact stale entries before re-inserting).
+#[derive(Debug, Clone, Copy)]
+struct RankKeys {
+    cost: f64,
+    speed: f64,
+    rate: f64,
+    service: f64,
+}
+
+/// Ranked orderings of the *eligible* resources (positive planning speed,
+/// at least one slot), maintained incrementally from dirty-view deltas.
+/// See the module docs for the ordering and maintenance contracts.
+#[derive(Debug, Default)]
+pub struct CandidateIndex {
+    /// Per-resource keys currently in the sets (`None` = ineligible or
+    /// never seen). Indexed by `ResourceId`.
+    keys: Vec<Option<RankKeys>>,
+    /// Cheapest expected cost per job first; price ties break toward the
+    /// faster machine, then the lower id (the cost-optimizing DBC order).
+    by_cost: BTreeSet<(TotalF64, Reverse<TotalF64>, u32)>,
+    /// Fastest planning speed first (the time-optimizing / perf order).
+    by_speed: BTreeSet<(Reverse<TotalF64>, u32)>,
+    /// Lowest quoted rate first (rate-cap range queries).
+    by_rate: BTreeSet<(TotalF64, u32)>,
+    /// Highest measured-or-prior service rate first.
+    by_service: BTreeSet<(Reverse<TotalF64>, u32)>,
+}
+
+impl CandidateIndex {
+    /// An empty index sized for `n` resources (ids `0..n`; updates for
+    /// larger ids grow the key table on demand).
+    pub fn new(n: usize) -> CandidateIndex {
+        CandidateIndex {
+            keys: vec![None; n],
+            ..CandidateIndex::default()
+        }
+    }
+
+    /// Build an index by ranking every view once — the construction the
+    /// live driver (tiny resource pools, views rebuilt each tick) and the
+    /// policy unit tests use.
+    pub fn from_views(views: &[ResourceView]) -> CandidateIndex {
+        let mut ix = CandidateIndex::new(views.len());
+        for v in views {
+            ix.update(v);
+        }
+        ix
+    }
+
+    /// Discard every ranking and re-derive them all from `views` — the
+    /// sort-every-tick baseline behind `set_full_allocation_sort`. Produces
+    /// exactly the state incremental maintenance converges to; only the
+    /// cost differs (O(R log R) here versus O(dirty · log R)).
+    pub fn rebuild_from(&mut self, views: &[ResourceView]) {
+        self.by_cost.clear();
+        self.by_speed.clear();
+        self.by_rate.clear();
+        self.by_service.clear();
+        for k in &mut self.keys {
+            *k = None;
+        }
+        for v in views {
+            self.update(v);
+        }
+    }
+
+    /// The one eligibility rule every builtin policy shares: schedulable
+    /// means a positive (stale-directory) speed and at least one slot.
+    /// Down, unauthorized and saturated machines fall out of every
+    /// ranking here, so policies never re-filter them.
+    pub fn is_eligible(v: &ResourceView) -> bool {
+        v.planning_speed > 0.0 && v.slots > 0
+    }
+
+    /// Re-key one resource from its freshly-rebuilt view: remove the stale
+    /// entries (if any), then re-insert under the new keys if the view is
+    /// still eligible. O(log R). Call this for every view entry a refresh
+    /// rewrites — see the module-level maintenance contract.
+    pub fn update(&mut self, v: &ResourceView) {
+        let i = v.id.0 as usize;
+        if i >= self.keys.len() {
+            self.keys.resize(i + 1, None);
+        }
+        let r = v.id.0;
+        if let Some(k) = self.keys[i].take() {
+            self.by_cost
+                .remove(&(TotalF64(k.cost), Reverse(TotalF64(k.speed)), r));
+            self.by_speed.remove(&(Reverse(TotalF64(k.speed)), r));
+            self.by_rate.remove(&(TotalF64(k.rate), r));
+            self.by_service.remove(&(Reverse(TotalF64(k.service)), r));
+        }
+        if !Self::is_eligible(v) {
+            return;
+        }
+        let k = RankKeys {
+            cost: cost_rank_key(v),
+            speed: v.planning_speed,
+            rate: v.rate,
+            service: service_rank_key(v),
+        };
+        self.by_cost
+            .insert((TotalF64(k.cost), Reverse(TotalF64(k.speed)), r));
+        self.by_speed.insert((Reverse(TotalF64(k.speed)), r));
+        self.by_rate.insert((TotalF64(k.rate), r));
+        self.by_service.insert((Reverse(TotalF64(k.service)), r));
+        self.keys[i] = Some(k);
+    }
+
+    /// Number of eligible resources.
+    pub fn len(&self) -> usize {
+        self.by_cost.len()
+    }
+
+    /// True when no resource is currently eligible.
+    pub fn is_empty(&self) -> bool {
+        self.by_cost.is_empty()
+    }
+
+    /// True when `rid` is currently ranked (eligible).
+    pub fn contains(&self, rid: ResourceId) -> bool {
+        matches!(self.keys.get(rid.0 as usize), Some(Some(_)))
+    }
+
+    /// Eligible resources, cheapest expected cost per job first (ties:
+    /// faster machine, then lower id).
+    pub fn cost_ranked(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.by_cost.iter().map(|&(_, _, r)| ResourceId(r))
+    }
+
+    /// Eligible resources, fastest planning speed first (ties: lower id).
+    pub fn speed_ranked(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.by_speed.iter().map(|&(_, r)| ResourceId(r))
+    }
+
+    /// Eligible resources, lowest quoted rate first (ties: lower id).
+    pub fn rate_ranked(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.by_rate.iter().map(|&(_, r)| ResourceId(r))
+    }
+
+    /// Eligible resources, highest measured-or-prior service rate first
+    /// (ties: lower id). See [`service_rank_key`] for the mixed scale.
+    pub fn service_ranked(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.by_service.iter().map(|&(_, r)| ResourceId(r))
+    }
+
+    /// Eligible resources in ascending id order (the rotation order the
+    /// round-robin/random baselines walk).
+    pub fn eligible_ids(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        // keys[] is id-indexed, so a scan of the Somes IS id order.
+        self.keys
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.is_some())
+            .map(|(i, _)| ResourceId(i as u32))
+    }
+
+    /// Cheapest quoted rate among eligible resources (`None` when nothing
+    /// is eligible) — lets rate-capped policies bail in O(1) when every
+    /// quote sits above their cap.
+    pub fn min_rate(&self) -> Option<f64> {
+        self.by_rate.iter().next().map(|e| e.0 .0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::view;
+    use super::*;
+
+    fn ranked<I: Iterator<Item = ResourceId>>(it: I) -> Vec<u32> {
+        it.map(|r| r.0).collect()
+    }
+
+    #[test]
+    fn cost_order_is_cheapest_then_fastest_then_id() {
+        // view(id, slots, speed, rate): cost key = rate*3600/speed.
+        let views = vec![
+            view(0, 4, 1.0, 2.0), // key 7200
+            view(1, 4, 2.0, 2.0), // key 3600
+            view(2, 4, 1.0, 1.0), // key 3600, slower than 1
+            view(3, 4, 2.0, 2.0), // key 3600, ties 1 on speed -> id
+        ];
+        let ix = CandidateIndex::from_views(&views);
+        assert_eq!(ranked(ix.cost_ranked()), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn speed_ties_break_toward_lower_id() {
+        let views = vec![
+            view(0, 1, 1.0, 1.0),
+            view(1, 1, 2.0, 9.0),
+            view(2, 1, 2.0, 0.1),
+            view(3, 1, 0.5, 0.1),
+        ];
+        let ix = CandidateIndex::from_views(&views);
+        // The regression the shared keys exist for: equal speeds order by
+        // id, exactly like the old stable sorts over the id-ordered table.
+        assert_eq!(ranked(ix.speed_ranked()), vec![1, 2, 0, 3]);
+        assert_eq!(ranked(ix.eligible_ids()), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ineligible_views_are_unranked() {
+        let down = view(0, 4, 0.0, 1.0);
+        let saturated = view(1, 0, 2.0, 1.0);
+        let up = view(2, 2, 1.0, 1.0);
+        let ix = CandidateIndex::from_views(&[down, saturated, up]);
+        assert_eq!(ix.len(), 1);
+        assert!(!ix.contains(ResourceId(0)));
+        assert!(!ix.contains(ResourceId(1)));
+        assert!(ix.contains(ResourceId(2)));
+        assert_eq!(ix.min_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn update_repositions_and_evicts() {
+        let mut views = vec![
+            view(0, 4, 1.0, 1.0), // cost 3600
+            view(1, 4, 1.0, 2.0), // cost 7200
+        ];
+        let mut ix = CandidateIndex::from_views(&views);
+        assert_eq!(ranked(ix.cost_ranked()), vec![0, 1]);
+        // Resource 1 gets cheap: it must move to the front...
+        views[1].rate = 0.5;
+        ix.update(&views[1]);
+        assert_eq!(ranked(ix.cost_ranked()), vec![1, 0]);
+        // ...and a failed resource must leave every ranking.
+        views[0].planning_speed = 0.0;
+        ix.update(&views[0]);
+        assert_eq!(ranked(ix.cost_ranked()), vec![1]);
+        assert_eq!(ranked(ix.speed_ranked()), vec![1]);
+        assert_eq!(ranked(ix.rate_ranked()), vec![1]);
+        assert_eq!(ix.min_rate(), Some(0.5));
+        // Recovery re-ranks it.
+        views[0].planning_speed = 3.0;
+        ix.update(&views[0]);
+        assert_eq!(ranked(ix.speed_ranked()), vec![0, 1]);
+    }
+
+    #[test]
+    fn incremental_updates_converge_to_a_rebuild() {
+        let mut views: Vec<_> = (0..12)
+            .map(|i| view(i, 1 + i % 3, 0.5 + 0.3 * i as f64, 2.0 / (1 + i) as f64))
+            .collect();
+        let mut ix = CandidateIndex::from_views(&views);
+        // Churn a few entries through several states.
+        views[3].planning_speed = 0.0;
+        ix.update(&views[3]);
+        views[7].rate = 0.01;
+        ix.update(&views[7]);
+        views[3].planning_speed = 2.2;
+        ix.update(&views[3]);
+        views[5].slots = 0;
+        ix.update(&views[5]);
+        views[9].measured_jphps = Some(4.5);
+        ix.update(&views[9]);
+        let mut fresh = CandidateIndex::new(views.len());
+        fresh.rebuild_from(&views);
+        assert_eq!(ranked(ix.cost_ranked()), ranked(fresh.cost_ranked()));
+        assert_eq!(ranked(ix.speed_ranked()), ranked(fresh.speed_ranked()));
+        assert_eq!(ranked(ix.rate_ranked()), ranked(fresh.rate_ranked()));
+        assert_eq!(ranked(ix.service_ranked()), ranked(fresh.service_ranked()));
+        assert_eq!(ranked(ix.eligible_ids()), ranked(fresh.eligible_ids()));
+    }
+
+    #[test]
+    fn service_rank_prefers_measured_history() {
+        let mut slow_but_proven = view(0, 1, 0.5, 1.0);
+        slow_but_proven.measured_jphps = Some(9.0);
+        let fast_prior = view(1, 1, 3.0, 1.0);
+        let ix = CandidateIndex::from_views(&[slow_but_proven, fast_prior]);
+        assert_eq!(ranked(ix.service_ranked()), vec![0, 1]);
+    }
+
+    #[test]
+    fn total_f64_orders_like_total_cmp() {
+        assert!(TotalF64(-0.0) < TotalF64(0.0));
+        assert!(TotalF64(-0.0) != TotalF64(0.0));
+        assert!(TotalF64(1.0) < TotalF64(f64::INFINITY));
+        assert!(TotalF64(f64::INFINITY) < TotalF64(f64::NAN));
+        assert_eq!(TotalF64(2.5), TotalF64(2.5));
+    }
+}

@@ -11,6 +11,21 @@
 //! 3. **job assignment** — the dispatcher tops resources up to their
 //!    allocation and tears down what the policy no longer wants.
 //!
+//! **Selection is index-backed.** Policies do not sort the view table:
+//! they walk ranked iterators off the persistent [`CandidateIndex`] each
+//! driver maintains alongside its view table (cheapest-cost, fastest-speed,
+//! lowest-rate, best-service orderings; see [`index`]). The index is
+//! updated from the same dirty-view deltas that drive the incremental view
+//! refresh — an unchanged view keeps its rank, a dirtied one is re-keyed
+//! in O(log R) — so allocation cost scales with the candidates a policy
+//! actually walks, not with grid size. **New drivers and policies must
+//! keep the two in lockstep: every rebuilt view entry goes through
+//! [`CandidateIndex::update`], and every ranking comparison goes through
+//! the shared key helpers ([`index::cost_rank_key`],
+//! [`index::service_rank_key`]).** The sort-every-tick baseline survives
+//! behind the drivers' `set_full_allocation_sort` flag (mirroring
+//! `set_full_view_rebuild`) and must replay bit-exactly.
+//!
 //! Policies implemented (see [`dbc`] and [`baselines`]):
 //!
 //! | name | behaviour |
@@ -26,8 +41,10 @@
 
 pub mod baselines;
 pub mod dbc;
+pub mod index;
 pub mod rate;
 
+pub use index::CandidateIndex;
 pub use rate::RateEstimator;
 
 use crate::types::{GridDollars, ResourceId, SimTime};
@@ -122,7 +139,24 @@ pub struct SchedCtx<'a> {
     /// Current estimate of per-job work, reference-machine CPU-hours.
     pub job_work_ref_h: f64,
     pub resources: &'a [ResourceView],
+    /// Ranked orderings over `resources`, maintained incrementally by the
+    /// driver (see [`index`]). Policies consume candidates through the
+    /// `ranked_by_*` iterators instead of sorting the view slice.
+    pub candidates: &'a CandidateIndex,
     pub rng: &'a mut Rng,
+}
+
+/// Look a ranked candidate's view up in the driver's view slice. Drivers
+/// keep the slice dense (`resources[i].id == i`), which is the O(1) fast
+/// path; hand-built test slices with arbitrary ids fall back to a scan.
+fn view_in(resources: &[ResourceView], rid: ResourceId) -> &ResourceView {
+    match resources.get(rid.0 as usize) {
+        Some(v) if v.id == rid => v,
+        _ => resources
+            .iter()
+            .find(|v| v.id == rid)
+            .expect("ranked candidate has a view"),
+    }
 }
 
 impl<'a> SchedCtx<'a> {
@@ -136,6 +170,37 @@ impl<'a> SchedCtx<'a> {
     pub fn required_rate_jph(&self) -> f64 {
         self.remaining_jobs as f64 / self.hours_left()
     }
+
+    /// The view behind a ranked candidate id. Panics if the candidate has
+    /// no view — the index and view table were updated out of lockstep.
+    pub fn view(&self, rid: ResourceId) -> &'a ResourceView {
+        view_in(self.resources, rid)
+    }
+
+    /// Eligible views, cheapest expected cost per job first (price ties
+    /// break toward the faster machine, then the lower id).
+    pub fn ranked_by_cost(&self) -> impl Iterator<Item = &'a ResourceView> + 'a {
+        let rs: &'a [ResourceView] = self.resources;
+        let ix: &'a CandidateIndex = self.candidates;
+        ix.cost_ranked().map(move |rid| view_in(rs, rid))
+    }
+
+    /// Eligible views, fastest planning speed first (ties: lower id).
+    pub fn ranked_by_speed(
+        &self,
+    ) -> impl Iterator<Item = &'a ResourceView> + 'a {
+        let rs: &'a [ResourceView] = self.resources;
+        let ix: &'a CandidateIndex = self.candidates;
+        ix.speed_ranked().map(move |rid| view_in(rs, rid))
+    }
+
+    /// Eligible views in ascending id order (the rotation order of the
+    /// round-robin/random baselines).
+    pub fn eligible_views(&self) -> impl Iterator<Item = &'a ResourceView> + 'a {
+        let rs: &'a [ResourceView] = self.resources;
+        let ix: &'a CandidateIndex = self.candidates;
+        ix.eligible_ids().map(move |rid| view_in(rs, rid))
+    }
 }
 
 /// Target in-flight jobs per resource. Resources absent from the map get 0
@@ -143,25 +208,18 @@ impl<'a> SchedCtx<'a> {
 pub type Allocation = BTreeMap<ResourceId, u32>;
 
 /// A scheduling policy (the pluggable "schedule advisor" of Figure 1).
+///
+/// Policies receive ranked candidate iterators through
+/// [`SchedCtx::ranked_by_cost`] / [`SchedCtx::ranked_by_speed`] (et al.)
+/// and should consume them lazily — the greedy fills stop after the
+/// capacity they need, which is what keeps allocation sub-linear on large
+/// grids. Construct policies through
+/// [`crate::broker::PolicyRegistry::with_builtins`] (the old
+/// `scheduler::by_name` shim is gone).
 pub trait Policy: Send {
     fn name(&self) -> &'static str;
     /// Compute the per-resource in-flight targets for this tick.
     fn allocate(&mut self, ctx: &mut SchedCtx<'_>) -> Allocation;
-}
-
-/// Construct a policy by CLI name.
-///
-/// Deprecated shim: policy construction now goes through the open
-/// [`crate::broker::PolicyRegistry`], which supports out-of-crate
-/// registration and `name?key=value` parameter specs.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::broker::PolicyRegistry::with_builtins().resolve(spec)"
-)]
-pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
-    crate::broker::PolicyRegistry::with_builtins()
-        .resolve(name)
-        .ok()
 }
 
 /// All built-in policy names (benches and smoke tests iterate these).
@@ -200,23 +258,16 @@ pub(crate) mod testutil {
             batch_queue: false,
         }
     }
+
+    /// Rank a hand-built view slice for a unit-test [`SchedCtx`].
+    pub fn index_of(views: &[ResourceView]) -> CandidateIndex {
+        CandidateIndex::from_views(views)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    #[allow(deprecated)]
-    fn by_name_shim_still_resolves_all_policies() {
-        for name in ALL_POLICIES {
-            let p = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
-            assert_eq!(p.name(), name);
-        }
-        assert!(by_name("nope").is_none());
-        // The shim rides on the registry, so parameter specs work too.
-        assert_eq!(by_name("cost?safety=0.9").unwrap().name(), "cost");
-    }
 
     #[test]
     fn all_policies_is_exactly_the_registry() {

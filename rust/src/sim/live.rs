@@ -22,7 +22,7 @@ use crate::engine::Experiment;
 use crate::metrics::{Report, ResourceUsage};
 use crate::plan::JobSpec;
 use crate::runtime::{ChamberOutput, ChamberRuntime};
-use crate::scheduler::ResourceView;
+use crate::scheduler::{CandidateIndex, ResourceView};
 use crate::types::{JobId, ResourceId};
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
@@ -220,17 +220,27 @@ impl LiveRunner {
                     batch_queue: false,
                 })
                 .collect();
+            // The live pool is tiny and its views are rebuilt wholesale
+            // each tick, so the candidate index is simply re-ranked from
+            // them (the sim world re-keys its persistent index
+            // incrementally instead — see crate::scheduler::index). The
+            // re-rank is allocation-phase work, so it runs inside the
+            // alloc_ns clock exactly like the sim driver's baseline.
             let job_work = advisor.job_work_ref_h();
+            let alloc_t0 = Instant::now();
+            let candidates = CandidateIndex::from_views(&views);
             let actions = advisor.advise(
                 TickCtx {
                     now,
                     deadline: self.cfg.deadline,
                     budget_headroom: ledger.headroom(),
                     views: &views,
+                    candidates: &candidates,
                 },
                 &exp,
                 &mut rng,
             );
+            report.alloc_ns += alloc_t0.elapsed().as_nanos() as u64;
             report.ticks += 1;
             for action in actions {
                 match action {

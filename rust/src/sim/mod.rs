@@ -163,6 +163,15 @@ impl GridSimulation {
     pub fn set_full_view_rebuild(&mut self, on: bool) {
         self.world.set_full_view_rebuild(on);
     }
+
+    /// Benchmark support: re-rank the whole candidate index from the view
+    /// table on every tick (the sort-every-tick allocation baseline)
+    /// instead of re-keying only dirtied entries. Bit-identical traces,
+    /// O(R log R) per tick — see
+    /// [`GridWorld::set_full_allocation_sort`].
+    pub fn set_full_allocation_sort(&mut self, on: bool) {
+        self.world.set_full_allocation_sort(on);
+    }
 }
 
 #[cfg(test)]

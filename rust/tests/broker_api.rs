@@ -6,7 +6,9 @@
 use nimrod_g::broker::{Broker, PolicyRegistry, ScheduleAdvisor, TickCtx};
 use nimrod_g::config::ExperimentConfig;
 use nimrod_g::metrics::Report;
-use nimrod_g::scheduler::{Allocation, Policy, ResourceView, SchedCtx};
+use nimrod_g::scheduler::{
+    Allocation, CandidateIndex, Policy, ResourceView, SchedCtx,
+};
 use nimrod_g::sim::GridSimulation;
 use nimrod_g::types::{JobId, ResourceId, HOUR};
 use nimrod_g::util::rng::Rng;
@@ -101,6 +103,7 @@ fn cost_safety_parameter_changes_planning() {
         })
         .collect();
     let reg = PolicyRegistry::with_builtins();
+    let index = CandidateIndex::from_views(&views);
     let slots_with = |spec: &str| -> u32 {
         let mut policy = reg.resolve(spec).unwrap();
         let mut rng = Rng::new(1);
@@ -111,6 +114,7 @@ fn cost_safety_parameter_changes_planning() {
             remaining_jobs: 40,
             job_work_ref_h: 1.0,
             resources: &views,
+            candidates: &index,
             rng: &mut rng,
         };
         policy.allocate(&mut ctx).values().sum()
@@ -126,12 +130,14 @@ fn cost_safety_parameter_changes_planning() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn by_name_shim_delegates_to_registry() {
-    assert!(nimrod_g::scheduler::by_name("cost").is_some());
-    assert!(nimrod_g::scheduler::by_name("cost?safety=0.9").is_some());
-    assert!(nimrod_g::scheduler::by_name("cost?bogus=1").is_none());
-    assert!(nimrod_g::scheduler::by_name("nope").is_none());
+fn registry_is_the_single_policy_construction_path() {
+    // The deprecated `scheduler::by_name` shim is gone; every spec the
+    // shim used to accept resolves through the registry directly.
+    let reg = PolicyRegistry::with_builtins();
+    assert!(reg.resolve("cost").is_ok());
+    assert!(reg.resolve("cost?safety=0.9").is_ok());
+    assert!(reg.resolve("cost?bogus=1").is_err());
+    assert!(reg.resolve("nope").is_err());
 }
 
 // -- experiment builder ------------------------------------------------------
@@ -217,6 +223,7 @@ fn advisor_matches_inlined_pipeline_actions() {
             batch_queue: false,
         })
         .collect();
+    let index = CandidateIndex::from_views(&views);
     let inlined = {
         let mut policy = PolicyRegistry::with_builtins().resolve("cost").unwrap();
         let mut rng = Rng::new(9);
@@ -228,6 +235,7 @@ fn advisor_matches_inlined_pipeline_actions() {
                 remaining_jobs: exp.remaining(),
                 job_work_ref_h: 2.0,
                 resources: &views,
+                candidates: &index,
                 rng: &mut rng,
             };
             policy.allocate(&mut ctx)
@@ -243,6 +251,7 @@ fn advisor_matches_inlined_pipeline_actions() {
                 deadline: 10.0 * HOUR,
                 budget_headroom: None,
                 views: &views,
+                candidates: &index,
             },
             &exp,
             &mut rng,
@@ -367,6 +376,36 @@ fn mega_grid_preset_reaches_contract_scale() {
         in_flight > 1000,
         "first tick should fan dispatches across the grid, got {in_flight}"
     );
+}
+
+#[test]
+fn index_storm_preset_reaches_contract_scale() {
+    // The candidate-index stress preset promises a 10,000-machine grid
+    // shared by 4 tenants under churn + demand repricing. Running it to
+    // completion belongs in release mode (`nimrod run --scenario
+    // index-storm`, the CI smoke matrix); here we build it and drive the
+    // t = 0 ticks to prove every tenant's index-backed allocation fans out
+    // at that scale.
+    let mut world = Broker::scenario("index-storm")
+        .unwrap()
+        .seed(1)
+        .world()
+        .unwrap();
+    assert!(
+        world.tb.resources.len() >= 10_000,
+        "{} machines",
+        world.tb.resources.len()
+    );
+    assert_eq!(world.tenant_count(), 4);
+    world.run_until(1.0); // the t = 0 tick of each tenant
+    for tid in 0..world.tenant_count() {
+        let in_flight: u32 = world.exp(tid).in_flight_counts().iter().sum();
+        assert!(
+            in_flight > 0,
+            "tenant {tid} should dispatch on the first tick"
+        );
+    }
+    assert!(world.slot_conservation_ok());
 }
 
 #[test]

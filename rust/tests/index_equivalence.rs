@@ -1,0 +1,199 @@
+//! Index-backed allocation must be a pure optimization: for every builtin
+//! policy, across seeds, availability churn, demand repricing and
+//! GRACE-auction worlds, the incremental candidate index must replay the
+//! sort-every-tick baseline (`set_full_allocation_sort`) bit-exactly —
+//! same events, same floating-point trajectories, same spend. Any missed
+//! or stale re-key diverges the traces and fails here.
+
+use nimrod_g::broker::Broker;
+use nimrod_g::economy::market::GraceConfig;
+use nimrod_g::grid::competition::CompetitionModel;
+use nimrod_g::metrics::WorldReport;
+use nimrod_g::scheduler::ALL_POLICIES;
+use nimrod_g::sim::GridWorld;
+
+/// Assert two world runs replayed the identical trace, bit for bit.
+fn assert_same_trace(a: &WorldReport, b: &WorldReport, tag: &str) {
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{tag}");
+    assert_eq!(
+        a.agreements_won(),
+        b.agreements_won(),
+        "{tag}: market outcomes diverged"
+    );
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let who = format!("{tag}/{} ({})", x.user, x.policy);
+        assert_eq!(x.report.ticks, y.report.ticks, "{who}: ticks");
+        assert_eq!(
+            x.report.jobs_completed, y.report.jobs_completed,
+            "{who}: completions"
+        );
+        assert_eq!(
+            x.report.makespan_s.to_bits(),
+            y.report.makespan_s.to_bits(),
+            "{who}: makespan"
+        );
+        assert_eq!(
+            x.report.total_cost.to_bits(),
+            y.report.total_cost.to_bits(),
+            "{who}: spend"
+        );
+        assert_eq!(
+            x.report.busy_cpus.points(),
+            y.report.busy_cpus.points(),
+            "{who}: busy-cpu timeline"
+        );
+    }
+}
+
+/// Run `build()` twice — incremental index versus forced full re-rank —
+/// and demand identical traces.
+fn check_pair(build: impl Fn() -> GridWorld, tag: &str) {
+    let incremental = build().run_world();
+    let mut forced = build();
+    forced.set_full_allocation_sort(true);
+    let full_sort = forced.run_world();
+    assert_same_trace(&incremental, &full_sort, tag);
+}
+
+const SMALL_PLAN: &str = "parameter i integer range from 1 to 30\n\
+                          task main\nexecute icc $i\nendtask";
+
+#[test]
+fn allocation_matches_full_sort_bit_exactly_for_all_policies() {
+    // Every builtin policy, two seeds, on the churny GUSTO grid (default
+    // MTBFs — machines fail and recover mid-run, exercising index
+    // eviction/re-insertion) with a budget so the cost optimizer's shed
+    // path runs too.
+    for policy in ALL_POLICIES {
+        for seed in [3u64, 11] {
+            check_pair(
+                || {
+                    Broker::experiment()
+                        .plan(SMALL_PLAN)
+                        .deadline_h(24.0)
+                        .policy(policy)
+                        .budget(5.0e5)
+                        .seed(seed)
+                        .testbed_scale(0.4)
+                        .world()
+                        .unwrap()
+                },
+                &format!("{policy}/seed{seed}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn allocation_matches_full_sort_under_churn_and_demand_repricing() {
+    // The dirty-view firehose: fast availability churn, demand-responsive
+    // owners (every occupancy move repricing quotes) and background
+    // competition claims, multi-tenant so cross-tenant dirtying is in
+    // play. The worst case for a stale index.
+    check_pair(
+        || {
+            Broker::experiment()
+                .plan(SMALL_PLAN)
+                .deadline_h(20.0)
+                .policy("cost")
+                .seed(9)
+                .testbed_scale(0.4)
+                .demand_pricing(0.8)
+                .competition(CompetitionModel {
+                    mean_interarrival_s: 1200.0,
+                    mean_duration_s: 2.0 * 3600.0,
+                    mean_cpus: 20.0,
+                })
+                .tweak_testbed(|tb| {
+                    for spec in &mut tb.resources {
+                        spec.mtbf_s = 2.0 * 3600.0;
+                        spec.mttr_s = 0.4 * 3600.0;
+                    }
+                })
+                .tenant(
+                    Broker::experiment()
+                        .plan(SMALL_PLAN)
+                        .deadline_h(12.0)
+                        .policy("time")
+                        .user("davida"),
+                )
+                .tenant(
+                    Broker::experiment()
+                        .plan(SMALL_PLAN)
+                        .deadline_h(16.0)
+                        .policy("conservative-time")
+                        .user("astro"),
+                )
+                .world()
+                .unwrap()
+        },
+        "churn+demand",
+    );
+}
+
+#[test]
+fn allocation_matches_full_sort_in_grace_auction_worlds() {
+    // Award/expiry repricing dirties views between directory refreshes;
+    // the index must follow. Short TTLs force mid-sweep expiries.
+    for ttl in [GraceConfig::default().agreement_ttl_s, 90.0] {
+        check_pair(
+            || {
+                Broker::experiment()
+                    .plan(SMALL_PLAN)
+                    .deadline_h(18.0)
+                    .policy("cost")
+                    .budget(2.0e6)
+                    .seed(7)
+                    .testbed_scale(0.4)
+                    .demand_pricing(0.5)
+                    .grace_market(GraceConfig {
+                        agreement_ttl_s: ttl,
+                        ..GraceConfig::default()
+                    })
+                    .tenant(
+                        Broker::experiment()
+                            .plan(SMALL_PLAN)
+                            .deadline_h(10.0)
+                            .policy("time")
+                            .user("davida"),
+                    )
+                    .world()
+                    .unwrap()
+            },
+            &format!("grace/ttl{ttl}"),
+        );
+    }
+}
+
+#[test]
+fn full_view_rebuild_and_full_allocation_sort_compose() {
+    // Both bench baselines at once — the fully pre-incremental pipeline —
+    // must still replay the incremental trace bit-exactly, and must touch
+    // strictly more view entries.
+    let build = || {
+        Broker::experiment()
+            .plan(SMALL_PLAN)
+            .deadline_h(20.0)
+            .policy("cost")
+            .seed(5)
+            .testbed_scale(0.4)
+            .world()
+            .unwrap()
+    };
+    let incremental = build().run_world();
+    let mut forced = build();
+    forced.set_full_view_rebuild(true);
+    forced.set_full_allocation_sort(true);
+    let baseline = forced.run_world();
+    assert_same_trace(&incremental, &baseline, "composed-baselines");
+    let touched = |wr: &WorldReport| -> u64 {
+        wr.tenants.iter().map(|t| t.report.view_refreshes).sum()
+    };
+    assert!(
+        touched(&incremental) < touched(&baseline),
+        "incremental must touch fewer entries: {} vs {}",
+        touched(&incremental),
+        touched(&baseline)
+    );
+}

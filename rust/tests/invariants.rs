@@ -8,7 +8,7 @@ use nimrod_g::grid::gram::JobManager;
 use nimrod_g::grid::testbed::{AuthPolicy, QueueKind, ResourceSpec, Testbed};
 use nimrod_g::plan::{expand, Plan};
 use nimrod_g::prop_assert;
-use nimrod_g::scheduler::{ResourceView, SchedCtx, ALL_POLICIES};
+use nimrod_g::scheduler::{CandidateIndex, ResourceView, SchedCtx, ALL_POLICIES};
 use nimrod_g::simtime::EventQueue;
 use nimrod_g::types::{Arch, JobId, Os, ResourceId, SiteId, HOUR};
 use nimrod_g::util::prop::prop_check;
@@ -371,6 +371,7 @@ fn prop_policies_respect_slots_and_skip_down_resources() {
             .collect();
         let remaining = rng.below(300) as u32 + 1;
         let registry = PolicyRegistry::with_builtins();
+        let index = CandidateIndex::from_views(&views);
         for name in ALL_POLICIES {
             let mut policy = registry.resolve(name).unwrap();
             let mut prng = Rng::new(rng.next_u64());
@@ -386,6 +387,7 @@ fn prop_policies_respect_slots_and_skip_down_resources() {
                     remaining_jobs: remaining,
                     job_work_ref_h: rng.uniform(0.2, 4.0),
                     resources: &views,
+                    candidates: &index,
                     rng: &mut prng,
                 };
                 policy.allocate(&mut ctx)
