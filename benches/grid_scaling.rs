@@ -22,11 +22,15 @@
 //!    indexes, so this measures that cross-tenant dirtying keeps per-tick
 //!    maintenance O(changed) instead of O(tenants × resources).
 //! 4. **GRACE auction vs posted sweep** — market-layer overhead per tick.
-//! 5. **Per-cycle component costs** — MDS refresh/discovery latency.
+//! 5. **Advance-reservation on/off sweep** — per-tick cost of the hold
+//!    machinery (shadow probes, expiry sweeps, occupancy folding) versus
+//!    the same world with the subsystem left off.
+//! 6. **Per-cycle component costs** — MDS refresh/discovery latency.
 //!
 //! Results are also written to `BENCH_grid_scaling.json` (machine-readable:
 //! µs/tick, touched/tick, allocation-phase share, index-vs-full-sort
-//! speedup per size) — CI archives it as the perf-trajectory artifact.
+//! speedup per size, reservation on/off overhead) — CI archives it as the
+//! perf-trajectory artifact.
 //!
 //! ```bash
 //! cargo bench --bench grid_scaling              # full sweep (10k machines)
@@ -36,6 +40,7 @@
 use nimrod_g::broker::Broker;
 use nimrod_g::config::WorkloadConfig;
 use nimrod_g::economy::market::GraceConfig;
+use nimrod_g::economy::reservation::ReservationConfig;
 use nimrod_g::grid::dynamics::ResourceDyn;
 use nimrod_g::grid::mds::Mds;
 use nimrod_g::grid::Testbed;
@@ -92,12 +97,14 @@ fn sweep_run(
 
 /// Run `tenants` co-scheduled 500-job time-optimizing brokers on one quiet
 /// synthetic grid; returns wall seconds and the world report. `market`
-/// switches the world from posted prices to periodic GRACE auctions.
+/// switches the world from posted prices to periodic GRACE auctions;
+/// `rsv` switches on the advance-reservation subsystem.
 fn tenant_sweep_run(
     tb: Testbed,
     tenants: usize,
     full_view_rebuild: bool,
     market: Option<GraceConfig>,
+    rsv: Option<ReservationConfig>,
 ) -> (f64, WorldReport) {
     let plan = "parameter i integer range from 1 to 500\n\
                 task main\nexecute chamber $i\nendtask";
@@ -114,6 +121,9 @@ fn tenant_sweep_run(
         .testbed(tb);
     if let Some(cfg) = market {
         b = b.grace_market(cfg);
+    }
+    if let Some(cfg) = rsv {
+        b = b.reservations(cfg);
     }
     for k in 1..tenants {
         b = b.tenant(
@@ -298,8 +308,9 @@ fn main() {
     for &tenants in tenant_counts {
         let tb = quiet(Testbed::synthetic(20, 50, 7)); // 1,000 machines
         let machines = tb.resources.len();
-        let (wall_inc, wi) = tenant_sweep_run(tb.clone(), tenants, false, None);
-        let (wall_full, wf) = tenant_sweep_run(tb, tenants, true, None);
+        let (wall_inc, wi) =
+            tenant_sweep_run(tb.clone(), tenants, false, None, None);
+        let (wall_full, wf) = tenant_sweep_run(tb, tenants, true, None, None);
         posted_cache.insert(tenants, (wall_inc, wi.clone()));
         // Same world trace, different maintenance cost.
         assert_eq!(wi.events, wf.events, "multi-tenant trace diverged");
@@ -389,14 +400,15 @@ fn main() {
         let tb = quiet(Testbed::synthetic(20, 50, 7)); // 1,000 machines
         // The posted baseline is the multi-tenant sweep's incremental run;
         // reuse it when that section already produced it.
-        let (wall_posted, wp) = posted_cache
-            .remove(&tenants)
-            .unwrap_or_else(|| tenant_sweep_run(tb.clone(), tenants, false, None));
+        let (wall_posted, wp) = posted_cache.remove(&tenants).unwrap_or_else(
+            || tenant_sweep_run(tb.clone(), tenants, false, None, None),
+        );
         let (wall_auction, wa) = tenant_sweep_run(
             tb,
             tenants,
             false,
             Some(GraceConfig::default()),
+            None,
         );
         assert!(
             !wp.has_market_data(),
@@ -442,12 +454,83 @@ fn main() {
          switched off.)"
     );
 
+    println!("\n== advance reservations: on/off overhead sweep ==\n");
+    println!(
+        "{:<8} {:>13} {:>13} {:>10} {:>9} {:>13}",
+        "tenants", "µs/tick", "µs/tick", "overhead", "commits", "held slot-h"
+    );
+    println!(
+        "{:<8} {:>13} {:>13} {:>10} {:>9} {:>13}",
+        "", "(off)", "(on)", "", "", ""
+    );
+    let mut rsv_rows: Vec<Json> = Vec::new();
+    let rsv_counts: &[usize] = if quick { &[2] } else { &[2, 4] };
+    for &tenants in rsv_counts {
+        // A 100-machine grid so the 500-job plans stay partly undispatched
+        // past the trigger point and the probe → reserve → commit ladder
+        // actually runs inside the measured window.
+        let tb = quiet(Testbed::synthetic(4, 25, 7));
+        let eager = ReservationConfig {
+            trigger_frac: 0.05,
+            ..ReservationConfig::default()
+        };
+        let (wall_off, w_off) =
+            tenant_sweep_run(tb.clone(), tenants, false, None, None);
+        let (wall_on, w_on) =
+            tenant_sweep_run(tb, tenants, false, None, Some(eager));
+        assert!(
+            !w_off.has_reservation_data(),
+            "reservations must be strictly opt-in"
+        );
+        let ticks = |wr: &WorldReport| {
+            wr.tenants
+                .iter()
+                .map(|t| t.report.ticks)
+                .sum::<u64>()
+                .max(1)
+        };
+        // Held slots reshape the schedule, so the two worlds run different
+        // tick counts — compare per-tick cost, not total wall time.
+        let (t_off, t_on) = (ticks(&w_off), ticks(&w_on));
+        let us_off = wall_off * 1e6 / t_off as f64;
+        let us_on = wall_on * 1e6 / t_on as f64;
+        let held_s: f64 =
+            w_on.tenants.iter().map(|t| t.held_slot_seconds).sum();
+        println!(
+            "{tenants:<8} {us_off:>13.1} {us_on:>13.1} {:>9.2}x {:>9} {:>13.1}",
+            us_on / us_off.max(1e-9),
+            w_on.reservations_committed(),
+            held_s / 3600.0,
+        );
+        rsv_rows.push(Json::obj(vec![
+            ("tenants", Json::num(tenants as f64)),
+            ("us_per_tick_off", Json::num(us_off)),
+            ("us_per_tick_on", Json::num(us_on)),
+            (
+                "reservation_overhead",
+                Json::num(us_on / us_off.max(1e-9)),
+            ),
+            (
+                "commits",
+                Json::num(w_on.reservations_committed() as f64),
+            ),
+            ("held_slot_s", Json::num(held_s)),
+        ]));
+    }
+    println!(
+        "\n(the on column pays shadow-schedule probes at the trigger point \
+         plus per-tick hold expiry sweeps and reserved-slot occupancy \
+         folding; the off column is the identical world with no \
+         ReservationConfig, where the subsystem must cost nothing.)"
+    );
+
     // Machine-readable perf trajectory (archived by CI).
     let out = Json::obj(vec![
         ("bench", Json::str("grid_scaling")),
         ("mode", Json::str(if quick { "quick" } else { "full" })),
         ("grid_sweep", Json::arr(grid_rows)),
         ("tenant_sweep", Json::arr(tenant_rows)),
+        ("reservation_sweep", Json::arr(rsv_rows)),
     ]);
     match std::fs::write("BENCH_grid_scaling.json", out.to_string()) {
         Ok(()) => println!("\nwrote BENCH_grid_scaling.json"),

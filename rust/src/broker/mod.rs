@@ -16,7 +16,9 @@
 //!   demand-responsive pricing
 //!   ([`ExperimentBuilder::demand_pricing`]) and a pluggable market —
 //!   posted prices by default, or periodic GRACE tender/bid auctions via
-//!   [`ExperimentBuilder::grace_market`];
+//!   [`ExperimentBuilder::grace_market`], and optionally the advance
+//!   reservation subsystem (probe → reserve → commit) via
+//!   [`ExperimentBuilder::reservations`];
 //! * [`ScheduleAdvisor`] — the shared per-tick
 //!   discovery → selection → assignment pipeline both drivers delegate to;
 //! * [`PolicyRegistry`] — open, parameterized policy construction
@@ -47,6 +49,7 @@ pub use registry::{PolicyFactory, PolicyParams, PolicyRegistry};
 use crate::client::StatusBoard;
 use crate::config::{ExperimentConfig, WorkloadConfig};
 use crate::economy::market::{GraceConfig, MarketKind};
+use crate::economy::reservation::ReservationConfig;
 use crate::engine::Experiment;
 use crate::grid::competition::CompetitionModel;
 use crate::grid::Testbed;
@@ -290,6 +293,23 @@ impl ExperimentBuilder {
         self.market(MarketKind::GraceAuction(cfg))
     }
 
+    /// Enable the advance-reservation subsystem (probe → reserve → commit
+    /// with shadow-schedule costing; see [`crate::economy::reservation`]).
+    /// World-level like [`market`](Self::market): in a multi-tenant world
+    /// only tenant 0's (the outer builder's) setting is honoured, and every
+    /// deadline-driven tenant may reserve ahead. Worlds without this knob
+    /// replay bit-exactly with pre-reservation traces.
+    pub fn reservations(mut self, cfg: ReservationConfig) -> Self {
+        self.cfg.reservations = Some(cfg);
+        self
+    }
+
+    /// Remove the reservation subsystem (the default).
+    pub fn no_reservations(mut self) -> Self {
+        self.cfg.reservations = None;
+        self
+    }
+
     // -- multi-tenant composition ----------------------------------------
 
     /// Add a co-scheduled tenant: a whole second experiment (own user,
@@ -435,6 +455,9 @@ impl ExperimentBuilder {
             );
         }
         self.cfg.market.validate().context("market")?;
+        if let Some(r) = &self.cfg.reservations {
+            r.validate().context("reservations")?;
+        }
         Ok(())
     }
 
@@ -584,6 +607,10 @@ impl ExperimentBuilder {
             self.cfg.market == MarketKind::PostedPrice,
             "GRACE auction markets are simulation-only (the live driver has no shared-grid economy)"
         );
+        ensure!(
+            self.cfg.reservations.is_none(),
+            "advance reservations are simulation-only (the live driver has no shared-grid economy)"
+        );
         let advisor = self.advisor(LIVE_WORK_PRIOR_H)?;
         let specs = self.specs()?;
         let runner =
@@ -700,6 +727,36 @@ mod tests {
         // The live driver has no shared-grid economy to auction over.
         assert!(Broker::experiment()
             .grace_market(GraceConfig::default())
+            .live(1, std::path::Path::new("/tmp/nimrod-live-test"))
+            .is_err());
+    }
+
+    #[test]
+    fn reservation_selection_validates_and_defaults_off() {
+        assert!(Broker::experiment().config().reservations.is_none());
+        let b = Broker::experiment().reservations(ReservationConfig::default());
+        assert!(b.config().reservations.is_some());
+        assert!(b.no_reservations().config().reservations.is_none());
+        // Bad tuning is rejected with the reservations context...
+        let err = Broker::experiment()
+            .reservations(ReservationConfig {
+                cancel_penalty: 2.0,
+                ..ReservationConfig::default()
+            })
+            .world()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("reservations"), "{err:#}");
+        assert!(Broker::experiment()
+            .reservations(ReservationConfig {
+                commit_timeout_s: -5.0,
+                ..ReservationConfig::default()
+            })
+            .simulate()
+            .is_err());
+        // ...and the live driver refuses reservation configs outright.
+        assert!(Broker::experiment()
+            .reservations(ReservationConfig::default())
             .live(1, std::path::Path::new("/tmp/nimrod-live-test"))
             .is_err());
     }

@@ -15,6 +15,7 @@
 use super::{Broker, ExperimentBuilder};
 use crate::config::WorkloadConfig;
 use crate::economy::market::GraceConfig;
+use crate::economy::reservation::ReservationConfig;
 use crate::grid::competition::CompetitionModel;
 use anyhow::{bail, Result};
 
@@ -26,7 +27,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 12] = [
+pub const CATALOG: [ScenarioInfo; 13] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -90,6 +91,14 @@ pub const CATALOG: [ScenarioInfo; 12] = [
         summary: "GRACE at rush hour: the 8-tenant staggered-deadline crowd \
                   of auction-rush, but bidding through the tender/bid \
                   market instead of taking posted demand prices",
+    },
+    ScenarioInfo {
+        name: "reserve-ahead",
+        summary: "advance reservations: 3 tenants on a contested, \
+                  demand-priced GUSTO grid; near their deadlines brokers \
+                  shadow-price several candidate resource sets, commit the \
+                  cheapest as a binding hold (cancellation penalty) and \
+                  dispatch into the reserved slots at locked rates",
     },
     ScenarioInfo {
         name: "index-storm",
@@ -255,6 +264,43 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
             }
             b
         }
+        // The reservation subsystem end to end: three brokers on one
+        // demand-priced, contested GUSTO grid. Once a tenant is past 40 %
+        // of its deadline with work still undispatched, it shadow-prices
+        // several candidate resource sets off its live views, commits the
+        // cheapest feasible one as a binding hold (free-cancelling the
+        // runner-up) and dispatches into the held slots at the locked
+        // rate — capacity assurance the posted-price and GRACE economies
+        // cannot give.
+        "reserve-ahead" => b
+            .ionization_study()
+            .deadline_h(15.0)
+            .policy("cost")
+            .user("rajkumar")
+            .budget(2.0e6)
+            .demand_pricing(0.6)
+            .competition(CompetitionModel {
+                mean_interarrival_s: 2400.0,
+                mean_duration_s: 3.0 * 3600.0,
+                mean_cpus: 40.0,
+            })
+            .reservations(ReservationConfig::default())
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida")
+                    .budget(2.0e6),
+            )
+            .tenant(
+                Broker::experiment()
+                    .ionization_study()
+                    .deadline_h(12.0)
+                    .policy("deadline-only")
+                    .user("john")
+                    .budget(2.0e6),
+            ),
         // The allocation-scaling stress case: a 10,000-machine open grid
         // whose views churn constantly (2.5 h MTBF availability churn plus
         // demand repricing on every occupancy move), shared by four
@@ -332,6 +378,7 @@ mod tests {
         assert_eq!(builder("auction-rush").unwrap().tenant_count(), 8);
         assert_eq!(builder("grace-auction").unwrap().tenant_count(), 3);
         assert_eq!(builder("grace-rush").unwrap().tenant_count(), 8);
+        assert_eq!(builder("reserve-ahead").unwrap().tenant_count(), 3);
         assert_eq!(builder("index-storm").unwrap().tenant_count(), 4);
         assert_eq!(builder("gusto").unwrap().tenant_count(), 1);
     }
@@ -350,5 +397,18 @@ mod tests {
             builder("gusto").unwrap().config().market,
             MarketKind::PostedPrice
         );
+    }
+
+    #[test]
+    fn reserve_ahead_preset_enables_reservations() {
+        let b = builder("reserve-ahead").unwrap();
+        assert!(b.config().reservations.is_some());
+        // Reservations are world-level: off everywhere else.
+        for name in ["gusto", "grace-auction", "index-storm"] {
+            assert!(
+                builder(name).unwrap().config().reservations.is_none(),
+                "{name} must not reserve"
+            );
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Experiment configuration (what the client hands the parametric engine).
 
 use crate::economy::market::{GraceConfig, MarketKind};
+use crate::economy::reservation::ReservationConfig;
 use crate::grid::competition::CompetitionModel;
 use crate::types::{GridDollars, SimTime, HOUR};
 use crate::util::json::Json;
@@ -63,6 +64,10 @@ pub struct ExperimentConfig {
     /// World-level like `competition`: in a multi-tenant world only
     /// tenant 0's setting is honoured.
     pub market: MarketKind,
+    /// Advance-reservation subsystem (probe → reserve → commit).
+    /// World-level like `market`; `None` (the default) disables it and the
+    /// world replays bit-exactly like the pre-reservation pipeline.
+    pub reservations: Option<ReservationConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -79,6 +84,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::default(),
             competition: None,
             market: MarketKind::PostedPrice,
+            reservations: None,
         }
     }
 }
@@ -131,6 +137,20 @@ impl ExperimentConfig {
                     ]),
                 },
             ),
+            (
+                "reservations",
+                match &self.reservations {
+                    None => Json::Null,
+                    Some(r) => Json::obj(vec![
+                        ("commit_timeout_s", Json::num(r.commit_timeout_s)),
+                        ("hold_s", Json::num(r.hold_s)),
+                        ("cancel_penalty", Json::num(r.cancel_penalty)),
+                        ("trigger_frac", Json::num(r.trigger_frac)),
+                        ("probe_sets", Json::num(r.probe_sets as f64)),
+                        ("max_slots", Json::num(r.max_slots as f64)),
+                    ]),
+                },
+            ),
         ])
     }
 
@@ -173,6 +193,24 @@ impl ExperimentConfig {
                     // must not load a market the builder would refuse.
                     cfg.validate()?;
                     MarketKind::GraceAuction(cfg)
+                }
+            },
+            // Absent/null (pre-reservation configs included) reads off.
+            reservations: match v.get("reservations") {
+                Json::Null => None,
+                r => {
+                    let cfg = ReservationConfig {
+                        commit_timeout_s: r.req_f64("commit_timeout_s")?,
+                        hold_s: r.req_f64("hold_s")?,
+                        cancel_penalty: r.req_f64("cancel_penalty")?,
+                        trigger_frac: r.req_f64("trigger_frac")?,
+                        probe_sets: r.req_f64("probe_sets")? as u32,
+                        max_slots: r.req_f64("max_slots")? as u32,
+                    };
+                    // Same guard the builder applies: a corrupted config
+                    // must not load a setup the builder would refuse.
+                    cfg.validate()?;
+                    Some(cfg)
                 }
             },
         })
@@ -219,6 +257,35 @@ mod tests {
                 .unwrap();
         assert_eq!(back.budget, None);
         assert_eq!(back.market, MarketKind::PostedPrice);
+        assert_eq!(back.reservations, None);
+    }
+
+    #[test]
+    fn reservations_roundtrip() {
+        let c = ExperimentConfig {
+            reservations: Some(ReservationConfig {
+                commit_timeout_s: 240.0,
+                hold_s: 3600.0,
+                cancel_penalty: 0.5,
+                trigger_frac: 0.3,
+                probe_sets: 4,
+                max_slots: 6,
+            }),
+            ..Default::default()
+        };
+        let j = c.to_json().to_string();
+        let back =
+            ExperimentConfig::from_json(&crate::util::json::parse(&j).unwrap())
+                .unwrap();
+        assert_eq!(back.reservations, c.reservations);
+        // Corrupted reservation tuning is rejected at load, like the
+        // builder rejects it at construction.
+        let bad = j.replace("\"cancel_penalty\":0.5", "\"cancel_penalty\":2");
+        assert_ne!(bad, j, "replacement must hit the serialized penalty");
+        assert!(ExperimentConfig::from_json(
+            &crate::util::json::parse(&bad).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

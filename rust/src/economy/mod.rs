@@ -19,12 +19,21 @@
 //!   offers, with capped concession rounds. [`crate::sim::GridWorld`] runs
 //!   this negotiation at every directory refresh when the market is
 //!   `GraceAuction`, deriving each tenant's tender from its live DBC state.
+//! * [`reservation`] — advance reservations with the three-level
+//!   commitment lifecycle: non-binding **probe** quotes priced off live
+//!   views, a **reserve** step that holds slots with a commit timeout and
+//!   free cancellation, and a binding **commit** whose cancellation
+//!   penalty is billed through the [`Ledger`]. Candidate plans are costed
+//!   against a [`reservation::ShadowSchedule`] — a sandbox overlay of the
+//!   tenant's view table — before anything is booked for real.
 
 pub mod grace;
 pub mod ledger;
 pub mod market;
 pub mod price;
+pub mod reservation;
 
 pub use ledger::Ledger;
 pub use market::{GraceConfig, MarketKind, PriceAgreement};
 pub use price::PriceModel;
+pub use reservation::{ReservationConfig, ReservationStore, ShadowSchedule};

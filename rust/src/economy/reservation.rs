@@ -1,0 +1,608 @@
+//! Advance reservations: the three-level commitment lifecycle (paper §7's
+//! "secure resources ahead of need", following the VRM line of work).
+//!
+//! GRACE agreements (PR 4) fix *prices* but hold no *capacity*: a tenant
+//! that won an auction can still find the machine full when its jobs
+//! arrive. This module adds the missing mechanism, a per-tenant
+//! [`ReservationStore`] that moves capacity through three commitment
+//! levels:
+//!
+//! 1. **Probe** — a non-binding quote for slots on a resource, priced off
+//!    the tenant's live [`ResourceView`]s (which already fold in demand
+//!    premiums and any won agreement). Probes mutate nothing.
+//! 2. **Reserve** — slots are *held*: they leave every other tenant's
+//!    visible capacity and enter the slot-conservation invariant, but the
+//!    hold is free to cancel and lapses on its own after a short commit
+//!    timeout.
+//! 3. **Commit** — the hold becomes binding for a longer window and a
+//!    cancellation penalty (a fraction of the quoted cost of the still
+//!    unused slots) is billed through the tenant's
+//!    [`Ledger`](crate::economy::Ledger) if the tenant walks away or lets
+//!    the hold expire. Jobs dispatched into a committed hold consume its
+//!    slots one by one at the locked rate.
+//!
+//! Probing happens against a [`ShadowSchedule`]: a sandbox overlay of the
+//! tenant's view table that can be tentatively reserved against to cost
+//! out a what-if plan — several candidate resource sets can be priced and
+//! compared without touching live state. The world's reserve-ahead move
+//! ([`crate::sim::GridWorld`]) shadow-prices ≥ 2 candidate sets near the
+//! deadline, really reserves the top plans, commits the cheapest feasible
+//! one and cancels the rest while cancellation is still free.
+//!
+//! Every live transition (reserve / commit / cancel / expiry / slot
+//! consumption) is the *world's* job to book: it updates the shared
+//! `total_reserved` occupancy, dirties the touched resource's view *and*
+//! candidate-index entry for every tenant (the standing rule), and journals
+//! the transition for crash recovery. This module only owns the per-tenant
+//! hold state and its accounting.
+
+use crate::scheduler::ResourceView;
+use crate::types::{GridDollars, ResourceId, SimTime};
+use anyhow::ensure;
+use std::collections::BTreeMap;
+
+/// Tuning for the advance-reservation subsystem. World-level: in a
+/// multi-tenant world only tenant 0's setting is honoured (reservations
+/// hold shared grid capacity, like competition and the market). `None` in
+/// the config means the subsystem is off and the world runs bit-exactly
+/// like the pre-reservation pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReservationConfig {
+    /// Seconds an uncommitted hold survives before it lapses (free).
+    pub commit_timeout_s: SimTime,
+    /// Seconds a committed hold stays binding before unused slots expire
+    /// (and the cancellation penalty on them falls due).
+    pub hold_s: SimTime,
+    /// Fraction of the quoted cost of *unused* committed slots billed on
+    /// cancellation or expiry (0 = commitments are free to break,
+    /// 1 = full quoted cost).
+    pub cancel_penalty: f64,
+    /// The reserve-ahead move arms once `now ≥ trigger_frac × deadline`
+    /// and the tenant still has undispatched jobs.
+    pub trigger_frac: f64,
+    /// Candidate resource sets probed per reserve-ahead cycle (≥ 2, so
+    /// "commit the cheapest" is a real choice).
+    pub probe_sets: u32,
+    /// Most slots one reserve-ahead cycle may hold.
+    pub max_slots: u32,
+}
+
+impl Default for ReservationConfig {
+    fn default() -> Self {
+        ReservationConfig {
+            commit_timeout_s: 300.0,
+            hold_s: 2.0 * 3600.0,
+            cancel_penalty: 0.25,
+            trigger_frac: 0.4,
+            probe_sets: 3,
+            max_slots: 8,
+        }
+    }
+}
+
+impl ReservationConfig {
+    /// Validate tuning values (builder construction guard).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        ensure!(
+            self.commit_timeout_s.is_finite() && self.commit_timeout_s > 0.0,
+            "reservation commit timeout must be positive, got {} s",
+            self.commit_timeout_s
+        );
+        ensure!(
+            self.hold_s.is_finite() && self.hold_s > 0.0,
+            "reservation hold must be positive, got {} s",
+            self.hold_s
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.cancel_penalty),
+            "cancellation penalty must be in [0, 1], got {}",
+            self.cancel_penalty
+        );
+        ensure!(
+            self.trigger_frac.is_finite()
+                && self.trigger_frac > 0.0
+                && self.trigger_frac < 1.0,
+            "reserve-ahead trigger must be in (0, 1), got {}",
+            self.trigger_frac
+        );
+        ensure!(
+            self.probe_sets >= 2,
+            "reserve-ahead needs at least 2 candidate sets to compare, got {}",
+            self.probe_sets
+        );
+        ensure!(
+            self.max_slots >= 1,
+            "a reservation cycle must be allowed at least one slot"
+        );
+        Ok(())
+    }
+}
+
+/// How binding a hold currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitLevel {
+    /// Held with free cancellation; lapses after the commit timeout.
+    Reserved,
+    /// Binding; cancellation/expiry of unused slots draws the penalty.
+    Committed,
+}
+
+/// One live hold on one resource: `slots` CPUs at a locked `rate`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reservation {
+    /// Slots still held (consumption decrements this).
+    pub slots: u32,
+    /// G$/CPU-second locked when the hold was taken.
+    pub rate: GridDollars,
+    /// Quoted cost of running one job on one held slot (penalty base).
+    pub cost_per_slot: GridDollars,
+    pub level: CommitLevel,
+    /// Virtual time the hold lapses (exclusive, like
+    /// [`crate::economy::PriceAgreement`]: a hold is already dead at
+    /// exactly its expiry instant).
+    pub expires: SimTime,
+    /// Virtual time the hold was taken (held-slot-seconds accounting).
+    pub opened_at: SimTime,
+}
+
+impl Reservation {
+    /// Whether the hold still stands at `now`.
+    pub fn active(&self, now: SimTime) -> bool {
+        self.expires > now
+    }
+}
+
+/// What a consumed slot hands the dispatch path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConsumedSlot {
+    /// The locked rate the job will be billed at.
+    pub rate: GridDollars,
+    /// The consumption used the hold's last slot: the hold is gone and the
+    /// caller must release its ledger envelope (no penalty — fully used).
+    pub closed: bool,
+}
+
+/// Per-tenant hold table over the shared grid (index = `ResourceId`), plus
+/// lifetime accounting for the world report. At most one hold per
+/// (tenant, resource) — a second reserve on a held machine is refused.
+#[derive(Debug, Clone)]
+pub struct ReservationStore {
+    holds: Vec<Option<Reservation>>,
+    /// Earliest `expires` among live holds (∞ when none): the tick-time
+    /// expiry sweep is O(1) until something is actually due.
+    next_expiry: SimTime,
+    /// Lifetime counters (world report / CSV).
+    pub probes: u64,
+    pub reserves: u32,
+    pub commits: u32,
+    pub cancels: u32,
+    pub expiries: u32,
+    pub consumed: u32,
+    /// Σ over slots of (seconds between entering and leaving a hold).
+    pub held_slot_seconds: f64,
+    /// Cancellation penalties billed through the ledger.
+    pub penalty_spend: GridDollars,
+}
+
+impl ReservationStore {
+    pub fn new(n_resources: usize) -> ReservationStore {
+        ReservationStore {
+            holds: vec![None; n_resources],
+            next_expiry: SimTime::INFINITY,
+            probes: 0,
+            reserves: 0,
+            commits: 0,
+            cancels: 0,
+            expiries: 0,
+            consumed: 0,
+            held_slot_seconds: 0.0,
+            penalty_spend: 0.0,
+        }
+    }
+
+    pub fn get(&self, rid: ResourceId) -> Option<&Reservation> {
+        self.holds.get(rid.0 as usize).and_then(|h| h.as_ref())
+    }
+
+    /// Slots this tenant holds on `rid` (0 without a hold).
+    pub fn held_on(&self, rid: ResourceId) -> u32 {
+        self.get(rid).map(|r| r.slots).unwrap_or(0)
+    }
+
+    /// Number of resources currently held.
+    pub fn active_holds(&self) -> usize {
+        self.holds.iter().flatten().count()
+    }
+
+    /// Take a hold: `slots` CPUs on `rid` at `rate`, lapsing at `expires`
+    /// unless committed first. Refused (false) if the tenant already holds
+    /// this resource or asks for zero slots.
+    pub fn reserve(
+        &mut self,
+        rid: ResourceId,
+        slots: u32,
+        rate: GridDollars,
+        cost_per_slot: GridDollars,
+        now: SimTime,
+        expires: SimTime,
+    ) -> bool {
+        let i = rid.0 as usize;
+        if slots == 0 || i >= self.holds.len() || self.holds[i].is_some() {
+            return false;
+        }
+        self.holds[i] = Some(Reservation {
+            slots,
+            rate,
+            cost_per_slot,
+            level: CommitLevel::Reserved,
+            expires,
+            opened_at: now,
+        });
+        self.next_expiry = self.next_expiry.min(expires);
+        self.reserves += 1;
+        true
+    }
+
+    /// Harden a `Reserved` hold into a binding commitment lapsing at
+    /// `expires`. Refused (false) without an uncommitted live hold.
+    pub fn commit(&mut self, rid: ResourceId, now: SimTime, expires: SimTime) -> bool {
+        let i = rid.0 as usize;
+        let Some(r) = self.holds.get_mut(i).and_then(|h| h.as_mut()) else {
+            return false;
+        };
+        if r.level == CommitLevel::Committed || !r.active(now) {
+            return false;
+        }
+        r.level = CommitLevel::Committed;
+        r.expires = expires;
+        self.next_expiry = self.next_expiry.min(expires);
+        self.commits += 1;
+        true
+    }
+
+    /// Drop a hold. Free while `Reserved`; the caller bills the penalty on
+    /// the returned reservation if it was `Committed`.
+    pub fn cancel(&mut self, rid: ResourceId, now: SimTime) -> Option<Reservation> {
+        let i = rid.0 as usize;
+        let r = self.holds.get_mut(i)?.take()?;
+        self.held_slot_seconds += r.slots as f64 * (now - r.opened_at).max(0.0);
+        self.cancels += 1;
+        Some(r)
+    }
+
+    /// Dispatch a job into a committed hold: one slot leaves the hold at
+    /// the locked rate. `None` without a live committed hold with slots.
+    pub fn consume_slot(
+        &mut self,
+        rid: ResourceId,
+        now: SimTime,
+    ) -> Option<ConsumedSlot> {
+        let i = rid.0 as usize;
+        let slot = self.holds.get_mut(i)?;
+        let r = slot.as_mut()?;
+        if r.level != CommitLevel::Committed || !r.active(now) || r.slots == 0 {
+            return None;
+        }
+        r.slots -= 1;
+        self.held_slot_seconds += (now - r.opened_at).max(0.0);
+        self.consumed += 1;
+        let rate = r.rate;
+        let closed = r.slots == 0;
+        if closed {
+            *slot = None;
+        }
+        Some(ConsumedSlot { rate, closed })
+    }
+
+    /// Lapse every hold whose expiry is at or before `now`, in ascending
+    /// resource-index order. O(1) until an expiry is actually due, then
+    /// O(resources) for that one sweep (the agreement-expiry pattern).
+    /// Returns the lapsed holds for the caller to unbook and bill.
+    pub fn expire_due(&mut self, now: SimTime) -> Vec<(ResourceId, Reservation)> {
+        if now < self.next_expiry {
+            return Vec::new();
+        }
+        let mut lapsed = Vec::new();
+        let mut next = SimTime::INFINITY;
+        for i in 0..self.holds.len() {
+            let Some(r) = self.holds[i] else {
+                continue;
+            };
+            if r.active(now) {
+                next = next.min(r.expires);
+            } else {
+                self.holds[i] = None;
+                self.held_slot_seconds +=
+                    r.slots as f64 * (now - r.opened_at).max(0.0);
+                self.expiries += 1;
+                lapsed.push((ResourceId(i as u32), r));
+            }
+        }
+        self.next_expiry = next;
+        lapsed
+    }
+}
+
+/// A non-binding probe quote for capacity on one resource, priced off the
+/// tenant's live view (demand premiums and won agreements included).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeQuote {
+    pub rid: ResourceId,
+    /// Slots still free after earlier tentative holds in the same shadow.
+    pub free: u32,
+    pub rate: GridDollars,
+    pub planning_speed: f64,
+}
+
+impl ProbeQuote {
+    /// Quoted cost of running one job of `job_work_ref_h` reference hours
+    /// on one slot here.
+    pub fn cost_per_slot(&self, job_work_ref_h: f64) -> GridDollars {
+        self.rate * job_work_ref_h * 3600.0 / self.planning_speed
+    }
+}
+
+/// One priced what-if plan out of a shadow schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShadowPlan {
+    /// Granted holds: (resource, slots, locked rate, quoted cost/slot).
+    pub holds: Vec<(ResourceId, u32, GridDollars, GridDollars)>,
+    /// Total slots granted.
+    pub slots: u32,
+    /// Quoted cost of running one job on every granted slot.
+    pub quoted_cost: GridDollars,
+    /// Probes issued pricing this plan.
+    pub probes: u32,
+}
+
+impl ShadowPlan {
+    /// Mean quoted cost per granted slot — the comparator between plans of
+    /// different sizes (∞ for an empty plan).
+    pub fn cost_per_slot(&self) -> GridDollars {
+        if self.slots == 0 {
+            f64::INFINITY
+        } else {
+            self.quoted_cost / self.slots as f64
+        }
+    }
+}
+
+/// A sandbox overlay of one tenant's view table: probe quotes and
+/// tentative holds against it cost out a candidate plan without mutating
+/// any live state. Tentative holds only exist inside the shadow; nothing
+/// is booked until the caller really reserves through the world.
+pub struct ShadowSchedule<'a> {
+    views: &'a [ResourceView],
+    /// Tentatively held slots by resource index.
+    overlay: BTreeMap<u32, u32>,
+}
+
+impl<'a> ShadowSchedule<'a> {
+    pub fn new(views: &'a [ResourceView]) -> ShadowSchedule<'a> {
+        ShadowSchedule {
+            views,
+            overlay: BTreeMap::new(),
+        }
+    }
+
+    /// Non-binding quote for `rid` net of earlier tentative holds. `None`
+    /// for machines the view says are unusable (down, unauthorized, zero
+    /// speed) or already fully held in this shadow.
+    pub fn probe(&self, rid: ResourceId) -> Option<ProbeQuote> {
+        let v = self.views.get(rid.0 as usize)?;
+        if v.planning_speed <= 0.0 {
+            return None;
+        }
+        let held = self.overlay.get(&rid.0).copied().unwrap_or(0);
+        let free = v.slots.saturating_sub(held);
+        if free == 0 {
+            return None;
+        }
+        Some(ProbeQuote {
+            rid,
+            free,
+            rate: v.rate,
+            planning_speed: v.planning_speed,
+        })
+    }
+
+    /// Tentatively hold up to `want` slots on `rid` inside the shadow.
+    /// Returns the slots actually granted (capped at the probe's `free`).
+    pub fn tentative_reserve(&mut self, rid: ResourceId, want: u32) -> u32 {
+        let Some(q) = self.probe(rid) else {
+            return 0;
+        };
+        let granted = want.min(q.free);
+        *self.overlay.entry(rid.0).or_insert(0) += granted;
+        granted
+    }
+
+    /// Drop every tentative hold (start the next what-if from live state).
+    pub fn reset(&mut self) {
+        self.overlay.clear();
+    }
+
+    /// Price one candidate set: probe each member, grant slots to those
+    /// that can turn a job of `job_work_ref_h` reference hours around
+    /// inside `window_h` hours, and total the quoted cost. Resets the
+    /// overlay first, so plans are independent what-ifs.
+    pub fn plan(
+        &mut self,
+        set: &[(ResourceId, u32)],
+        job_work_ref_h: f64,
+        window_h: f64,
+    ) -> ShadowPlan {
+        self.reset();
+        let mut plan = ShadowPlan {
+            holds: Vec::new(),
+            slots: 0,
+            quoted_cost: 0.0,
+            probes: 0,
+        };
+        for &(rid, want) in set {
+            plan.probes += 1;
+            let Some(q) = self.probe(rid) else {
+                continue;
+            };
+            // One job must fit the guarded window — an infeasible member
+            // contributes nothing to the plan.
+            if job_work_ref_h / q.planning_speed > window_h {
+                continue;
+            }
+            let granted = self.tentative_reserve(rid, want);
+            if granted == 0 {
+                continue;
+            }
+            let per_slot = q.cost_per_slot(job_work_ref_h);
+            plan.holds.push((rid, granted, q.rate, per_slot));
+            plan.slots += granted;
+            plan.quoted_cost += per_slot * granted as f64;
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: u32, slots: u32, speed: f64, rate: f64) -> ResourceView {
+        ResourceView {
+            id: ResourceId(id),
+            slots,
+            planning_speed: speed,
+            rate,
+            in_flight: 0,
+            measured_jphps: None,
+            batch_queue: false,
+        }
+    }
+
+    #[test]
+    fn default_config_validates() {
+        assert!(ReservationConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let ok = ReservationConfig::default();
+        assert!(ReservationConfig {
+            commit_timeout_s: 0.0,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReservationConfig {
+            hold_s: f64::NAN,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReservationConfig {
+            cancel_penalty: 1.1,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReservationConfig {
+            trigger_frac: 1.0,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReservationConfig {
+            probe_sets: 1,
+            ..ok.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReservationConfig { max_slots: 0, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn lifecycle_reserve_commit_consume() {
+        let mut s = ReservationStore::new(4);
+        assert!(s.reserve(ResourceId(1), 2, 0.5, 100.0, 10.0, 310.0));
+        // A second hold on the same machine is refused.
+        assert!(!s.reserve(ResourceId(1), 1, 0.5, 100.0, 10.0, 310.0));
+        // Uncommitted holds cannot be consumed.
+        assert!(s.consume_slot(ResourceId(1), 20.0).is_none());
+        assert!(s.commit(ResourceId(1), 20.0, 7220.0));
+        assert!(!s.commit(ResourceId(1), 20.0, 9000.0), "double commit");
+        let c = s.consume_slot(ResourceId(1), 30.0).unwrap();
+        assert_eq!(c.rate, 0.5);
+        assert!(!c.closed);
+        let c = s.consume_slot(ResourceId(1), 40.0).unwrap();
+        assert!(c.closed, "last slot closes the hold");
+        assert!(s.get(ResourceId(1)).is_none());
+        assert_eq!(s.reserves, 1);
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.consumed, 2);
+        // Slot 1 held 10→30 s, slot 2 held 10→40 s.
+        assert!((s.held_slot_seconds - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expiry_is_exclusive_and_in_resource_order() {
+        let mut s = ReservationStore::new(4);
+        assert!(s.reserve(ResourceId(3), 1, 1.0, 10.0, 0.0, 100.0));
+        assert!(s.reserve(ResourceId(0), 2, 1.0, 10.0, 0.0, 100.0));
+        assert!(s.expire_due(99.9).is_empty(), "O(1) before anything is due");
+        let lapsed = s.expire_due(100.0);
+        assert_eq!(
+            lapsed.iter().map(|(r, _)| r.0).collect::<Vec<_>>(),
+            vec![0, 3],
+            "sweep order is ascending resource index"
+        );
+        assert_eq!(s.expiries, 2);
+        assert_eq!(s.active_holds(), 0);
+        assert!((s.held_slot_seconds - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_is_free_while_reserved() {
+        let mut s = ReservationStore::new(2);
+        assert!(s.reserve(ResourceId(0), 3, 1.0, 10.0, 5.0, 305.0));
+        let r = s.cancel(ResourceId(0), 6.0).unwrap();
+        assert_eq!(r.level, CommitLevel::Reserved);
+        assert_eq!(s.cancels, 1);
+        assert!(s.cancel(ResourceId(0), 6.0).is_none());
+    }
+
+    #[test]
+    fn shadow_overlays_do_not_touch_live_views() {
+        let views = vec![view(0, 4, 1.0, 0.2), view(1, 0, 1.0, 0.1), view(2, 8, 0.0, 0.1)];
+        let mut shadow = ShadowSchedule::new(&views);
+        // Down/full machines cannot be probed.
+        assert!(shadow.probe(ResourceId(1)).is_none());
+        assert!(shadow.probe(ResourceId(2)).is_none());
+        let q = shadow.probe(ResourceId(0)).unwrap();
+        assert_eq!(q.free, 4);
+        assert_eq!(shadow.tentative_reserve(ResourceId(0), 3), 3);
+        assert_eq!(shadow.probe(ResourceId(0)).unwrap().free, 1);
+        assert_eq!(shadow.tentative_reserve(ResourceId(0), 3), 1, "capped");
+        assert!(shadow.probe(ResourceId(0)).is_none(), "fully held");
+        // The live table never moved.
+        assert_eq!(views[0].slots, 4);
+    }
+
+    #[test]
+    fn shadow_plans_price_and_reset_independently() {
+        let views = vec![view(0, 2, 1.0, 0.2), view(1, 4, 2.0, 0.3)];
+        let mut shadow = ShadowSchedule::new(&views);
+        // 1 ref-h job: machine 0 costs 0.2·3600 = 720/slot, machine 1
+        // costs 0.3·3600/2 = 540/slot.
+        let a = shadow.plan(&[(ResourceId(0), 2), (ResourceId(1), 1)], 1.0, 10.0);
+        assert_eq!(a.slots, 3);
+        assert_eq!(a.probes, 2);
+        assert!((a.quoted_cost - (2.0 * 720.0 + 540.0)).abs() < 1e-9);
+        // The next plan starts from live state again.
+        let b = shadow.plan(&[(ResourceId(1), 4)], 1.0, 10.0);
+        assert_eq!(b.slots, 4);
+        assert!(b.cost_per_slot() < a.cost_per_slot());
+        // A member too slow for the window contributes nothing.
+        let c = shadow.plan(&[(ResourceId(0), 2)], 20.0, 10.0);
+        assert_eq!(c.slots, 0);
+        assert!(c.cost_per_slot().is_infinite());
+    }
+}

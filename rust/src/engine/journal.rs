@@ -116,13 +116,69 @@ impl Journal {
             ("job", Json::num(job.0 as f64)),
         ])
     }
+
+    /// An advance-reservation hold was taken on `rid`.
+    pub fn reserved(
+        &mut self,
+        rid: ResourceId,
+        slots: u32,
+        rate: f64,
+        expires: f64,
+    ) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("reserve")),
+            ("rid", Json::num(rid.0 as f64)),
+            ("slots", Json::num(slots as f64)),
+            ("rate", Json::num(rate)),
+            ("expires", Json::num(expires)),
+        ])
+    }
+
+    /// The hold on `rid` was committed (binding until `expires`).
+    pub fn reservation_committed(
+        &mut self,
+        rid: ResourceId,
+        expires: f64,
+    ) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("res-commit")),
+            ("rid", Json::num(rid.0 as f64)),
+            ("expires", Json::num(expires)),
+        ])
+    }
+
+    /// The hold on `rid` ended (cancelled, expired or fully consumed):
+    /// whatever slots it still held are free again.
+    pub fn reservation_closed(&mut self, rid: ResourceId) -> Result<()> {
+        self.record(vec![
+            ("type", Json::str("res-close")),
+            ("rid", Json::num(rid.0 as f64)),
+        ])
+    }
 }
 
-/// Recovered state: the rebuilt experiment plus the header metadata.
+/// A hold that was still open when the journal stopped. Recovery *releases*
+/// these (a fresh world re-derives occupancy from the engines, so a
+/// crashed run's holds must not leak reserved capacity); they are surfaced
+/// so the resuming driver can audit what was forfeited and re-reserve if
+/// the work still needs the capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveredReservation {
+    pub rid: ResourceId,
+    pub slots: u32,
+    pub rate: f64,
+    pub expires: f64,
+    pub committed: bool,
+}
+
+/// Recovered state: the rebuilt experiment plus the header metadata and
+/// any reservation holds that were open at the crash (released, not
+/// restored — see [`RecoveredReservation`]).
 pub struct Recovered {
     pub experiment: Experiment,
     pub plan_src: String,
     pub seed: u64,
+    pub open_reservations: Vec<RecoveredReservation>,
 }
 
 /// Replay a journal into an [`Experiment`].
@@ -150,6 +206,11 @@ pub fn recover(path: &Path) -> Result<Recovered> {
         header.req_f64("max_attempts")? as u32,
     );
 
+    // Reservation holds are tracked separately from the job table: a
+    // reserve opens one, res-commit hardens it, res-close ends it. What
+    // survives the replay is exactly what the crashed run still held.
+    let mut holds: std::collections::BTreeMap<u32, RecoveredReservation> =
+        std::collections::BTreeMap::new();
     for line in lines {
         let line = line?;
         if line.trim().is_empty() {
@@ -158,24 +219,49 @@ pub fn recover(path: &Path) -> Result<Recovered> {
         let Ok(rec) = parse(&line) else {
             continue; // torn tail write: stop-loss, keep what we have
         };
-        let job = JobId(rec.req_f64("job")? as u32);
+        let jid = |rec: &Json| -> Result<JobId> {
+            Ok(JobId(rec.req_f64("job")? as u32))
+        };
         match rec.req_str("type")? {
             "dispatch" => {
                 let rid = ResourceId(rec.req_f64("rid")? as u32);
-                exp.dispatch(job, rid, rec.req_f64("at")?)?;
+                exp.dispatch(jid(&rec)?, rid, rec.req_f64("at")?)?;
             }
-            "start" => exp.start(job, rec.req_f64("at")?)?,
+            "start" => exp.start(jid(&rec)?, rec.req_f64("at")?)?,
             "complete" => exp.complete(
-                job,
+                jid(&rec)?,
                 rec.req_f64("at")?,
                 rec.req_f64("cpu_s")?,
                 rec.req_f64("cost")?,
             )?,
             "fail" => {
-                exp.fail_attempt(job)?;
+                exp.fail_attempt(jid(&rec)?)?;
             }
             "release" => {
-                exp.release(job)?;
+                exp.release(jid(&rec)?)?;
+            }
+            "reserve" => {
+                let rid = rec.req_f64("rid")? as u32;
+                holds.insert(
+                    rid,
+                    RecoveredReservation {
+                        rid: ResourceId(rid),
+                        slots: rec.req_f64("slots")? as u32,
+                        rate: rec.req_f64("rate")?,
+                        expires: rec.req_f64("expires")?,
+                        committed: false,
+                    },
+                );
+            }
+            "res-commit" => {
+                let rid = rec.req_f64("rid")? as u32;
+                if let Some(h) = holds.get_mut(&rid) {
+                    h.committed = true;
+                    h.expires = rec.req_f64("expires")?;
+                }
+            }
+            "res-close" => {
+                holds.remove(&(rec.req_f64("rid")? as u32));
             }
             other => bail!("unknown journal record type `{other}`"),
         }
@@ -189,6 +275,7 @@ pub fn recover(path: &Path) -> Result<Recovered> {
         experiment: exp,
         plan_src,
         seed,
+        open_reservations: holds.into_values().collect(),
     })
 }
 
@@ -270,6 +357,54 @@ mod tests {
         drop(f);
         let rec = recover(&path).unwrap();
         assert_eq!(rec.experiment.job(JobId(0)).state, JobState::Ready);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restart_mid_reservation_releases_open_holds() {
+        let dir =
+            std::env::temp_dir().join(format!("nimrod-j4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (mut exp, mut j, path) = fresh(&dir);
+
+        // r2: reserved then committed then closed — fully settled, must
+        // not resurface. r5: committed and still open at the crash.
+        // r8: reserved (never committed) and still open at the crash.
+        j.reserved(ResourceId(2), 3, 0.8, 600.0).unwrap();
+        j.reservation_committed(ResourceId(2), 4000.0).unwrap();
+        j.reservation_closed(ResourceId(2)).unwrap();
+        j.reserved(ResourceId(5), 2, 1.5, 700.0).unwrap();
+        j.reservation_committed(ResourceId(5), 5000.0).unwrap();
+        j.reserved(ResourceId(8), 4, 0.5, 900.0).unwrap();
+        // Job records interleave with reservation records.
+        exp.dispatch(JobId(0), ResourceId(5), 10.0).unwrap();
+        j.dispatched(JobId(0), ResourceId(5), 10.0).unwrap();
+        drop(j); // crash
+
+        let rec = recover(&path).unwrap();
+        // The job table replays as before.
+        assert_eq!(rec.experiment.job(JobId(0)).state, JobState::Ready);
+        // Only the two open holds survive, in resource order, with the
+        // commit state and binding expiry the crashed run last recorded.
+        assert_eq!(
+            rec.open_reservations,
+            vec![
+                RecoveredReservation {
+                    rid: ResourceId(5),
+                    slots: 2,
+                    rate: 1.5,
+                    expires: 5000.0,
+                    committed: true,
+                },
+                RecoveredReservation {
+                    rid: ResourceId(8),
+                    slots: 4,
+                    rate: 0.5,
+                    expires: 900.0,
+                    committed: false,
+                },
+            ]
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

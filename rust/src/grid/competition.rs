@@ -150,23 +150,26 @@ impl Competition {
         self.active.len()
     }
 
-    /// Slots left for one experiment on a resource, accounting for **both**
-    /// occupancy sources in one place — synthetic competition claims and
-    /// the other tenants' real in-flight jobs (`foreign_in_flight`) — so no
-    /// driver can double-count or miss one of them. Single-tenant drivers
-    /// pass `foreign_in_flight = 0` and get the legacy behaviour.
+    /// Slots left for one experiment on a resource, accounting for every
+    /// occupancy source in one place — synthetic competition claims, the
+    /// other tenants' real in-flight jobs (`foreign_in_flight`) and the
+    /// other tenants' advance-reservation holds (`foreign_reserved`) — so
+    /// no driver can double-count or miss one of them. Single-tenant
+    /// drivers pass zeros and get the legacy behaviour.
     pub fn free_slots(
         &self,
         tb: &Testbed,
         rid: ResourceId,
         base_slots: u32,
         foreign_in_flight: u32,
+        foreign_reserved: u32,
     ) -> u32 {
         visible_slots(
             base_slots,
             tb.spec(rid).cpus,
             self.claimed(rid),
             foreign_in_flight,
+            foreign_reserved,
         )
     }
 
@@ -184,18 +187,22 @@ impl Competition {
 
 /// The one formula for "how many GRAM slots can this experiment still
 /// see": the queue's admit limit, capped by CPUs not claimed by
-/// competitors, minus CPUs held by other tenants' in-flight jobs. Shared
-/// by [`Competition::free_slots`] and the no-competition path in
-/// [`crate::sim::GridWorld`] so both agree by construction.
+/// competitors, minus CPUs held by other tenants' in-flight jobs, minus
+/// CPUs other tenants have locked with advance-reservation holds (a
+/// tenant still sees its *own* holds — that is what lets it dispatch into
+/// them). Shared by [`Competition::free_slots`] and the no-competition
+/// path in [`crate::sim::GridWorld`] so both agree by construction.
 pub fn visible_slots(
     base_slots: u32,
     cpus: u32,
     competition_claimed: u32,
     foreign_in_flight: u32,
+    foreign_reserved: u32,
 ) -> u32 {
     base_slots
         .min(cpus.saturating_sub(competition_claimed))
         .saturating_sub(foreign_in_flight)
+        .saturating_sub(foreign_reserved)
 }
 
 #[cfg(test)]
@@ -265,7 +272,7 @@ mod tests {
         let premium = comp.demand_premium(&tb, contended.id);
         assert!(premium > 1.0 && premium <= DEMAND_PREMIUM_MAX);
         // Slots shrink accordingly.
-        let slots = comp.free_slots(&tb, contended.id, contended.cpus, 0);
+        let slots = comp.free_slots(&tb, contended.id, contended.cpus, 0, 0);
         assert!(slots < contended.cpus);
     }
 
@@ -305,17 +312,22 @@ mod tests {
         let (tb, comp) = setup();
         let spec = &tb.resources[0];
         let base = spec.cpus;
-        assert_eq!(comp.free_slots(&tb, spec.id, base, 0), base);
+        assert_eq!(comp.free_slots(&tb, spec.id, base, 0, 0), base);
         assert_eq!(
-            comp.free_slots(&tb, spec.id, base, 3),
+            comp.free_slots(&tb, spec.id, base, 3, 0),
             base.saturating_sub(3)
         );
         // Foreign occupancy can zero a machine out, never underflow.
-        assert_eq!(comp.free_slots(&tb, spec.id, base, base + 5), 0);
+        assert_eq!(comp.free_slots(&tb, spec.id, base, base + 5, 0), 0);
         // The shared formula is the same one the no-competition path uses.
-        assert_eq!(visible_slots(8, 10, 4, 2), 4);
-        assert_eq!(visible_slots(8, 10, 0, 2), 6);
-        assert_eq!(visible_slots(8, 10, 10, 0), 0);
+        assert_eq!(visible_slots(8, 10, 4, 2, 0), 4);
+        assert_eq!(visible_slots(8, 10, 0, 2, 0), 6);
+        assert_eq!(visible_slots(8, 10, 10, 0, 0), 0);
+        // Foreign reservation holds subtract exactly like foreign
+        // in-flight jobs, and cannot underflow either.
+        assert_eq!(visible_slots(8, 10, 0, 2, 3), 3);
+        assert_eq!(visible_slots(8, 10, 4, 2, 3), 1);
+        assert_eq!(comp.free_slots(&tb, spec.id, base, 1, base), 0);
     }
 
     #[test]

@@ -192,7 +192,9 @@ fn print_usage() {
          multi-tenant: `nimrod run --scenario contested-gusto` puts N competing\n\
          brokers on one shared grid and reports per-tenant + fairness metrics;\n\
          `nimrod run --scenario grace-auction` runs the GRACE tender/bid market\n\
-         (paper §7) and reports agreements + clearing prices"
+         (paper §7) and reports agreements + clearing prices;\n\
+         `nimrod run --scenario reserve-ahead` adds advance reservations\n\
+         (probe → reserve → commit with shadow-schedule costing)"
     );
 }
 
@@ -242,6 +244,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
              multi-tenant scenarios (N brokers on one shared grid, per-tenant\n\
              report + fairness/price metrics):\n  nimrod run --scenario contested-gusto\n  nimrod run --scenario auction-rush\n\
              GRACE tender/bid market scenarios (agreements + clearing prices):\n  nimrod run --scenario grace-auction\n  nimrod run --scenario grace-rush\n\
+             advance reservations (probe/reserve/commit, shadow schedules):\n  nimrod run --scenario reserve-ahead\n\
              candidate-index stress (10k machines, churn, 4 tenants):\n  nimrod run --scenario index-storm\n\
              (--seed/--scale affect the whole world; --policy/--deadline-h/\n\
              --budget/--user retarget tenant 0 only)"

@@ -188,6 +188,17 @@ pub struct TenantOutcome {
     pub deal_rounds: u64,
     /// Negotiations that ended without a feasible bid set.
     pub failed_negotiations: u32,
+    /// Advance reservations: shadow-schedule probe quotes issued (0 when
+    /// the subsystem is off).
+    pub reservation_probes: u64,
+    /// Holds hardened into binding commitments.
+    pub reservations_committed: u32,
+    /// Holds dropped before use — free cancellations plus expiries.
+    pub reservations_cancelled: u32,
+    /// Σ over held slots of seconds between entering and leaving a hold.
+    pub held_slot_seconds: f64,
+    /// Cancellation penalties billed through the ledger, G$.
+    pub penalty_spend: GridDollars,
     pub report: Report,
 }
 
@@ -282,6 +293,26 @@ impl WorldReport {
         self.tenants.iter().map(|t| t.agreements_won).sum()
     }
 
+    /// True when the world ran the advance-reservation subsystem: any
+    /// probe, commitment or cancellation at all.
+    pub fn has_reservation_data(&self) -> bool {
+        self.tenants.iter().any(|t| {
+            t.reservation_probes > 0
+                || t.reservations_committed > 0
+                || t.reservations_cancelled > 0
+        })
+    }
+
+    /// Reservations committed across all tenants.
+    pub fn reservations_committed(&self) -> u32 {
+        self.tenants.iter().map(|t| t.reservations_committed).sum()
+    }
+
+    /// Cancellation-penalty spend across all tenants, G$.
+    pub fn penalty_spend(&self) -> GridDollars {
+        self.tenants.iter().map(|t| t.penalty_spend).sum()
+    }
+
     /// Mean tender rounds behind each won agreement (0 when none), counting
     /// only the rounds of negotiations that actually produced a deal —
     /// failed negotiations' rounds live in
@@ -352,6 +383,23 @@ impl WorldReport {
                 shares,
             );
         }
+        if self.has_reservation_data() {
+            let probes: u64 =
+                self.tenants.iter().map(|t| t.reservation_probes).sum();
+            let cancelled: u32 =
+                self.tenants.iter().map(|t| t.reservations_cancelled).sum();
+            let held: f64 =
+                self.tenants.iter().map(|t| t.held_slot_seconds).sum();
+            let _ = write!(
+                out,
+                "\nreservations: {} committed ({} cancelled/expired), {} probes, {:.0} held slot-s, {:.2} G$ penalties",
+                self.reservations_committed(),
+                cancelled,
+                probes,
+                held,
+                self.penalty_spend(),
+            );
+        }
         out
     }
 
@@ -359,13 +407,13 @@ impl WorldReport {
     /// posted-price worlds).
     pub fn per_tenant_csv(&self) -> String {
         let mut out = String::from(
-            "user,policy,jobs_total,jobs_completed,jobs_failed,makespan_h,deadline_h,deadline_met,cost_gd,cpu_hours,agreements_won,negotiation_rounds,deal_rounds,failed_negotiations\n",
+            "user,policy,jobs_total,jobs_completed,jobs_failed,makespan_h,deadline_h,deadline_met,cost_gd,cpu_hours,agreements_won,negotiation_rounds,deal_rounds,failed_negotiations,res_probes,res_committed,res_cancelled,held_slot_s,penalty_gd\n",
         );
         for t in &self.tenants {
             let r = &t.report;
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{:.3},{:.1},{},{:.2},{:.3},{},{},{},{}",
+                "{},{},{},{},{},{:.3},{:.1},{},{:.2},{:.3},{},{},{},{},{},{},{},{:.1},{:.2}",
                 t.user,
                 t.policy,
                 r.jobs_total,
@@ -380,6 +428,11 @@ impl WorldReport {
                 t.negotiation_rounds,
                 t.deal_rounds,
                 t.failed_negotiations,
+                t.reservation_probes,
+                t.reservations_committed,
+                t.reservations_cancelled,
+                t.held_slot_seconds,
+                t.penalty_spend,
             );
         }
         out
@@ -509,6 +562,11 @@ mod tests {
             negotiation_rounds: 0,
             deal_rounds: 0,
             failed_negotiations: 0,
+            reservation_probes: 0,
+            reservations_committed: 0,
+            reservations_cancelled: 0,
+            held_slot_seconds: 0.0,
+            penalty_spend: 0.0,
             report,
         }
     }
@@ -597,9 +655,46 @@ mod tests {
         // so rounds_per_agreement is reproducible from the export.
         let tcsv = wr.per_tenant_csv();
         assert!(tcsv.lines().next().unwrap().ends_with(
-            "agreements_won,negotiation_rounds,deal_rounds,failed_negotiations"
+            "agreements_won,negotiation_rounds,deal_rounds,failed_negotiations,res_probes,res_committed,res_cancelled,held_slot_s,penalty_gd"
         ));
-        assert!(tcsv.contains(",6,9,9,0"), "{tcsv}");
-        assert!(tcsv.contains(",2,22,7,3"), "{tcsv}");
+        assert!(tcsv.contains(",6,9,9,0,"), "{tcsv}");
+        assert!(tcsv.contains(",2,22,7,3,"), "{tcsv}");
+    }
+
+    #[test]
+    fn reservation_figures_and_csv() {
+        // Worlds without the subsystem carry no reservation data and say
+        // nothing about it.
+        let off = WorldReport {
+            tenants: vec![tenant("a", 10.0)],
+            ..Default::default()
+        };
+        assert!(!off.has_reservation_data());
+        assert!(!off.summary().contains("reservations:"));
+        assert!(off.per_tenant_csv().contains(",0,0,0,0.0,0.00"));
+
+        let mut a = tenant("a", 10.0);
+        a.reservation_probes = 12;
+        a.reservations_committed = 3;
+        a.reservations_cancelled = 2;
+        a.held_slot_seconds = 5400.0;
+        a.penalty_spend = 42.5;
+        let mut b = tenant("b", 10.0);
+        b.reservation_probes = 4;
+        b.reservations_committed = 1;
+        let wr = WorldReport {
+            tenants: vec![a, b],
+            ..Default::default()
+        };
+        assert!(wr.has_reservation_data());
+        assert_eq!(wr.reservations_committed(), 4);
+        assert!((wr.penalty_spend() - 42.5).abs() < 1e-12);
+        let s = wr.summary();
+        assert!(s.contains("reservations: 4 committed"), "{s}");
+        assert!(s.contains("16 probes"), "{s}");
+        assert!(s.contains("42.50 G$ penalties"), "{s}");
+        let tcsv = wr.per_tenant_csv();
+        assert!(tcsv.contains(",12,3,2,5400.0,42.50"), "{tcsv}");
+        assert!(tcsv.contains(",4,1,0,0.0,0.00"), "{tcsv}");
     }
 }

@@ -16,9 +16,10 @@
 //! scales with grid size.
 
 use super::{
-    guarded_window_h, Allocation, Policy, ResourceView, SchedCtx,
-    DEADLINE_SAFETY,
+    guarded_window_h, Allocation, CandidateIndex, Policy, ResourceView,
+    SchedCtx, DEADLINE_SAFETY,
 };
+use crate::types::ResourceId;
 
 /// Hours to the deadline after applying a policy's safety factor (the
 /// tunable generalization of [`SchedCtx::hours_left`], which fixes the
@@ -326,6 +327,55 @@ impl Policy for DeadlineOnly {
     }
 }
 
+/// Candidate resource sets for the reserve-ahead move: greedy
+/// `want_slots`-deep prefixes of up to `max_sets` of the candidate index's
+/// ranked orderings (cheapest-cost, fastest-speed, lowest-rate, best
+/// service history — distinct lenses on the same grid, so the shadow
+/// scheduler has genuinely different plans to price against each other).
+/// Slots per member are capped at the view's visible slots; empty
+/// prefixes (a dead grid) are dropped. Deterministic: pure reads of the
+/// index and views, no RNG.
+pub fn reservation_candidate_sets(
+    views: &[ResourceView],
+    candidates: &CandidateIndex,
+    want_slots: u32,
+    max_sets: usize,
+) -> Vec<Vec<(ResourceId, u32)>> {
+    let prefix = |ordered: &mut dyn Iterator<Item = ResourceId>| {
+        let mut set: Vec<(ResourceId, u32)> = Vec::new();
+        let mut remaining = want_slots;
+        for rid in ordered {
+            if remaining == 0 {
+                break;
+            }
+            let Some(v) = views.get(rid.0 as usize) else {
+                continue;
+            };
+            let take = v.slots.min(remaining);
+            if take == 0 {
+                continue;
+            }
+            set.push((rid, take));
+            remaining -= take;
+        }
+        set
+    };
+    let mut sets = Vec::new();
+    let orderings: [&mut dyn Iterator<Item = ResourceId>; 4] = [
+        &mut candidates.cost_ranked(),
+        &mut candidates.speed_ranked(),
+        &mut candidates.rate_ranked(),
+        &mut candidates.service_ranked(),
+    ];
+    for ordered in orderings.into_iter().take(max_sets) {
+        let set = prefix(ordered);
+        if !set.is_empty() {
+            sets.push(set);
+        }
+    }
+    sets
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::testutil::{index_of, view};
@@ -532,6 +582,27 @@ mod tests {
         let alloc = CostOpt::default().allocate(&mut c);
         assert_eq!(alloc.values().sum::<u32>(), 2, "{alloc:?}");
         assert!(c.hours_left().is_finite());
+    }
+
+    #[test]
+    fn reservation_candidate_sets_follow_distinct_orderings() {
+        // cheap-slow machine 0, dear-fast machine 1: the cost-ranked
+        // prefix leads with 0, the speed-ranked prefix with 1.
+        let rs = vec![view(0, 4, 1.0, 0.1), view(1, 4, 4.0, 5.0)];
+        let ix = index_of(&rs);
+        let sets = reservation_candidate_sets(&rs, &ix, 6, 2);
+        assert_eq!(sets.len(), 2);
+        assert_eq!(sets[0][0], (ResourceId(0), 4));
+        assert_eq!(sets[0][1], (ResourceId(1), 2));
+        assert_eq!(sets[1][0], (ResourceId(1), 4));
+        // Slots never exceed the ask.
+        for set in &sets {
+            assert_eq!(set.iter().map(|&(_, n)| n).sum::<u32>(), 6);
+        }
+        // A dead grid yields no sets at all.
+        let dead = vec![view(0, 0, 0.0, 0.1)];
+        let ix = index_of(&dead);
+        assert!(reservation_candidate_sets(&dead, &ix, 4, 3).is_empty());
     }
 
     #[test]

@@ -50,12 +50,34 @@
 //! path honour a live agreement over the posted quote, and awards/expiries
 //! dirty only the winning tenant's views of the touched resources, so the
 //! O(changed) tick survives the auction layer.
+//!
+//! **Advance reservations are world-booked.** With a
+//! [`ReservationConfig`] on tenant 0 the world runs the probe → reserve →
+//! commit lifecycle of [`crate::economy::reservation`]: near its deadline
+//! a tenant shadow-prices several candidate resource sets against its live
+//! views, really reserves the two cheapest plans, commits the cheapest and
+//! walks away from the rest while cancellation is still free. Held slots
+//! are real capacity: they join the shared `total_reserved` occupancy,
+//! leave every *other* tenant's [`visible_slots`] (the holder still sees
+//! its own holds — that is what it dispatches into), feed the demand-
+//! premium utilization signal, and extend the slot-conservation invariant
+//! to Σ in-flight + competition claims + reserved ≤ CPUs, asserted every
+//! debug tick. Every hold transition follows the standing rule — it
+//! dirties the touched resource's view *and* candidate-index entry for
+//! every tenant — and is journalled for crash recovery (recovery releases
+//! open holds rather than restoring them). With the config absent the
+//! subsystem is inert: no RNG is drawn, no f64 changes, and the world
+//! replays bit-exactly like the pre-reservation pipeline.
 
 use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
 use crate::dispatcher::Action;
 use crate::economy::grace::{BidServer, BidStrategy, Broker as GraceBroker, Tender};
 use crate::economy::market::{GraceConfig, MarketKind, PriceAgreement};
+use crate::economy::reservation::{
+    CommitLevel, Reservation, ReservationConfig, ReservationStore, ShadowPlan,
+    ShadowSchedule,
+};
 use crate::economy::Ledger;
 use crate::engine::journal::Journal;
 use crate::engine::{Experiment, JobState};
@@ -68,6 +90,7 @@ use crate::grid::testbed::{local_hour, Testbed};
 use crate::grid::JobManager;
 use crate::metrics::{Report, ResourceUsage, TenantOutcome, WorldReport};
 use crate::plan::JobSpec;
+use crate::scheduler::dbc::reservation_candidate_sets;
 use crate::scheduler::{
     guarded_window_h, CandidateIndex, ResourceView, DEADLINE_SAFETY,
 };
@@ -95,6 +118,15 @@ fn split_jid(gid: JobId) -> (usize, JobId) {
         (gid.0 >> TENANT_ID_SHIFT) as usize,
         JobId(gid.0 & ((1 << TENANT_ID_SHIFT) - 1)),
     )
+}
+
+/// Pseudo job id carrying one reservation's ledger envelope (the
+/// worst-case cancellation penalty committed when the hold binds). Engine
+/// job ids stay below 2^24 (asserted in [`GridWorld::new`]) and tenant
+/// indices below 2^8, so the 0xFF tenant prefix can never collide with a
+/// real grid job id in any tenant's ledger.
+fn rsv_jid(rid: ResourceId) -> JobId {
+    JobId(0xFF00_0000 | rid.0)
 }
 
 /// Simulation events. Per-tenant events carry the tenant index; grid-level
@@ -146,6 +178,9 @@ struct InFlight {
     work_ref_h: f64,
     /// CPU seconds this job will consume on its machine.
     cpu_s: f64,
+    /// Rate locked by the reservation slot this dispatch consumed, if any:
+    /// execution start bills it even after the hold itself has closed.
+    locked_rate: Option<GridDollars>,
 }
 
 /// Everything one co-scheduled experiment owns: a full Nimrod/G broker
@@ -191,6 +226,8 @@ pub struct Tenant {
     negotiation_rounds: u64,
     deal_rounds: u64,
     failed_negotiations: u32,
+    /// Advance-reservation holds (empty forever when the subsystem is off).
+    rsv: ReservationStore,
 }
 
 impl Tenant {
@@ -312,6 +349,14 @@ pub struct GridWorld {
     market: Option<GraceConfig>,
     /// Mean awarded rate per auction sweep that produced agreements.
     clearing_prices: Vec<(SimTime, f64)>,
+    /// Advance-reservation subsystem, if the world runs one (tenant 0's
+    /// `cfg.reservations`; world-level like the market). `None` = inert,
+    /// bit-exact with the pre-reservation pipeline.
+    reservations: Option<ReservationConfig>,
+    /// Per-resource slots held by reservations across all tenants (index =
+    /// ResourceId), maintained in lockstep with every hold transition —
+    /// the third term of the slot-conservation invariant.
+    total_reserved: Vec<u32>,
 }
 
 impl GridWorld {
@@ -332,6 +377,7 @@ impl GridWorld {
             MarketKind::PostedPrice => None,
             MarketKind::GraceAuction(cfg) => Some(cfg),
         };
+        let reservations = setups[0].cfg.reservations.clone();
         let mut rng = Rng::new(world_seed);
         let dyns: Vec<ResourceDyn> = tb
             .resources
@@ -428,6 +474,7 @@ impl GridWorld {
                 negotiation_rounds: 0,
                 deal_rounds: 0,
                 failed_negotiations: 0,
+                rsv: ReservationStore::new(n),
             });
         }
 
@@ -463,6 +510,8 @@ impl GridWorld {
             peak_premium: 1.0,
             market,
             clearing_prices: Vec::new(),
+            reservations,
+            total_reserved: vec![0; n],
         };
         // Seed availability churn per resource.
         for i in 0..world.tb.resources.len() {
@@ -519,23 +568,39 @@ impl GridWorld {
             .count()
     }
 
+    /// One tenant's advance-reservation hold table (empty forever when the
+    /// subsystem is off).
+    pub fn reservations_of(&self, tid: usize) -> &ReservationStore {
+        &self.tenants[tid].rsv
+    }
+
     /// Attach a persistence journal to one tenant (restart support).
     pub fn attach_journal(&mut self, tid: usize, journal: Journal) {
         self.tenants[tid].journal = Some(journal);
     }
 
     /// Replace one tenant's experiment (restart-from-journal path) and
-    /// re-derive the world occupancy table from every tenant's counters.
+    /// re-derive the world occupancy tables from every tenant's counters.
+    /// The restarted tenant's reservation holds were already released at
+    /// recovery (the journal surfaces them as
+    /// [`crate::engine::journal::RecoveredReservation`]s), so its hold
+    /// table restarts empty and the shared reserved occupancy is re-summed
+    /// from the tenants that kept running.
     pub fn replace_experiment(&mut self, tid: usize, exp: Experiment) {
         self.tenants[tid].report.jobs_total = exp.jobs.len() as u32;
         self.tenants[tid].exp = exp;
         let n = self.tb.resources.len();
+        self.tenants[tid].rsv = ReservationStore::new(n);
         self.total_in_flight = vec![0; n];
+        self.total_reserved = vec![0; n];
         for t in &self.tenants {
             for (i, &c) in t.exp.in_flight_counts().iter().enumerate() {
                 if i < n {
                     self.total_in_flight[i] += c;
                 }
+            }
+            for i in 0..n {
+                self.total_reserved[i] += t.rsv.held_on(ResourceId(i as u32));
             }
         }
     }
@@ -565,11 +630,14 @@ impl GridWorld {
         self.tenants.iter().all(|t| t.exp.finished())
     }
 
-    /// Per-resource invariant: tenants' in-flight jobs plus background
-    /// competition claims never oversubscribe a machine's CPUs. Policies
-    /// cap allocations at the contention-adjusted `free_slots` and
-    /// competitor arrivals respect tenant occupancy, so this holds at every
-    /// tick by construction; tests (and debug builds) verify it.
+    /// Per-resource invariant, extended by the reservation subsystem:
+    /// tenants' in-flight jobs plus background competition claims plus
+    /// reservation-held slots never oversubscribe a machine's CPUs.
+    /// Policies cap allocations at the contention-adjusted `free_slots`,
+    /// competitor arrivals respect tenant occupancy (holds included), and
+    /// reservations book against ground-truth free capacity
+    /// ([`Self::bookable_slots`]), so this holds at every tick by
+    /// construction; tests (and debug builds) verify it.
     pub fn slot_conservation_ok(&self) -> bool {
         self.tb.resources.iter().all(|spec| {
             let i = spec.id.0 as usize;
@@ -578,14 +646,16 @@ impl GridWorld {
                 .as_ref()
                 .map(|c| c.claimed(spec.id))
                 .unwrap_or(0);
-            self.total_in_flight[i] + claimed <= spec.cpus
+            self.total_in_flight[i] + claimed + self.total_reserved[i]
+                <= spec.cpus
         })
     }
 
     // -- economy helpers -----------------------------------------------------
 
-    /// Fraction of `rid`'s CPUs occupied by tenants' in-flight jobs plus
-    /// background competition claims — the demand signal owners reprice on.
+    /// Fraction of `rid`'s CPUs occupied by tenants' in-flight jobs,
+    /// background competition claims and reservation-held slots — the
+    /// demand signal owners reprice on (held capacity is demand too).
     fn utilization(&self, rid: ResourceId) -> f64 {
         let claimed = self
             .competition
@@ -595,16 +665,24 @@ impl GridWorld {
         utilization_of(
             self.total_in_flight[rid.0 as usize],
             claimed,
+            self.total_reserved[rid.0 as usize],
             self.tb.spec(rid).cpus,
         )
     }
 
-    /// Effective rate tenant `tid` is billed on `rid` right now: a live
-    /// GRACE agreement if the tenant won one (scheduling and billing must
-    /// agree on won prices), else the owner's posted per-user quote at the
-    /// owner's local hour, times the background-competition premium, times
-    /// the owner's demand-responsive premium on total utilization.
+    /// Effective rate tenant `tid` is billed on `rid` right now: the rate
+    /// locked by a live *committed* reservation hold if the tenant has
+    /// one, else a live GRACE agreement if the tenant won one (scheduling
+    /// and billing must agree on won prices), else the owner's posted
+    /// per-user quote at the owner's local hour, times the
+    /// background-competition premium, times the owner's demand-responsive
+    /// premium on total utilization.
     fn effective_rate(&self, tid: usize, rid: ResourceId) -> GridDollars {
+        if let Some(r) = self.tenants[tid].rsv.get(rid) {
+            if r.level == CommitLevel::Committed && r.active(self.q.now()) {
+                return r.rate;
+            }
+        }
         if let Some(a) = self.tenants[tid].agreements[rid.0 as usize] {
             if a.active(self.q.now()) {
                 return a.rate;
@@ -652,8 +730,12 @@ impl GridWorld {
                 .as_ref()
                 .map(|c| c.claimed(spec.id))
                 .unwrap_or(0);
-            let util =
-                utilization_of(self.total_in_flight[i], claimed, spec.cpus);
+            let util = utilization_of(
+                self.total_in_flight[i],
+                claimed,
+                self.total_reserved[i],
+                spec.cpus,
+            );
             let demand_premium = spec.price.demand_premium(util);
             // Posted rate for an undiscounted user.
             sum += spec.price.rate_at(lh, "") * comp_premium * demand_premium;
@@ -698,17 +780,24 @@ impl GridWorld {
                 .unwrap_or(0);
             let own = tenant.exp.in_flight_on(spec.id);
             let foreign = self.total_in_flight[i].saturating_sub(own);
+            let foreign_rsv = self.total_reserved[i]
+                .saturating_sub(tenant.rsv.held_on(spec.id));
             let free = visible_slots(
                 self.managers[i].slots(),
                 spec.cpus,
                 claimed,
                 foreign,
+                foreign_rsv,
             );
             if free == 0 {
                 continue;
             }
-            let util =
-                utilization_of(self.total_in_flight[i], claimed, spec.cpus);
+            let util = utilization_of(
+                self.total_in_flight[i],
+                claimed,
+                self.total_reserved[i],
+                spec.cpus,
+            );
             let posted = posted_quote(
                 &self.tb,
                 self.start_utc_hour,
@@ -853,6 +942,214 @@ impl GridWorld {
         }
     }
 
+    // -- advance reservations ------------------------------------------------
+
+    /// Tick-time expiry sweep: every tick event lapses *all* tenants' due
+    /// GRACE agreements and reservation holds in one pass — tenant order,
+    /// then (inside each tenant) agreements before holds, each in
+    /// ascending resource-index order. A deadline shared by an agreement
+    /// and a hold, or by two tenants, therefore always lapses in the same
+    /// deterministic (tenant, resource) order, in the incremental and the
+    /// full-rebuild paths alike: the sweep only retires state and marks
+    /// views, and marks are idempotent, so which tenant's tick happens to
+    /// run the sweep cannot change the trace.
+    fn expire_due(&mut self, now: SimTime) {
+        for tid in 0..self.tenants.len() {
+            self.tenants[tid].expire_agreements(now);
+            self.expire_reservations(tid, now);
+        }
+    }
+
+    /// Lapse tenant `tid`'s due holds: expired *committed* holds bill the
+    /// cancellation penalty on their unused slots; uncommitted holds lapse
+    /// free (the commit timeout simply ran out).
+    fn expire_reservations(&mut self, tid: usize, now: SimTime) {
+        let Some(cfg) = &self.reservations else {
+            return;
+        };
+        let penalty_frac = cfg.cancel_penalty;
+        for (rid, r) in self.tenants[tid].rsv.expire_due(now) {
+            let penalty = penalty_frac * r.cost_per_slot * r.slots as f64;
+            self.close_hold(tid, rid, &r, penalty);
+        }
+    }
+
+    /// Close out one hold that already left the store (cancelled or
+    /// expired): unbook the shared reserved occupancy, settle the ledger
+    /// envelope billing `penalty` G$ (committed holds only — uncommitted
+    /// holds never opened one), journal the close and dirty the touched
+    /// resource for every tenant.
+    fn close_hold(
+        &mut self,
+        tid: usize,
+        rid: ResourceId,
+        r: &Reservation,
+        penalty: GridDollars,
+    ) {
+        let i = rid.0 as usize;
+        debug_assert!(self.total_reserved[i] >= r.slots);
+        self.total_reserved[i] = self.total_reserved[i].saturating_sub(r.slots);
+        let tenant = &mut self.tenants[tid];
+        if r.level == CommitLevel::Committed {
+            let name = self.tb.spec(rid).name.clone();
+            tenant.ledger.release(rsv_jid(rid), penalty, &name);
+            tenant.rsv.penalty_spend += penalty;
+        }
+        if let Some(j) = &mut tenant.journal {
+            let _ = j.reservation_closed(rid);
+        }
+        self.mark_view_all(rid);
+    }
+
+    /// Walk away from an uncommitted hold — free, by construction: only
+    /// `Reserved`-level holds reach this path.
+    fn free_cancel(&mut self, tid: usize, rid: ResourceId, now: SimTime) {
+        let Some(r) = self.tenants[tid].rsv.cancel(rid, now) else {
+            return;
+        };
+        debug_assert_eq!(r.level, CommitLevel::Reserved);
+        self.close_hold(tid, rid, &r, 0.0);
+    }
+
+    /// Ground-truth slots still free to reserve on `rid` right now. Views
+    /// can be stale and never subtract the tenant's own occupancy, so real
+    /// bookings clamp here — this is what keeps the extended invariant a
+    /// construction property rather than a hope.
+    fn bookable_slots(&self, rid: ResourceId) -> u32 {
+        let i = rid.0 as usize;
+        if !self.dyns[i].up {
+            return 0;
+        }
+        let claimed = self
+            .competition
+            .as_ref()
+            .map(|c| c.claimed(rid))
+            .unwrap_or(0);
+        self.tb
+            .spec(rid)
+            .cpus
+            .saturating_sub(claimed)
+            .saturating_sub(self.total_in_flight[i])
+            .saturating_sub(self.total_reserved[i])
+    }
+
+    /// Really take one shadow plan's holds (commit-timeout level), clamped
+    /// at true bookable capacity. Returns the resources actually held.
+    fn book_plan(
+        &mut self,
+        tid: usize,
+        plan: &ShadowPlan,
+        now: SimTime,
+        expires: SimTime,
+    ) -> Vec<ResourceId> {
+        let mut held = Vec::new();
+        for &(rid, slots, rate, per_slot) in &plan.holds {
+            let slots = slots.min(self.bookable_slots(rid));
+            if slots == 0 {
+                continue;
+            }
+            if !self.tenants[tid]
+                .rsv
+                .reserve(rid, slots, rate, per_slot, now, expires)
+            {
+                continue; // overlaps a hold the winner already took
+            }
+            self.total_reserved[rid.0 as usize] += slots;
+            if let Some(j) = &mut self.tenants[tid].journal {
+                let _ = j.reserved(rid, slots, rate, expires);
+            }
+            self.mark_view_all(rid);
+            held.push(rid);
+        }
+        held
+    }
+
+    /// The reserve-ahead DBC move: once `now` passes `trigger_frac` of the
+    /// deadline and the tenant still has undispatched jobs (and no live
+    /// holds from a previous cycle), probe `probe_sets` candidate resource
+    /// sets — greedy prefixes of the tenant's ranked candidate orderings —
+    /// against a [`ShadowSchedule`], really reserve the two cheapest
+    /// feasible plans, commit the cheapest and free-cancel the runner-up.
+    /// Committing opens a ledger envelope for the worst-case cancellation
+    /// penalty; a refused envelope (budget headroom gone) degrades that
+    /// member to a free cancellation. Deterministic: no RNG, ties broken
+    /// by `total_cmp` + stable sort.
+    fn reserve_ahead(&mut self, tid: usize) {
+        let Some(cfg) = self.reservations.clone() else {
+            return;
+        };
+        let now = self.q.now();
+        let tenant = &self.tenants[tid];
+        let deadline = tenant.exp.deadline;
+        if now < cfg.trigger_frac * deadline || tenant.rsv.active_holds() > 0 {
+            return;
+        }
+        let remaining = tenant.exp.remaining();
+        let in_flight: u32 = tenant.exp.in_flight_counts().iter().sum();
+        let undispatched = remaining.saturating_sub(in_flight);
+        if undispatched == 0 {
+            return;
+        }
+        let want = undispatched.min(cfg.max_slots);
+        let job_work = tenant.advisor.job_work_ref_h();
+        let window_h = guarded_window_h(now, deadline, DEADLINE_SAFETY);
+        let sets = reservation_candidate_sets(
+            &tenant.views,
+            &tenant.index,
+            want,
+            cfg.probe_sets as usize,
+        );
+        if sets.len() < 2 {
+            return; // "commit the cheapest" needs a real comparison
+        }
+        // Shadow-price every candidate set; nothing live moves here.
+        let mut shadow = ShadowSchedule::new(&tenant.views);
+        let mut plans: Vec<ShadowPlan> = sets
+            .iter()
+            .map(|set| shadow.plan(set, job_work, window_h))
+            .collect();
+        let probes: u64 = plans.iter().map(|p| p.probes as u64).sum();
+        plans.retain(|p| p.slots > 0);
+        plans.sort_by(|a, b| a.cost_per_slot().total_cmp(&b.cost_per_slot()));
+        let mut ranked = plans.into_iter();
+        let winner = ranked.next();
+        let runner_up = ranked.next();
+        self.tenants[tid].rsv.probes += probes;
+        let Some(winner) = winner else {
+            return; // every probed set was infeasible
+        };
+        let reserve_until = now + cfg.commit_timeout_s;
+        let winner_holds = self.book_plan(tid, &winner, now, reserve_until);
+        let runner_holds = match &runner_up {
+            Some(p) => self.book_plan(tid, p, now, reserve_until),
+            None => Vec::new(),
+        };
+        // Commit the winner member by member while the runner-up is still
+        // held — exactly the probe → reserve → commit ladder, with the
+        // comparison made while walking away is still free.
+        let commit_until = now + cfg.hold_s;
+        for rid in winner_holds {
+            let Some(r) = self.tenants[tid].rsv.get(rid).copied() else {
+                continue;
+            };
+            let envelope = cfg.cancel_penalty * r.cost_per_slot * r.slots as f64;
+            if !self.tenants[tid].ledger.commit(rsv_jid(rid), envelope) {
+                self.free_cancel(tid, rid, now);
+                continue;
+            }
+            let committed =
+                self.tenants[tid].rsv.commit(rid, now, commit_until);
+            debug_assert!(committed, "fresh hold must accept a commit");
+            if let Some(j) = &mut self.tenants[tid].journal {
+                let _ = j.reservation_committed(rid, commit_until);
+            }
+            self.mark_view_all(rid); // the locked rate now rules the view
+        }
+        for rid in runner_holds {
+            self.free_cancel(tid, rid, now);
+        }
+    }
+
     // -- run loop ------------------------------------------------------------
 
     /// Run to completion (or hard stop); consume the world, return the
@@ -913,6 +1210,11 @@ impl GridWorld {
                 negotiation_rounds: t.negotiation_rounds,
                 deal_rounds: t.deal_rounds,
                 failed_negotiations: t.failed_negotiations,
+                reservation_probes: t.rsv.probes,
+                reservations_committed: t.rsv.commits,
+                reservations_cancelled: t.rsv.cancels + t.rsv.expiries,
+                held_slot_seconds: t.rsv.held_slot_seconds,
+                penalty_spend: t.rsv.penalty_spend,
                 report: t.report,
             });
         }
@@ -970,8 +1272,25 @@ impl GridWorld {
                 let now = self.q.now();
                 let claimed: Vec<ResourceId> = match &mut self.competition {
                     Some(comp) => {
+                        // Arrivals respect reservation holds too: a held
+                        // slot is occupied capacity. Only build the
+                        // combined vector when the subsystem is on, so
+                        // reservation-free worlds take the exact original
+                        // path.
+                        let combined: Vec<u32>;
+                        let occupied = if self.reservations.is_some() {
+                            combined = self
+                                .total_in_flight
+                                .iter()
+                                .zip(&self.total_reserved)
+                                .map(|(f, r)| f + r)
+                                .collect();
+                            &combined
+                        } else {
+                            &self.total_in_flight
+                        };
                         let (departs, claimed) =
-                            comp.arrive(&self.tb, now, &self.total_in_flight);
+                            comp.arrive(&self.tb, now, occupied);
                         self.q.schedule_at(departs, Ev::CompetitorDepart);
                         let next = comp.draw_interarrival();
                         self.q.schedule_in(next, Ev::CompetitorArrive);
@@ -1027,6 +1346,7 @@ impl GridWorld {
         let managers = &self.managers;
         let competition = self.competition.as_ref();
         let total_in_flight = &self.total_in_flight;
+        let total_reserved = &self.total_reserved;
         let start_utc_hour = self.start_utc_hour;
         let tenant = &mut self.tenants[tid];
         while let Some(r) = tenant.dirty_queue.pop() {
@@ -1039,28 +1359,46 @@ impl GridWorld {
             let spec = tb.spec(rid);
             let own = tenant.exp.in_flight_on(rid);
             let foreign = total_in_flight[i].saturating_sub(own);
+            // Foreign-only, like in-flight: the holder keeps seeing its own
+            // held slots — they are exactly what it dispatches into.
+            let foreign_rsv =
+                total_reserved[i].saturating_sub(tenant.rsv.held_on(rid));
             let quote =
                 posted_quote(tb, start_utc_hour, now, &tenant.cfg.user, rid);
             let base_slots = managers[i].slots();
             let (slots, rate) = match competition {
                 Some(comp) => (
-                    comp.free_slots(tb, rid, base_slots, foreign),
+                    comp.free_slots(tb, rid, base_slots, foreign, foreign_rsv),
                     quote * comp.demand_premium(tb, rid),
                 ),
                 None => (
-                    visible_slots(base_slots, spec.cpus, 0, foreign),
+                    visible_slots(base_slots, spec.cpus, 0, foreign, foreign_rsv),
                     quote,
                 ),
             };
             let claimed =
                 competition.map(|c| c.claimed(rid)).unwrap_or(0);
-            let util =
-                utilization_of(total_in_flight[i], claimed, spec.cpus);
+            let util = utilization_of(
+                total_in_flight[i],
+                claimed,
+                total_reserved[i],
+                spec.cpus,
+            );
             let rate = rate * spec.price.demand_premium(util);
             // A live GRACE agreement overrides the posted/premium quote:
             // DBC schedules against the price the tenant actually won.
             let rate = match tenant.agreements[i] {
                 Some(a) if a.active(now) => a.rate,
+                _ => rate,
+            };
+            // A live committed hold locks the rate harder still: dispatches
+            // into it bill at the reservation's locked rate.
+            let rate = match tenant.rsv.get(rid) {
+                Some(r)
+                    if r.level == CommitLevel::Committed && r.active(now) =>
+                {
+                    r.rate
+                }
                 _ => rate,
             };
             tenant.views[i] = ResourceView {
@@ -1090,12 +1428,25 @@ impl GridWorld {
         // machines sit in the table with zero speed/slots; every policy
         // filters them out.
         self.tenants[tid].mark_repriced(now);
-        self.tenants[tid].expire_agreements(now);
+        self.expire_due(now);
         self.refresh_dirty_views(tid);
         debug_assert!(
             self.slot_conservation_ok(),
             "slot conservation violated at t={now}"
         );
+        // 1b. the reserve-ahead move (inert without a reservation config):
+        // near the deadline, shadow-price several candidate resource sets,
+        // commit the cheapest feasible one and cancel the rest while
+        // cancellation is still free. Bookings dirty views, so refresh
+        // again before allocation — still O(changed).
+        if self.reservations.is_some() {
+            self.reserve_ahead(tid);
+            self.refresh_dirty_views(tid);
+            debug_assert!(
+                self.slot_conservation_ok(),
+                "slot conservation violated after reserve-ahead at t={now}"
+            );
+        }
         // 2+3. selection + assignment: the shared advisor pipeline. The
         // alloc_ns clock starts before the baseline re-rank so the
         // sort-every-tick cost it models lands in the allocation-phase
@@ -1161,6 +1512,23 @@ impl GridWorld {
         if let Some(j) = &mut tenant.journal {
             let _ = j.dispatched(jid, rid, now);
         }
+        // Dispatching onto a machine the tenant holds a committed
+        // reservation on consumes one held slot at its locked rate; the
+        // rate rides the in-flight record so execution start still bills
+        // it after the hold itself has closed.
+        let mut locked_rate = None;
+        if let Some(c) = tenant.rsv.consume_slot(rid, now) {
+            locked_rate = Some(c.rate);
+            self.total_reserved[rid.0 as usize] =
+                self.total_reserved[rid.0 as usize].saturating_sub(1);
+            if c.closed {
+                // Every slot was used: refund the penalty envelope whole.
+                tenant.ledger.release(rsv_jid(rid), 0.0, &name);
+                if let Some(j) = &mut tenant.journal {
+                    let _ = j.reservation_closed(rid);
+                }
+            }
+        }
         let work_ref_h = tenant.sampler.work_ref_h(jid);
         tenant.inflight.insert(
             jid,
@@ -1170,6 +1538,7 @@ impl GridWorld {
                 rate: 0.0,
                 work_ref_h,
                 cpu_s: 0.0,
+                locked_rate,
             },
         );
         self.total_in_flight[rid.0 as usize] += 1;
@@ -1251,7 +1620,12 @@ impl GridWorld {
         }
         let spec = self.tb.spec(rid);
         let speed = self.dyns[rid.0 as usize].effective_speed(spec).max(0.01);
-        let rate = self.effective_rate(tid, rid);
+        // A dispatch that consumed a reservation slot keeps that locked
+        // rate to the end, whatever happened to the hold since.
+        let rate = match self.tenants[tid].inflight[&jid].locked_rate {
+            Some(locked) => locked,
+            None => self.effective_rate(tid, rid),
+        };
         let name = spec.name.clone();
         let t_out = self
             .tb
@@ -1390,6 +1764,16 @@ impl GridWorld {
             let (tid, jid) = split_jid(gid);
             self.fail_in_flight(tid, jid, rid);
         }
+        // The owner broke the commitment, not the tenant: holds on a dead
+        // machine are released penalty-free (committed envelopes refunded).
+        if self.reservations.is_some() {
+            for tid in 0..self.tenants.len() {
+                if let Some(r) = self.tenants[tid].rsv.cancel(rid, self.q.now())
+                {
+                    self.close_hold(tid, rid, &r, 0.0);
+                }
+            }
+        }
         let spec = self.tb.resources[i].clone();
         let downtime = self.dyns[i].draw_downtime(&spec);
         self.q.schedule_in(downtime, Ev::Recover { rid });
@@ -1411,15 +1795,16 @@ impl GridWorld {
 }
 
 /// The one demand-signal formula: fraction of a machine's CPUs occupied by
-/// tenants' in-flight jobs plus background competition claims, clamped to
+/// tenants' in-flight jobs, background competition claims and
+/// reservation-held slots (0 when the subsystem is off), clamped to
 /// [0, 1]. Shared by billing ([`GridWorld::utilization`]), the scheduler's
 /// view refresh and the price-index sampler, so tenants are always
 /// scheduled on the same rate they are billed at.
-fn utilization_of(in_flight: u32, claimed: u32, cpus: u32) -> f64 {
+fn utilization_of(in_flight: u32, claimed: u32, reserved: u32, cpus: u32) -> f64 {
     if cpus == 0 {
         return 0.0;
     }
-    ((in_flight + claimed) as f64 / cpus as f64).min(1.0)
+    ((in_flight + claimed + reserved) as f64 / cpus as f64).min(1.0)
 }
 
 /// Posted G$/CPU-second on `rid` for `user` right now (owner price at the
@@ -1876,6 +2261,199 @@ mod tests {
             total(&auction),
             total(&flat)
         );
+    }
+
+    /// A contested, demand-priced world with the reservation subsystem on.
+    /// The low trigger fraction arms reserve-ahead while plenty of work is
+    /// still undispatched, so every seed exercises the full
+    /// probe → reserve → commit ladder.
+    fn reservation_world(seed: u64, cfg: ReservationConfig) -> GridWorld {
+        Broker::experiment()
+            .plan(
+                "parameter i integer range from 1 to 40\n\
+                 task main\nexecute icc $i\nendtask",
+            )
+            .deadline_h(18.0)
+            .policy("cost")
+            .user("rajkumar")
+            .budget(2.0e6)
+            .seed(seed)
+            .testbed_scale(0.5)
+            .demand_pricing(0.5)
+            // Background claims make the extended invariant three-termed
+            // for real: arrivals must respect in-flight AND held slots.
+            .competition(crate::grid::competition::CompetitionModel {
+                mean_interarrival_s: 3600.0,
+                mean_duration_s: 2.0 * 3600.0,
+                mean_cpus: 30.0,
+            })
+            .reservations(cfg)
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(10.0)
+                    .policy("time")
+                    .user("davida")
+                    .budget(2.0e6),
+            )
+            .tenant(
+                Broker::experiment()
+                    .plan(
+                        "parameter i integer range from 1 to 40\n\
+                         task main\nexecute icc $i\nendtask",
+                    )
+                    .deadline_h(14.0)
+                    .policy("deadline-only")
+                    .user("stranger")
+                    .budget(2.0e6),
+            )
+            .world()
+            .unwrap()
+    }
+
+    fn eager() -> ReservationConfig {
+        ReservationConfig {
+            trigger_frac: 0.05,
+            ..ReservationConfig::default()
+        }
+    }
+
+    #[test]
+    fn posted_worlds_carry_no_reservation_data() {
+        let wr = three_tenant_world(11).run_world();
+        assert!(!wr.has_reservation_data());
+        for t in &wr.tenants {
+            assert_eq!(t.reservation_probes, 0);
+            assert_eq!(t.reservations_committed, 0);
+            assert_eq!(t.reservations_cancelled, 0);
+            assert_eq!(t.held_slot_seconds.to_bits(), 0.0f64.to_bits());
+            assert_eq!(t.penalty_spend.to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn reservation_world_completes_and_commits() {
+        let wr = reservation_world(13, eager()).run_world();
+        assert_eq!(wr.tenants.len(), 3);
+        for t in &wr.tenants {
+            assert_eq!(
+                t.report.jobs_completed + t.report.jobs_failed,
+                t.report.jobs_total,
+                "{} ({}): {}",
+                t.user,
+                t.policy,
+                t.report.summary()
+            );
+        }
+        assert!(wr.has_reservation_data());
+        // The reserve-ahead move probed ≥ 2 candidate sets and committed
+        // the cheapest — the lifecycle ran end to end.
+        let probes: u64 = wr.tenants.iter().map(|t| t.reservation_probes).sum();
+        assert!(probes >= 2, "reserve-ahead must probe ≥ 2 sets: {probes}");
+        assert!(
+            wr.reservations_committed() > 0,
+            "someone must commit a hold: {}",
+            wr.summary()
+        );
+        let held: f64 = wr.tenants.iter().map(|t| t.held_slot_seconds).sum();
+        assert!(held > 0.0, "committed holds accrue held slot-seconds");
+    }
+
+    #[test]
+    fn reservation_world_is_deterministic() {
+        let a = reservation_world(9, eager()).run_world();
+        let b = reservation_world(9, eager()).run_world();
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(
+                x.report.makespan_s.to_bits(),
+                y.report.makespan_s.to_bits()
+            );
+            assert_eq!(
+                x.report.total_cost.to_bits(),
+                y.report.total_cost.to_bits()
+            );
+            assert_eq!(x.report.busy_cpus.points(), y.report.busy_cpus.points());
+            assert_eq!(x.reservation_probes, y.reservation_probes);
+            assert_eq!(x.reservations_committed, y.reservations_committed);
+            assert_eq!(x.reservations_cancelled, y.reservations_cancelled);
+            assert_eq!(
+                x.held_slot_seconds.to_bits(),
+                y.held_slot_seconds.to_bits()
+            );
+            assert_eq!(x.penalty_spend.to_bits(), y.penalty_spend.to_bits());
+        }
+    }
+
+    #[test]
+    fn reservation_incremental_views_match_full_rebuild_bit_exactly() {
+        // Hold transitions dirty views and index entries like every other
+        // occupancy event; a missed or late mark would diverge from the
+        // rebuild-every-tick baseline. The short commit timeout forces
+        // mid-run expiries (commit timeouts *and* hold expiries) into the
+        // trace being compared.
+        let quick_lapse = ReservationConfig {
+            trigger_frac: 0.05,
+            hold_s: 1800.0,
+            ..ReservationConfig::default()
+        };
+        for cfg in [eager(), quick_lapse] {
+            let a = reservation_world(7, cfg.clone()).run_world();
+            let mut forced = reservation_world(7, cfg);
+            forced.set_full_view_rebuild(true);
+            forced.set_full_allocation_sort(true);
+            let b = forced.run_world();
+            assert_eq!(a.events, b.events);
+            for (x, y) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(
+                    x.report.makespan_s.to_bits(),
+                    y.report.makespan_s.to_bits()
+                );
+                assert_eq!(
+                    x.report.total_cost.to_bits(),
+                    y.report.total_cost.to_bits()
+                );
+                assert_eq!(x.reservations_committed, y.reservations_committed);
+                assert_eq!(x.penalty_spend.to_bits(), y.penalty_spend.to_bits());
+                assert!(
+                    x.report.view_refreshes < y.report.view_refreshes,
+                    "incremental should touch fewer entries: {} vs {}",
+                    x.report.view_refreshes,
+                    y.report.view_refreshes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reservation_invariants_hold_every_tick() {
+        // The extended invariant (in-flight + claims + reserved ≤ CPUs) and
+        // settled+committed ≤ budget, sampled densely across a reservation
+        // run with churn and competition in play.
+        let mut world = reservation_world(3, eager());
+        let mut t = 0.0;
+        while !world.finished() && t < 40.0 * HOUR {
+            t += 0.25 * HOUR;
+            world.run_until(t);
+            assert!(
+                world.slot_conservation_ok(),
+                "slot conservation violated at t={t}"
+            );
+            for tid in 0..world.tenant_count() {
+                let ledger = world.ledger(tid);
+                if let Some(budget) = ledger.budget() {
+                    assert!(
+                        ledger.exposure() <= budget + 1e-6,
+                        "tenant {tid} exposure {} over budget {budget} at t={t}",
+                        ledger.exposure()
+                    );
+                }
+            }
+        }
+        assert!(world.finished(), "reservation world should finish inside 40h");
     }
 
     #[test]

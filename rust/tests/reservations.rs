@@ -1,0 +1,221 @@
+//! Advance-reservation acceptance: the subsystem must be a strict opt-in.
+//! Worlds without a [`ReservationConfig`] must replay the PR-5 pipeline
+//! bit-exactly (no RNG drawn, no f64 moved — the composed full-rebuild +
+//! full-sort baselines are the equivalence surface), and worlds with one
+//! must hold the *extended* slot-conservation invariant — Σ in-flight +
+//! competition claims + reserved slots ≤ CPUs — at every step of a churny,
+//! contested run while replaying bit-exactly against the same baselines.
+
+use nimrod_g::broker::Broker;
+use nimrod_g::economy::reservation::ReservationConfig;
+use nimrod_g::grid::competition::CompetitionModel;
+use nimrod_g::metrics::WorldReport;
+use nimrod_g::sim::GridWorld;
+use nimrod_g::types::HOUR;
+
+const SMALL_PLAN: &str = "parameter i integer range from 1 to 30\n\
+                          task main\nexecute icc $i\nendtask";
+
+/// Reserve ahead from 5 % of the deadline, so the probe → reserve → commit
+/// ladder runs while plenty of work is still undispatched.
+fn eager() -> ReservationConfig {
+    ReservationConfig {
+        trigger_frac: 0.05,
+        ..ReservationConfig::default()
+    }
+}
+
+/// A contested two-tenant world on the churny 0.4-scale GUSTO grid:
+/// availability churn, demand repricing and background claims all dirty
+/// views mid-run. `rsv` switches the reservation subsystem on.
+fn contested_world(seed: u64, rsv: Option<ReservationConfig>) -> GridWorld {
+    let mut b = Broker::experiment()
+        .plan(SMALL_PLAN)
+        .deadline_h(20.0)
+        .policy("cost")
+        .budget(2.0e6)
+        .seed(seed)
+        .testbed_scale(0.4)
+        .demand_pricing(0.8)
+        .competition(CompetitionModel {
+            mean_interarrival_s: 1200.0,
+            mean_duration_s: 2.0 * 3600.0,
+            mean_cpus: 20.0,
+        })
+        .tweak_testbed(|tb| {
+            for spec in &mut tb.resources {
+                spec.mtbf_s = 2.0 * 3600.0;
+                spec.mttr_s = 0.4 * 3600.0;
+            }
+        })
+        .tenant(
+            Broker::experiment()
+                .plan(SMALL_PLAN)
+                .deadline_h(12.0)
+                .policy("time")
+                .user("davida")
+                .budget(2.0e6),
+        );
+    if let Some(cfg) = rsv {
+        b = b.reservations(cfg);
+    }
+    b.world().unwrap()
+}
+
+/// Assert two world runs replayed the identical trace, bit for bit.
+fn assert_same_trace(a: &WorldReport, b: &WorldReport, tag: &str) {
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{tag}");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let who = format!("{tag}/{} ({})", x.user, x.policy);
+        assert_eq!(x.report.ticks, y.report.ticks, "{who}: ticks");
+        assert_eq!(
+            x.report.jobs_completed, y.report.jobs_completed,
+            "{who}: completions"
+        );
+        assert_eq!(
+            x.report.makespan_s.to_bits(),
+            y.report.makespan_s.to_bits(),
+            "{who}: makespan"
+        );
+        assert_eq!(
+            x.report.total_cost.to_bits(),
+            y.report.total_cost.to_bits(),
+            "{who}: spend"
+        );
+        assert_eq!(
+            x.report.busy_cpus.points(),
+            y.report.busy_cpus.points(),
+            "{who}: busy-cpu timeline"
+        );
+        assert_eq!(
+            x.reservations_committed, y.reservations_committed,
+            "{who}: commits"
+        );
+        assert_eq!(
+            x.penalty_spend.to_bits(),
+            y.penalty_spend.to_bits(),
+            "{who}: penalties"
+        );
+    }
+}
+
+/// Run `build()` twice — incremental versus both forced baselines — and
+/// demand identical traces (the PR-5 equivalence surface).
+fn check_against_baselines(build: impl Fn() -> GridWorld, tag: &str) {
+    let incremental = build().run_world();
+    let mut forced = build();
+    forced.set_full_view_rebuild(true);
+    forced.set_full_allocation_sort(true);
+    let baseline = forced.run_world();
+    assert_same_trace(&incremental, &baseline, tag);
+}
+
+#[test]
+fn disabled_worlds_replay_the_pre_reservation_pipeline_bit_exactly() {
+    // No ReservationConfig ⇒ the subsystem must be inert: the whole
+    // reservation machinery (occupancy terms, expiry sweeps, rate
+    // overrides) must leave the trace exactly where the PR-5 pipeline
+    // left it, across seeds, against the composed baselines.
+    for seed in [3u64, 11] {
+        check_against_baselines(
+            || contested_world(seed, None),
+            &format!("disabled/seed{seed}"),
+        );
+    }
+    // And such worlds carry no reservation data at all.
+    let wr = contested_world(3, None).run_world();
+    assert!(!wr.has_reservation_data());
+    for t in &wr.tenants {
+        assert_eq!(t.reservation_probes, 0, "{}", t.user);
+        assert_eq!(t.reservations_committed, 0, "{}", t.user);
+        assert_eq!(t.reservations_cancelled, 0, "{}", t.user);
+        assert_eq!(t.held_slot_seconds.to_bits(), 0.0f64.to_bits());
+        assert_eq!(t.penalty_spend.to_bits(), 0.0f64.to_bits());
+    }
+}
+
+#[test]
+fn enabled_worlds_match_the_baselines_bit_exactly() {
+    // With the subsystem on, every hold transition must dirty views and
+    // index entries exactly like any other occupancy event: the composed
+    // rebuild-everything baselines must replay the identical trace. The
+    // short-hold variant forces commit timeouts and binding-hold expiries
+    // (with their penalties) into the compared traces.
+    let quick_lapse = ReservationConfig {
+        trigger_frac: 0.05,
+        hold_s: 1800.0,
+        ..ReservationConfig::default()
+    };
+    for (cfg, tag) in [(eager(), "default"), (quick_lapse, "quick-lapse")] {
+        check_against_baselines(
+            || contested_world(7, Some(cfg.clone())),
+            &format!("enabled/{tag}"),
+        );
+    }
+}
+
+#[test]
+fn extended_slot_conservation_holds_under_churn_and_reservations() {
+    // The property the subsystem must never break: at every 0.25 h step of
+    // a run with machine churn, background claims and live holds,
+    // Σ in-flight + claims + reserved ≤ CPUs on every machine, and no
+    // tenant's exposure exceeds its budget (penalty envelopes included).
+    for seed in [3u64, 7, 21] {
+        let mut world = contested_world(seed, Some(eager()));
+        let mut t = 0.0;
+        while !world.finished() && t < 60.0 * HOUR {
+            t += 0.25 * HOUR;
+            world.run_until(t);
+            assert!(
+                world.slot_conservation_ok(),
+                "seed {seed}: slot conservation violated at t={t}"
+            );
+            for tid in 0..world.tenant_count() {
+                let ledger = world.ledger(tid);
+                if let Some(budget) = ledger.budget() {
+                    assert!(
+                        ledger.exposure() <= budget + 1e-6,
+                        "seed {seed} tenant {tid}: exposure {} over budget \
+                         {budget} at t={t}",
+                        ledger.exposure()
+                    );
+                }
+            }
+        }
+        assert!(world.finished(), "seed {seed}: world should finish in 60h");
+        // The run actually exercised the machinery it claims to test.
+        let holds_seen: u32 = (0..world.tenant_count())
+            .map(|tid| world.reservations_of(tid).reserves)
+            .sum();
+        assert!(holds_seen > 0, "seed {seed}: no hold was ever taken");
+    }
+}
+
+#[test]
+fn reserve_ahead_commits_the_cheapest_probed_set() {
+    // The acceptance experiment: a DBC tenant past its trigger probes
+    // several candidate sets and commits the cheapest feasible one —
+    // visible as probes from ≥ 2 sets, at least one commitment, and
+    // held-slot time actually accrued.
+    let wr = contested_world(13, Some(eager())).run_world();
+    for t in &wr.tenants {
+        assert_eq!(
+            t.report.jobs_completed + t.report.jobs_failed,
+            t.report.jobs_total,
+            "{}: {}",
+            t.user,
+            t.report.summary()
+        );
+    }
+    assert!(wr.has_reservation_data());
+    let probes: u64 = wr.tenants.iter().map(|t| t.reservation_probes).sum();
+    assert!(probes >= 2, "must probe ≥ 2 candidate sets, saw {probes}");
+    assert!(
+        wr.reservations_committed() > 0,
+        "a tenant must commit a hold: {}",
+        wr.summary()
+    );
+    let held: f64 = wr.tenants.iter().map(|t| t.held_slot_seconds).sum();
+    assert!(held > 0.0, "commitments must accrue held slot-seconds");
+}
