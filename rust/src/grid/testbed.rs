@@ -467,7 +467,7 @@ mod tests {
         assert!(tb.total_cpus() >= 100, "cpus={}", tb.total_cpus());
         // Heterogeneity: more than one arch, some batch queues, some
         // restricted-auth machines, some private clusters at scale 1.
-        let archs: std::collections::HashSet<_> =
+        let archs: std::collections::BTreeSet<_> =
             tb.resources.iter().map(|r| r.arch).collect();
         assert!(archs.len() >= 3);
         assert!(tb
@@ -511,7 +511,7 @@ mod tests {
             assert!(r.speed > 0.0 && r.cpus >= 1);
         }
         // Heterogeneous enough to give schedulers something to choose on.
-        let archs: std::collections::HashSet<_> =
+        let archs: std::collections::BTreeSet<_> =
             tb.resources.iter().map(|r| r.arch).collect();
         assert!(archs.len() >= 3);
         let b = Testbed::synthetic(12, 25, 4);

@@ -64,6 +64,13 @@
 //! scheduler and billing both honour. Try
 //! `Broker::scenario("grace-auction")?.run_world()?`.
 //!
+//! Everything above depends on **bit-exact seeded replay**. The coding
+//! discipline behind it (ordered containers in tick paths, no wall-clock
+//! reads in sim code, total float comparisons, dirty-marks paired with
+//! index re-keys, a justified panic budget) is enforced statically by
+//! `tools/nimrod-lint` — run `cargo run -p nimrod-lint`, or just
+//! `cargo test`: `rust/tests/lint_clean.rs` runs the same pass in-process.
+//!
 //! See `examples/quickstart.rs` for the plan-language path and
 //! `examples/ionization_study.rs` for live execution end to end.
 

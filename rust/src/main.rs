@@ -286,6 +286,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     let b = apply_common(b, opts)?;
     let cfg = b.config().clone();
     if let Some(name) = &scenario {
+        // lint:allow(PANIC-BUDGET): apply_common already resolved this scenario name or bailed with a usage error
         let info = scenarios::describe(name).expect("scenario resolved above");
         println!("scenario {}: {}", info.name, info.summary);
     }

@@ -260,6 +260,71 @@ impl CandidateIndex {
     pub fn min_rate(&self) -> Option<f64> {
         self.by_rate.iter().next().map(|e| e.0 .0)
     }
+
+    /// Audit this index against the view table it is supposed to mirror:
+    /// every eligible view is ranked under exactly the keys a fresh re-key
+    /// would produce (bit-compared), every ineligible view is absent, and
+    /// no ranking carries extra entries. This is the runtime counterpart of
+    /// the static DIRTY-PAIR lint rule — the debug tick validator in
+    /// `sim::world` calls it so a driver that mutates views without
+    /// updating the index fails loudly instead of scheduling on stale
+    /// rankings. O(views · log R); debug builds only in practice.
+    pub fn consistent_with(&self, views: &[ResourceView]) -> Result<(), String> {
+        let mut eligible = 0usize;
+        for v in views {
+            let i = v.id.0 as usize;
+            let stored = self.keys.get(i).copied().flatten();
+            if !Self::is_eligible(v) {
+                if stored.is_some() {
+                    return Err(format!("{}: ineligible view still ranked", v.id));
+                }
+                continue;
+            }
+            eligible += 1;
+            let Some(k) = stored else {
+                return Err(format!("{}: eligible view missing from the index", v.id));
+            };
+            let fresh = [
+                cost_rank_key(v),
+                v.planning_speed,
+                v.rate,
+                service_rank_key(v),
+            ];
+            let kept = [k.cost, k.speed, k.rate, k.service];
+            if fresh
+                .iter()
+                .zip(&kept)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!(
+                    "{}: stale ranking keys (view changed without an index update)",
+                    v.id
+                ));
+            }
+            let r = v.id.0;
+            if !self
+                .by_cost
+                .contains(&(TotalF64(k.cost), Reverse(TotalF64(k.speed)), r))
+                || !self.by_speed.contains(&(Reverse(TotalF64(k.speed)), r))
+                || !self.by_rate.contains(&(TotalF64(k.rate), r))
+                || !self.by_service.contains(&(Reverse(TotalF64(k.service)), r))
+            {
+                return Err(format!("{}: ranking entry missing for recorded keys", v.id));
+            }
+        }
+        let sizes = [
+            self.by_cost.len(),
+            self.by_speed.len(),
+            self.by_rate.len(),
+            self.by_service.len(),
+        ];
+        if sizes.iter().any(|&s| s != eligible) {
+            return Err(format!(
+                "ranking sizes {sizes:?} != {eligible} eligible views"
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +435,30 @@ mod tests {
         let fast_prior = view(1, 1, 3.0, 1.0);
         let ix = CandidateIndex::from_views(&[slow_but_proven, fast_prior]);
         assert_eq!(ranked(ix.service_ranked()), vec![0, 1]);
+    }
+
+    #[test]
+    fn audit_matches_maintained_index_and_catches_desync() {
+        let mut views = vec![
+            view(0, 4, 1.0, 2.0),
+            view(1, 0, 2.0, 1.0), // saturated: unranked by design
+            view(2, 2, 1.5, 0.5),
+        ];
+        let mut ix = CandidateIndex::from_views(&views);
+        assert!(ix.consistent_with(&views).is_ok());
+        // Mutating a view without update() is exactly the desync the audit
+        // (and the DIRTY-PAIR lint rule) exists to catch.
+        views[0].rate = 9.0;
+        let err = ix.consistent_with(&views).unwrap_err();
+        assert!(err.contains("stale ranking keys"), "got: {err}");
+        ix.update(&views[0]);
+        assert!(ix.consistent_with(&views).is_ok());
+        // An eligibility flip without update() is caught too.
+        views[2].slots = 0;
+        let err = ix.consistent_with(&views).unwrap_err();
+        assert!(err.contains("still ranked"), "got: {err}");
+        ix.update(&views[2]);
+        assert!(ix.consistent_with(&views).is_ok());
     }
 
     #[test]

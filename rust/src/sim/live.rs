@@ -137,6 +137,7 @@ impl LiveRunner {
                     return;
                 };
                 while let Ok(job) = rx.recv() {
+                    // lint:allow(ND-CLOCK): live driver — worker threads time real process execution
                     let t0 = Instant::now();
                     match wrapper.run(&job, &rt) {
                         Ok(res) => {
@@ -180,6 +181,7 @@ impl LiveRunner {
         };
         let mut outputs = BTreeMap::new();
         let mut busy: BTreeMap<ResourceId, u32> = BTreeMap::new();
+        // lint:allow(ND-CLOCK): live driver — the run loop schedules against real wall-clock time, not simtime
         let t0 = Instant::now();
 
         while !exp.finished() {
@@ -227,6 +229,7 @@ impl LiveRunner {
             // re-rank is allocation-phase work, so it runs inside the
             // alloc_ns clock exactly like the sim driver's baseline.
             let job_work = advisor.job_work_ref_h();
+            // lint:allow(ND-CLOCK): alloc_ns is wall-clock telemetry about the allocator, same meter as the sim driver
             let alloc_t0 = Instant::now();
             let candidates = CandidateIndex::from_views(&views);
             let actions = advisor.advise(
@@ -250,7 +253,9 @@ impl LiveRunner {
                         if !ledger.commit(job, est) {
                             continue;
                         }
+                        // lint:allow(PANIC-BUDGET): the advisor only proposes Ready jobs, so the transition is legal
                         exp.dispatch(job, rid, now).expect("legal dispatch");
+                        // lint:allow(PANIC-BUDGET): dispatch succeeded one line up, so Dispatched → Running is legal
                         exp.start(job, now).expect("legal start");
                         *busy.entry(rid).or_insert(0) += 1;
                         let total: u32 = busy.values().sum();
@@ -272,6 +277,7 @@ impl LiveRunner {
                     let cpu_s = c.wall_s;
                     let cost = cpu_s * w.rate;
                     ledger.settle(c.jid, cost, &w.name);
+                    // lint:allow(PANIC-BUDGET): completions only arrive for jobs this loop started
                     exp.complete(c.jid, now, cpu_s, cost).expect("legal complete");
                     advisor.observe_complete(
                         c.rid,

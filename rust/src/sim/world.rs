@@ -36,6 +36,16 @@
 //! competition-free configurations (competition-enabled traces differ by
 //! design: arrivals now respect real occupancy).
 //!
+//! That discipline is machine-checked: the **DIRTY-PAIR** rule of
+//! `nimrod-lint` (`tools/nimrod-lint`, run by CI and by
+//! `rust/tests/lint_clean.rs`) flags any function in this file that marks
+//! views dirty without re-keying the [`crate::scheduler::CandidateIndex`]
+//! in the same body. Most event handlers here *intentionally* defer the
+//! re-key to [`GridWorld::refresh_dirty_views`], which drains the dirty
+//! queue once per tick — each such handler carries a `DIRTY-PAIR` allow
+//! marker naming that deferral, so an unpaired mark added by a future
+//! driver fails the lint instead of silently serving stale rankings.
+//!
 //! **The market layer is pluggable.** Under the default
 //! [`MarketKind::PostedPrice`] every quote is the owner's posted rate times
 //! competition/demand premiums — bit-exact with the pre-market code. Under
@@ -249,6 +259,7 @@ impl Tenant {
     /// events). Phase-aware, so fractional start hours and timezone offsets
     /// reprice exactly when the boundary passes, independent of the tick
     /// period or event ordering. O(sites with time-of-day pricing) per tick.
+    // lint:allow(DIRTY-PAIR): queues views only — GridWorld::refresh_dirty_views re-keys the index the same tick
     fn mark_repriced(&mut self, now: SimTime) {
         let prev = self.last_tick_t;
         self.last_tick_t = now;
@@ -275,6 +286,7 @@ impl Tenant {
     /// mid-sweep lapse can at worst leave one tick scheduling on a price
     /// that just expired — the same staleness window posted quotes already
     /// have between directory refreshes.
+    // lint:allow(DIRTY-PAIR): queues views only — GridWorld::refresh_dirty_views re-keys the index the same tick
     fn expire_agreements(&mut self, now: SimTime) {
         if now < self.next_agreement_expiry {
             return;
@@ -363,6 +375,7 @@ impl GridWorld {
     /// Build a world over `tb` hosting one tenant per [`TenantSetup`].
     /// Panics on empty tenant lists, more than 255 tenants, or a tenant
     /// with ≥ 2^24 jobs (the GRAM id-space partition).
+    // lint:allow(DIRTY-PAIR): construction seeds the dirty queue; the first refresh_dirty_views builds the index
     pub fn new(tb: Testbed, setups: Vec<TenantSetup>) -> GridWorld {
         assert!(!setups.is_empty(), "a world needs at least one tenant");
         assert!(
@@ -829,6 +842,7 @@ impl GridWorld {
     /// awarded resources; failures are counted with the final rejected
     /// tender's evidence. Deterministic: no RNG is drawn, so posted-price
     /// traces are untouched and auction traces replay bit-exactly.
+    // lint:allow(DIRTY-PAIR): award marks are re-keyed by the refresh_dirty_views pass of the same directory tick
     fn run_auction(&mut self, now: SimTime) {
         let Some(cfg) = self.market.clone() else {
             return;
@@ -979,6 +993,7 @@ impl GridWorld {
     /// envelope billing `penalty` G$ (committed holds only — uncommitted
     /// holds never opened one), journal the close and dirty the touched
     /// resource for every tenant.
+    // lint:allow(DIRTY-PAIR): hold-close marks are re-keyed by refresh_dirty_views at the next tick boundary
     fn close_hold(
         &mut self,
         tid: usize,
@@ -1035,6 +1050,7 @@ impl GridWorld {
 
     /// Really take one shadow plan's holds (commit-timeout level), clamped
     /// at true bookable capacity. Returns the resources actually held.
+    // lint:allow(DIRTY-PAIR): booking marks are re-keyed by the caller's post-reserve refresh_dirty_views pass
     fn book_plan(
         &mut self,
         tid: usize,
@@ -1074,6 +1090,7 @@ impl GridWorld {
     /// penalty; a refused envelope (budget headroom gone) degrades that
     /// member to a free cancellation. Deterministic: no RNG, ties broken
     /// by `total_cmp` + stable sort.
+    // lint:allow(DIRTY-PAIR): on_tick runs a second refresh_dirty_views right after this move to re-key held views
     fn reserve_ahead(&mut self, tid: usize) {
         let Some(cfg) = self.reservations.clone() else {
             return;
@@ -1172,7 +1189,11 @@ impl GridWorld {
         while !self.finished() {
             match self.q.next_time() {
                 Some(nt) if nt <= t => {
-                    let (_, ev) = self.q.pop().unwrap();
+                    // next_time() returning Some guarantees a queued event,
+                    // but a racing drain is cheap to tolerate outright.
+                    let Some((_, ev)) = self.q.pop() else {
+                        break;
+                    };
                     self.handle(ev);
                 }
                 _ => break,
@@ -1229,6 +1250,7 @@ impl GridWorld {
 
     // -- event handlers ------------------------------------------------------
 
+    // lint:allow(DIRTY-PAIR): event marks are queued; each tenant's next on_tick refresh_dirty_views re-keys them
     fn handle(&mut self, ev: Ev) {
         match ev {
             Ev::Tick { tid } => self.on_tick(tid as usize),
@@ -1319,6 +1341,7 @@ impl GridWorld {
     /// Invalidate one resource's view entry in every tenant's table: the
     /// occupancy, visible slots and demand premium of a machine are shared
     /// state, so any change there is scheduler-visible to all tenants.
+    // lint:allow(DIRTY-PAIR): the queue fan-out itself — every queued entry is re-keyed by refresh_dirty_views
     fn mark_view_all(&mut self, rid: ResourceId) {
         for t in &mut self.tenants {
             t.mark_view(rid);
@@ -1353,6 +1376,7 @@ impl GridWorld {
             let i = r as usize;
             tenant.view_dirty[i] = false;
             let rid = ResourceId(r);
+            // lint:allow(PANIC-BUDGET): Mds::new builds one record per testbed resource and never removes any
             let rec = mds.record(rid).expect("record for every resource");
             let planning_speed = rec.planning_speed();
             let batch_queue = rec.batch_queue;
@@ -1434,6 +1458,20 @@ impl GridWorld {
             self.slot_conservation_ok(),
             "slot conservation violated at t={now}"
         );
+        // 1a. index-consistency audit (debug builds): every live view is
+        // ranked exactly once per ordering with keys matching recomputed
+        // values — the runtime cross-check of the static DIRTY-PAIR lint
+        // rule. Small worlds are audited every tick; index-storm-sized
+        // worlds are sampled so debug runs stay usable.
+        #[cfg(debug_assertions)]
+        {
+            let tenant = &self.tenants[tid];
+            if tenant.views.len() <= 4096 || tenant.report.ticks % 64 == 1 {
+                if let Err(e) = tenant.index.consistent_with(&tenant.views) {
+                    panic!("tenant {tid} index audit failed at t={now}: {e}");
+                }
+            }
+        }
         // 1b. the reserve-ahead move (inert without a reservation config):
         // near the deadline, shadow-price several candidate resource sets,
         // commit the cheapest feasible one and cancel the rest while
@@ -1452,6 +1490,7 @@ impl GridWorld {
         // sort-every-tick cost it models lands in the allocation-phase
         // metric it exists to compare against.
         let job_work = self.tenants[tid].advisor.job_work_ref_h();
+        // lint:allow(ND-CLOCK): alloc_ns is wall-clock telemetry about the allocator itself; it never feeds sim state
         let alloc_t0 = std::time::Instant::now();
         if self.full_alloc_sort {
             // Sort-every-tick baseline: throw the incremental rankings
@@ -1492,6 +1531,7 @@ impl GridWorld {
         }
     }
 
+    // lint:allow(DIRTY-PAIR): dispatch marks are queued; refresh_dirty_views re-keys them at the next tick
     fn submit(&mut self, tid: usize, jid: JobId, rid: ResourceId, job_work: f64) {
         let now = self.q.now();
         // Budget commit against the expected cost here.
@@ -1559,6 +1599,7 @@ impl GridWorld {
         );
     }
 
+    // lint:allow(DIRTY-PAIR): release marks are queued; refresh_dirty_views re-keys them at the next tick
     fn cancel_queued(&mut self, tid: usize, jid: JobId, rid: ResourceId) {
         // Withdraw from GRAM if it got there; mid-stage-in jobs are caught
         // at their StagedIn event by the state check.
@@ -1610,6 +1651,7 @@ impl GridWorld {
         }
     }
 
+    // lint:allow(DIRTY-PAIR): withdrawal marks are queued; refresh_dirty_views re-keys them at the next tick
     fn on_begin_exec(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
         let now = self.q.now();
         if self.tenants[tid].exp.job(jid).state.resource() != Some(rid) {
@@ -1661,6 +1703,7 @@ impl GridWorld {
         if let Some(j) = &mut tenant.journal {
             let _ = j.started(jid, now);
         }
+        // lint:allow(PANIC-BUDGET): the dispatch path inserted this record and only this fn's cancel arm removes it
         let inf = tenant.inflight.get_mut(&jid).expect("inflight record");
         inf.exec_started = Some(now);
         inf.rate = rate;
@@ -1679,6 +1722,7 @@ impl GridWorld {
         );
     }
 
+    // lint:allow(DIRTY-PAIR): completion marks are queued; refresh_dirty_views re-keys them at the next tick
     fn on_complete(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
         let now = self.q.now();
         if !matches!(self.tenants[tid].exp.job(jid).state, JobState::Running { rid: r, .. } if r == rid)
@@ -1688,6 +1732,7 @@ impl GridWorld {
         let name = self.tb.spec(rid).name.clone();
         self.managers[rid.0 as usize].complete(grid_jid(tid, jid));
         let tenant = &mut self.tenants[tid];
+        // lint:allow(PANIC-BUDGET): the Running-state guard above proves the dispatch record still exists
         let inf = tenant.inflight.remove(&jid).expect("inflight record");
         tenant.busy_cpus -= 1;
         tenant.report.busy_cpus.record(now, tenant.busy_cpus);
@@ -1696,6 +1741,7 @@ impl GridWorld {
         tenant
             .exp
             .complete(jid, now, inf.cpu_s, cost)
+            // lint:allow(PANIC-BUDGET): the Running-state guard above makes this transition legal by construction
             .expect("legal complete");
         if let Some(j) = &mut tenant.journal {
             let _ = j.completed(jid, now, inf.cpu_s, cost);
@@ -1717,6 +1763,7 @@ impl GridWorld {
     }
 
     /// Shared failure path for one in-flight job of tenant `tid` on `rid`.
+    // lint:allow(DIRTY-PAIR): failure marks are queued; refresh_dirty_views re-keys them at the next tick
     fn fail_in_flight(&mut self, tid: usize, jid: JobId, rid: ResourceId) {
         let now = self.q.now();
         let name = self.tb.spec(rid).name.clone();

@@ -52,7 +52,9 @@ pub const HOUR: SimTime = 3600.0;
 pub const MINUTE: SimTime = 60.0;
 
 /// Machine architecture, as reported through the directory service.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Ord (declaration order) so architecture sets can live in BTree
+/// containers — tick-adjacent state must iterate deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Arch {
     Intel,
     Sparc,
@@ -74,8 +76,9 @@ impl fmt::Display for Arch {
     }
 }
 
-/// Operating system, for plan task constraints.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Operating system, for plan task constraints. Ord for the same
+/// deterministic-iteration reason as [`Arch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Os {
     Linux,
     Solaris,
@@ -112,12 +115,23 @@ mod tests {
 
     #[test]
     fn ids_order_and_hash() {
-        use std::collections::HashSet;
-        let mut set = HashSet::new();
+        use std::collections::BTreeSet;
+        let mut set = BTreeSet::new();
         set.insert(JobId(1));
         set.insert(JobId(1));
         set.insert(JobId(2));
         assert_eq!(set.len(), 2);
         assert!(JobId(1) < JobId(2));
+    }
+
+    #[test]
+    fn arch_and_os_are_ordered() {
+        use std::collections::BTreeSet;
+        let archs: BTreeSet<Arch> =
+            [Arch::Sparc, Arch::Intel, Arch::Sparc].into_iter().collect();
+        assert_eq!(archs.len(), 2);
+        let in_order: Vec<Arch> = archs.into_iter().collect();
+        assert_eq!(in_order, vec![Arch::Intel, Arch::Sparc]);
+        assert!(Os::Linux < Os::Solaris);
     }
 }

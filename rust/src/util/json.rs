@@ -374,6 +374,7 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
+        // lint:allow(PANIC-BUDGET): the scanned range holds only ASCII digit/sign bytes, always valid UTF-8
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

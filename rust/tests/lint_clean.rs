@@ -1,0 +1,194 @@
+//! Tier-1 gate: the determinism & dirty-discipline lint must be clean over
+//! `rust/src`, and the lint itself must behave — each rule has a firing, a
+//! clean and an allowed-with-reason fixture, scoping keeps the rules out of
+//! non-tick modules, and a `lint:allow` without a reason is itself a
+//! violation. Running in-process from the root crate's test suite means a
+//! plain `cargo test` fails on violations, with no extra CI plumbing.
+
+use std::path::Path;
+
+use nimrod_lint::{fixtures, lint_source, lint_tree, Rule};
+
+fn rules_fired(path: &str, src: &str) -> Vec<Rule> {
+    lint_source(path, src).into_iter().map(|d| d.rule).collect()
+}
+
+fn fires(path: &str, src: &str, rule: Rule) -> bool {
+    rules_fired(path, src).contains(&rule)
+}
+
+// -- the tree itself ---------------------------------------------------------
+
+#[test]
+fn source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let (diags, files) = lint_tree(&root).expect("rust/src is readable");
+    assert!(files > 20, "suspiciously few files scanned: {files}");
+    assert!(
+        diags.is_empty(),
+        "nimrod-lint found {} violation(s):\n{}",
+        diags.len(),
+        diags
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn every_allow_in_the_tree_carries_a_reason() {
+    // ALLOW-REASON diagnostics are unsuppressible, so a clean tree already
+    // implies this — asserted separately so a reasonless allow is reported
+    // as the hygiene failure it is, not just "some violation".
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let (diags, _) = lint_tree(&root).expect("rust/src is readable");
+    let hygiene: Vec<_> = diags
+        .iter()
+        .filter(|d| d.rule == Rule::AllowHygiene)
+        .collect();
+    assert!(hygiene.is_empty(), "reasonless/unknown allows: {hygiene:?}");
+}
+
+// -- ND-HASH -----------------------------------------------------------------
+
+#[test]
+fn nd_hash_fires_in_tick_path_modules() {
+    assert!(fires("sim/state.rs", fixtures::ND_HASH_FIRING, Rule::NdHash));
+    assert!(fires("scheduler/cache.rs", fixtures::ND_HASH_FIRING, Rule::NdHash));
+    assert!(fires("types.rs", fixtures::ND_HASH_FIRING, Rule::NdHash));
+}
+
+#[test]
+fn nd_hash_clean_and_scoped() {
+    assert!(!fires("sim/state.rs", fixtures::ND_HASH_CLEAN, Rule::NdHash));
+    // Outside the tick path the same source is fine — ND-HASH is a
+    // tick-path rule, not a blanket container ban.
+    assert!(!fires("plan/occupancy.rs", fixtures::ND_HASH_FIRING, Rule::NdHash));
+}
+
+#[test]
+fn nd_hash_allowed_with_reason() {
+    assert!(!fires("sim/state.rs", fixtures::ND_HASH_ALLOWED, Rule::NdHash));
+}
+
+// -- ND-CLOCK ----------------------------------------------------------------
+
+#[test]
+fn nd_clock_fires_on_wall_clock_reads() {
+    assert!(fires("sim/driver.rs", fixtures::ND_CLOCK_FIRING, Rule::NdClock));
+    assert!(fires("engine/mod.rs", fixtures::ND_CLOCK_FIRING, Rule::NdClock));
+}
+
+#[test]
+fn nd_clock_clean_and_scoped() {
+    assert!(!fires("sim/driver.rs", fixtures::ND_CLOCK_CLEAN, Rule::NdClock));
+    // util is not a sim path: the bench harness may read real clocks.
+    assert!(!fires("util/bench.rs", fixtures::ND_CLOCK_FIRING, Rule::NdClock));
+}
+
+#[test]
+fn nd_clock_allowed_with_reason() {
+    assert!(!fires("sim/driver.rs", fixtures::ND_CLOCK_ALLOWED, Rule::NdClock));
+}
+
+// -- ND-FLOAT ----------------------------------------------------------------
+
+#[test]
+fn nd_float_fires_on_raw_partial_cmp() {
+    assert!(fires("scheduler/policy.rs", fixtures::ND_FLOAT_FIRING, Rule::NdFloat));
+    // ND-FLOAT is not scoped to tick paths: a partial comparator is a
+    // latent NaN bug anywhere.
+    assert!(fires("plan/mod.rs", fixtures::ND_FLOAT_FIRING, Rule::NdFloat));
+}
+
+#[test]
+fn nd_float_clean_and_exempt_in_index() {
+    assert!(!fires("scheduler/policy.rs", fixtures::ND_FLOAT_CLEAN, Rule::NdFloat));
+    // scheduler::index owns TotalF64 — its own PartialOrd impl delegates
+    // to total_cmp and is exempt.
+    assert!(!fires("scheduler/index.rs", fixtures::ND_FLOAT_FIRING, Rule::NdFloat));
+}
+
+#[test]
+fn nd_float_allowed_with_reason() {
+    assert!(!fires("scheduler/policy.rs", fixtures::ND_FLOAT_ALLOWED, Rule::NdFloat));
+}
+
+// -- DIRTY-PAIR --------------------------------------------------------------
+
+#[test]
+fn dirty_pair_fires_on_unpaired_marks() {
+    let diags = lint_source("sim/world.rs", fixtures::DIRTY_PAIR_FIRING);
+    let hit = diags
+        .iter()
+        .find(|d| d.rule == Rule::DirtyPair)
+        .expect("unpaired mark_view must fire");
+    assert!(hit.message.contains("poke"), "names the fn: {}", hit.message);
+}
+
+#[test]
+fn dirty_pair_clean_when_paired_and_scoped() {
+    assert!(!fires("sim/world.rs", fixtures::DIRTY_PAIR_CLEAN, Rule::DirtyPair));
+    // The rule is scoped to sim/world.rs — other files have no dirty queue.
+    assert!(!fires("sim/live.rs", fixtures::DIRTY_PAIR_FIRING, Rule::DirtyPair));
+}
+
+#[test]
+fn dirty_pair_allowed_with_reason_naming_the_rekey() {
+    assert!(!fires("sim/world.rs", fixtures::DIRTY_PAIR_ALLOWED, Rule::DirtyPair));
+}
+
+// -- PANIC-BUDGET ------------------------------------------------------------
+
+#[test]
+fn panic_budget_fires_on_unwrap_in_library_code() {
+    assert!(fires("util/head.rs", fixtures::PANIC_BUDGET_FIRING, Rule::PanicBudget));
+    assert!(fires("sim/world.rs", fixtures::PANIC_BUDGET_FIRING, Rule::PanicBudget));
+}
+
+#[test]
+fn panic_budget_skips_cfg_test_modules() {
+    assert!(!fires("util/head.rs", fixtures::PANIC_BUDGET_CLEAN, Rule::PanicBudget));
+}
+
+#[test]
+fn panic_budget_allowed_with_reason() {
+    assert!(!fires("util/port.rs", fixtures::PANIC_BUDGET_ALLOWED, Rule::PanicBudget));
+}
+
+// -- ALLOW-REASON (escape-hatch hygiene) -------------------------------------
+
+#[test]
+fn allow_without_reason_is_a_violation_and_does_not_suppress() {
+    let rules = rules_fired("sim/clock.rs", fixtures::ALLOW_NO_REASON);
+    assert!(
+        rules.contains(&Rule::AllowHygiene),
+        "bare lint:allow must be flagged: {rules:?}"
+    );
+    assert!(
+        rules.contains(&Rule::NdClock),
+        "an invalid allow must not silence the underlying rule: {rules:?}"
+    );
+}
+
+#[test]
+fn allow_naming_unknown_rule_is_a_violation() {
+    assert!(fires("sim/x.rs", fixtures::ALLOW_UNKNOWN_RULE, Rule::AllowHygiene));
+}
+
+#[test]
+fn rule_ids_are_stable() {
+    let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+    assert_eq!(
+        ids,
+        vec![
+            "ND-HASH",
+            "ND-CLOCK",
+            "ND-FLOAT",
+            "DIRTY-PAIR",
+            "PANIC-BUDGET",
+            "ALLOW-REASON"
+        ]
+    );
+}

@@ -1,0 +1,7 @@
+// Fixture: an allow marker without a reason is itself a violation and does
+// not suppress the underlying diagnostic.
+pub fn quiet_clock() -> u128 {
+    // lint:allow(ND-CLOCK)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,6 @@
+// Fixture: an allow naming an unknown rule ID is flagged — typos must not
+// silently disable enforcement.
+pub fn noop() -> u32 {
+    // lint:allow(ND-TYPO): misspelled rule ids must not pass silently
+    0
+}

@@ -1,0 +1,8 @@
+// Fixture: a deferred re-key is allowed when the marker names where it
+// happens.
+impl World {
+    // lint:allow(DIRTY-PAIR): deferred — refresh_dirty_views re-keys every queued view at tick start
+    fn on_event(&mut self, rid: ResourceId) {
+        self.mark_view_all(rid);
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: marking and re-keying in the same body satisfies DIRTY-PAIR.
+impl World {
+    fn poke(&mut self, rid: ResourceId) {
+        self.tenant.mark_view(rid);
+        self.tenant.index.update(&self.tenant.views[rid.0 as usize]);
+    }
+
+    fn tick(&mut self) {
+        self.refresh_dirty_views(0);
+    }
+}

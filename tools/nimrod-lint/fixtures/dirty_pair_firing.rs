@@ -1,0 +1,8 @@
+// Fixture: DIRTY-PAIR fires when a fn marks views dirty but never re-keys
+// the CandidateIndex.
+impl World {
+    fn poke(&mut self, rid: ResourceId) {
+        self.tenants[0].mark_view(rid);
+        self.report.pokes += 1;
+    }
+}

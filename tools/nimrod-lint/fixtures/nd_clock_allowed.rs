@@ -1,0 +1,6 @@
+// Fixture: documented wall-clock telemetry is allowed with a reason.
+pub fn alloc_phase_ns() -> u128 {
+    // lint:allow(ND-CLOCK): alloc_ns telemetry measures real elapsed time, never feeds sim state
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,4 @@
+// Fixture: virtual time flows in from simtime as a parameter — no OS clock.
+pub fn tick(now_s: f64, step_s: f64) -> f64 {
+    now_s + step_s
+}

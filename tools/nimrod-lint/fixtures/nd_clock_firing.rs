@@ -1,0 +1,5 @@
+// Fixture: ND-CLOCK fires on wall-clock reads in sim paths.
+pub fn tick_now_ns() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,7 @@
+// Fixture: a justified partial_cmp is allowed with a reason.
+pub fn max_finite(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| {
+        // lint:allow(ND-FLOAT): inputs are pre-filtered finite, NaN cannot reach this comparator
+        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+    })
+}

@@ -1,0 +1,4 @@
+// Fixture: total_cmp gives a total order over floats — ND-FLOAT stays quiet.
+pub fn rank(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

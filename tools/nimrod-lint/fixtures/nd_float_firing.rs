@@ -1,0 +1,4 @@
+// Fixture: ND-FLOAT fires on raw partial_cmp comparators.
+pub fn rank(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}

@@ -1,0 +1,6 @@
+// Fixture: an allow with a reason silences ND-HASH.
+pub fn intern_cache() -> usize {
+    // lint:allow(ND-HASH): lookup-only interning cache, never iterated
+    let m = std::collections::HashMap::<u32, u32>::new();
+    m.len()
+}

@@ -1,0 +1,8 @@
+// Fixture: ordered containers keep replay bit-exact — ND-HASH stays quiet.
+use std::collections::BTreeMap;
+
+pub fn occupancy_by_resource() -> BTreeMap<u32, u32> {
+    let mut m = BTreeMap::new();
+    m.insert(1, 2);
+    m
+}

@@ -1,0 +1,8 @@
+// Fixture: ND-HASH fires on unordered maps in tick-path modules.
+use std::collections::HashMap;
+
+pub fn occupancy_by_resource() -> HashMap<u32, u32> {
+    let mut m = HashMap::new();
+    m.insert(1, 2);
+    m
+}

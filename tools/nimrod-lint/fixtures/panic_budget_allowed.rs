@@ -1,0 +1,5 @@
+// Fixture: a justified expect is allowed with a reason.
+pub fn parse_port(s: &str) -> u16 {
+    // lint:allow(PANIC-BUDGET): validated by the CLI arg parser before reaching here
+    s.parse().expect("port validated upstream")
+}

@@ -1,0 +1,15 @@
+// Fixture: unwrap inside a #[cfg(test)] module is test code — no budget.
+pub fn head(xs: &[u32]) -> Option<u32> {
+    xs.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn head_of_singleton() {
+        let x = super::head(&[3]).unwrap();
+        assert_eq!(x, 3);
+        let y = Some(4u32).expect("present");
+        assert_eq!(y, 4);
+    }
+}

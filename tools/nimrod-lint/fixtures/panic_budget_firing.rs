@@ -1,0 +1,4 @@
+// Fixture: PANIC-BUDGET fires on unwrap in non-test library code.
+pub fn head(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}

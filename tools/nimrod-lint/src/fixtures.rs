@@ -1,0 +1,31 @@
+//! Per-rule fixture snippets for the lint's own test suite.
+//!
+//! Each rule ships three fixtures: one that fires, one that is clean, and
+//! one silenced by a `lint:allow(<rule>): <reason>` marker. Two extra
+//! fixtures exercise the hygiene rule: an allow with no reason and an allow
+//! naming an unknown rule ID. The snippets are valid-looking Rust but are
+//! never compiled — they exist only as scanner input (fixture tests pass
+//! pseudo-paths like `"sim/state.rs"` to pick the scope under test).
+
+pub const ND_HASH_FIRING: &str = include_str!("../fixtures/nd_hash_firing.rs");
+pub const ND_HASH_CLEAN: &str = include_str!("../fixtures/nd_hash_clean.rs");
+pub const ND_HASH_ALLOWED: &str = include_str!("../fixtures/nd_hash_allowed.rs");
+
+pub const ND_CLOCK_FIRING: &str = include_str!("../fixtures/nd_clock_firing.rs");
+pub const ND_CLOCK_CLEAN: &str = include_str!("../fixtures/nd_clock_clean.rs");
+pub const ND_CLOCK_ALLOWED: &str = include_str!("../fixtures/nd_clock_allowed.rs");
+
+pub const ND_FLOAT_FIRING: &str = include_str!("../fixtures/nd_float_firing.rs");
+pub const ND_FLOAT_CLEAN: &str = include_str!("../fixtures/nd_float_clean.rs");
+pub const ND_FLOAT_ALLOWED: &str = include_str!("../fixtures/nd_float_allowed.rs");
+
+pub const DIRTY_PAIR_FIRING: &str = include_str!("../fixtures/dirty_pair_firing.rs");
+pub const DIRTY_PAIR_CLEAN: &str = include_str!("../fixtures/dirty_pair_clean.rs");
+pub const DIRTY_PAIR_ALLOWED: &str = include_str!("../fixtures/dirty_pair_allowed.rs");
+
+pub const PANIC_BUDGET_FIRING: &str = include_str!("../fixtures/panic_budget_firing.rs");
+pub const PANIC_BUDGET_CLEAN: &str = include_str!("../fixtures/panic_budget_clean.rs");
+pub const PANIC_BUDGET_ALLOWED: &str = include_str!("../fixtures/panic_budget_allowed.rs");
+
+pub const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
+pub const ALLOW_UNKNOWN_RULE: &str = include_str!("../fixtures/allow_unknown_rule.rs");

@@ -1,0 +1,920 @@
+//! `nimrod-lint` — determinism & dirty-discipline static analysis for the
+//! Nimrod/G broker codebase.
+//!
+//! The build is offline (no `syn`, no `clippy-utils`), so this is a
+//! hand-rolled line/token scanner: source text is preprocessed into per-line
+//! records with string literals and comments stripped out of the code channel
+//! (comments are kept in a separate channel so `lint:allow` markers survive),
+//! `#[cfg(test)]` modules are tracked by brace depth, and each rule then runs
+//! over the cleaned token stream.
+//!
+//! ## Rules
+//!
+//! | ID           | What it catches                                                     |
+//! |--------------|---------------------------------------------------------------------|
+//! | ND-HASH      | `HashMap`/`HashSet` in tick-path modules (unordered iteration)      |
+//! | ND-CLOCK     | `Instant::now`/`SystemTime`/OS entropy in sim paths                  |
+//! | ND-FLOAT     | raw `.partial_cmp(` comparators outside `scheduler::index`          |
+//! | DIRTY-PAIR   | a fn in `sim/world.rs` that marks views dirty but never re-keys     |
+//! | PANIC-BUDGET | `.unwrap()`/`.expect()` in non-test library code                    |
+//! | ALLOW-REASON | a `lint:allow` marker with no reason or an unknown rule ID          |
+//!
+//! ## Allow markers
+//!
+//! A diagnostic is suppressed by `// lint:allow(<RULE-ID>): <reason>` on the
+//! same line, or anywhere in the contiguous block of comment/attribute-only
+//! lines directly above it. The reason is mandatory: a bare
+//! `// lint:allow(ND-CLOCK)` is itself an ALLOW-REASON violation and does not
+//! suppress anything.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub mod fixtures;
+
+/// Module directories whose contents run on (or feed) the deterministic tick
+/// path. `types.rs` carries the IDs and enums those modules key state by, so
+/// it is scoped in as well.
+pub const TICK_PATH_DIRS: [&str; 5] = ["sim", "scheduler", "economy", "grid", "engine"];
+
+// ---------------------------------------------------------------------------
+// Rules & diagnostics
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    NdHash,
+    NdClock,
+    NdFloat,
+    DirtyPair,
+    PanicBudget,
+    AllowHygiene,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::NdHash,
+        Rule::NdClock,
+        Rule::NdFloat,
+        Rule::DirtyPair,
+        Rule::PanicBudget,
+        Rule::AllowHygiene,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::NdHash => "ND-HASH",
+            Rule::NdClock => "ND-CLOCK",
+            Rule::NdFloat => "ND-FLOAT",
+            Rule::DirtyPair => "DIRTY-PAIR",
+            Rule::PanicBudget => "PANIC-BUDGET",
+            Rule::AllowHygiene => "ALLOW-REASON",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == id)
+    }
+
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::NdHash => {
+                "no HashMap/HashSet in tick-path modules (unordered iteration breaks replay)"
+            }
+            Rule::NdClock => {
+                "no Instant::now/SystemTime/OS entropy in sim paths (time via simtime, rng via util::rng)"
+            }
+            Rule::NdFloat => {
+                "no raw .partial_cmp comparators outside scheduler::index (use TotalF64/total_cmp)"
+            }
+            Rule::DirtyPair => {
+                "a fn in sim/world.rs that marks views dirty must also re-key the CandidateIndex"
+            }
+            Rule::PanicBudget => "unwrap()/expect() in non-test library code must be allow-listed",
+            Rule::AllowHygiene => "every lint:allow must name a known rule and carry a reason",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preprocessing: split source into per-line code/comment channels
+// ---------------------------------------------------------------------------
+
+/// One source line after preprocessing. `code` has string/char literal
+/// contents and comments blanked out; `comment` holds the comment text so
+/// allow markers can be parsed without tripping the token rules.
+#[derive(Debug, Default, Clone)]
+struct SrcLine {
+    code: String,
+    comment: String,
+    /// Line contributes no code: blank, comment-only, or attribute-only.
+    annotation_only: bool,
+    /// Line sits inside a `#[cfg(test)] mod … { … }` block.
+    in_test: bool,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn preprocess(text: &str) -> Vec<SrcLine> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        Str,
+        LineComment,
+        BlockComment,
+    }
+
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<SrcLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut block_depth: u32 = 0;
+    let mut i = 0usize;
+
+    let flush = |lines: &mut Vec<SrcLine>, code: &mut String, comment: &mut String| {
+        let trimmed = code.trim();
+        let annotation_only = trimmed.is_empty()
+            || trimmed.starts_with("#[")
+            || trimmed.starts_with("#![");
+        lines.push(SrcLine {
+            code: std::mem::take(code),
+            comment: std::mem::take(comment),
+            annotation_only,
+            in_test: false,
+        });
+    };
+
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            flush(&mut lines, &mut code, &mut comment);
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    // String literal: keep the quotes, drop the contents.
+                    code.push(' ');
+                    st = St::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime. `'\…'` and `'x'` are
+                    // literals; `'a` (no closing quote right after) is a
+                    // lifetime and passes through.
+                    if next == Some('\\') {
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            i += 1;
+                        }
+                        if i < chars.len() && chars[i] == '\'' {
+                            i += 1;
+                        }
+                        code.push(' ');
+                    } else if chars.get(i + 2).copied() == Some('\'') && next != Some('\'') {
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '"' {
+                    code.push(' ');
+                    st = St::Code;
+                    i += 1;
+                } else if c == '\\' && next != Some('\n') {
+                    // Skip the escaped char; `\<newline>` continuations fall
+                    // through so line accounting stays exact.
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == '*' && next == Some('/') {
+                    block_depth -= 1;
+                    if block_depth == 0 {
+                        st = St::Code;
+                    }
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    flush(&mut lines, &mut code, &mut comment);
+    lines
+}
+
+/// Byte offsets where `tok` occurs in `code` as a standalone token. Ident
+/// boundaries are only enforced on a token edge that is itself an ident char
+/// (so `.unwrap(` is not found inside `.unwrap_or(`, while `x.partial_cmp(`
+/// still matches the dotted token).
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if tok.is_empty() {
+        return out;
+    }
+    let first_is_ident = tok.chars().next().is_some_and(is_ident_char);
+    let last_is_ident = tok.chars().last().is_some_and(is_ident_char);
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(tok) {
+        let at = from + p;
+        let end = at + tok.len();
+        let before_ok = !first_is_ident
+            || at == 0
+            || !code[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !last_is_ident
+            || end >= code.len()
+            || !code[end..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = end;
+    }
+    out
+}
+
+/// True when `code` contains a *call* of `name` — the token followed by `(`
+/// — that is not the `fn name(` definition itself.
+fn has_call(code: &str, name: &str) -> bool {
+    for at in token_positions(code, name) {
+        let after = code[at + name.len()..].trim_start();
+        if !after.starts_with('(') {
+            continue;
+        }
+        let before = code[..at].trim_end();
+        if let Some(pre) = before.strip_suffix("fn") {
+            if pre.is_empty() || !pre.chars().next_back().is_some_and(is_ident_char) {
+                continue; // `fn name(` — a definition, not a call
+            }
+        }
+        return true;
+    }
+    false
+}
+
+/// Name of the function declared on this line, if any.
+fn fn_decl_name(code: &str) -> Option<String> {
+    for at in token_positions(code, "fn") {
+        let rest = code[at + 2..].trim_start();
+        let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    None
+}
+
+/// Mark lines that live inside a `#[cfg(test)] mod … { … }` block. Any `mod`
+/// item following a `#[cfg(test)]` attribute counts (the tree has both
+/// `mod tests` and `pub(crate) mod testutil`).
+fn mark_test_blocks(lines: &mut [SrcLine]) {
+    let mut depth: i64 = 0;
+    let mut test_depth: Option<i64> = None;
+    let mut pending_cfg = false;
+    let mut awaiting_mod_brace = false;
+
+    for line in lines.iter_mut() {
+        let code = line.code.clone();
+        let trimmed = code.trim();
+        if trimmed.contains("#[cfg(test)]") {
+            pending_cfg = true;
+        }
+        let has_mod = !token_positions(&code, "mod").is_empty();
+        let mut entered_at: Option<i64> = None;
+        if (pending_cfg && has_mod) || awaiting_mod_brace {
+            if code.contains('{') {
+                entered_at = Some(depth);
+                pending_cfg = false;
+                awaiting_mod_brace = false;
+            } else if has_mod {
+                pending_cfg = false;
+                awaiting_mod_brace = true;
+            }
+        } else if pending_cfg && !line.annotation_only && !trimmed.is_empty() && !has_mod {
+            // The attribute landed on a non-mod item (e.g. `#[cfg(test)] fn`)
+            // — that item is compiled out of release builds but is not a
+            // module block we track; drop the pending flag.
+            pending_cfg = false;
+        }
+        if test_depth.is_none() {
+            test_depth = entered_at;
+        }
+        line.in_test = test_depth.is_some();
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        depth += opens - closes;
+        if let Some(td) = test_depth {
+            if depth <= td {
+                test_depth = None;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow markers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct AllowMarker {
+    raw_id: String,
+    rule: Option<Rule>,
+    has_reason: bool,
+}
+
+impl AllowMarker {
+    fn valid_for(&self, rule: Rule) -> bool {
+        self.rule == Some(rule) && self.has_reason
+    }
+}
+
+const ALLOW_PREFIX: &str = "lint:allow(";
+
+/// Parse every `lint:allow(RULE): reason` marker in one comment line.
+fn parse_allow_markers(comment: &str) -> Vec<AllowMarker> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find(ALLOW_PREFIX) {
+        let after = &rest[p + ALLOW_PREFIX.len()..];
+        let Some(close) = after.find(')') else {
+            break;
+        };
+        let raw_id = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let has_reason = tail
+            .strip_prefix(':')
+            .is_some_and(|r| !r.trim().is_empty());
+        out.push(AllowMarker {
+            rule: Rule::from_id(&raw_id),
+            raw_id,
+            has_reason,
+        });
+        rest = tail;
+    }
+    out
+}
+
+/// Is a diagnostic for `rule` at 1-based `line` suppressed? Valid markers on
+/// the same line, or in the contiguous run of annotation-only lines directly
+/// above it, count. For function-anchored rules (DIRTY-PAIR) the anchor is
+/// the `fn` line, so the same lookup applies.
+fn is_allowed(lines: &[SrcLine], markers: &[Vec<AllowMarker>], line: usize, rule: Rule) -> bool {
+    let idx = line - 1;
+    let hit = |i: usize| markers[i].iter().any(|m| m.valid_for(rule));
+    if hit(idx) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && lines[j - 1].annotation_only {
+        j -= 1;
+        if hit(j) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Scoping
+// ---------------------------------------------------------------------------
+
+fn norm_path(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn is_tick_path(path: &str) -> bool {
+    let p = norm_path(path);
+    let parts: Vec<&str> = p.split('/').collect();
+    if parts.last() == Some(&"types.rs") {
+        return true;
+    }
+    parts.iter().any(|c| TICK_PATH_DIRS.contains(c))
+}
+
+fn is_float_exempt(path: &str) -> bool {
+    // scheduler::index owns TotalF64 and the shared key helpers; a raw
+    // partial_cmp there would be caught by its own equivalence tests.
+    norm_path(path).ends_with("scheduler/index.rs")
+}
+
+fn is_world_file(path: &str) -> bool {
+    norm_path(path).ends_with("sim/world.rs")
+}
+
+// ---------------------------------------------------------------------------
+// Rule token tables
+// ---------------------------------------------------------------------------
+
+const HASH_TOKENS: [&str; 2] = ["HashMap", "HashSet"];
+
+const CLOCK_TOKENS: [&str; 7] = [
+    "Instant::now",
+    "SystemTime",
+    "UNIX_EPOCH",
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+];
+
+const PANIC_TOKENS: [&str; 2] = [".unwrap(", ".expect("];
+
+const FLOAT_TOKEN: &str = ".partial_cmp(";
+
+/// Functions that push a view onto the dirty queue.
+const DIRTY_TRIGGERS: [&str; 2] = ["mark_view", "mark_view_all"];
+
+/// Calls that re-key the CandidateIndex (or drain the dirty queue into it).
+const REKEY_CALLS: [&str; 1] = ["refresh_dirty_views"];
+const REKEY_SUBSTRINGS: [&str; 3] = ["index.update(", "index.rebuild_from(", "CandidateIndex::from_views("];
+
+// ---------------------------------------------------------------------------
+// Linting
+// ---------------------------------------------------------------------------
+
+/// Lint one source file. `path` drives rule scoping (tick-path detection,
+/// the `sim/world.rs` DIRTY-PAIR scope) and is what appears in diagnostics —
+/// fixture tests pass pseudo-paths like `"sim/state.rs"`.
+pub fn lint_source(path: &str, text: &str) -> Vec<Diagnostic> {
+    lint_file(path, path, text)
+}
+
+fn lint_file(scope_path: &str, display_path: &str, text: &str) -> Vec<Diagnostic> {
+    let mut lines = preprocess(text);
+    mark_test_blocks(&mut lines);
+    let markers: Vec<Vec<AllowMarker>> = lines
+        .iter()
+        .map(|l| parse_allow_markers(&l.comment))
+        .collect();
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // ALLOW-REASON: hygiene of the escape hatch itself. Never suppressible.
+    for (idx, ms) in markers.iter().enumerate() {
+        for m in ms {
+            if m.rule.is_none() {
+                diags.push(Diagnostic {
+                    rule: Rule::AllowHygiene,
+                    file: display_path.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "lint:allow names unknown rule `{}` (known: {})",
+                        m.raw_id,
+                        Rule::ALL.map(|r| r.id()).join(", ")
+                    ),
+                });
+            } else if !m.has_reason {
+                diags.push(Diagnostic {
+                    rule: Rule::AllowHygiene,
+                    file: display_path.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "lint:allow({}) has no reason — write `// lint:allow({}): <why>`",
+                        m.raw_id, m.raw_id
+                    ),
+                });
+            }
+        }
+    }
+
+    let tick = is_tick_path(scope_path);
+    let float_exempt = is_float_exempt(scope_path);
+
+    let push = |diags: &mut Vec<Diagnostic>, rule: Rule, line: usize, message: String| {
+        if !is_allowed(&lines, &markers, line, rule) {
+            diags.push(Diagnostic {
+                rule,
+                file: display_path.to_string(),
+                line,
+                message,
+            });
+        }
+    };
+
+    for (idx, line) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let code = &line.code;
+        if tick {
+            // ND-HASH applies to test code too: a test that iterates a
+            // HashMap can go flaky just as easily as the tick path.
+            for tok in HASH_TOKENS {
+                for _ in token_positions(code, tok) {
+                    push(
+                        &mut diags,
+                        Rule::NdHash,
+                        ln,
+                        format!("`{tok}` in tick-path module — use BTreeMap/BTreeSet (ordered iteration) or allow with a reason"),
+                    );
+                }
+            }
+            if !line.in_test {
+                for tok in CLOCK_TOKENS {
+                    for _ in token_positions(code, tok) {
+                        push(
+                            &mut diags,
+                            Rule::NdClock,
+                            ln,
+                            format!("`{tok}` in sim path — virtual time comes from simtime, randomness from util::rng"),
+                        );
+                    }
+                }
+            }
+        }
+        if !float_exempt {
+            for _ in token_positions(code, FLOAT_TOKEN) {
+                push(
+                    &mut diags,
+                    Rule::NdFloat,
+                    ln,
+                    "raw `.partial_cmp(` — use f64::total_cmp or scheduler::index::TotalF64 for a total order".to_string(),
+                );
+            }
+        }
+        if !line.in_test {
+            for tok in PANIC_TOKENS {
+                for _ in token_positions(code, tok) {
+                    push(
+                        &mut diags,
+                        Rule::PanicBudget,
+                        ln,
+                        format!("`{}` in non-test code — handle the None/Err or allow with a reason", &tok[1..tok.len() - 1]),
+                    );
+                }
+            }
+        }
+    }
+
+    if is_world_file(scope_path) {
+        check_dirty_pair(&lines, &markers, display_path, &mut diags);
+    }
+
+    diags.sort_by(|a, b| {
+        (a.line, a.rule, a.message.as_str()).cmp(&(b.line, b.rule, b.message.as_str()))
+    });
+    diags
+}
+
+/// DIRTY-PAIR: track function extents by brace depth; a non-test fn whose
+/// body calls `mark_view`/`mark_view_all` must also re-key the index in the
+/// same body (directly or by draining the dirty queue), or carry an allow on
+/// its `fn` line naming where the re-key happens.
+fn check_dirty_pair(
+    lines: &[SrcLine],
+    markers: &[Vec<AllowMarker>],
+    display_path: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    struct Frame {
+        name: String,
+        line: usize,
+        body_depth: i64,
+        marks: bool,
+        rekeys: bool,
+    }
+
+    let mut depth: i64 = 0;
+    let mut paren: i64 = 0;
+    let mut open: Vec<Frame> = Vec::new();
+    let mut pending: Option<(String, usize)> = None;
+    let mut finished: Vec<Frame> = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let code = &line.code;
+
+        let line_marks = DIRTY_TRIGGERS.iter().any(|t| has_call(code, t));
+        let line_rekeys = REKEY_CALLS.iter().any(|t| has_call(code, t))
+            || REKEY_SUBSTRINGS.iter().any(|s| code.contains(s));
+
+        if !line.in_test {
+            if let Some(name) = fn_decl_name(code) {
+                pending = Some((name, ln));
+            }
+        }
+
+        for c in code.chars() {
+            match c {
+                '(' => paren += 1,
+                ')' => paren -= 1,
+                ';' => {
+                    // A `;` at paren depth 0 between `fn sig` and `{` is a
+                    // bodyless declaration (trait method) — cancel it.
+                    if paren == 0 {
+                        pending = None;
+                    }
+                }
+                '{' => {
+                    if let Some((name, l)) = pending.take() {
+                        open.push(Frame {
+                            name,
+                            line: l,
+                            body_depth: depth,
+                            marks: line_marks,
+                            rekeys: line_rekeys,
+                        });
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    let closed = open
+                        .last()
+                        .is_some_and(|top| top.body_depth == depth);
+                    if closed {
+                        let mut f = open.pop().expect("frame checked above");
+                        f.marks |= line_marks;
+                        f.rekeys |= line_rekeys;
+                        finished.push(f);
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        if let Some(top) = open.last_mut() {
+            top.marks |= line_marks;
+            top.rekeys |= line_rekeys;
+        }
+    }
+    // Unclosed frames at EOF (truncated input) are checked too.
+    finished.append(&mut open);
+
+    for f in finished {
+        if f.marks && !f.rekeys && !is_allowed(lines, markers, f.line, Rule::DirtyPair) {
+            diags.push(Diagnostic {
+                rule: Rule::DirtyPair,
+                file: display_path.to_string(),
+                line: f.line,
+                message: format!(
+                    "`fn {}` marks views dirty but never re-keys the CandidateIndex — pair the mark with index.update/refresh_dirty_views or allow with a reason naming where the re-key happens",
+                    f.name
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking & reporting
+// ---------------------------------------------------------------------------
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, deterministic output).
+/// Returns the diagnostics plus the number of files scanned. Scoping uses
+/// the path relative to `root`; diagnostics display the full path.
+pub fn lint_tree(root: &Path) -> io::Result<(Vec<Diagnostic>, usize)> {
+    let mut files = Vec::new();
+    if root.is_dir() {
+        collect_rs_files(root, &mut files)?;
+    } else {
+        files.push(root.to_path_buf());
+    }
+    let mut diags = Vec::new();
+    for f in &files {
+        let text = fs::read_to_string(f)?;
+        let rel = f.strip_prefix(root).unwrap_or(f);
+        let scope = norm_path(&rel.to_string_lossy());
+        let display = norm_path(&f.to_string_lossy());
+        diags.extend(lint_file(&scope, &display, &text));
+    }
+    Ok((diags, files.len()))
+}
+
+/// Human-readable report: per-rule counts, then every diagnostic.
+pub fn format_report(diags: &[Diagnostic], files_scanned: usize) -> String {
+    let mut out = String::new();
+    out.push_str("nimrod-lint report\n");
+    out.push_str(&format!(
+        "files scanned: {files_scanned}; violations: {}\n\n",
+        diags.len()
+    ));
+    for rule in Rule::ALL {
+        let n = diags.iter().filter(|d| d.rule == rule).count();
+        out.push_str(&format!("  {:<13} {:>4}  {}\n", rule.id(), n, rule.summary()));
+    }
+    if !diags.is_empty() {
+        out.push('\n');
+        for d in diags {
+            out.push_str(&format!("{d}\n"));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tests (scanner internals; rule-level fixture tests live in
+// rust/tests/lint_clean.rs so the root crate's plain `cargo test` runs them)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped_from_code() {
+        let src = "let s = \"HashMap in a string\"; // HashMap in a comment\n";
+        let lines = preprocess(src);
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap in a comment"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers_exact() {
+        let src = "let plan = \"parameter x float range from 1 to 2 step 1; \\\n    task main \\\n\";\nlet m = HashMap::new();\n";
+        let lines = preprocess(src);
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].code.contains("let plan"));
+        assert!(lines[1].code.is_empty());
+        assert!(lines[3].code.contains("HashMap"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still */ b\n/* open\nInstant::now()\n*/ c\n";
+        let lines = preprocess(src);
+        assert!(lines[0].code.contains('a') && lines[0].code.contains('b'));
+        assert!(lines[2].code.is_empty());
+        assert!(lines[2].comment.contains("Instant::now"));
+        assert!(lines[3].code.contains('c'));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_do_not_derail_the_scanner() {
+        let src = "fn f<'a>(c: char) -> bool { c == '\"' || c == '\\'' || c == 'x' }\nlet m = HashMap::new();\n";
+        let lines = preprocess(src);
+        assert!(lines[1].code.contains("HashMap"));
+    }
+
+    #[test]
+    fn token_boundaries_respect_identifiers() {
+        assert_eq!(token_positions("x.unwrap_or(0)", ".unwrap(").len(), 0);
+        assert_eq!(token_positions("x.unwrap()", ".unwrap(").len(), 1);
+        assert_eq!(token_positions("MyHashMapLike::new()", "HashMap").len(), 0);
+        assert_eq!(token_positions("HashMap::new()", "HashMap").len(), 1);
+        assert_eq!(token_positions("a.partial_cmp(b)", ".partial_cmp(").len(), 1);
+        assert_eq!(token_positions("fn partial_cmp(a: f64)", ".partial_cmp(").len(), 0);
+    }
+
+    #[test]
+    fn fn_definitions_are_not_calls() {
+        assert!(!has_call("fn mark_view(&mut self, rid: ResourceId) {", "mark_view"));
+        assert!(has_call("self.mark_view(rid);", "mark_view"));
+        assert!(has_call("tenant.mark_view(rid)", "mark_view"));
+    }
+
+    #[test]
+    fn cfg_test_mods_are_marked_including_pub_crate_testutil() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\npub(crate) mod testutil {\n    fn t() { y.unwrap(); }\n}\nfn live2() { z.expect(\"m\"); }\n";
+        let mut lines = preprocess(src);
+        mark_test_blocks(&mut lines);
+        assert!(!lines[0].in_test);
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_markers_parse_reason_and_rule() {
+        let ms = parse_allow_markers(" lint:allow(ND-CLOCK): alloc_ns is wall-clock telemetry");
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].rule, Some(Rule::NdClock));
+        assert!(ms[0].has_reason);
+        let ms = parse_allow_markers(" lint:allow(ND-CLOCK)");
+        assert!(!ms[0].has_reason);
+        let ms = parse_allow_markers(" lint:allow(ND-TYPO): whatever");
+        assert_eq!(ms[0].rule, None);
+    }
+
+    #[test]
+    fn scoping_tick_path_and_exemptions() {
+        assert!(is_tick_path("sim/world.rs"));
+        assert!(is_tick_path("scheduler/index.rs"));
+        assert!(is_tick_path("types.rs"));
+        assert!(is_tick_path("grid/testbed.rs"));
+        assert!(!is_tick_path("plan/mod.rs"));
+        assert!(!is_tick_path("util/bench.rs"));
+        assert!(is_float_exempt("scheduler/index.rs"));
+        assert!(!is_float_exempt("scheduler/mod.rs"));
+        assert!(is_world_file("sim/world.rs"));
+        assert!(!is_world_file("sim/live.rs"));
+    }
+
+    #[test]
+    fn report_counts_per_rule() {
+        let diags = lint_source("sim/state.rs", fixtures::ND_HASH_FIRING);
+        let report = format_report(&diags, 1);
+        assert!(report.contains("ND-HASH"));
+        assert!(report.contains("files scanned: 1"));
+    }
+
+    #[test]
+    fn diagnostics_display_as_file_line_rule() {
+        let d = Diagnostic {
+            rule: Rule::NdClock,
+            file: "sim/world.rs".to_string(),
+            line: 7,
+            message: "msg".to_string(),
+        };
+        assert_eq!(format!("{d}"), "sim/world.rs:7: [ND-CLOCK] msg");
+    }
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::from_id(r.id()), Some(r));
+        }
+        assert_eq!(Rule::from_id("ND-TYPO"), None);
+    }
+
+    #[test]
+    fn sorted_output_is_deterministic() {
+        let mut a = lint_source("sim/state.rs", fixtures::ND_HASH_FIRING);
+        let b = lint_source("sim/state.rs", fixtures::ND_HASH_FIRING);
+        assert_eq!(a, b);
+        a.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn one_line_fn_bodies_are_still_tracked() {
+        let src = "impl W { fn poke(&mut self) { self.mark_view(rid); } }\n";
+        let diags = lint_source("sim/world.rs", src);
+        assert!(diags.iter().any(|d| d.rule == Rule::DirtyPair && d.line == 1));
+    }
+
+    #[test]
+    fn trait_method_declarations_do_not_open_frames() {
+        let src = "trait T {\n    fn poke(&mut self, rid: ResourceId);\n}\nimpl T for W {\n    fn poke(&mut self, rid: ResourceId) {\n        self.mark_view(rid);\n        self.tenant.index.update(&self.tenant.views[0]);\n    }\n}\n";
+        let diags = lint_source("sim/world.rs", src);
+        assert!(diags.iter().all(|d| d.rule != Rule::DirtyPair));
+    }
+}

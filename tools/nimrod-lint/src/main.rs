@@ -1,0 +1,89 @@
+//! CLI for `nimrod-lint`.
+//!
+//! Usage: `cargo run -p nimrod-lint -- [--report FILE] [--rules] [ROOT]...`
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error. The
+//! report file (when requested) is written before a nonzero exit so CI can
+//! archive it either way.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use nimrod_lint::{format_report, lint_tree, Diagnostic, Rule};
+
+const USAGE: &str = "usage: nimrod-lint [--report FILE] [--rules] [ROOT]...
+  ROOT       directory (or single .rs file) to scan; defaults to rust/src
+  --report   also write the full report to FILE
+  --rules    print the rule table and exit";
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut report_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--report" => match args.next() {
+                Some(p) => report_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("nimrod-lint: --report needs a file path\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--rules" => {
+                for r in Rule::ALL {
+                    println!("{:<13} {}", r.id(), r.summary());
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("nimrod-lint: unknown flag `{flag}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        roots.push(PathBuf::from("rust/src"));
+    }
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut files_scanned = 0usize;
+    for root in &roots {
+        match lint_tree(root) {
+            Ok((d, n)) => {
+                diags.extend(d);
+                files_scanned += n;
+            }
+            Err(e) => {
+                eprintln!("nimrod-lint: cannot scan {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = format_report(&diags, files_scanned);
+    if let Some(p) = &report_path {
+        if let Err(e) = std::fs::write(p, &report) {
+            eprintln!("nimrod-lint: cannot write report {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("nimrod-lint: clean — {files_scanned} files, 0 violations");
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "nimrod-lint: {} violation(s) across {files_scanned} files",
+            diags.len()
+        );
+        ExitCode::FAILURE
+    }
+}
