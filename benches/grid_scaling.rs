@@ -25,12 +25,17 @@
 //! 5. **Advance-reservation on/off sweep** — per-tick cost of the hold
 //!    machinery (shadow probes, expiry sweeps, occupancy folding) versus
 //!    the same world with the subsystem left off.
-//! 6. **Per-cycle component costs** — MDS refresh/discovery latency.
+//! 6. **Parallel-tick thread sweep** — many-tenant churny worlds
+//!    (index-storm- and mega-grid-shaped) run at 1/2/4/8 workers. Every
+//!    thread count must replay the identical trace (asserted); the JSON
+//!    `thread_sweep` rows carry µs/tick, speedup vs 1 thread and the
+//!    merge-barrier share of the batched tick.
+//! 7. **Per-cycle component costs** — MDS refresh/discovery latency.
 //!
 //! Results are also written to `BENCH_grid_scaling.json` (machine-readable:
 //! µs/tick, touched/tick, allocation-phase share, index-vs-full-sort
-//! speedup per size, reservation on/off overhead) — CI archives it as the
-//! perf-trajectory artifact.
+//! speedup per size, reservation on/off overhead, thread-sweep speedups) —
+//! CI archives it as the perf-trajectory artifact.
 //!
 //! ```bash
 //! cargo bench --bench grid_scaling              # full sweep (10k machines)
@@ -137,6 +142,61 @@ fn tenant_sweep_run(
     }
     let mut world = b.world().expect("tenant sweep world");
     world.set_full_view_rebuild(full_view_rebuild);
+    let t0 = std::time::Instant::now();
+    let report = world.run_world();
+    (t0.elapsed().as_secs_f64(), report)
+}
+
+/// Run a churny, demand-priced, many-tenant world (the index-storm shape:
+/// heavy dirty-view traffic, every tenant ticking on the same period so
+/// tick batches hold all of them) at `threads` workers. Returns wall
+/// seconds and the world report; the caller compares traces across thread
+/// counts.
+fn storm_run(
+    tb: Testbed,
+    tenants: usize,
+    jobs: usize,
+    threads: usize,
+) -> (f64, WorldReport) {
+    let plan = format!(
+        "parameter i integer range from 1 to {jobs}\n\
+         task main\nexecute chamber $i\nendtask"
+    );
+    let light = WorkloadConfig {
+        job_work_ref_h: 0.25,
+        ..WorkloadConfig::default()
+    };
+    let policies = ["cost", "time", "deadline-only"];
+    let mut b = Broker::experiment()
+        .plan(plan.as_str())
+        .workload(light.clone())
+        .deadline_h(10.0)
+        .policy("cost")
+        .user("storm0")
+        .seed(0x57A2)
+        .demand_pricing(0.7)
+        .testbed(tb)
+        .threads(threads)
+        .tweak_testbed(|tb| {
+            for spec in &mut tb.resources {
+                spec.mtbf_s = 2.5 * 3600.0;
+                spec.mttr_s = 0.5 * 3600.0;
+            }
+        });
+    for k in 1..tenants {
+        b = b.tenant(
+            Broker::experiment()
+                .plan(plan.as_str())
+                .workload(light.clone())
+                // Staggered deadlines, identical tick periods: schedules
+                // diverge per tenant but ticks stay coincident, so every
+                // batch carries the full tenant set.
+                .deadline_h(10.0 + 0.5 * (k % 8) as f64)
+                .policy(policies[k % policies.len()])
+                .user(&format!("storm{k}")),
+        );
+    }
+    let world = b.world().expect("thread sweep world");
     let t0 = std::time::Instant::now();
     let report = world.run_world();
     (t0.elapsed().as_secs_f64(), report)
@@ -524,6 +584,97 @@ fn main() {
          ReservationConfig, where the subsystem must cost nothing.)"
     );
 
+    println!("\n== parallel tick: thread sweep ==\n");
+    println!(
+        "{:<14} {:>8} {:>9} {:>8} {:>8} {:>11} {:>9} {:>12}",
+        "scenario", "tenants", "machines", "threads", "ticks", "µs/tick", "speedup", "merge share"
+    );
+    let mut thread_rows: Vec<Json> = Vec::new();
+    let thread_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    // (scenario, sites, per-site, tenants, jobs-per-tenant). Full mode is
+    // the acceptance shape — 64 tenants on the 10,000-machine index-storm
+    // grid — plus a mega-grid-shaped world; quick is a CI thread smoke.
+    let storm_shapes: &[(&str, usize, usize, usize, usize)] = if quick {
+        &[("index-storm", 4, 25, 8, 30)]
+    } else {
+        &[
+            ("index-storm", 100, 100, 64, 400),
+            ("mega-grid", 120, 45, 16, 400),
+        ]
+    };
+    for &(scenario, sites, per_site, tenants, jobs) in storm_shapes {
+        let tb = Testbed::synthetic(sites, per_site, 7);
+        let machines = tb.resources.len();
+        let mut base: Option<(f64, WorldReport)> = None;
+        for &threads in thread_counts {
+            let (wall, wr) = storm_run(tb.clone(), tenants, jobs, threads);
+            // Bit-exact replay across thread counts is the contract the
+            // whole parallel section rests on — verify it right here where
+            // the speedup numbers are minted.
+            if let Some((_, w1)) = &base {
+                assert_eq!(
+                    w1.events, wr.events,
+                    "{scenario}: trace diverged at {threads} threads"
+                );
+                for (a, b) in w1.tenants.iter().zip(&wr.tenants) {
+                    assert_eq!(
+                        a.report.makespan_s.to_bits(),
+                        b.report.makespan_s.to_bits(),
+                        "{scenario}/{}: timeline diverged at {threads} threads",
+                        a.user
+                    );
+                    assert_eq!(
+                        a.report.total_cost.to_bits(),
+                        b.report.total_cost.to_bits(),
+                        "{scenario}/{}: spend diverged at {threads} threads",
+                        a.user
+                    );
+                }
+            }
+            let ticks = wr
+                .tenants
+                .iter()
+                .map(|t| t.report.ticks)
+                .sum::<u64>()
+                .max(1);
+            let us_tick = wall * 1e6 / ticks as f64;
+            let speedup = match &base {
+                Some((wall1, _)) => wall1 / wall.max(1e-9),
+                None => 1.0,
+            };
+            let phase_ns = wr.snapshot_ns + wr.parallel_ns + wr.merge_ns;
+            let merge_share = if phase_ns > 0 {
+                wr.merge_ns as f64 / phase_ns as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{scenario:<14} {tenants:>8} {machines:>9} {threads:>8} {ticks:>8} {us_tick:>11.1} {:>8.2}x {:>11.1}%",
+                speedup,
+                merge_share * 100.0,
+            );
+            thread_rows.push(Json::obj(vec![
+                ("scenario", Json::str(scenario)),
+                ("tenants", Json::num(tenants as f64)),
+                ("machines", Json::num(machines as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("ticks", Json::num(ticks as f64)),
+                ("us_per_tick", Json::num(us_tick)),
+                ("speedup_vs_1", Json::num(speedup)),
+                ("merge_share", Json::num(merge_share)),
+            ]));
+            if base.is_none() {
+                base = Some((wall, wr));
+            }
+        }
+    }
+    println!(
+        "\n(speedup is whole-run wall time vs the same world at 1 thread — \
+         phases 1/3 and event processing stay sequential, so this is the \
+         Amdahl-limited figure; merge share is the barrier's slice of the \
+         three-phase batched tick.)"
+    );
+
     // Machine-readable perf trajectory (archived by CI).
     let out = Json::obj(vec![
         ("bench", Json::str("grid_scaling")),
@@ -531,6 +682,7 @@ fn main() {
         ("grid_sweep", Json::arr(grid_rows)),
         ("tenant_sweep", Json::arr(tenant_rows)),
         ("reservation_sweep", Json::arr(rsv_rows)),
+        ("thread_sweep", Json::arr(thread_rows)),
     ]);
     match std::fs::write("BENCH_grid_scaling.json", out.to_string()) {
         Ok(()) => println!("\nwrote BENCH_grid_scaling.json"),

@@ -135,6 +135,10 @@ pub struct ExperimentBuilder {
     resume: Option<Experiment>,
     /// Co-scheduled tenants beyond the primary one this builder describes.
     tenants: Vec<TenantDraft>,
+    /// Worker threads for the parallel per-tenant phase of coincident-tick
+    /// batches. 1 (the default) is the proven-bit-exact sequential
+    /// reference path; any other count replays the identical trace.
+    threads: usize,
 }
 
 impl Default for ExperimentBuilder {
@@ -147,6 +151,7 @@ impl Default for ExperimentBuilder {
             registry: None,
             resume: None,
             tenants: Vec::new(),
+            threads: 1,
         }
     }
 }
@@ -334,6 +339,21 @@ impl ExperimentBuilder {
         1 + self.tenants.len()
     }
 
+    /// Worker threads for the parallel per-tenant phase of the world's
+    /// coincident-tick batches (see the three-phase pipeline in
+    /// [`crate::sim::GridWorld`]'s module docs). The default of 1 runs the
+    /// identical pipeline sequentially and is the reference path; traces
+    /// are bit-exact at every count, so this is purely a throughput knob.
+    /// Validated by [`world`](Self::world): 0 is an error, and a count
+    /// above the tenant total is clamped (with a warning) — extra workers
+    /// would only ever idle. Simulation-only, like
+    /// [`reservations`](Self::reservations): [`live`](Self::live) refuses
+    /// `threads > 1`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
     /// Enable demand-responsive pricing on every resource: owners multiply
     /// their posted rate by `1 + slope × utilization`, where utilization is
     /// the fraction of the machine's CPUs held by tenants' in-flight jobs
@@ -518,6 +538,11 @@ impl ExperimentBuilder {
             "builder has {} tenants: finish multi-tenant experiments with world()/run_world()",
             self.tenant_count()
         );
+        ensure!(
+            self.threads <= 1,
+            "threads({}) needs the world() driver — a single-tenant simulation never coalesces a multi-member tick batch, so extra workers would be a silent no-op",
+            self.threads
+        );
         let advisor = self.advisor(self.cfg.workload.job_work_ref_h)?;
         let resume = self.resume.take();
         // A resumed experiment carries its own job table.
@@ -545,6 +570,20 @@ impl ExperimentBuilder {
             self.resume.is_none(),
             "resume() is only supported by the single-tenant simulate() driver"
         );
+        ensure!(
+            self.threads >= 1,
+            "threads(0) would leave the parallel tick phase with no workers — use threads(1) for the sequential reference path"
+        );
+        let threads = if self.threads > self.tenant_count() {
+            eprintln!(
+                "warning: threads({}) exceeds the {} tenant(s) — clamping (a batch never has more members than tenants, so extra workers would only idle)",
+                self.threads,
+                self.tenant_count()
+            );
+            self.tenant_count()
+        } else {
+            self.threads
+        };
         self.validate_testbed()?;
         let default_seed = ExperimentConfig::default().seed;
         let mut setups = Vec::with_capacity(self.tenant_count());
@@ -581,7 +620,9 @@ impl ExperimentBuilder {
             setups.push(TenantSetup { cfg, specs, advisor });
         }
         let tb = self.build_testbed();
-        Ok(GridWorld::new(tb, setups))
+        let mut world = GridWorld::new(tb, setups);
+        world.set_threads(threads);
+        Ok(world)
     }
 
     /// Convenience: run the multi-tenant world to completion and return
@@ -610,6 +651,10 @@ impl ExperimentBuilder {
         ensure!(
             self.cfg.reservations.is_none(),
             "advance reservations are simulation-only (the live driver has no shared-grid economy)"
+        );
+        ensure!(
+            self.threads <= 1,
+            "threads() is simulation-only (the batched tick is a world concept; live parallelism is the `workers` argument)"
         );
         let advisor = self.advisor(LIVE_WORK_PRIOR_H)?;
         let specs = self.specs()?;
@@ -759,6 +804,44 @@ mod tests {
             .reservations(ReservationConfig::default())
             .live(1, std::path::Path::new("/tmp/nimrod-live-test"))
             .is_err());
+    }
+
+    #[test]
+    fn thread_selection_validates_and_clamps() {
+        // Default is the sequential reference path.
+        assert_eq!(Broker::experiment().world().unwrap().threads(), 1);
+        // 0 workers is a config error, surfaced by world().
+        let err = Broker::experiment()
+            .threads(0)
+            .world()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("threads"), "{err:#}");
+        // A sensible count flows through to the world...
+        let world = Broker::experiment()
+            .tenant(Broker::experiment().user("davida"))
+            .tenant(Broker::experiment().user("astro"))
+            .threads(3)
+            .world()
+            .unwrap();
+        assert_eq!(world.threads(), 3);
+        // ...and a count beyond the tenant total clamps (with a warning).
+        let world = Broker::experiment()
+            .tenant(Broker::experiment().user("davida"))
+            .threads(8)
+            .world()
+            .unwrap();
+        assert_eq!(world.threads(), 2);
+        // The live driver refuses parallel ticks outright, like
+        // reservations — simulation-only machinery.
+        assert!(Broker::experiment()
+            .threads(4)
+            .live(1, std::path::Path::new("/tmp/nimrod-live-test"))
+            .is_err());
+        assert!(Broker::experiment()
+            .threads(1)
+            .world()
+            .is_ok());
     }
 
     #[test]

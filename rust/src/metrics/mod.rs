@@ -118,6 +118,15 @@ pub struct Report {
     /// for the perf benches — it never feeds back into the simulation, so
     /// traces stay deterministic; exclude it from bit-exact comparisons.
     pub alloc_ns: u64,
+    /// Wall nanoseconds of the three-phase batched tick (snapshot /
+    /// parallel per-tenant work / merge barrier) — world-level totals,
+    /// populated on the [`WorldReport::into_single`] return path so the
+    /// single-report API surfaces them too. Host-clock telemetry like
+    /// `alloc_ns`: never fed back into the simulation, excluded from
+    /// bit-exact comparisons.
+    pub snapshot_ns: u64,
+    pub parallel_ns: u64,
+    pub merge_ns: u64,
 }
 
 impl Report {
@@ -220,6 +229,20 @@ pub struct WorldReport {
     /// produced at least one agreement — the clearing-price trajectory.
     /// Empty in posted-price worlds.
     pub clearing_prices: Vec<(SimTime, GridDollars)>,
+    /// Wall nanoseconds the batched tick pipeline spent building the
+    /// shared-state snapshot (phase 1), summed over every coincident-tick
+    /// batch. Host-clock telemetry like [`Report::alloc_ns`] — it never
+    /// feeds back into the simulation; exclude it from bit-exact
+    /// comparisons. Zero in worlds whose tenants never tick at the same
+    /// instant (every batch is then a singleton on the legacy path).
+    pub snapshot_ns: u64,
+    /// Wall nanoseconds of phase 2 — the parallel per-tenant section
+    /// (view refresh, index re-key, policy allocation), wall-clock across
+    /// all workers, not summed per worker.
+    pub parallel_ns: u64,
+    /// Wall nanoseconds of phase 3 — the deterministic merge barrier that
+    /// applies tenant deltas in ascending tenant order.
+    pub merge_ns: u64,
 }
 
 impl Default for WorldReport {
@@ -232,6 +255,9 @@ impl Default for WorldReport {
             price_index: Vec::new(),
             peak_premium: 1.0,
             clearing_prices: Vec::new(),
+            snapshot_ns: 0,
+            parallel_ns: 0,
+            merge_ns: 0,
         }
     }
 }
@@ -241,7 +267,11 @@ impl WorldReport {
     /// [`crate::sim::GridSimulation`] return path).
     pub fn into_single(mut self) -> Report {
         assert_eq!(self.tenants.len(), 1, "into_single on a multi-tenant run");
-        self.tenants.remove(0).report
+        let mut report = self.tenants.remove(0).report;
+        report.snapshot_ns = self.snapshot_ns;
+        report.parallel_ns = self.parallel_ns;
+        report.merge_ns = self.merge_ns;
+        report
     }
 
     /// Jain's fairness index over the tenants' realized CPU-second shares:

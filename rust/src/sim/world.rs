@@ -78,6 +78,34 @@
 //! open holds rather than restoring them). With the config absent the
 //! subsystem is inert: no RNG is drawn, no f64 changes, and the world
 //! replays bit-exactly like the pre-reservation pipeline.
+//!
+//! **Coincident ticks run as one three-phase batch.** Whenever two or more
+//! tenants tick at the same virtual instant (the common case: co-tenants
+//! share a tick period and all start at t = 0), the run loop coalesces the
+//! consecutive `Tick` events into a batch and [`GridWorld::on_tick_batch`]
+//! processes it in three phases: (1) a **sequential snapshot** — expiry
+//! sweeps, repricing marks and the (shared-state-mutating) reserve-ahead
+//! move run in ascending tenant order, then one per-tenant RNG sub-stream
+//! is forked from the world RNG per member, again in tenant order; (2) a
+//! **parallel per-tenant phase** — each worker thread owns a disjoint
+//! slice of the batch and runs view refresh, candidate-index re-keying and
+//! policy allocation against the frozen [`WorldView`] snapshot and its
+//! pre-drawn sub-RNG, producing per-tenant actions instead of mutating
+//! shared state (the `PAR-SHARED` lint rule rejects shared-state access in
+//! `lint:par-section` functions); (3) a **deterministic merge barrier** —
+//! actions are applied in ascending tenant order through a ground-truth
+//! capacity guard (snapshot decisions can collectively overbook a machine;
+//! deferred submits stay Ready and retry next tick, exactly like a refused
+//! budget commit), and the members' next ticks are rescheduled in the same
+//! order. No step depends on worker interleaving, so traces are bit-exact
+//! at **every** thread count: `threads(1)` runs the identical pipeline on
+//! the caller thread and is the reference path
+//! (`rust/tests/parallel_equivalence.rs` replays contested, auction and
+//! reservation worlds at 1/2/4 threads and compares `to_bits`). Batches of
+//! one — any single-tenant world — take the original sequential `on_tick`
+//! verbatim, which is what keeps [`super::GridSimulation`] byte-identical
+//! to the legacy driver: snapshot semantics and snapshot-vs-cascade
+//! differences only exist where two tenants actually share an instant.
 
 use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
@@ -307,6 +335,174 @@ impl Tenant {
     }
 }
 
+/// Read-only snapshot of the shared world state published to the parallel
+/// per-tenant phase of a batched tick (phase 2 of the three-phase pipeline
+/// — see the module docs). Everything here is borrowed immutably from the
+/// world, so any number of workers can consume it concurrently while each
+/// owns a disjoint `&mut Tenant`; shared-state *mutation* belongs to the
+/// sequential snapshot (phase 1) and merge (phase 3) phases, a discipline
+/// the `PAR-SHARED` lint rule checks statically on `lint:par-section`
+/// functions.
+struct WorldView<'w> {
+    now: SimTime,
+    tb: &'w Testbed,
+    mds: &'w Mds,
+    managers: &'w [JobManager],
+    competition: Option<&'w Competition>,
+    total_in_flight: &'w [u32],
+    total_reserved: &'w [u32],
+    start_utc_hour: f64,
+    full_rebuild: bool,
+    full_alloc_sort: bool,
+}
+
+/// One batch member's slice of the parallel phase: the tenant it owns
+/// exclusively, its pre-drawn RNG sub-stream (forked from the world RNG in
+/// ascending tenant order during phase 1, so the world stream advances
+/// identically at every thread count), and the delta it produces — the
+/// actions the merge barrier will apply in ascending tenant order.
+struct TenantShard<'t> {
+    tid: usize,
+    tenant: &'t mut Tenant,
+    rng: Rng,
+    actions: Vec<Action>,
+    job_work: f64,
+}
+
+/// Rebuild every dirty view entry of one tenant from its sources: the
+/// (stale) MDS record, GRAM slots net of competition claims and other
+/// tenants' occupancy, the demand-adjusted quote, the tenant engine's
+/// in-flight count and its advisor's measured service rate. Every rebuilt
+/// entry is immediately re-keyed in the tenant's candidate index
+/// (O(log R)), keeping the ranked orderings policies allocate from in
+/// lockstep with the table. Cost is O(dirty · log R); the pre-incremental
+/// pipeline paid O(resources) here every tick. Reads shared state only
+/// through the frozen snapshot and writes only tenant-local state, so the
+/// parallel phase runs it on disjoint tenants concurrently.
+// lint:par-section
+fn refresh_tenant_views(wv: &WorldView<'_>, tenant: &mut Tenant) {
+    if wv.full_rebuild {
+        let n = tenant.views.len();
+        for i in 0..n {
+            tenant.mark_view(ResourceId(i as u32));
+        }
+    }
+    let now = wv.now;
+    while let Some(r) = tenant.dirty_queue.pop() {
+        let i = r as usize;
+        tenant.view_dirty[i] = false;
+        let rid = ResourceId(r);
+        // lint:allow(PANIC-BUDGET): Mds::new builds one record per testbed resource and never removes any
+        let rec = wv.mds.record(rid).expect("record for every resource");
+        let planning_speed = rec.planning_speed();
+        let batch_queue = rec.batch_queue;
+        let spec = wv.tb.spec(rid);
+        let own = tenant.exp.in_flight_on(rid);
+        let foreign = wv.total_in_flight[i].saturating_sub(own);
+        // Foreign-only, like in-flight: the holder keeps seeing its own
+        // held slots — they are exactly what it dispatches into.
+        let foreign_rsv =
+            wv.total_reserved[i].saturating_sub(tenant.rsv.held_on(rid));
+        let quote = posted_quote(
+            wv.tb,
+            wv.start_utc_hour,
+            now,
+            &tenant.cfg.user,
+            rid,
+        );
+        let base_slots = wv.managers[i].slots();
+        let (slots, rate) = match wv.competition {
+            Some(comp) => (
+                comp.free_slots(wv.tb, rid, base_slots, foreign, foreign_rsv),
+                quote * comp.demand_premium(wv.tb, rid),
+            ),
+            None => (
+                visible_slots(base_slots, spec.cpus, 0, foreign, foreign_rsv),
+                quote,
+            ),
+        };
+        let claimed = wv.competition.map(|c| c.claimed(rid)).unwrap_or(0);
+        let util = utilization_of(
+            wv.total_in_flight[i],
+            claimed,
+            wv.total_reserved[i],
+            spec.cpus,
+        );
+        let rate = rate * spec.price.demand_premium(util);
+        // A live GRACE agreement overrides the posted/premium quote:
+        // DBC schedules against the price the tenant actually won.
+        let rate = match tenant.agreements[i] {
+            Some(a) if a.active(now) => a.rate,
+            _ => rate,
+        };
+        // A live committed hold locks the rate harder still: dispatches
+        // into it bill at the reservation's locked rate.
+        let rate = match tenant.rsv.get(rid) {
+            Some(r) if r.level == CommitLevel::Committed && r.active(now) => {
+                r.rate
+            }
+            _ => rate,
+        };
+        tenant.views[i] = ResourceView {
+            id: rid,
+            slots,
+            planning_speed,
+            rate,
+            in_flight: own,
+            measured_jphps: tenant.advisor.measured_jphps(rid),
+            batch_queue,
+        };
+        tenant.index.update(&tenant.views[i]);
+        tenant.report.view_refreshes += 1;
+    }
+}
+
+/// Phase 2 of the batched tick for one batch member: refresh the tenant's
+/// views against the frozen snapshot, audit the index (debug builds), run
+/// the sort-every-tick baseline re-rank if configured, and let the policy
+/// allocate off the pre-drawn RNG sub-stream. Produces the shard's action
+/// delta; nothing shared is touched — the merge barrier applies the delta
+/// in ascending tenant order afterwards.
+// lint:par-section
+fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
+    let tenant = &mut *shard.tenant;
+    refresh_tenant_views(wv, tenant);
+    // Index-consistency audit (debug builds): the same runtime cross-check
+    // of the DIRTY-PAIR discipline the sequential path runs. Small worlds
+    // every tick, index-storm-sized worlds sampled.
+    #[cfg(debug_assertions)]
+    {
+        if tenant.views.len() <= 4096 || tenant.report.ticks % 64 == 1 {
+            if let Err(e) = tenant.index.consistent_with(&tenant.views) {
+                panic!(
+                    "tenant {} index audit failed at t={}: {e}",
+                    shard.tid, wv.now
+                );
+            }
+        }
+    }
+    shard.job_work = tenant.advisor.job_work_ref_h();
+    // lint:allow(ND-CLOCK): alloc_ns is wall-clock telemetry about the allocator itself; it never feeds sim state
+    let alloc_t0 = std::time::Instant::now();
+    if wv.full_alloc_sort {
+        // Sort-every-tick baseline: throw the incremental rankings away
+        // and re-derive them all (bit-identical state, O(R log R) cost).
+        tenant.index.rebuild_from(&tenant.views);
+    }
+    shard.actions = tenant.advisor.advise(
+        TickCtx {
+            now: wv.now,
+            deadline: tenant.exp.deadline,
+            budget_headroom: tenant.ledger.headroom(),
+            views: &tenant.views,
+            candidates: &tenant.index,
+        },
+        &tenant.exp,
+        &mut shard.rng,
+    );
+    tenant.report.alloc_ns += alloc_t0.elapsed().as_nanos() as u64;
+}
+
 /// One tenant's construction inputs for [`GridWorld::new`].
 pub struct TenantSetup {
     /// Envelope + identity. `competition` and `start_utc_hour` are
@@ -369,6 +565,16 @@ pub struct GridWorld {
     /// ResourceId), maintained in lockstep with every hold transition —
     /// the third term of the slot-conservation invariant.
     total_reserved: Vec<u32>,
+    /// Worker threads for the parallel per-tenant phase of batched ticks.
+    /// 1 (the default) runs the identical three-phase pipeline on the
+    /// caller thread — the proven-bit-exact reference path.
+    threads: usize,
+    /// Wall-clock phase telemetry for the batched tick (see the
+    /// [`crate::metrics::WorldReport`] fields of the same names): never
+    /// read by the simulation, excluded from bit-exact comparisons.
+    snapshot_ns: u64,
+    parallel_ns: u64,
+    merge_ns: u64,
 }
 
 impl GridWorld {
@@ -525,6 +731,10 @@ impl GridWorld {
             clearing_prices: Vec::new(),
             reservations,
             total_reserved: vec![0; n],
+            threads: 1,
+            snapshot_ns: 0,
+            parallel_ns: 0,
+            merge_ns: 0,
         };
         // Seed availability churn per resource.
         for i in 0..world.tb.resources.len() {
@@ -636,6 +846,22 @@ impl GridWorld {
     /// compose.
     pub fn set_full_allocation_sort(&mut self, on: bool) {
         self.full_alloc_sort = on;
+    }
+
+    /// Worker threads for the parallel per-tenant phase of coincident-tick
+    /// batches (clamped to ≥ 1). Traces are bit-exact at every thread
+    /// count — the batch pipeline is phase-ordered and merge order is
+    /// ascending tenant id regardless of worker interleaving — so this is
+    /// purely a throughput knob. Prefer
+    /// [`crate::broker::ExperimentBuilder::threads`], which validates and
+    /// clamps against the tenant count.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// Configured worker-thread count for batched ticks.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// All tenants finished ⇒ the world run is over.
@@ -1245,6 +1471,9 @@ impl GridWorld {
             price_index: self.price_index,
             peak_premium: self.peak_premium,
             clearing_prices: self.clearing_prices,
+            snapshot_ns: self.snapshot_ns,
+            parallel_ns: self.parallel_ns,
+            merge_ns: self.merge_ns,
         }
     }
 
@@ -1253,7 +1482,37 @@ impl GridWorld {
     // lint:allow(DIRTY-PAIR): event marks are queued; each tenant's next on_tick refresh_dirty_views re-keys them
     fn handle(&mut self, ev: Ev) {
         match ev {
-            Ev::Tick { tid } => self.on_tick(tid as usize),
+            Ev::Tick { tid } => {
+                // Coalesce every consecutive Tick sharing this timestamp
+                // into one batch: coincident ticks take the three-phase
+                // snapshot pipeline (see module docs), a lone tick takes
+                // the original sequential path verbatim. Collection stops
+                // at the first non-Tick event so FIFO order against
+                // same-instant MdsRefresh/job events is preserved.
+                let now = self.q.now();
+                let mut batch = vec![tid as usize];
+                loop {
+                    let next = match self.q.peek() {
+                        Some((t, &Ev::Tick { tid }))
+                            if t.to_bits() == now.to_bits() =>
+                        {
+                            tid as usize
+                        }
+                        _ => break,
+                    };
+                    self.q.pop();
+                    batch.push(next);
+                }
+                if batch.len() == 1 {
+                    self.on_tick(batch[0]);
+                } else {
+                    // Each tenant has exactly one live tick chain, so the
+                    // batch is duplicate-free; merge order is ascending
+                    // tenant id by construction.
+                    batch.sort_unstable();
+                    self.on_tick_batch(&batch);
+                }
+            }
             Ev::MdsRefresh => {
                 // Only records whose up/load actually moved invalidate
                 // their view entries (in every tenant's table).
@@ -1348,95 +1607,24 @@ impl GridWorld {
         }
     }
 
-    /// Rebuild every dirty view entry of one tenant from its sources: the
-    /// (stale) MDS record, GRAM slots net of competition claims and other
-    /// tenants' occupancy, the demand-adjusted quote, the tenant engine's
-    /// in-flight count and its advisor's measured service rate. Every
-    /// rebuilt entry is immediately re-keyed in the tenant's candidate
-    /// index (O(log R)), keeping the ranked orderings policies allocate
-    /// from in lockstep with the table. Cost is O(dirty · log R); the
-    /// pre-incremental pipeline paid O(resources) here every tick.
+    /// Rebuild every dirty view entry of one tenant (and re-key its
+    /// candidate index) — the sequential entry point over
+    /// [`refresh_tenant_views`], which holds the actual refresh logic in
+    /// snapshot form so the parallel phase can run it on disjoint tenants.
     fn refresh_dirty_views(&mut self, tid: usize) {
-        if self.full_rebuild {
-            let n = self.tenants[tid].views.len();
-            for i in 0..n {
-                self.tenants[tid].mark_view(ResourceId(i as u32));
-            }
-        }
-        let now = self.q.now();
-        let tb = &self.tb;
-        let mds = &self.mds;
-        let managers = &self.managers;
-        let competition = self.competition.as_ref();
-        let total_in_flight = &self.total_in_flight;
-        let total_reserved = &self.total_reserved;
-        let start_utc_hour = self.start_utc_hour;
-        let tenant = &mut self.tenants[tid];
-        while let Some(r) = tenant.dirty_queue.pop() {
-            let i = r as usize;
-            tenant.view_dirty[i] = false;
-            let rid = ResourceId(r);
-            // lint:allow(PANIC-BUDGET): Mds::new builds one record per testbed resource and never removes any
-            let rec = mds.record(rid).expect("record for every resource");
-            let planning_speed = rec.planning_speed();
-            let batch_queue = rec.batch_queue;
-            let spec = tb.spec(rid);
-            let own = tenant.exp.in_flight_on(rid);
-            let foreign = total_in_flight[i].saturating_sub(own);
-            // Foreign-only, like in-flight: the holder keeps seeing its own
-            // held slots — they are exactly what it dispatches into.
-            let foreign_rsv =
-                total_reserved[i].saturating_sub(tenant.rsv.held_on(rid));
-            let quote =
-                posted_quote(tb, start_utc_hour, now, &tenant.cfg.user, rid);
-            let base_slots = managers[i].slots();
-            let (slots, rate) = match competition {
-                Some(comp) => (
-                    comp.free_slots(tb, rid, base_slots, foreign, foreign_rsv),
-                    quote * comp.demand_premium(tb, rid),
-                ),
-                None => (
-                    visible_slots(base_slots, spec.cpus, 0, foreign, foreign_rsv),
-                    quote,
-                ),
-            };
-            let claimed =
-                competition.map(|c| c.claimed(rid)).unwrap_or(0);
-            let util = utilization_of(
-                total_in_flight[i],
-                claimed,
-                total_reserved[i],
-                spec.cpus,
-            );
-            let rate = rate * spec.price.demand_premium(util);
-            // A live GRACE agreement overrides the posted/premium quote:
-            // DBC schedules against the price the tenant actually won.
-            let rate = match tenant.agreements[i] {
-                Some(a) if a.active(now) => a.rate,
-                _ => rate,
-            };
-            // A live committed hold locks the rate harder still: dispatches
-            // into it bill at the reservation's locked rate.
-            let rate = match tenant.rsv.get(rid) {
-                Some(r)
-                    if r.level == CommitLevel::Committed && r.active(now) =>
-                {
-                    r.rate
-                }
-                _ => rate,
-            };
-            tenant.views[i] = ResourceView {
-                id: rid,
-                slots,
-                planning_speed,
-                rate,
-                in_flight: own,
-                measured_jphps: tenant.advisor.measured_jphps(rid),
-                batch_queue,
-            };
-            tenant.index.update(&tenant.views[i]);
-            tenant.report.view_refreshes += 1;
-        }
+        let wv = WorldView {
+            now: self.q.now(),
+            tb: &self.tb,
+            mds: &self.mds,
+            managers: &self.managers,
+            competition: self.competition.as_ref(),
+            total_in_flight: &self.total_in_flight,
+            total_reserved: &self.total_reserved,
+            start_utc_hour: self.start_utc_hour,
+            full_rebuild: self.full_rebuild,
+            full_alloc_sort: self.full_alloc_sort,
+        };
+        refresh_tenant_views(&wv, &mut self.tenants[tid]);
     }
 
     fn on_tick(&mut self, tid: usize) {
@@ -1529,6 +1717,171 @@ impl GridWorld {
             let period = self.tenants[tid].cfg.tick_period_s;
             self.q.schedule_in(period, Ev::Tick { tid: tid as u32 });
         }
+    }
+
+    /// The three-phase batched tick for ≥ 2 tenants sharing one virtual
+    /// instant (see module docs). `batch` is ascending and duplicate-free.
+    ///
+    /// Phase 1 (sequential snapshot): expiry sweeps, repricing marks and —
+    /// with reservations on — the shared-state-mutating reserve-ahead
+    /// cascade run in ascending tenant order, then one RNG sub-stream per
+    /// member is forked from the world RNG in the same order, so the world
+    /// stream advances identically at every thread count. Phase 2
+    /// (parallel): disjoint tenant slices run view refresh + allocation
+    /// against the frozen [`WorldView`]. Phase 3 (merge barrier): deltas
+    /// apply in ascending tenant order behind a ground-truth capacity
+    /// guard, and next ticks reschedule in the same order. Nothing depends
+    /// on worker interleaving, so traces are bit-exact regardless of
+    /// `threads`.
+    fn on_tick_batch(&mut self, batch: &[usize]) {
+        let now = self.q.now();
+        let members: Vec<usize> = batch
+            .iter()
+            .copied()
+            .filter(|&tid| !self.tenants[tid].exp.finished())
+            .collect();
+        if members.is_empty() {
+            return; // nothing to do, nothing to reschedule
+        }
+        // -- phase 1: sequential snapshot ---------------------------------
+        // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
+        let snap_t0 = std::time::Instant::now();
+        self.expire_due(now);
+        for &tid in &members {
+            self.tenants[tid].report.ticks += 1;
+            self.tenants[tid].mark_repriced(now);
+        }
+        // The reserve-ahead move books real capacity (shared occupancy,
+        // ledger envelopes, cross-tenant view marks), so it stays in the
+        // sequential phase, cascading in ascending tenant order; the
+        // parallel refresh afterwards picks up every mark it left.
+        if self.reservations.is_some() {
+            for &tid in &members {
+                self.refresh_dirty_views(tid);
+                self.reserve_ahead(tid);
+            }
+            debug_assert!(
+                self.slot_conservation_ok(),
+                "slot conservation violated after batched reserve-ahead at t={now}"
+            );
+        }
+        let rngs: Vec<Rng> =
+            members.iter().map(|&tid| self.rng.fork(tid as u64)).collect();
+        self.snapshot_ns += snap_t0.elapsed().as_nanos() as u64;
+        // -- phase 2: parallel per-tenant work ----------------------------
+        // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
+        let par_t0 = std::time::Instant::now();
+        let mut member_flag = vec![false; self.tenants.len()];
+        for &tid in &members {
+            member_flag[tid] = true;
+        }
+        let wv = WorldView {
+            now,
+            tb: &self.tb,
+            mds: &self.mds,
+            managers: &self.managers,
+            competition: self.competition.as_ref(),
+            total_in_flight: &self.total_in_flight,
+            total_reserved: &self.total_reserved,
+            start_utc_hour: self.start_utc_hour,
+            full_rebuild: self.full_rebuild,
+            full_alloc_sort: self.full_alloc_sort,
+        };
+        // iter_mut ascends tenant ids and `members` is ascending, so the
+        // zip pairs each member with the sub-RNG forked for it above.
+        let mut shards: Vec<TenantShard<'_>> = self
+            .tenants
+            .iter_mut()
+            .enumerate()
+            .filter(|(tid, _)| member_flag[*tid])
+            .zip(rngs)
+            .map(|((tid, tenant), rng)| TenantShard {
+                tid,
+                tenant,
+                rng,
+                actions: Vec::new(),
+                job_work: 0.0,
+            })
+            .collect();
+        let workers = self.threads.min(shards.len()).max(1);
+        if workers == 1 {
+            // The reference path: same pipeline, caller thread.
+            for shard in &mut shards {
+                tick_tenant_shard(&wv, shard);
+            }
+        } else {
+            let chunk = shards.len().div_ceil(workers);
+            let wv = &wv;
+            std::thread::scope(|scope| {
+                for slice in shards.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for shard in slice {
+                            tick_tenant_shard(wv, shard);
+                        }
+                    });
+                }
+            });
+        }
+        let deltas: Vec<(usize, Vec<Action>, f64)> = shards
+            .into_iter()
+            .map(|s| (s.tid, s.actions, s.job_work))
+            .collect();
+        self.parallel_ns += par_t0.elapsed().as_nanos() as u64;
+        // -- phase 3: deterministic merge barrier -------------------------
+        // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
+        let merge_t0 = std::time::Instant::now();
+        for (tid, actions, job_work) in deltas {
+            for action in actions {
+                match action {
+                    Action::Submit { job, rid } => {
+                        if self.batch_submit_ok(tid, rid) {
+                            self.submit(tid, job, rid, job_work);
+                        }
+                    }
+                    Action::CancelQueued { job, rid } => {
+                        self.cancel_queued(tid, job, rid)
+                    }
+                }
+            }
+            if !self.tenants[tid].exp.finished() {
+                let period = self.tenants[tid].cfg.tick_period_s;
+                self.q.schedule_in(period, Ev::Tick { tid: tid as u32 });
+            }
+        }
+        debug_assert!(
+            self.slot_conservation_ok(),
+            "slot conservation violated after batch merge at t={now}"
+        );
+        self.merge_ns += merge_t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Merge-phase capacity guard. Batch members decide against the same
+    /// frozen snapshot, so their combined submits can oversubscribe a
+    /// machine that looked free to each of them individually. A submit is
+    /// admitted when ground truth still has an unclaimed CPU — or when the
+    /// tenant holds a live committed reservation slot there (dispatching
+    /// consumes the hold, so occupancy is net unchanged). A deferred job
+    /// stays Ready and is retried at the tenant's next tick, exactly like
+    /// a refused budget commit. Earlier tenants win contended last slots —
+    /// the same deterministic ascending-tenant order the sequential
+    /// cascade always gave them.
+    fn batch_submit_ok(&self, tid: usize, rid: ResourceId) -> bool {
+        let i = rid.0 as usize;
+        if let Some(r) = self.tenants[tid].rsv.get(rid) {
+            if r.level == CommitLevel::Committed
+                && r.active(self.q.now())
+                && r.slots > 0
+            {
+                return true;
+            }
+        }
+        let claimed = self
+            .competition
+            .as_ref()
+            .map(|c| c.claimed(rid))
+            .unwrap_or(0);
+        self.total_in_flight[i] + claimed + self.total_reserved[i]
+            < self.tb.spec(rid).cpus
     }
 
     // lint:allow(DIRTY-PAIR): dispatch marks are queued; refresh_dirty_views re-keys them at the next tick

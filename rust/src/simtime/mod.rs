@@ -113,6 +113,13 @@ impl<E> EventQueue<E> {
     pub fn next_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|s| s.time)
     }
+
+    /// Peek at the next event (time + payload) without popping it — what
+    /// lets a driver coalesce consecutive simultaneous events into one
+    /// batch while preserving FIFO order for everything else.
+    pub fn peek(&self) -> Option<(SimTime, &E)> {
+        self.heap.peek().map(|s| (s.time, &s.event))
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +170,21 @@ mod tests {
         q.schedule_in(5.0, "second");
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 15.0);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, "a");
+        q.schedule_at(2.0, "b");
+        assert_eq!(q.peek(), Some((2.0, &"a")));
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.processed(), 0);
+        q.pop();
+        // FIFO among simultaneous events survives the peek.
+        assert_eq!(q.peek(), Some((2.0, &"b")));
+        q.pop();
+        assert_eq!(q.peek(), None);
     }
 
     #[test]

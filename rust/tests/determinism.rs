@@ -5,104 +5,15 @@
 //! determinism rules (ND-HASH/ND-CLOCK/ND-FLOAT): if unordered iteration,
 //! a wall-clock read or a NaN-partial comparator ever leaks into the tick
 //! path, these traces diverge.
+//!
+//! The world builder and the bit-exact comparator live in
+//! `tests/common/mod.rs`, shared with `parallel_equivalence.rs` (which
+//! replays the same worlds across thread counts).
 
+mod common;
+
+use common::{assert_identical, contested_world};
 use nimrod_g::broker::Broker;
-use nimrod_g::metrics::WorldReport;
-use nimrod_g::sim::GridWorld;
-
-const PLAN: &str = "parameter i integer range from 1 to 40\n\
-                    task main\nexecute icc $i\nendtask";
-
-/// A contested three-tenant world with demand repricing — enough shared
-/// mutable state (cross-tenant occupancy, premium repricing, churny views)
-/// that any nondeterministic iteration order would shuffle the trace.
-fn contested_world(seed: u64) -> GridWorld {
-    Broker::experiment()
-        .plan(PLAN)
-        .deadline_h(18.0)
-        .policy("cost")
-        .user("rajkumar")
-        .seed(seed)
-        .testbed_scale(0.5)
-        .demand_pricing(0.7)
-        .tenant(
-            Broker::experiment()
-                .plan(PLAN)
-                .deadline_h(10.0)
-                .policy("time")
-                .user("davida"),
-        )
-        .tenant(
-            Broker::experiment()
-                .plan(PLAN)
-                .deadline_h(14.0)
-                .policy("deadline-only")
-                .user("stranger"),
-        )
-        .world()
-        .expect("world builds")
-}
-
-/// Two runs must match bit-for-bit: u64 counters exactly, f64s via
-/// `to_bits` (so `-0.0` vs `0.0` or a NaN sneaking in still fails).
-fn assert_identical(a: &WorldReport, b: &WorldReport, tag: &str) {
-    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
-    assert_eq!(a.tenants.len(), b.tenants.len(), "{tag}");
-    for (x, y) in a.tenants.iter().zip(&b.tenants) {
-        let who = format!("{tag}/{} ({})", x.user, x.policy);
-        assert_eq!(x.report.ticks, y.report.ticks, "{who}: ticks");
-        assert_eq!(
-            x.report.jobs_completed, y.report.jobs_completed,
-            "{who}: completions"
-        );
-        assert_eq!(
-            x.report.jobs_failed, y.report.jobs_failed,
-            "{who}: failures"
-        );
-        assert_eq!(
-            x.report.makespan_s.to_bits(),
-            y.report.makespan_s.to_bits(),
-            "{who}: makespan"
-        );
-        assert_eq!(
-            x.report.total_cost.to_bits(),
-            y.report.total_cost.to_bits(),
-            "{who}: spend"
-        );
-        assert_eq!(
-            x.report.busy_cpus.points(),
-            y.report.busy_cpus.points(),
-            "{who}: busy-cpu timeline"
-        );
-    }
-    assert_eq!(
-        a.price_index.len(),
-        b.price_index.len(),
-        "{tag}: price samples"
-    );
-    for (i, ((ta, pa), (tb, pb))) in
-        a.price_index.iter().zip(&b.price_index).enumerate()
-    {
-        assert_eq!(ta.to_bits(), tb.to_bits(), "{tag}: price sample {i} time");
-        assert_eq!(pa.to_bits(), pb.to_bits(), "{tag}: price sample {i} value");
-    }
-    assert_eq!(
-        a.peak_premium.to_bits(),
-        b.peak_premium.to_bits(),
-        "{tag}: peak premium"
-    );
-    assert_eq!(
-        a.clearing_prices.len(),
-        b.clearing_prices.len(),
-        "{tag}: clearing samples"
-    );
-    for (i, ((ta, pa), (tb, pb))) in
-        a.clearing_prices.iter().zip(&b.clearing_prices).enumerate()
-    {
-        assert_eq!(ta.to_bits(), tb.to_bits(), "{tag}: clearing {i} time");
-        assert_eq!(pa.to_bits(), pb.to_bits(), "{tag}: clearing {i} value");
-    }
-}
 
 #[test]
 fn contested_world_replays_bit_exactly_across_seeds() {

@@ -157,6 +157,40 @@ fn panic_budget_allowed_with_reason() {
     assert!(!fires("util/port.rs", fixtures::PANIC_BUDGET_ALLOWED, Rule::PanicBudget));
 }
 
+// -- PAR-SHARED --------------------------------------------------------------
+
+#[test]
+fn par_shared_fires_on_shared_state_in_par_section() {
+    let diags = lint_source("sim/shard.rs", fixtures::PAR_SHARED_FIRING);
+    let hits: Vec<_> = diags
+        .iter()
+        .filter(|d| d.rule == Rule::ParShared)
+        .collect();
+    assert!(
+        hits.iter().any(|d| d.message.contains("mark_view_all")),
+        "cross-tenant dirty broadcast must fire: {hits:?}"
+    );
+    assert!(
+        hits.iter().any(|d| d.message.contains("self.rng")),
+        "world-RNG access must fire: {hits:?}"
+    );
+    // Marker-driven, not path-scoped: the same source fires anywhere.
+    assert!(fires("broker/mod.rs", fixtures::PAR_SHARED_FIRING, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_clean_snapshot_reads_and_unmarked_fns() {
+    // Snapshot reads (`wv.*`), tenant-local marks and the pre-forked
+    // shard RNG are all fine; the unmarked merge-barrier fn may touch
+    // shared state freely.
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_CLEAN, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_allowed_with_reason() {
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_ALLOWED, Rule::ParShared));
+}
+
 // -- ALLOW-REASON (escape-hatch hygiene) -------------------------------------
 
 #[test]
@@ -188,6 +222,7 @@ fn rule_ids_are_stable() {
             "ND-FLOAT",
             "DIRTY-PAIR",
             "PANIC-BUDGET",
+            "PAR-SHARED",
             "ALLOW-REASON"
         ]
     );

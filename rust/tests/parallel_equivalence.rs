@@ -1,0 +1,89 @@
+//! Parallel-tick equivalence: the three-phase batched tenant tick must
+//! replay bit-for-bit at every thread count. `threads(1)` is the reference
+//! path — it runs the identical snapshot → per-tenant → merge pipeline,
+//! just on the calling thread — so any divergence at 2 or 4 workers means
+//! shared state leaked into the parallel phase (the PAR-SHARED lint's
+//! runtime backstop, the way `determinism.rs` backstops ND-*).
+//!
+//! Worlds and the bit-exact comparator come from `tests/common/mod.rs`.
+
+mod common;
+
+use common::{assert_identical, contested_builder};
+use nimrod_g::broker::Broker;
+use nimrod_g::metrics::WorldReport;
+
+/// Thread counts the suite proves equivalent. 4 exceeds the 3 tenants in
+/// every world here, so it also exercises the builder's clamp path.
+const THREADS: [usize; 2] = [2, 4];
+
+fn contested(seed: u64, threads: usize) -> WorldReport {
+    contested_builder(seed)
+        .threads(threads)
+        .world()
+        .expect("world builds")
+        .run_world()
+}
+
+fn scenario(name: &str, seed: u64, threads: usize) -> WorldReport {
+    Broker::scenario(name)
+        .expect("known scenario")
+        .seed(seed)
+        .threads(threads)
+        .run_world()
+        .expect("scenario runs")
+}
+
+#[test]
+fn contested_world_is_bit_exact_across_thread_counts() {
+    for seed in [7u64, 23] {
+        let sequential = contested(seed, 1);
+        // The worlds here tick every tenant on the same period from t=0,
+        // so multi-member batches must actually have formed — otherwise
+        // this suite would pass vacuously without ever running the
+        // parallel phase.
+        assert!(
+            sequential.parallel_ns > 0,
+            "contested/seed{seed}: no tick batch ever coalesced"
+        );
+        for threads in THREADS {
+            let parallel = contested(seed, threads);
+            assert_identical(
+                &sequential,
+                &parallel,
+                &format!("contested/seed{seed}/threads{threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn grace_auction_world_is_bit_exact_across_thread_counts() {
+    // Tender/bid negotiation, agreements and clearing prices all ride on
+    // the tick pipeline; the merge barrier must not reorder any of it.
+    let sequential = scenario("grace-auction", 11, 1);
+    for threads in THREADS {
+        let parallel = scenario("grace-auction", 11, threads);
+        assert_identical(
+            &sequential,
+            &parallel,
+            &format!("grace-auction/threads{threads}"),
+        );
+    }
+}
+
+#[test]
+fn reserve_ahead_world_is_bit_exact_across_thread_counts() {
+    // Reservations mutate shared slot accounting (holds, ledgers,
+    // total_reserved) — all of it stays in the sequential snapshot phase,
+    // and this proves the parallel phase observes it identically.
+    let sequential = scenario("reserve-ahead", 5, 1);
+    for threads in THREADS {
+        let parallel = scenario("reserve-ahead", 5, threads);
+        assert_identical(
+            &sequential,
+            &parallel,
+            &format!("reserve-ahead/threads{threads}"),
+        );
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: a par-section fn that reads shared state only through the
+// frozen snapshot, mutates only its own tenant, and draws from its
+// pre-forked sub-stream is clean. The unmarked fn below may touch shared
+// state freely — PAR-SHARED is marker-driven.
+// lint:par-section
+fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
+    let foreign = wv.total_in_flight[rid.0 as usize];
+    shard.tenant.mark_view(rid);
+    let roll = shard.rng.next_f64();
+    shard.actions.push(Action::Submit { jid, rid, roll });
+}
+
+fn merge_barrier(world: &mut World, rid: ResourceId) {
+    world.mark_view_all(rid);
+    world.dec_total_in_flight(rid);
+    let tie = world.rng_next();
+}

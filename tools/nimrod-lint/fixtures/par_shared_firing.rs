@@ -1,0 +1,9 @@
+// Fixture: PAR-SHARED fires when a par-section fn touches shared world
+// state — here a cross-tenant dirty broadcast and a world-RNG draw.
+// lint:par-section
+fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
+    shard.tenant.mark_view(rid);
+    world.mark_view_all(rid);
+    let roll = self.rng.next_f64();
+    shard.actions.push(Action::Submit { jid, rid, roll });
+}

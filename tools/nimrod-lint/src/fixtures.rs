@@ -27,5 +27,9 @@ pub const PANIC_BUDGET_FIRING: &str = include_str!("../fixtures/panic_budget_fir
 pub const PANIC_BUDGET_CLEAN: &str = include_str!("../fixtures/panic_budget_clean.rs");
 pub const PANIC_BUDGET_ALLOWED: &str = include_str!("../fixtures/panic_budget_allowed.rs");
 
+pub const PAR_SHARED_FIRING: &str = include_str!("../fixtures/par_shared_firing.rs");
+pub const PAR_SHARED_CLEAN: &str = include_str!("../fixtures/par_shared_clean.rs");
+pub const PAR_SHARED_ALLOWED: &str = include_str!("../fixtures/par_shared_allowed.rs");
+
 pub const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
 pub const ALLOW_UNKNOWN_RULE: &str = include_str!("../fixtures/allow_unknown_rule.rs");

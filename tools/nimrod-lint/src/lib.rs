@@ -17,7 +17,18 @@
 //! | ND-FLOAT     | raw `.partial_cmp(` comparators outside `scheduler::index`          |
 //! | DIRTY-PAIR   | a fn in `sim/world.rs` that marks views dirty but never re-keys     |
 //! | PANIC-BUDGET | `.unwrap()`/`.expect()` in non-test library code                    |
+//! | PAR-SHARED   | a `// lint:par-section` fn touching shared world state              |
 //! | ALLOW-REASON | a `lint:allow` marker with no reason or an unknown rule ID          |
+//!
+//! ## Par-section markers
+//!
+//! Functions that run in the parallel per-tenant phase of the batched world
+//! tick carry a `// lint:par-section` marker on the `fn` line (or in the
+//! contiguous comment/attribute block directly above it). PAR-SHARED then
+//! forbids shared-world-state access anywhere in their extent: no
+//! `mark_view_all`, no `total_in_flight` mutation plumbing, no world-RNG
+//! use — shared state is read through the phase-1 snapshot and mutated only
+//! by the phase-3 merge barrier.
 //!
 //! ## Allow markers
 //!
@@ -50,16 +61,18 @@ pub enum Rule {
     NdFloat,
     DirtyPair,
     PanicBudget,
+    ParShared,
     AllowHygiene,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 6] = [
+    pub const ALL: [Rule; 7] = [
         Rule::NdHash,
         Rule::NdClock,
         Rule::NdFloat,
         Rule::DirtyPair,
         Rule::PanicBudget,
+        Rule::ParShared,
         Rule::AllowHygiene,
     ];
 
@@ -70,6 +83,7 @@ impl Rule {
             Rule::NdFloat => "ND-FLOAT",
             Rule::DirtyPair => "DIRTY-PAIR",
             Rule::PanicBudget => "PANIC-BUDGET",
+            Rule::ParShared => "PAR-SHARED",
             Rule::AllowHygiene => "ALLOW-REASON",
         }
     }
@@ -93,6 +107,9 @@ impl Rule {
                 "a fn in sim/world.rs that marks views dirty must also re-key the CandidateIndex"
             }
             Rule::PanicBudget => "unwrap()/expect() in non-test library code must be allow-listed",
+            Rule::ParShared => {
+                "a lint:par-section fn must not touch shared world state (snapshot reads, merge-barrier writes only)"
+            }
             Rule::AllowHygiene => "every lint:allow must name a known rule and carry a reason",
         }
     }
@@ -482,6 +499,23 @@ const DIRTY_TRIGGERS: [&str; 2] = ["mark_view", "mark_view_all"];
 const REKEY_CALLS: [&str; 1] = ["refresh_dirty_views"];
 const REKEY_SUBSTRINGS: [&str; 3] = ["index.update(", "index.rebuild_from(", "CandidateIndex::from_views("];
 
+/// Marker naming a fn that runs in the parallel per-tenant tick phase.
+const PAR_SECTION_MARKER: &str = "lint:par-section";
+
+/// Calls forbidden inside a par-section extent: `mark_view_all` dirties
+/// every tenant's view of a resource (cross-tenant write) and
+/// `dec_total_in_flight` is the shared occupancy-table plumbing. Plain
+/// `mark_view` stays legal — it is tenant-local.
+const PAR_FORBIDDEN_CALLS: [&str; 2] = ["mark_view_all", "dec_total_in_flight"];
+
+/// World-field accesses forbidden inside a par-section extent (matched with
+/// ident-boundary ends, so `self.rng` does not hit a `self.rngs`): the
+/// world RNG must be pre-forked into per-tenant sub-streams during the
+/// snapshot phase, and the shared occupancy tables are read through the
+/// frozen `WorldView`, never through `self`.
+const PAR_FORBIDDEN_FIELDS: [&str; 3] =
+    ["self.rng", "self.total_in_flight", "self.total_reserved"];
+
 // ---------------------------------------------------------------------------
 // Linting
 // ---------------------------------------------------------------------------
@@ -601,6 +635,9 @@ fn lint_file(scope_path: &str, display_path: &str, text: &str) -> Vec<Diagnostic
     if is_world_file(scope_path) {
         check_dirty_pair(&lines, &markers, display_path, &mut diags);
     }
+    // PAR-SHARED is marker-driven, so it runs on every file: wherever a
+    // `lint:par-section` fn lives, its extent is checked.
+    check_par_shared(&lines, &markers, display_path, &mut diags);
 
     diags.sort_by(|a, b| {
         (a.line, a.rule, a.message.as_str()).cmp(&(b.line, b.rule, b.message.as_str()))
@@ -704,6 +741,117 @@ fn check_dirty_pair(
                     f.name
                 ),
             });
+        }
+    }
+}
+
+/// PAR-SHARED: a fn carrying the `lint:par-section` marker (on its `fn`
+/// line or in the contiguous annotation-only block directly above it) runs
+/// concurrently with other tenants' shards in phase 2 of the batched tick.
+/// Anywhere in its extent — nested fns and closures included — shared
+/// world state is off limits: the forbidden calls/field accesses must move
+/// to the snapshot (phase 1) or merge-barrier (phase 3) code. Diagnostics
+/// land on the offending line and are suppressible with
+/// `lint:allow(PAR-SHARED): reason` there.
+fn check_par_shared(
+    lines: &[SrcLine],
+    markers: &[Vec<AllowMarker>],
+    display_path: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let marker_at = |idx: usize| lines[idx].comment.contains(PAR_SECTION_MARKER);
+    // Same lookup shape as `is_allowed`: the marker counts on the decl
+    // line itself or in the contiguous run of annotation-only lines above.
+    let decl_marked = |line: usize| {
+        let idx = line - 1;
+        if marker_at(idx) {
+            return true;
+        }
+        let mut j = idx;
+        while j > 0 && lines[j - 1].annotation_only {
+            j -= 1;
+            if marker_at(j) {
+                return true;
+            }
+        }
+        false
+    };
+
+    struct Frame {
+        body_depth: i64,
+        marked: bool,
+    }
+
+    let mut depth: i64 = 0;
+    let mut paren: i64 = 0;
+    let mut open: Vec<Frame> = Vec::new();
+    let mut pending: Option<bool> = None;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let code = &line.code;
+
+        if !line.in_test && fn_decl_name(code).is_some() {
+            pending = Some(decl_marked(ln));
+        }
+
+        // In the parallel section on this line? True when a marked frame is
+        // already open, or becomes open mid-line (one-line fn bodies).
+        let mut in_par = open.iter().any(|f| f.marked);
+        for c in code.chars() {
+            match c {
+                '(' => paren += 1,
+                ')' => paren -= 1,
+                ';' => {
+                    // Bodyless declaration (trait method) — cancel it.
+                    if paren == 0 {
+                        pending = None;
+                    }
+                }
+                '{' => {
+                    if let Some(marked) = pending.take() {
+                        open.push(Frame {
+                            body_depth: depth,
+                            marked,
+                        });
+                        in_par |= marked;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open.last().is_some_and(|top| top.body_depth == depth) {
+                        open.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        if !in_par || line.in_test {
+            continue;
+        }
+        let mut hit = |tok: &str, what: &str| {
+            if !is_allowed(lines, markers, ln, Rule::ParShared) {
+                diags.push(Diagnostic {
+                    rule: Rule::ParShared,
+                    file: display_path.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{tok}` {what} inside a lint:par-section fn — shared state is read through the snapshot (phase 1) and mutated by the merge barrier (phase 3)"
+                    ),
+                });
+            }
+        };
+        for name in PAR_FORBIDDEN_CALLS {
+            if has_call(code, name) {
+                hit(name, "call");
+            }
+        }
+        for field in PAR_FORBIDDEN_FIELDS {
+            if !token_positions(code, field).is_empty() {
+                hit(field, "access");
+            }
         }
     }
 }
@@ -909,6 +1057,41 @@ mod tests {
         let src = "impl W { fn poke(&mut self) { self.mark_view(rid); } }\n";
         let diags = lint_source("sim/world.rs", src);
         assert!(diags.iter().any(|d| d.rule == Rule::DirtyPair && d.line == 1));
+    }
+
+    #[test]
+    fn par_section_extent_ends_at_the_closing_brace() {
+        // The marked fn's body fires; the fn after it is outside the
+        // extent and may touch shared state freely.
+        let src = "// lint:par-section\nfn shard_work(wv: &WorldView) {\n    self.rng.next_u64();\n}\nfn merge(world: &mut World) {\n    world.mark_view_all(rid);\n    self.rng.next_u64();\n}\n";
+        let diags = lint_source("sim/shard.rs", src);
+        let par: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::ParShared)
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(par, vec![3]);
+    }
+
+    #[test]
+    fn par_section_marker_reaches_through_doc_blocks_and_nested_items() {
+        // Marker above a doc block still marks the fn, and a nested
+        // (unmarked) closure/fn inside the extent inherits the discipline.
+        let src = "// lint:par-section\n/// Docs in between.\nfn shard_work(wv: &WorldView) {\n    let f = |x| {\n        self.total_in_flight[x] += 1;\n    };\n    fn helper() {\n        other.mark_view_all(rid);\n    }\n}\n";
+        let diags = lint_source("sim/shard.rs", src);
+        let par: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::ParShared)
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(par, vec![5, 8]);
+    }
+
+    #[test]
+    fn one_line_par_section_bodies_are_checked() {
+        let src = "// lint:par-section\nfn poke(wv: &W) { self.rng.gen(); }\n";
+        let diags = lint_source("sim/shard.rs", src);
+        assert!(diags.iter().any(|d| d.rule == Rule::ParShared && d.line == 2));
     }
 
     #[test]
