@@ -26,10 +26,13 @@
 //!    machinery (shadow probes, expiry sweeps, occupancy folding) versus
 //!    the same world with the subsystem left off.
 //! 6. **Parallel-tick thread sweep** — many-tenant churny worlds
-//!    (index-storm- and mega-grid-shaped) run at 1/2/4/8 workers. Every
-//!    thread count must replay the identical trace (asserted); the JSON
-//!    `thread_sweep` rows carry µs/tick, speedup vs 1 thread and the
-//!    merge-barrier share of the batched tick.
+//!    (index-storm- and mega-grid-shaped) run at 1/2/4/8 workers, each
+//!    multi-thread count twice: through the persistent worker pool and
+//!    through the per-batch `std::thread::scope` spawn baseline it
+//!    replaced. Every thread count and spawn mode must replay the
+//!    identical trace (asserted); the JSON `thread_sweep` rows carry
+//!    µs/tick, speedup vs 1 thread, the spawn mode and the merge-barrier
+//!    share of the batched tick (slimmed by the phase-2 submit precompute).
 //! 7. **Per-cycle component costs** — MDS refresh/discovery latency.
 //!
 //! Results are also written to `BENCH_grid_scaling.json` (machine-readable:
@@ -149,14 +152,17 @@ fn tenant_sweep_run(
 
 /// Run a churny, demand-priced, many-tenant world (the index-storm shape:
 /// heavy dirty-view traffic, every tenant ticking on the same period so
-/// tick batches hold all of them) at `threads` workers. Returns wall
-/// seconds and the world report; the caller compares traces across thread
-/// counts.
+/// tick batches hold all of them) at `threads` workers. `scoped_spawn`
+/// switches phase 2 from the persistent worker pool to the per-batch
+/// `std::thread::scope` baseline it replaced — same trace, different spawn
+/// overhead. Returns wall seconds and the world report; the caller
+/// compares traces across thread counts and spawn modes.
 fn storm_run(
     tb: Testbed,
     tenants: usize,
     jobs: usize,
     threads: usize,
+    scoped_spawn: bool,
 ) -> (f64, WorldReport) {
     let plan = format!(
         "parameter i integer range from 1 to {jobs}\n\
@@ -196,7 +202,8 @@ fn storm_run(
                 .user(&format!("storm{k}")),
         );
     }
-    let world = b.world().expect("thread sweep world");
+    let mut world = b.world().expect("thread sweep world");
+    world.set_scoped_spawn(scoped_spawn);
     let t0 = std::time::Instant::now();
     let report = world.run_world();
     (t0.elapsed().as_secs_f64(), report)
@@ -584,10 +591,10 @@ fn main() {
          ReservationConfig, where the subsystem must cost nothing.)"
     );
 
-    println!("\n== parallel tick: thread sweep ==\n");
+    println!("\n== parallel tick: thread sweep (pooled vs scoped spawn) ==\n");
     println!(
-        "{:<14} {:>8} {:>9} {:>8} {:>8} {:>11} {:>9} {:>12}",
-        "scenario", "tenants", "machines", "threads", "ticks", "µs/tick", "speedup", "merge share"
+        "{:<14} {:>8} {:>9} {:>8} {:>7} {:>8} {:>11} {:>9} {:>12}",
+        "scenario", "tenants", "machines", "threads", "spawn", "ticks", "µs/tick", "speedup", "merge share"
     );
     let mut thread_rows: Vec<Json> = Vec::new();
     let thread_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
@@ -607,72 +614,99 @@ fn main() {
         let machines = tb.resources.len();
         let mut base: Option<(f64, WorldReport)> = None;
         for &threads in thread_counts {
-            let (wall, wr) = storm_run(tb.clone(), tenants, jobs, threads);
-            // Bit-exact replay across thread counts is the contract the
-            // whole parallel section rests on — verify it right here where
-            // the speedup numbers are minted.
-            if let Some((_, w1)) = &base {
-                assert_eq!(
-                    w1.events, wr.events,
-                    "{scenario}: trace diverged at {threads} threads"
-                );
-                for (a, b) in w1.tenants.iter().zip(&wr.tenants) {
+            // At 1 thread both spawn modes are the same sequential
+            // reference path, so it gets one row; above that, the
+            // persistent pool and the per-batch scoped-spawn baseline it
+            // replaced run side by side on the identical world.
+            let spawns: &[&str] =
+                if threads == 1 { &["seq"] } else { &["pooled", "scoped"] };
+            for &spawn in spawns {
+                let scoped = spawn == "scoped";
+                let (wall, wr) =
+                    storm_run(tb.clone(), tenants, jobs, threads, scoped);
+                // Bit-exact replay across thread counts and spawn modes is
+                // the contract the whole parallel section rests on — verify
+                // it right here where the speedup numbers are minted.
+                if let Some((_, w1)) = &base {
                     assert_eq!(
-                        a.report.makespan_s.to_bits(),
-                        b.report.makespan_s.to_bits(),
-                        "{scenario}/{}: timeline diverged at {threads} threads",
-                        a.user
+                        w1.events, wr.events,
+                        "{scenario}: trace diverged at {threads} threads ({spawn})"
                     );
+                    for (a, b) in w1.tenants.iter().zip(&wr.tenants) {
+                        assert_eq!(
+                            a.report.makespan_s.to_bits(),
+                            b.report.makespan_s.to_bits(),
+                            "{scenario}/{}: timeline diverged at {threads} threads ({spawn})",
+                            a.user
+                        );
+                        assert_eq!(
+                            a.report.total_cost.to_bits(),
+                            b.report.total_cost.to_bits(),
+                            "{scenario}/{}: spend diverged at {threads} threads ({spawn})",
+                            a.user
+                        );
+                    }
+                }
+                // The mode under measurement must be the mode that ran.
+                if spawn == "pooled" {
+                    assert!(
+                        wr.pool_rounds > 0,
+                        "{scenario}: pooled run at {threads} threads never \
+                         scattered a batch through the pool"
+                    );
+                } else {
                     assert_eq!(
-                        a.report.total_cost.to_bits(),
-                        b.report.total_cost.to_bits(),
-                        "{scenario}/{}: spend diverged at {threads} threads",
-                        a.user
+                        wr.pool_rounds, 0,
+                        "{scenario}: {spawn} run must stay pool-free"
                     );
                 }
-            }
-            let ticks = wr
-                .tenants
-                .iter()
-                .map(|t| t.report.ticks)
-                .sum::<u64>()
-                .max(1);
-            let us_tick = wall * 1e6 / ticks as f64;
-            let speedup = match &base {
-                Some((wall1, _)) => wall1 / wall.max(1e-9),
-                None => 1.0,
-            };
-            let phase_ns = wr.snapshot_ns + wr.parallel_ns + wr.merge_ns;
-            let merge_share = if phase_ns > 0 {
-                wr.merge_ns as f64 / phase_ns as f64
-            } else {
-                0.0
-            };
-            println!(
-                "{scenario:<14} {tenants:>8} {machines:>9} {threads:>8} {ticks:>8} {us_tick:>11.1} {:>8.2}x {:>11.1}%",
-                speedup,
-                merge_share * 100.0,
-            );
-            thread_rows.push(Json::obj(vec![
-                ("scenario", Json::str(scenario)),
-                ("tenants", Json::num(tenants as f64)),
-                ("machines", Json::num(machines as f64)),
-                ("threads", Json::num(threads as f64)),
-                ("ticks", Json::num(ticks as f64)),
-                ("us_per_tick", Json::num(us_tick)),
-                ("speedup_vs_1", Json::num(speedup)),
-                ("merge_share", Json::num(merge_share)),
-            ]));
-            if base.is_none() {
-                base = Some((wall, wr));
+                let ticks = wr
+                    .tenants
+                    .iter()
+                    .map(|t| t.report.ticks)
+                    .sum::<u64>()
+                    .max(1);
+                let us_tick = wall * 1e6 / ticks as f64;
+                let speedup = match &base {
+                    Some((wall1, _)) => wall1 / wall.max(1e-9),
+                    None => 1.0,
+                };
+                let phase_ns = wr.snapshot_ns + wr.parallel_ns + wr.merge_ns;
+                let merge_share = if phase_ns > 0 {
+                    wr.merge_ns as f64 / phase_ns as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "{scenario:<14} {tenants:>8} {machines:>9} {threads:>8} {spawn:>7} {ticks:>8} {us_tick:>11.1} {:>8.2}x {:>11.1}%",
+                    speedup,
+                    merge_share * 100.0,
+                );
+                thread_rows.push(Json::obj(vec![
+                    ("scenario", Json::str(scenario)),
+                    ("tenants", Json::num(tenants as f64)),
+                    ("machines", Json::num(machines as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("spawn", Json::str(spawn)),
+                    ("ticks", Json::num(ticks as f64)),
+                    ("us_per_tick", Json::num(us_tick)),
+                    ("speedup_vs_1", Json::num(speedup)),
+                    ("merge_share", Json::num(merge_share)),
+                ]));
+                if base.is_none() {
+                    base = Some((wall, wr));
+                }
             }
         }
     }
     println!(
         "\n(speedup is whole-run wall time vs the same world at 1 thread — \
          phases 1/3 and event processing stay sequential, so this is the \
-         Amdahl-limited figure; merge share is the barrier's slice of the \
-         three-phase batched tick.)"
+         Amdahl-limited figure; pooled rows reuse the persistent worker \
+         pool, scoped rows pay a fresh std::thread::scope spawn per batch; \
+         merge share is the barrier's slice of the three-phase batched \
+         tick, slimmed by precomputing each submit's frozen half in \
+         phase 2.)"
     );
 
     // Machine-readable perf trajectory (archived by CI).

@@ -575,9 +575,12 @@ impl ExperimentBuilder {
             "threads(0) would leave the parallel tick phase with no workers — use threads(1) for the sequential reference path"
         );
         let threads = if self.threads > self.tenant_count() {
+            // One warning per world, naming the count actually used —
+            // the worker pool is sized once per world from this value.
             eprintln!(
-                "warning: threads({}) exceeds the {} tenant(s) — clamping (a batch never has more members than tenants, so extra workers would only idle)",
+                "warning: threads({}) exceeds the {} tenant(s) — clamping to {} worker(s) (a batch never has more members than tenants, so extra workers would only idle)",
                 self.threads,
+                self.tenant_count(),
                 self.tenant_count()
             );
             self.tenant_count()

@@ -27,7 +27,7 @@ pub struct ScenarioInfo {
 }
 
 /// The preset catalog.
-pub const CATALOG: [ScenarioInfo; 13] = [
+pub const CATALOG: [ScenarioInfo; 14] = [
     ScenarioInfo {
         name: "gusto",
         summary: "the paper's Figure-3 trial: 165-job ionization study, \
@@ -106,6 +106,13 @@ pub const CATALOG: [ScenarioInfo; 13] = [
                   synthetic grid with heavy churn and demand repricing — \
                   the dirty-view firehose where per-tick full sorts are \
                   worst and incremental re-keying must stay O(changed)",
+    },
+    ScenarioInfo {
+        name: "world-storm",
+        summary: "tenant-population stress: 256 small brokers share one \
+                  demand-priced 128-machine grid on a common tick period, \
+                  so every tick is a 256-member batch — the parallel-tick \
+                  worker pool's worst case (pair with run --threads N)",
     },
 ];
 
@@ -343,6 +350,45 @@ pub fn builder(name: &str) -> Result<ExperimentBuilder> {
             }
             b
         }
+        // The tenant-population stress case: 256 small brokers (the id
+        // space's full width) on one modest demand-priced grid, all on the
+        // same tick period so every tick coalesces into a 256-member
+        // batch. Where index-storm stresses per-tenant view volume, this
+        // stresses batch *width* — snapshot fan-out, pool scatter and the
+        // ordered merge barrier — which is exactly what the thread sweep
+        // and `parallel_equivalence.rs` replay it for.
+        "world-storm" => {
+            let swarm_plan = "parameter point integer range from 1 to 6\n\
+                              task main\nexecute chamber -p $point\nendtask";
+            let light = WorkloadConfig {
+                job_work_ref_h: 0.25,
+                ..WorkloadConfig::default()
+            };
+            let policies = ["time", "cost", "deadline-only", "conservative-time"];
+            let mut b = b
+                .plan(swarm_plan)
+                .workload(light.clone())
+                .synthetic_testbed(8, 16)
+                .deadline_h(8.0)
+                .policy("cost")
+                .user("swarm0")
+                .tick_period_s(600.0)
+                .demand_pricing(0.7);
+            for k in 1..256usize {
+                b = b.tenant(
+                    Broker::experiment()
+                        .plan(swarm_plan)
+                        .workload(light.clone())
+                        .deadline_h(8.0 + (k % 4) as f64)
+                        .policy(policies[k % policies.len()])
+                        .user(&format!("swarm{k}"))
+                        // Same period as tenant 0: every tick stays one
+                        // world-wide batch instead of fragmenting.
+                        .tick_period_s(600.0),
+                );
+            }
+            b
+        }
         other => bail!(
             "unknown scenario `{other}` (available: {})",
             names().join(", ")
@@ -380,6 +426,8 @@ mod tests {
         assert_eq!(builder("grace-rush").unwrap().tenant_count(), 8);
         assert_eq!(builder("reserve-ahead").unwrap().tenant_count(), 3);
         assert_eq!(builder("index-storm").unwrap().tenant_count(), 4);
+        // The id space's full width — GridWorld::new accepts exactly 256.
+        assert_eq!(builder("world-storm").unwrap().tenant_count(), 256);
         assert_eq!(builder("gusto").unwrap().tenant_count(), 1);
     }
 
@@ -404,7 +452,7 @@ mod tests {
         let b = builder("reserve-ahead").unwrap();
         assert!(b.config().reservations.is_some());
         // Reservations are world-level: off everywhere else.
-        for name in ["gusto", "grace-auction", "index-storm"] {
+        for name in ["gusto", "grace-auction", "index-storm", "world-storm"] {
             assert!(
                 builder(name).unwrap().config().reservations.is_none(),
                 "{name} must not reserve"

@@ -246,6 +246,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
              GRACE tender/bid market scenarios (agreements + clearing prices):\n  nimrod run --scenario grace-auction\n  nimrod run --scenario grace-rush\n\
              advance reservations (probe/reserve/commit, shadow schedules):\n  nimrod run --scenario reserve-ahead\n\
              candidate-index stress (10k machines, churn, 4 tenants):\n  nimrod run --scenario index-storm\n\
+             tenant-population stress (256 brokers, batched parallel ticks):\n  nimrod run --scenario world-storm --threads 8\n\
              (--seed/--scale affect the whole world; --policy/--deadline-h/\n\
              --budget/--user retarget tenant 0 only)"
         );

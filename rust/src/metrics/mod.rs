@@ -243,6 +243,13 @@ pub struct WorldReport {
     /// Wall nanoseconds of phase 3 — the deterministic merge barrier that
     /// applies tenant deltas in ascending tenant order.
     pub merge_ns: u64,
+    /// Lanes of the persistent phase-2 worker pool (spawned workers plus
+    /// the participating caller). 0 when no pool was ever built: a
+    /// sequential world, a `set_scoped_spawn` bench run, or a world whose
+    /// ticks never coincided.
+    pub pool_workers: u32,
+    /// Coincident-tick batches fanned out through the persistent pool.
+    pub pool_rounds: u64,
 }
 
 impl Default for WorldReport {
@@ -258,6 +265,8 @@ impl Default for WorldReport {
             snapshot_ns: 0,
             parallel_ns: 0,
             merge_ns: 0,
+            pool_workers: 0,
+            pool_rounds: 0,
         }
     }
 }

@@ -76,10 +76,17 @@ impl Ord for TotalF64 {
 /// That independence is what lets the index persist across ticks as the
 /// work estimate moves with completion history.
 pub fn cost_rank_key(v: &ResourceView) -> f64 {
-    if v.planning_speed <= 0.0 {
+    cost_rank_key_parts(v.rate, v.planning_speed)
+}
+
+/// [`cost_rank_key`] from bare columns — the form the struct-of-arrays
+/// refresh path ([`super::ViewColumns`]) feeds. One body for both entry
+/// points keeps AoS and SoA re-keying bit-identical by construction.
+pub fn cost_rank_key_parts(rate: f64, planning_speed: f64) -> f64 {
+    if planning_speed <= 0.0 {
         f64::INFINITY
     } else {
-        v.rate * 3600.0 / v.planning_speed
+        rate * 3600.0 / planning_speed
     }
 }
 
@@ -91,9 +98,18 @@ pub fn cost_rank_key(v: &ResourceView) -> f64 {
 /// for history-aware out-of-crate policies, and costs one extra O(log R)
 /// set touch per re-key.
 pub fn service_rank_key(v: &ResourceView) -> f64 {
-    match v.measured_jphps {
-        Some(m) if m > 0.0 => m,
-        _ => v.planning_speed,
+    service_rank_key_parts(v.measured_jphps.unwrap_or(0.0), v.planning_speed)
+}
+
+/// [`service_rank_key`] from bare columns, with "no history" encoded as a
+/// non-positive `measured` (the [`super::ViewColumns`] convention —
+/// `Some(m)` with `m ≤ 0` already fell back to the prior, so `None ↦ 0.0`
+/// is lossless for ranking purposes).
+pub fn service_rank_key_parts(measured: f64, planning_speed: f64) -> f64 {
+    if measured > 0.0 {
+        measured
+    } else {
+        planning_speed
     }
 }
 
@@ -169,7 +185,13 @@ impl CandidateIndex {
     /// Down, unauthorized and saturated machines fall out of every
     /// ranking here, so policies never re-filter them.
     pub fn is_eligible(v: &ResourceView) -> bool {
-        v.planning_speed > 0.0 && v.slots > 0
+        Self::is_eligible_parts(v.planning_speed, v.slots)
+    }
+
+    /// [`CandidateIndex::is_eligible`] from bare columns (see
+    /// [`cost_rank_key_parts`] for why the parts forms exist).
+    pub fn is_eligible_parts(planning_speed: f64, slots: u32) -> bool {
+        planning_speed > 0.0 && slots > 0
     }
 
     /// Re-key one resource from its freshly-rebuilt view: remove the stale
@@ -177,11 +199,54 @@ impl CandidateIndex {
     /// still eligible. O(log R). Call this for every view entry a refresh
     /// rewrites — see the module-level maintenance contract.
     pub fn update(&mut self, v: &ResourceView) {
-        let i = v.id.0 as usize;
+        self.unfile(v.id.0);
+        if !Self::is_eligible(v) {
+            return;
+        }
+        self.file(
+            v.id.0,
+            RankKeys {
+                cost: cost_rank_key(v),
+                speed: v.planning_speed,
+                rate: v.rate,
+                service: service_rank_key(v),
+            },
+        );
+    }
+
+    /// [`CandidateIndex::update`] reading the struct-of-arrays mirror
+    /// instead of a [`ResourceView`] — the sim world's dirty-refresh hot
+    /// path. Re-keying from four dense, same-index arrays touches 25 bytes
+    /// per resource instead of striding whole view structs; every key goes
+    /// through the same `_parts` helpers as [`CandidateIndex::update`], so
+    /// the two entry points produce bit-identical rankings (unit-tested
+    /// below).
+    pub fn update_cols(&mut self, rid: ResourceId, cols: &super::ViewColumns) {
+        self.unfile(rid.0);
+        let i = rid.0 as usize;
+        let speed = cols.speed[i];
+        if !Self::is_eligible_parts(speed, cols.slots[i]) {
+            return;
+        }
+        let rate = cols.rate[i];
+        self.file(
+            rid.0,
+            RankKeys {
+                cost: cost_rank_key_parts(rate, speed),
+                speed,
+                rate,
+                service: service_rank_key_parts(cols.measured[i], speed),
+            },
+        );
+    }
+
+    /// Remove resource `r`'s stale entries (if ranked), growing the key
+    /// table to cover `r` on the way.
+    fn unfile(&mut self, r: u32) {
+        let i = r as usize;
         if i >= self.keys.len() {
             self.keys.resize(i + 1, None);
         }
-        let r = v.id.0;
         if let Some(k) = self.keys[i].take() {
             self.by_cost
                 .remove(&(TotalF64(k.cost), Reverse(TotalF64(k.speed)), r));
@@ -189,21 +254,17 @@ impl CandidateIndex {
             self.by_rate.remove(&(TotalF64(k.rate), r));
             self.by_service.remove(&(Reverse(TotalF64(k.service)), r));
         }
-        if !Self::is_eligible(v) {
-            return;
-        }
-        let k = RankKeys {
-            cost: cost_rank_key(v),
-            speed: v.planning_speed,
-            rate: v.rate,
-            service: service_rank_key(v),
-        };
+    }
+
+    /// Insert resource `r` under freshly-computed keys and record them for
+    /// the next [`CandidateIndex::unfile`].
+    fn file(&mut self, r: u32, k: RankKeys) {
         self.by_cost
             .insert((TotalF64(k.cost), Reverse(TotalF64(k.speed)), r));
         self.by_speed.insert((Reverse(TotalF64(k.speed)), r));
         self.by_rate.insert((TotalF64(k.rate), r));
         self.by_service.insert((Reverse(TotalF64(k.service)), r));
-        self.keys[i] = Some(k);
+        self.keys[r as usize] = Some(k);
     }
 
     /// Number of eligible resources.
@@ -459,6 +520,58 @@ mod tests {
         assert!(err.contains("still ranked"), "got: {err}");
         ix.update(&views[2]);
         assert!(ix.consistent_with(&views).is_ok());
+    }
+
+    #[test]
+    fn update_cols_matches_update_bit_exactly() {
+        use super::super::ViewColumns;
+        // Cover the encoding edges: no history (None), zero / negative
+        // measured history (both fall back to the prior), a down machine,
+        // a saturated machine, and a plain measured entry.
+        let mut views = vec![
+            view(0, 4, 1.0, 2.0),
+            view(1, 2, 2.5, 0.4),
+            view(2, 0, 2.0, 1.0), // saturated
+            view(3, 4, 0.0, 1.0), // down
+            view(4, 1, 1.5, 3.0),
+            view(5, 3, 0.7, 0.9),
+        ];
+        views[1].measured_jphps = Some(4.25);
+        views[4].measured_jphps = Some(0.0);
+        views[5].measured_jphps = Some(-1.0);
+        let mut cols = ViewColumns::new(views.len());
+        let mut via_views = CandidateIndex::new(views.len());
+        let mut via_cols = CandidateIndex::new(views.len());
+        for v in &views {
+            cols.set(v);
+            via_views.update(v);
+            via_cols.update_cols(v.id, &cols);
+        }
+        assert_eq!(ranked(via_views.cost_ranked()), ranked(via_cols.cost_ranked()));
+        assert_eq!(ranked(via_views.speed_ranked()), ranked(via_cols.speed_ranked()));
+        assert_eq!(ranked(via_views.rate_ranked()), ranked(via_cols.rate_ranked()));
+        assert_eq!(
+            ranked(via_views.service_ranked()),
+            ranked(via_cols.service_ranked())
+        );
+        // The audit bit-compares stored keys against a fresh AoS re-key, so
+        // passing it proves the SoA path's keys match to the last bit.
+        assert!(via_cols.consistent_with(&views).is_ok());
+        // Churn through eligibility flips on both paths in lockstep.
+        views[0].planning_speed = 0.0;
+        views[2].slots = 3;
+        views[4].measured_jphps = Some(9.0);
+        for v in [&views[0], &views[2], &views[4]] {
+            cols.set(v);
+            via_views.update(v);
+            via_cols.update_cols(v.id, &cols);
+        }
+        assert_eq!(ranked(via_views.cost_ranked()), ranked(via_cols.cost_ranked()));
+        assert_eq!(
+            ranked(via_views.service_ranked()),
+            ranked(via_cols.service_ranked())
+        );
+        assert!(via_cols.consistent_with(&views).is_ok());
     }
 
     #[test]

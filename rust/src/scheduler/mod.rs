@@ -127,6 +127,69 @@ impl ResourceView {
     }
 }
 
+/// Struct-of-arrays mirror of the ranking-relevant [`ResourceView`]
+/// columns, indexed by dense resource id. The dirty-view refresh re-keys
+/// the candidate index for every changed resource; chasing those four
+/// fields through 60-byte view structs is cache-hostile on 10k-machine
+/// grids, so the sim world maintains this mirror alongside the view table
+/// and re-keys through [`CandidateIndex::update_cols`] instead. The
+/// columns are a *projection* of the views, never a second source of
+/// truth: whatever writes `views[i]` writes `cols.set(&views[i])` in the
+/// same breath (the DIRTY-PAIR discipline extended to the mirror), and
+/// the debug-tick `consistent_with` audit catches drift.
+#[derive(Debug, Clone, Default)]
+pub struct ViewColumns {
+    /// Quoted G$/CPU-second ([`ResourceView::rate`]).
+    pub rate: Vec<f64>,
+    /// Admitted slots ([`ResourceView::slots`]).
+    pub slots: Vec<u32>,
+    /// Stale directory speed ([`ResourceView::planning_speed`]).
+    pub speed: Vec<f64>,
+    /// Measured jobs/hour/slot, `ResourceView::measured_jphps` with
+    /// "no history" flattened to `0.0` (lossless for ranking: a
+    /// non-positive measurement already falls back to the speed prior —
+    /// see [`index::service_rank_key_parts`]).
+    pub measured: Vec<f64>,
+}
+
+impl ViewColumns {
+    /// Zeroed columns for `n` resources (all ineligible until `set`).
+    pub fn new(n: usize) -> ViewColumns {
+        ViewColumns {
+            rate: vec![0.0; n],
+            slots: vec![0; n],
+            speed: vec![0.0; n],
+            measured: vec![0.0; n],
+        }
+    }
+
+    /// Project one freshly-rebuilt view into the columns, growing them if
+    /// `v.id` is beyond the current size.
+    pub fn set(&mut self, v: &ResourceView) {
+        let i = v.id.0 as usize;
+        if i >= self.slots.len() {
+            self.rate.resize(i + 1, 0.0);
+            self.slots.resize(i + 1, 0);
+            self.speed.resize(i + 1, 0.0);
+            self.measured.resize(i + 1, 0.0);
+        }
+        self.rate[i] = v.rate;
+        self.slots[i] = v.slots;
+        self.speed[i] = v.planning_speed;
+        self.measured[i] = v.measured_jphps.unwrap_or(0.0);
+    }
+
+    /// Number of resources covered.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when sized for zero resources.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
 /// Experiment state the policy plans against.
 #[derive(Debug)]
 pub struct SchedCtx<'a> {

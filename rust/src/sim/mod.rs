@@ -47,6 +47,7 @@
 //! identical traces (see `rust/tests/`).
 
 pub mod live;
+pub mod pool;
 pub mod world;
 
 pub use world::{GridWorld, TenantSetup};

@@ -1,0 +1,355 @@
+//! Persistent worker pool for the parallel per-tenant phase of batched
+//! ticks.
+//!
+//! PR 8 spawned fresh OS threads through `std::thread::scope` on every
+//! coincident-tick batch. That is correct but pays thread creation and
+//! teardown (tens of microseconds per worker) on *every* batch, which
+//! bounds the speedup exactly where parallelism matters most: many small
+//! batches. [`WorkerPool`] amortizes that cost across the whole run —
+//! workers are spawned once per [`crate::sim::GridWorld`], parked on a
+//! condvar between batches, and handed each batch through a shared
+//! claim counter ([`WorkerPool::scatter`]).
+//!
+//! **Determinism.** The pool moves *where* shard work runs, never *what*
+//! it computes: each slice element is claimed by exactly one worker,
+//! every element is processed exactly once, and `scatter` does not return
+//! until all of them finished. Which worker ran which element is the only
+//! thing scheduling affects, and nothing in the shard pipeline depends on
+//! it (the `PAR-SHARED` lint rule statically rejects shared-state access
+//! in pool-run closures just as it does in `// lint:par-section` fns), so
+//! traces stay bit-exact at every worker count.
+//!
+//! **Lifetimes.** Long-lived workers cannot borrow the per-batch shards
+//! directly, so `scatter` erases the item type behind a raw base pointer
+//! plus a monomorphized trampoline and acts as its own scope: the caller
+//! participates in the claim loop and then blocks until every worker has
+//! checked the round in, which is what makes the borrow sound — no worker
+//! can touch the batch after `scatter` returns. A panic inside the
+//! closure is caught on the worker, aborts the round's remaining claims,
+//! and is resumed on the caller thread after the barrier (the pool itself
+//! stays usable). Dropping the pool parks no work: it flags shutdown,
+//! wakes everyone and joins every worker, so a dropped
+//! [`crate::sim::GridWorld`] leaks no threads.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// One published batch: an erased pointer to the caller's stack context,
+/// the monomorphized trampoline that reconstitutes it, and the item count
+/// workers claim against.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    len: usize,
+}
+
+// SAFETY: `data` points at a `Ctx` on the `scatter` caller's stack, and
+// `scatter` blocks until every worker has checked the round in before
+// returning — the pointee strictly outlives every dereference. Item
+// indices are claimed exclusively under the state mutex, so no two
+// threads ever touch the same element.
+unsafe impl Send for Job {}
+
+/// Shared pool state behind the hand-off mutex.
+struct State {
+    /// Batch counter; workers run one claim loop per observed increment.
+    round: u64,
+    /// Next unclaimed item index of the current round.
+    next: usize,
+    /// Workers that have not yet checked the current round in.
+    remaining: usize,
+    job: Option<Job>,
+    /// First panic payload caught this round; resumed on the caller.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between rounds.
+    work_cv: Condvar,
+    /// The caller parks here until `remaining` hits zero.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        // A poisoned mutex means a thread panicked while holding it; the
+        // critical sections below are plain counter bookkeeping (closure
+        // panics are caught outside the lock), so the state is still
+        // coherent — continue rather than double-panic.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A fixed-size pool of long-lived workers created once and reused for
+/// every batch. See the module docs for the hand-off protocol.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Typed context `scatter` publishes behind the erased [`Job`] pointer.
+struct Ctx<T, F> {
+    base: *mut T,
+    f: *const F,
+}
+
+/// Reconstitute the typed context and run the closure on item `i`. Safety
+/// contract is [`Job`]'s: exclusive index claims, caller-outlives-round.
+unsafe fn call_one<T, F: Fn(&mut T) + Sync>(data: *const (), i: usize) {
+    let ctx = &*(data as *const Ctx<T, F>);
+    (*ctx.f)(&mut *ctx.base.add(i));
+}
+
+impl WorkerPool {
+    /// A pool presenting `workers` total lanes of parallelism. The caller
+    /// thread is lane 0 (it claims items alongside the pool in
+    /// [`WorkerPool::scatter`]), so `workers - 1` OS threads are spawned;
+    /// `new(1)` spawns none and `scatter` degenerates to a plain loop.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                round: 0,
+                next: 0,
+                remaining: 0,
+                job: None,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Total parallel lanes (spawned workers + the participating caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f` once on every element of `items`, fanned across the pool.
+    /// Blocks until every element is done; panics inside `f` are re-raised
+    /// here after the round has fully drained. Each element is visited by
+    /// exactly one thread; which thread is the only scheduling freedom, so
+    /// order-independent per-element work stays deterministic.
+    pub fn scatter<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        if self.handles.is_empty() || items.len() <= 1 {
+            // Nothing to fan out: the reference path, caller thread only.
+            for it in items.iter_mut() {
+                f(it);
+            }
+            return;
+        }
+        let len = items.len();
+        let ctx = Ctx { base: items.as_mut_ptr(), f: &f };
+        let job = Job {
+            data: (&ctx as *const Ctx<T, F>).cast(),
+            call: call_one::<T, F>,
+            len,
+        };
+        {
+            let mut st = self.shared.lock();
+            st.round = st.round.wrapping_add(1);
+            st.next = 0;
+            st.remaining = self.handles.len();
+            st.job = Some(job);
+            self.shared.work_cv.notify_all();
+        }
+        // Lane 0: the caller claims items alongside the woken workers.
+        loop {
+            let i = {
+                let mut st = self.shared.lock();
+                if st.next >= len {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                i
+            };
+            // SAFETY: index `i` was claimed exclusively above and `ctx`
+            // lives until the barrier below.
+            let hit = catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, i)
+            }));
+            if let Err(payload) = hit {
+                let mut st = self.shared.lock();
+                st.next = len; // abort the round's remaining claims
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+        }
+        // Barrier: `scatter` must not return (releasing the `items`
+        // borrow) while any worker could still be inside an element.
+        let mut st = self.shared.lock();
+        while st.remaining > 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            // A worker's own panics are caught in its claim loop, so join
+            // errors are not expected; swallowing one at shutdown beats
+            // panicking in Drop.
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one spawned worker: park until a new round (or shutdown),
+/// claim-and-run items until the round is dry, check in, repeat.
+fn worker_loop(shared: &Shared) {
+    let mut seen: u64 = 0;
+    let mut st = shared.lock();
+    loop {
+        while !st.shutdown && st.round == seen {
+            st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.shutdown {
+            return;
+        }
+        seen = st.round;
+        if let Some(job) = st.job {
+            loop {
+                if st.next >= job.len {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                drop(st);
+                // SAFETY: exclusive claim of `i`; the caller's barrier
+                // keeps the pointee alive until we check in below.
+                let hit = catch_unwind(AssertUnwindSafe(|| unsafe {
+                    (job.call)(job.data, i)
+                }));
+                st = shared.lock();
+                if let Err(payload) = hit {
+                    st.next = job.len;
+                    if st.panic.is_none() {
+                        st.panic = Some(payload);
+                    }
+                }
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scatter_visits_every_item_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for len in [0usize, 1, 2, 3, 4, 7, 64, 257] {
+            let mut items: Vec<u32> = vec![0; len];
+            pool.scatter(&mut items, |x| *x += 1);
+            assert!(items.iter().all(|&x| x == 1), "len {len}: {items:?}");
+        }
+    }
+
+    #[test]
+    fn batch_smaller_than_worker_count_still_drains() {
+        // 8 lanes, 2 items: six workers wake, find nothing to claim, and
+        // must still check the round in so scatter's barrier releases.
+        let pool = WorkerPool::new(8);
+        for round in 0..50 {
+            let mut items = vec![0u64; 2];
+            pool.scatter(&mut items, |x| *x = round + 1);
+            assert_eq!(items, vec![round + 1; 2]);
+        }
+    }
+
+    #[test]
+    fn rounds_reuse_the_same_workers_with_varying_lengths() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let mut total = 0;
+        for len in [5usize, 1, 0, 12, 3, 40] {
+            let mut items: Vec<u8> = vec![0; len];
+            pool.scatter(&mut items, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            total += len;
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), total);
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let mut items = vec![0u32; 10];
+        pool.scatter(&mut items, |x| *x = 9);
+        assert!(items.iter().all(|&x| x == 9));
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = WorkerPool::new(6);
+        assert_eq!(pool.workers(), 6);
+        // Run a round so the workers have demonstrably woken at least once.
+        let mut items = vec![0u32; 32];
+        pool.scatter(&mut items, |x| *x += 1);
+        let probe = Arc::clone(&pool.shared);
+        drop(pool);
+        // Every spawned worker held one Arc clone; after Drop joined them
+        // all, only the probe remains — no thread leaked past shutdown.
+        assert_eq!(Arc::strong_count(&probe), 1);
+    }
+
+    #[test]
+    fn closure_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u32> = (0..64).collect();
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter(&mut items, |x| {
+                if *x == 13 {
+                    panic!("unlucky shard");
+                }
+            });
+        }));
+        assert!(boom.is_err(), "worker panic must surface on the caller");
+        // The pool is still serviceable for later batches.
+        let mut again = vec![0u32; 16];
+        pool.scatter(&mut again, |x| *x = 7);
+        assert!(again.iter().all(|&x| x == 7));
+    }
+}

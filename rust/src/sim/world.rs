@@ -87,25 +87,39 @@
 //! sweeps, repricing marks and the (shared-state-mutating) reserve-ahead
 //! move run in ascending tenant order, then one per-tenant RNG sub-stream
 //! is forked from the world RNG per member, again in tenant order; (2) a
-//! **parallel per-tenant phase** — each worker thread owns a disjoint
-//! slice of the batch and runs view refresh, candidate-index re-keying and
-//! policy allocation against the frozen [`WorldView`] snapshot and its
-//! pre-drawn sub-RNG, producing per-tenant actions instead of mutating
-//! shared state (the `PAR-SHARED` lint rule rejects shared-state access in
-//! `lint:par-section` functions); (3) a **deterministic merge barrier** —
-//! actions are applied in ascending tenant order through a ground-truth
-//! capacity guard (snapshot decisions can collectively overbook a machine;
-//! deferred submits stay Ready and retry next tick, exactly like a refused
-//! budget commit), and the members' next ticks are rescheduled in the same
-//! order. No step depends on worker interleaving, so traces are bit-exact
-//! at **every** thread count: `threads(1)` runs the identical pipeline on
-//! the caller thread and is the reference path
-//! (`rust/tests/parallel_equivalence.rs` replays contested, auction and
-//! reservation worlds at 1/2/4 threads and compares `to_bits`). Batches of
-//! one — any single-tenant world — take the original sequential `on_tick`
-//! verbatim, which is what keeps [`super::GridSimulation`] byte-identical
-//! to the legacy driver: snapshot semantics and snapshot-vs-cascade
-//! differences only exist where two tenants actually share an instant.
+//! **parallel per-tenant phase** — the batch members are scattered across
+//! the world's persistent [`WorkerPool`] (long-lived workers created once
+//! per world and parked between batches, so small batches stop paying
+//! per-batch thread-spawn cost; `set_scoped_spawn` keeps the PR-8
+//! `std::thread::scope` baseline selectable for benches). Each shard runs
+//! view refresh, candidate-index re-keying (through the struct-of-arrays
+//! [`ViewColumns`] mirror) and policy allocation against the frozen
+//! [`WorldView`] snapshot and its pre-drawn sub-RNG, then *pre-computes*
+//! the frozen-input parts of its pending submits — posted-quote ×
+//! competition pricing, agreement lookup, effective speed, spec name, the
+//! per-job work draw — into [`PreparedSubmit`]s, producing a
+//! [`MergeAction`] delta instead of mutating shared state (the
+//! `PAR-SHARED` lint rule rejects shared-state access in
+//! `lint:par-section` functions and in closures run through
+//! `WorkerPool::scatter`); (3) a **deterministic merge barrier** — now
+//! only the genuinely order-dependent work: deltas apply in ascending
+//! tenant order through a ground-truth capacity guard (snapshot decisions
+//! can collectively overbook a machine; deferred submits stay Ready and
+//! retry next tick, exactly like a refused budget commit), each admitted
+//! submit finishes its rate from the *live* demand signal
+//! ([`GridWorld::submit_prepared`] — demand premiums and reservation
+//! holds move with earlier merge submits, so they cannot be precomputed),
+//! and the members' next ticks are rescheduled in the same order. No step
+//! depends on worker interleaving, so traces are bit-exact at **every**
+//! thread count: `threads(1)` runs the identical pipeline on the caller
+//! thread and is the reference path
+//! (`rust/tests/parallel_equivalence.rs` replays contested, auction,
+//! reservation and 256-tenant worlds at 1/2/4/8 threads and compares
+//! `to_bits`). Batches of one — any single-tenant world — take the
+//! original sequential `on_tick` verbatim, which is what keeps
+//! [`super::GridSimulation`] byte-identical to the legacy driver: snapshot
+//! semantics and snapshot-vs-cascade differences only exist where two
+//! tenants actually share an instant.
 
 use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
@@ -130,8 +144,10 @@ use crate::metrics::{Report, ResourceUsage, TenantOutcome, WorldReport};
 use crate::plan::JobSpec;
 use crate::scheduler::dbc::reservation_candidate_sets;
 use crate::scheduler::{
-    guarded_window_h, CandidateIndex, ResourceView, DEADLINE_SAFETY,
+    guarded_window_h, CandidateIndex, ResourceView, ViewColumns,
+    DEADLINE_SAFETY,
 };
+use crate::sim::pool::WorkerPool;
 use crate::simtime::EventQueue;
 use crate::types::{GridDollars, JobId, ResourceId, SimTime, HOUR};
 use crate::util::rng::Rng;
@@ -159,10 +175,12 @@ fn split_jid(gid: JobId) -> (usize, JobId) {
 }
 
 /// Pseudo job id carrying one reservation's ledger envelope (the
-/// worst-case cancellation penalty committed when the hold binds). Engine
-/// job ids stay below 2^24 (asserted in [`GridWorld::new`]) and tenant
-/// indices below 2^8, so the 0xFF tenant prefix can never collide with a
-/// real grid job id in any tenant's ledger.
+/// worst-case cancellation penalty committed when the hold binds). These
+/// ids live only inside per-tenant *ledgers*, where real job ids are
+/// tenant-local engine ids below 2^24 (asserted in [`GridWorld::new`]) —
+/// so the 0xFF prefix can never collide there, and the manager-namespace
+/// grid ids (where tenant 255's jobs do carry an 0xFF prefix) never meet
+/// a reservation id.
 fn rsv_jid(rid: ResourceId) -> JobId {
     JobId(0xFF00_0000 | rid.0)
 }
@@ -243,6 +261,12 @@ pub struct Tenant {
     /// O(log R) for exactly the entries `refresh_dirty_views` rebuilds —
     /// policies allocate off these instead of sorting the table.
     index: CandidateIndex,
+    /// Struct-of-arrays projection of the ranking-relevant `views` columns
+    /// (rate/slots/speed/measured, dense by resource id). Written in the
+    /// same breath as `views[i]` by the refresh, and what the index
+    /// re-keys from ([`CandidateIndex::update_cols`]) so the hot path
+    /// reads four dense arrays instead of striding view structs.
+    cols: ViewColumns,
     /// Static per-resource authorization for `cfg.user`; unauthorized
     /// entries stay zeroed forever and are never marked.
     authorized: Vec<bool>,
@@ -347,6 +371,7 @@ struct WorldView<'w> {
     now: SimTime,
     tb: &'w Testbed,
     mds: &'w Mds,
+    dyns: &'w [ResourceDyn],
     managers: &'w [JobManager],
     competition: Option<&'w Competition>,
     total_in_flight: &'w [u32],
@@ -356,16 +381,58 @@ struct WorldView<'w> {
     full_alloc_sort: bool,
 }
 
+/// The frozen-input half of one pending submit, computed in the parallel
+/// phase so the merge barrier only finishes the live half. Everything
+/// here is constant across the whole merge: posted quotes and competition
+/// premiums move only with marked events, agreements and effective speeds
+/// are untouched by merge submits, spec names are static, and the per-job
+/// work draw is a pure function of (sampler seed, job id). What *cannot*
+/// be precomputed — the demand premium (earlier merge submits raise
+/// utilization) and the committed-hold rate override (an earlier submit
+/// by the same tenant can consume the hold's last slot and close it) —
+/// stays in [`GridWorld::submit_prepared`].
+struct PreparedSubmit {
+    /// Posted per-user quote × background-competition premium; the live
+    /// demand premium multiplies this at merge time, in the same
+    /// left-to-right order `effective_rate` always used.
+    posted_x_comp: GridDollars,
+    /// Live GRACE agreement rate at tick time, if the tenant won one
+    /// (merge submits never create or expire agreements).
+    agreement_rate: Option<GridDollars>,
+    /// Effective speed under current background load, floored like every
+    /// cost estimate (`LoadUpdate` is a separate event, never mid-merge).
+    speed: f64,
+    /// Spec name for ledger lines (static; cloned off the hot merge path).
+    name: String,
+    /// The job's true work draw — pure in (sampler seed, job id).
+    work_ref_h: f64,
+}
+
+/// One entry of a shard's merge delta: a dispatcher [`Action`] with the
+/// frozen-input half of a submit already attached.
+enum MergeAction {
+    Submit {
+        job: JobId,
+        rid: ResourceId,
+        prep: PreparedSubmit,
+    },
+    CancelQueued {
+        job: JobId,
+        rid: ResourceId,
+    },
+}
+
 /// One batch member's slice of the parallel phase: the tenant it owns
 /// exclusively, its pre-drawn RNG sub-stream (forked from the world RNG in
 /// ascending tenant order during phase 1, so the world stream advances
 /// identically at every thread count), and the delta it produces — the
-/// actions the merge barrier will apply in ascending tenant order.
+/// prepared actions the merge barrier will apply in ascending tenant
+/// order.
 struct TenantShard<'t> {
     tid: usize,
     tenant: &'t mut Tenant,
     rng: Rng,
-    actions: Vec<Action>,
+    actions: Vec<MergeAction>,
     job_work: f64,
 }
 
@@ -452,8 +519,47 @@ fn refresh_tenant_views(wv: &WorldView<'_>, tenant: &mut Tenant) {
             measured_jphps: tenant.advisor.measured_jphps(rid),
             batch_queue,
         };
-        tenant.index.update(&tenant.views[i]);
+        // Project into the dense columns and re-key from them: the index
+        // touch reads 25 contiguous-array bytes instead of striding the
+        // view structs. Same keys to the last bit (`update_cols` shares
+        // the `_parts` key helpers with `update`; unit-proven in
+        // scheduler::index and audited by `consistent_with` below).
+        tenant.cols.set(&tenant.views[i]);
+        tenant.index.update_cols(rid, &tenant.cols);
         tenant.report.view_refreshes += 1;
+    }
+}
+
+/// Pre-compute the frozen-input half of one pending submit (see
+/// [`PreparedSubmit`] for the frozen/live split). Reads shared state only
+/// through the snapshot and the shard's own tenant, so the parallel phase
+/// runs it concurrently per shard; the merge barrier finishes the rate
+/// from the live demand signal in [`GridWorld::submit_prepared`].
+// lint:par-section
+fn prepare_submit(
+    wv: &WorldView<'_>,
+    tenant: &Tenant,
+    jid: JobId,
+    rid: ResourceId,
+) -> PreparedSubmit {
+    let i = rid.0 as usize;
+    let quote =
+        posted_quote(wv.tb, wv.start_utc_hour, wv.now, &tenant.cfg.user, rid);
+    let comp_premium = wv
+        .competition
+        .map(|c| c.demand_premium(wv.tb, rid))
+        .unwrap_or(1.0);
+    let agreement_rate = match tenant.agreements[i] {
+        Some(a) if a.active(wv.now) => Some(a.rate),
+        _ => None,
+    };
+    let spec = wv.tb.spec(rid);
+    PreparedSubmit {
+        posted_x_comp: quote * comp_premium,
+        agreement_rate,
+        speed: wv.dyns[i].effective_speed(spec).max(0.05),
+        name: spec.name.clone(),
+        work_ref_h: tenant.sampler.work_ref_h(jid),
     }
 }
 
@@ -489,7 +595,7 @@ fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
         // and re-derive them all (bit-identical state, O(R log R) cost).
         tenant.index.rebuild_from(&tenant.views);
     }
-    shard.actions = tenant.advisor.advise(
+    let actions = tenant.advisor.advise(
         TickCtx {
             now: wv.now,
             deadline: tenant.exp.deadline,
@@ -501,6 +607,23 @@ fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
         &mut shard.rng,
     );
     tenant.report.alloc_ns += alloc_t0.elapsed().as_nanos() as u64;
+    // Hoist the frozen-input half of every pending submit out of the
+    // merge barrier: pricing lookups, agreement checks, speed reads, name
+    // clones and work draws all run here, in parallel, leaving the
+    // barrier only the ordered capacity-guarded parts.
+    shard.actions = actions
+        .into_iter()
+        .map(|a| match a {
+            Action::Submit { job, rid } => MergeAction::Submit {
+                job,
+                rid,
+                prep: prepare_submit(wv, tenant, job, rid),
+            },
+            Action::CancelQueued { job, rid } => {
+                MergeAction::CancelQueued { job, rid }
+            }
+        })
+        .collect();
 }
 
 /// One tenant's construction inputs for [`GridWorld::new`].
@@ -569,25 +692,38 @@ pub struct GridWorld {
     /// 1 (the default) runs the identical three-phase pipeline on the
     /// caller thread — the proven-bit-exact reference path.
     threads: usize,
+    /// Persistent worker pool for phase 2, created lazily at the first
+    /// batch that can use one (`threads > 1` and ≥ 2 tenants) and reused
+    /// for every batch after — dropping the world joins its threads.
+    /// Stays `None` forever on sequential worlds and under
+    /// `set_scoped_spawn`.
+    pool: Option<WorkerPool>,
+    /// Benchmark baseline: spawn scoped threads per batch (the PR-8
+    /// behaviour) instead of using the persistent pool. Bit-identical
+    /// traces; only spawn overhead differs.
+    scoped_spawn: bool,
     /// Wall-clock phase telemetry for the batched tick (see the
     /// [`crate::metrics::WorldReport`] fields of the same names): never
     /// read by the simulation, excluded from bit-exact comparisons.
     snapshot_ns: u64,
     parallel_ns: u64,
     merge_ns: u64,
+    /// Batches fanned out through the persistent pool (telemetry).
+    pool_rounds: u64,
 }
 
 impl GridWorld {
     /// Build a world over `tb` hosting one tenant per [`TenantSetup`].
-    /// Panics on empty tenant lists, more than 255 tenants, or a tenant
-    /// with ≥ 2^24 jobs (the GRAM id-space partition).
+    /// Panics on empty tenant lists, more than 256 tenants, or a tenant
+    /// with ≥ 2^24 jobs (the GRAM id-space partition; see [`rsv_jid`] for
+    /// why the full 2^8 tenant range is collision-free).
     // lint:allow(DIRTY-PAIR): construction seeds the dirty queue; the first refresh_dirty_views builds the index
     pub fn new(tb: Testbed, setups: Vec<TenantSetup>) -> GridWorld {
         assert!(!setups.is_empty(), "a world needs at least one tenant");
         assert!(
-            setups.len() < (1 << (32 - TENANT_ID_SHIFT)),
+            setups.len() <= (1 << (32 - TENANT_ID_SHIFT)),
             "at most {} tenants per world",
-            (1 << (32 - TENANT_ID_SHIFT)) - 1
+            1 << (32 - TENANT_ID_SHIFT)
         );
         let world_seed = setups[0].cfg.seed;
         let start_utc_hour = setups[0].cfg.start_utc_hour;
@@ -684,6 +820,7 @@ impl GridWorld {
                 view_dirty: vec![false; n],
                 dirty_queue: Vec::with_capacity(n),
                 index: CandidateIndex::new(n),
+                cols: ViewColumns::new(n),
                 authorized,
                 tod_by_site,
                 last_tick_t: 0.0,
@@ -732,9 +869,12 @@ impl GridWorld {
             reservations,
             total_reserved: vec![0; n],
             threads: 1,
+            pool: None,
+            scoped_spawn: false,
             snapshot_ns: 0,
             parallel_ns: 0,
             merge_ns: 0,
+            pool_rounds: 0,
         };
         // Seed availability churn per resource.
         for i in 0..world.tb.resources.len() {
@@ -857,11 +997,41 @@ impl GridWorld {
     /// clamps against the tenant count.
     pub fn set_threads(&mut self, n: usize) {
         self.threads = n.max(1);
+        // Any existing pool was sized for the old count: shut it down
+        // (joining its workers) and let the next batch build a right-sized
+        // replacement lazily.
+        self.pool = None;
     }
 
     /// Configured worker-thread count for batched ticks.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Benchmark support: run phase 2 on per-batch `std::thread::scope`
+    /// spawns (the PR-8 behaviour) instead of the persistent worker pool.
+    /// Traces are bit-identical — shard work does not depend on which
+    /// thread runs it — so this exists purely for the pooled-vs-scoped
+    /// spawn-overhead comparison in `benches/grid_scaling.rs`. Mirrors
+    /// [`set_full_view_rebuild`](Self::set_full_view_rebuild).
+    pub fn set_scoped_spawn(&mut self, on: bool) {
+        self.scoped_spawn = on;
+        if on {
+            self.pool = None;
+        }
+    }
+
+    /// Lanes of parallelism batched ticks actually use: the configured
+    /// thread count clamped to the tenant population (a batch never has
+    /// more members than tenants, so extra workers would only idle).
+    pub fn effective_workers(&self) -> usize {
+        self.threads.min(self.tenants.len()).max(1)
+    }
+
+    /// Number of batches fanned out through the persistent worker pool so
+    /// far (0 on sequential or scoped-spawn worlds) — telemetry.
+    pub fn pool_rounds(&self) -> u64 {
+        self.pool_rounds
     }
 
     /// All tenants finished ⇒ the world run is over.
@@ -1474,6 +1644,9 @@ impl GridWorld {
             snapshot_ns: self.snapshot_ns,
             parallel_ns: self.parallel_ns,
             merge_ns: self.merge_ns,
+            pool_workers: self.pool.as_ref().map(|p| p.workers()).unwrap_or(0)
+                as u32,
+            pool_rounds: self.pool_rounds,
         }
     }
 
@@ -1616,6 +1789,7 @@ impl GridWorld {
             now: self.q.now(),
             tb: &self.tb,
             mds: &self.mds,
+            dyns: &self.dyns,
             managers: &self.managers,
             competition: self.competition.as_ref(),
             total_in_flight: &self.total_in_flight,
@@ -1771,6 +1945,16 @@ impl GridWorld {
         // -- phase 2: parallel per-tenant work ----------------------------
         // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
         let par_t0 = std::time::Instant::now();
+        // First batch that can actually fan out builds the persistent
+        // pool, sized once to the effective lane count; every later batch
+        // reuses it (workers park on a condvar in between).
+        if self.pool.is_none()
+            && !self.scoped_spawn
+            && self.threads > 1
+            && self.tenants.len() > 1
+        {
+            self.pool = Some(WorkerPool::new(self.effective_workers()));
+        }
         let mut member_flag = vec![false; self.tenants.len()];
         for &tid in &members {
             member_flag[tid] = true;
@@ -1779,6 +1963,7 @@ impl GridWorld {
             now,
             tb: &self.tb,
             mds: &self.mds,
+            dyns: &self.dyns,
             managers: &self.managers,
             competition: self.competition.as_ref(),
             total_in_flight: &self.total_in_flight,
@@ -1804,41 +1989,58 @@ impl GridWorld {
             })
             .collect();
         let workers = self.threads.min(shards.len()).max(1);
-        if workers == 1 {
-            // The reference path: same pipeline, caller thread.
-            for shard in &mut shards {
-                tick_tenant_shard(&wv, shard);
-            }
-        } else {
-            let chunk = shards.len().div_ceil(workers);
-            let wv = &wv;
-            std::thread::scope(|scope| {
-                for slice in shards.chunks_mut(chunk) {
-                    scope.spawn(move || {
-                        for shard in slice {
-                            tick_tenant_shard(wv, shard);
-                        }
-                    });
+        match (workers, &self.pool) {
+            (1, _) => {
+                // The reference path: same pipeline, caller thread.
+                for shard in &mut shards {
+                    tick_tenant_shard(&wv, shard);
                 }
-            });
+            }
+            (_, Some(pool)) if !self.scoped_spawn => {
+                // Persistent pool: workers claim shards off a shared
+                // counter, so a batch smaller than the lane count just
+                // leaves the surplus workers parked.
+                pool.scatter(&mut shards, |shard| tick_tenant_shard(&wv, shard));
+                self.pool_rounds += 1;
+            }
+            _ => {
+                // Scoped-spawn baseline (set_scoped_spawn): fresh threads
+                // per batch over contiguous shard chunks — the PR-8 path
+                // the bench compares pool overhead against.
+                let chunk = shards.len().div_ceil(workers);
+                let wv = &wv;
+                std::thread::scope(|scope| {
+                    for slice in shards.chunks_mut(chunk) {
+                        scope.spawn(move || {
+                            for shard in slice {
+                                tick_tenant_shard(wv, shard);
+                            }
+                        });
+                    }
+                });
+            }
         }
-        let deltas: Vec<(usize, Vec<Action>, f64)> = shards
+        let deltas: Vec<(usize, Vec<MergeAction>, f64)> = shards
             .into_iter()
             .map(|s| (s.tid, s.actions, s.job_work))
             .collect();
         self.parallel_ns += par_t0.elapsed().as_nanos() as u64;
         // -- phase 3: deterministic merge barrier -------------------------
+        // Only the order-dependent work is left here: the ground-truth
+        // capacity guard and the live half of each admitted submit. The
+        // frozen half (pricing lookups, agreement checks, speed reads,
+        // name clones, work draws) was precomputed per shard in phase 2.
         // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
         let merge_t0 = std::time::Instant::now();
         for (tid, actions, job_work) in deltas {
             for action in actions {
                 match action {
-                    Action::Submit { job, rid } => {
+                    MergeAction::Submit { job, rid, prep } => {
                         if self.batch_submit_ok(tid, rid) {
-                            self.submit(tid, job, rid, job_work);
+                            self.submit_prepared(tid, job, rid, job_work, prep);
                         }
                     }
-                    Action::CancelQueued { job, rid } => {
+                    MergeAction::CancelQueued { job, rid } => {
                         self.cancel_queued(tid, job, rid)
                     }
                 }
@@ -1884,16 +2086,72 @@ impl GridWorld {
             < self.tb.spec(rid).cpus
     }
 
-    // lint:allow(DIRTY-PAIR): dispatch marks are queued; refresh_dirty_views re-keys them at the next tick
+    /// Sequential-path submit: pre-compute the frozen half here (at the
+    /// same instant, so it is byte-identical to the old inline
+    /// computation) and finish through the shared live half. The batched
+    /// path computes the same [`PreparedSubmit`] in parallel during phase
+    /// 2 instead.
     fn submit(&mut self, tid: usize, jid: JobId, rid: ResourceId, job_work: f64) {
+        let wv = WorldView {
+            now: self.q.now(),
+            tb: &self.tb,
+            mds: &self.mds,
+            dyns: &self.dyns,
+            managers: &self.managers,
+            competition: self.competition.as_ref(),
+            total_in_flight: &self.total_in_flight,
+            total_reserved: &self.total_reserved,
+            start_utc_hour: self.start_utc_hour,
+            full_rebuild: self.full_rebuild,
+            full_alloc_sort: self.full_alloc_sort,
+        };
+        let prep = prepare_submit(&wv, &self.tenants[tid], jid, rid);
+        self.submit_prepared(tid, jid, rid, job_work, prep);
+    }
+
+    /// The live, order-dependent half of a submit — the only submit work
+    /// left inside the merge barrier. Finishes the effective rate from
+    /// ground truth (committed-hold override, then the agreement the
+    /// shard looked up, then posted × competition × *live* demand
+    /// premium — earlier merge submits move utilization and can consume
+    /// holds, which is exactly why these two reads cannot be hoisted),
+    /// then commits budget, dispatches, and schedules stage-in.
+    // lint:allow(DIRTY-PAIR): dispatch marks are queued; refresh_dirty_views re-keys them at the next tick
+    fn submit_prepared(
+        &mut self,
+        tid: usize,
+        jid: JobId,
+        rid: ResourceId,
+        job_work: f64,
+        prep: PreparedSubmit,
+    ) {
         let now = self.q.now();
-        // Budget commit against the expected cost here.
-        let rate = self.effective_rate(tid, rid);
-        let spec = self.tb.spec(rid);
-        let d = &self.dyns[rid.0 as usize];
-        let speed = d.effective_speed(spec).max(0.05);
+        // Budget commit against the expected cost here. Rate precedence
+        // matches `effective_rate`: committed hold, then agreement, then
+        // posted quote under the live demand premium.
+        let rate = match self.tenants[tid].rsv.get(rid) {
+            Some(r) if r.level == CommitLevel::Committed && r.active(now) => {
+                r.rate
+            }
+            _ => match prep.agreement_rate {
+                Some(a) => a,
+                None => {
+                    prep.posted_x_comp
+                        * self
+                            .tb
+                            .spec(rid)
+                            .price
+                            .demand_premium(self.utilization(rid))
+                }
+            },
+        };
+        let PreparedSubmit {
+            speed,
+            name,
+            work_ref_h,
+            ..
+        } = prep;
         let est_cost = rate * job_work / speed * 3600.0;
-        let name = spec.name.clone();
         let tenant = &mut self.tenants[tid];
         if !tenant.ledger.commit(jid, est_cost) {
             return; // budget headroom exhausted: leave the job Ready
@@ -1922,7 +2180,6 @@ impl GridWorld {
                 }
             }
         }
-        let work_ref_h = tenant.sampler.work_ref_h(jid);
         tenant.inflight.insert(
             jid,
             InFlight {
@@ -2900,5 +3157,145 @@ mod tests {
             total(&priced),
             total(&flat)
         );
+    }
+
+    /// Bit-exact world-trace comparison for the spawn-strategy tests
+    /// below (wall-clock telemetry excluded, like `tests/common`).
+    fn assert_same_trace(a: &WorldReport, b: &WorldReport, tag: &str) {
+        assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.report.ticks, y.report.ticks, "{tag}: ticks");
+            assert_eq!(
+                x.report.makespan_s.to_bits(),
+                y.report.makespan_s.to_bits(),
+                "{tag}: makespan"
+            );
+            assert_eq!(
+                x.report.total_cost.to_bits(),
+                y.report.total_cost.to_bits(),
+                "{tag}: spend"
+            );
+            assert_eq!(
+                x.report.busy_cpus.points(),
+                y.report.busy_cpus.points(),
+                "{tag}: busy-cpu timeline"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_and_scoped_spawn_replay_the_sequential_trace() {
+        // Three spawn strategies, one trace: the sequential reference, the
+        // persistent worker pool, and the scoped per-batch spawn baseline
+        // must be pure scheduling choices with zero trace influence.
+        let sequential = three_tenant_world(17).run_world();
+        let mut pooled_world = three_tenant_world(17);
+        pooled_world.set_threads(3);
+        let pooled = pooled_world.run_world();
+        assert_same_trace(&sequential, &pooled, "pooled");
+        let mut scoped_world = three_tenant_world(17);
+        scoped_world.set_threads(3);
+        scoped_world.set_scoped_spawn(true);
+        let scoped = scoped_world.run_world();
+        assert_same_trace(&sequential, &scoped, "scoped");
+        // And the telemetry tells the three apart: only the pooled run
+        // built a pool and fanned batches through it.
+        assert_eq!(sequential.pool_workers, 0);
+        assert_eq!(sequential.pool_rounds, 0);
+        assert_eq!(pooled.pool_workers, 3, "pool sized to the lane count");
+        assert!(pooled.pool_rounds > 0, "no batch went through the pool");
+        assert_eq!(scoped.pool_workers, 0, "scoped baseline must stay pool-free");
+        assert_eq!(scoped.pool_rounds, 0);
+    }
+
+    #[test]
+    fn pool_handles_batch_membership_changing_between_rounds() {
+        // Staggered tick periods (600/600/1800 s) make batch membership
+        // breathe: most batches hold two members, every third holds all
+        // three, and as tenants finish the batches shrink further —
+        // singletons take the legacy path entirely. The pool keeps its
+        // original lane count throughout and must drain every width
+        // bit-exactly.
+        let build = || {
+            Broker::experiment()
+                .plan(
+                    "parameter i integer range from 1 to 40\n\
+                     task main\nexecute icc $i\nendtask",
+                )
+                .deadline_h(18.0)
+                .policy("cost")
+                .user("rajkumar")
+                .seed(29)
+                .testbed_scale(0.5)
+                .tick_period_s(600.0)
+                .tenant(
+                    Broker::experiment()
+                        .plan(
+                            "parameter i integer range from 1 to 40\n\
+                             task main\nexecute icc $i\nendtask",
+                        )
+                        .deadline_h(10.0)
+                        .policy("time")
+                        .user("davida")
+                        .tick_period_s(600.0),
+                )
+                .tenant(
+                    Broker::experiment()
+                        .plan(
+                            "parameter i integer range from 1 to 8\n\
+                             task main\nexecute icc $i\nendtask",
+                        )
+                        .deadline_h(14.0)
+                        .policy("deadline-only")
+                        .user("stranger")
+                        .tick_period_s(1800.0),
+                )
+                .world()
+                .unwrap()
+        };
+        let sequential = build().run_world();
+        let mut pooled_world = build();
+        pooled_world.set_threads(3);
+        let pooled = pooled_world.run_world();
+        assert_same_trace(&sequential, &pooled, "breathing-batches");
+        assert!(pooled.pool_rounds > 0, "no batch went through the pool");
+        for t in &pooled.tenants {
+            assert_eq!(
+                t.report.jobs_completed + t.report.jobs_failed,
+                t.report.jobs_total,
+                "{}: {}",
+                t.user,
+                t.report.summary()
+            );
+        }
+    }
+
+    #[test]
+    fn set_threads_discards_a_stale_pool() {
+        // Mid-run thread-count changes rebuild the pool at the new width
+        // on the next fan-out batch; the trace must not notice.
+        let sequential = three_tenant_world(23).run_world();
+        let mut world = three_tenant_world(23);
+        world.set_threads(2);
+        world.run_until(2.0 * HOUR);
+        let early_rounds = world.pool_rounds();
+        assert!(early_rounds > 0, "pool should have run by 2h");
+        world.set_threads(3); // drops the 2-lane pool
+        let resized = world.run_world();
+        assert_same_trace(&sequential, &resized, "resized-mid-run");
+        assert_eq!(resized.pool_workers, 3, "report reflects the new width");
+        assert!(resized.pool_rounds > early_rounds, "new pool kept running");
+    }
+
+    #[test]
+    fn dropping_a_world_mid_run_shuts_the_pool_down() {
+        // The pool joins its workers on Drop (unit-proven in sim::pool);
+        // at world level this is the no-hang smoke: a half-run parallel
+        // world must drop cleanly, not leak or deadlock on parked workers.
+        let mut world = three_tenant_world(31);
+        world.set_threads(3);
+        world.run_until(2.0 * HOUR);
+        assert!(world.pool_rounds() > 0, "pool should have run by 2h");
+        drop(world);
     }
 }

@@ -191,6 +191,40 @@ fn par_shared_allowed_with_reason() {
     assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_ALLOWED, Rule::ParShared));
 }
 
+#[test]
+fn par_shared_fires_inside_pool_scatter_closures() {
+    // A WorkerPool `scatter` call ships its closure to the parallel
+    // lanes, so the call line and any multi-line closure body are held
+    // to par-section discipline with no marker required.
+    let diags = lint_source("sim/shard.rs", fixtures::PAR_SHARED_POOL_FIRING);
+    let hits: Vec<_> = diags
+        .iter()
+        .filter(|d| d.rule == Rule::ParShared)
+        .collect();
+    assert!(
+        hits.iter().any(|d| d.message.contains("self.rng")),
+        "single-line closure RNG draw must fire: {hits:?}"
+    );
+    assert!(
+        hits.iter().any(|d| d.message.contains("self.total_in_flight")),
+        "multi-line closure occupancy read must fire: {hits:?}"
+    );
+    // Call-driven, not path-scoped.
+    assert!(fires("sim/world.rs", fixtures::PAR_SHARED_POOL_FIRING, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_pool_discipline_ends_with_the_call() {
+    // A clean scatter raises nothing, and the merge-barrier code right
+    // after the call may touch shared state freely.
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_POOL_CLEAN, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_pool_allowed_with_reason() {
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_POOL_ALLOWED, Rule::ParShared));
+}
+
 // -- ALLOW-REASON (escape-hatch hygiene) -------------------------------------
 
 #[test]

@@ -1,9 +1,11 @@
 //! Parallel-tick equivalence: the three-phase batched tenant tick must
 //! replay bit-for-bit at every thread count. `threads(1)` is the reference
 //! path — it runs the identical snapshot → per-tenant → merge pipeline,
-//! just on the calling thread — so any divergence at 2 or 4 workers means
-//! shared state leaked into the parallel phase (the PAR-SHARED lint's
-//! runtime backstop, the way `determinism.rs` backstops ND-*).
+//! just on the calling thread — so any divergence at 2, 4 or 8 workers
+//! means shared state leaked into the parallel phase (the PAR-SHARED
+//! lint's runtime backstop, the way `determinism.rs` backstops ND-*).
+//! Multi-threaded runs go through the persistent `WorkerPool`, so this
+//! suite is also the pool's end-to-end determinism proof.
 //!
 //! Worlds and the bit-exact comparator come from `tests/common/mod.rs`.
 
@@ -13,9 +15,10 @@ use common::{assert_identical, contested_builder};
 use nimrod_g::broker::Broker;
 use nimrod_g::metrics::WorldReport;
 
-/// Thread counts the suite proves equivalent. 4 exceeds the 3 tenants in
-/// every world here, so it also exercises the builder's clamp path.
-const THREADS: [usize; 2] = [2, 4];
+/// Thread counts the suite proves equivalent. 4 and 8 exceed the 3
+/// tenants in the small worlds here, so they also exercise the builder's
+/// clamp path and pool rounds narrower than the lane count.
+const THREADS: [usize; 3] = [2, 4, 8];
 
 fn contested(seed: u64, threads: usize) -> WorldReport {
     contested_builder(seed)
@@ -86,4 +89,44 @@ fn reserve_ahead_world_is_bit_exact_across_thread_counts() {
             &format!("reserve-ahead/threads{threads}"),
         );
     }
+}
+
+#[test]
+fn world_storm_replays_bit_exactly_on_eight_pool_lanes() {
+    // The 256-tenant population-stress preset: every tenant ticks on the
+    // same period, so each tick is one 256-member batch fanned across the
+    // pool — the widest scatter anything in-tree produces, and far more
+    // shards than lanes, so the claim counter is exercised hard.
+    let sequential = scenario("world-storm", 7, 1);
+    assert!(
+        sequential.parallel_ns > 0,
+        "world-storm: no tick batch ever coalesced"
+    );
+    let pooled = scenario("world-storm", 7, 8);
+    assert_identical(&sequential, &pooled, "world-storm/threads8");
+}
+
+#[test]
+fn pooled_runs_populate_pool_and_phase_telemetry() {
+    // A multi-threaded run must actually have gone through the persistent
+    // pool (not silently fallen back to some other path), and the
+    // three-phase timers must all be wired: a zero would mean a phase's
+    // instrumentation was dropped in a refactor.
+    let pooled = contested(7, 4);
+    assert!(
+        pooled.pool_workers > 1,
+        "pooled run reports {} pool workers",
+        pooled.pool_workers
+    );
+    assert!(
+        pooled.pool_rounds > 0,
+        "pooled run never scattered a batch through the pool"
+    );
+    assert!(pooled.snapshot_ns > 0, "snapshot phase timer not populated");
+    assert!(pooled.parallel_ns > 0, "parallel phase timer not populated");
+    assert!(pooled.merge_ns > 0, "merge phase timer not populated");
+    // The reference path never builds a pool.
+    let sequential = contested(7, 1);
+    assert_eq!(sequential.pool_workers, 0, "threads(1) must stay pool-free");
+    assert_eq!(sequential.pool_rounds, 0, "threads(1) must stay pool-free");
 }

@@ -1,0 +1,10 @@
+// Fixture: a reasoned allow inside a scatter closure suppresses
+// PAR-SHARED (e.g. a read-only audit of the shared occupancy table in a
+// debug-only consistency check run on the worker lanes).
+fn on_tick_batch(&mut self) {
+    pool.scatter(&mut shards, |shard| {
+        // lint:allow(PAR-SHARED): read-only debug audit against the live table; never written from here
+        debug_assert_eq!(wv.total_in_flight[i], self.total_in_flight[i]);
+        shard.tenant.mark_view(rid);
+    });
+}

@@ -1,0 +1,11 @@
+// Fixture: a scatter that hands each shard to a tenant-local worker fn is
+// clean, and the discipline ends with the call — the merge barrier right
+// after it may touch shared state freely.
+fn on_tick_batch(&mut self) {
+    pool.scatter(&mut shards, |shard| tick_tenant_shard(&wv, shard));
+    self.pool_rounds += 1;
+    for (tid, actions) in deltas {
+        self.total_in_flight[tid] += actions.len() as u32;
+        let tie = self.rng.next_u64();
+    }
+}

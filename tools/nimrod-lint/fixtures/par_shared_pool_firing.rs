@@ -1,0 +1,11 @@
+// Fixture: PAR-SHARED fires on a WorkerPool scatter whose closure touches
+// shared world state — no lint:par-section marker needed, the pool call
+// itself places the closure in phase 2. Both the single-line form and a
+// multi-line closure body are covered.
+fn on_tick_batch(&mut self) {
+    pool.scatter(&mut shards, |shard| shard.roll = self.rng.next_f64());
+    pool.scatter(&mut shards, |shard| {
+        let slot = self.total_in_flight[shard.rid.0 as usize];
+        shard.actions.push(Action::Submit { jid, rid, slot });
+    });
+}

@@ -31,5 +31,11 @@ pub const PAR_SHARED_FIRING: &str = include_str!("../fixtures/par_shared_firing.
 pub const PAR_SHARED_CLEAN: &str = include_str!("../fixtures/par_shared_clean.rs");
 pub const PAR_SHARED_ALLOWED: &str = include_str!("../fixtures/par_shared_allowed.rs");
 
+// WorkerPool variant: the `scatter` call site itself (and any multi-line
+// closure body it opens) is in the parallel section, marker or not.
+pub const PAR_SHARED_POOL_FIRING: &str = include_str!("../fixtures/par_shared_pool_firing.rs");
+pub const PAR_SHARED_POOL_CLEAN: &str = include_str!("../fixtures/par_shared_pool_clean.rs");
+pub const PAR_SHARED_POOL_ALLOWED: &str = include_str!("../fixtures/par_shared_pool_allowed.rs");
+
 pub const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
 pub const ALLOW_UNKNOWN_RULE: &str = include_str!("../fixtures/allow_unknown_rule.rs");

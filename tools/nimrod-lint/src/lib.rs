@@ -516,6 +516,13 @@ const PAR_FORBIDDEN_CALLS: [&str; 2] = ["mark_view_all", "dec_total_in_flight"];
 const PAR_FORBIDDEN_FIELDS: [&str; 3] =
     ["self.rng", "self.total_in_flight", "self.total_reserved"];
 
+/// Calls that hand a closure to the persistent `WorkerPool` for execution
+/// on the parallel lanes. The closure argument runs in phase 2 regardless
+/// of where the call site sits, so the line (and any multi-line closure
+/// body it opens) is held to the same par-section discipline as a fn
+/// marked with `lint:par-section`.
+const PAR_POOL_CALLS: [&str; 1] = ["scatter"];
+
 // ---------------------------------------------------------------------------
 // Linting
 // ---------------------------------------------------------------------------
@@ -795,9 +802,21 @@ fn check_par_shared(
             pending = Some(decl_marked(ln));
         }
 
+        // A `pool.scatter(...)` line ships its closure to the parallel
+        // lanes: the line itself is in the parallel section, and if the
+        // closure body opens a brace the frame it pushes is marked so
+        // multi-line closures stay covered. A single-line call never
+        // leaks a frame — its trailing `;` at paren depth 0 cancels the
+        // pending mark just like a bodyless trait method.
+        let pool_line =
+            !line.in_test && PAR_POOL_CALLS.iter().any(|n| has_call(code, n));
+        if pool_line && pending.is_none() {
+            pending = Some(true);
+        }
+
         // In the parallel section on this line? True when a marked frame is
         // already open, or becomes open mid-line (one-line fn bodies).
-        let mut in_par = open.iter().any(|f| f.marked);
+        let mut in_par = pool_line || open.iter().any(|f| f.marked);
         for c in code.chars() {
             match c {
                 '(' => paren += 1,
@@ -1092,6 +1111,41 @@ mod tests {
         let src = "// lint:par-section\nfn poke(wv: &W) { self.rng.gen(); }\n";
         let diags = lint_source("sim/shard.rs", src);
         assert!(diags.iter().any(|d| d.rule == Rule::ParShared && d.line == 2));
+    }
+
+    #[test]
+    fn pool_scatter_line_is_in_the_parallel_section() {
+        // A single-line scatter call ships its closure to the worker
+        // lanes: forbidden accesses on that line fire without any
+        // lint:par-section marker, and the trailing `;` keeps the
+        // pending mark from leaking into the next block.
+        let src = "fn tick(&mut self) {\n    pool.scatter(&mut shards, |s| self.rng.fill(s));\n    {\n        self.rng.next_u64();\n    }\n}\n";
+        let diags = lint_source("sim/world.rs", src);
+        let par: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::ParShared)
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(par, vec![2]);
+    }
+
+    #[test]
+    fn pool_scatter_multiline_closure_body_is_covered() {
+        let src = "fn tick(&mut self) {\n    pool.scatter(&mut shards, |shard| {\n        world.mark_view_all(rid);\n    });\n    self.rng.next_u64();\n}\n";
+        let diags = lint_source("sim/world.rs", src);
+        let par: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::ParShared)
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(par, vec![3]);
+    }
+
+    #[test]
+    fn clean_pool_scatter_raises_nothing() {
+        let src = "fn tick(&mut self) {\n    pool.scatter(&mut shards, |shard| tick_tenant_shard(&wv, shard));\n    self.pool_rounds += 1;\n}\n";
+        let diags = lint_source("sim/world.rs", src);
+        assert!(diags.iter().all(|d| d.rule != Rule::ParShared));
     }
 
     #[test]
