@@ -1,9 +1,10 @@
 //! Bench: hot-path micro-benchmarks (EXPERIMENTS.md §Perf).
 //!
 //! The per-cycle costs of a live deployment: scheduler tick (policy
-//! allocation over N resource views), dispatcher reconciliation, the
-//! broker's ScheduleAdvisor facade versus the inlined pipeline
-//! (`broker_overhead`), event queue throughput, Clustor frame
+//! allocation over N resource views), candidate-index re-keying
+//! (per-entry vs chunked bulk over ViewColumns), dispatcher
+//! reconciliation, the broker's ScheduleAdvisor facade versus the inlined
+//! pipeline (`broker_overhead`), event queue throughput, Clustor frame
 //! encode/decode, and the PJRT chamber executions the job-wrapper performs
 //! (batch-1 and full-batch).
 //!
@@ -17,7 +18,7 @@ use nimrod_g::engine::Experiment;
 use nimrod_g::plan::{expand, Plan};
 use nimrod_g::protocol::{read_frame, write_frame, Message};
 use nimrod_g::runtime::ChamberRuntime;
-use nimrod_g::scheduler::{CandidateIndex, ResourceView, SchedCtx};
+use nimrod_g::scheduler::{CandidateIndex, ResourceView, SchedCtx, ViewColumns};
 use nimrod_g::simtime::EventQueue;
 use nimrod_g::types::{ResourceId, HOUR};
 use nimrod_g::util::bench::Bench;
@@ -78,6 +79,39 @@ fn main() {
                 + ix.rate_ranked().count()
                 + ix.service_ranked().count()
         });
+    }
+
+    // Dirty-queue re-key: per-entry update_cols versus the chunked
+    // update_cols_bulk used when a drained dirty queue crosses the bulk
+    // threshold — same keys (shared `_parts` helpers), different key
+    // derivation shape (columnar chunks vs one row at a time).
+    for n in [280, 560] {
+        let mut rng = Rng::new(4);
+        let vs = views(n, &mut rng);
+        let mut cols = ViewColumns::new(n);
+        for v in &vs {
+            cols.set(v);
+        }
+        // A churny tick's worth of dirty entries: every 3rd resource.
+        let dirty: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let mut ix_per = CandidateIndex::from_views(&vs);
+        b.iter(
+            &format!("re-key per-entry ({} of {n} dirty)", dirty.len()),
+            || {
+                for &r in &dirty {
+                    ix_per.update_cols(ResourceId(r), &cols);
+                }
+                ix_per.len()
+            },
+        );
+        let mut ix_bulk = CandidateIndex::from_views(&vs);
+        b.iter(
+            &format!("re-key chunked bulk ({} of {n} dirty)", dirty.len()),
+            || {
+                ix_bulk.update_cols_bulk(&dirty, &cols);
+                ix_bulk.len()
+            },
+        );
     }
 
     // Dispatcher reconciliation against a 165-job table.

@@ -26,13 +26,17 @@
 //!    machinery (shadow probes, expiry sweeps, occupancy folding) versus
 //!    the same world with the subsystem left off.
 //! 6. **Parallel-tick thread sweep** — many-tenant churny worlds
-//!    (index-storm- and mega-grid-shaped) run at 1/2/4/8 workers, each
-//!    multi-thread count twice: through the persistent worker pool and
-//!    through the per-batch `std::thread::scope` spawn baseline it
-//!    replaced. Every thread count and spawn mode must replay the
-//!    identical trace (asserted); the JSON `thread_sweep` rows carry
-//!    µs/tick, speedup vs 1 thread, the spawn mode and the merge-barrier
-//!    share of the batched tick (slimmed by the phase-2 submit precompute).
+//!    (index-storm-, mega-grid- and world-storm-shaped) run at 1/2/4/8
+//!    workers, each multi-thread count three ways: through the persistent
+//!    worker pool with the default streaming ordered merge, through the
+//!    same pool forced back onto the barrier merge
+//!    (`set_barrier_merge`), and through the per-batch
+//!    `std::thread::scope` spawn baseline (always barrier). Every thread
+//!    count, spawn mode and merge mode must replay the identical trace
+//!    (asserted); the JSON `thread_sweep` rows carry µs/tick, speedup vs
+//!    1 thread, the spawn/merge-mode axes, the merge share of the
+//!    batched tick, and `merge_overlap` — the fraction of commit time
+//!    the streaming merge hid under still-running shards.
 //! 7. **Per-cycle component costs** — MDS refresh/discovery latency.
 //!
 //! Results are also written to `BENCH_grid_scaling.json` (machine-readable:
@@ -154,15 +158,18 @@ fn tenant_sweep_run(
 /// heavy dirty-view traffic, every tenant ticking on the same period so
 /// tick batches hold all of them) at `threads` workers. `scoped_spawn`
 /// switches phase 2 from the persistent worker pool to the per-batch
-/// `std::thread::scope` baseline it replaced — same trace, different spawn
-/// overhead. Returns wall seconds and the world report; the caller
-/// compares traces across thread counts and spawn modes.
+/// `std::thread::scope` baseline it replaced; `barrier_merge` forces the
+/// pooled path back onto the drain-after-barrier merge instead of the
+/// streaming commit queue — same trace either way, different overlap.
+/// Returns wall seconds and the world report; the caller compares traces
+/// across thread counts, spawn modes and merge modes.
 fn storm_run(
     tb: Testbed,
     tenants: usize,
     jobs: usize,
     threads: usize,
     scoped_spawn: bool,
+    barrier_merge: bool,
 ) -> (f64, WorldReport) {
     let plan = format!(
         "parameter i integer range from 1 to {jobs}\n\
@@ -204,6 +211,7 @@ fn storm_run(
     }
     let mut world = b.world().expect("thread sweep world");
     world.set_scoped_spawn(scoped_spawn);
+    world.set_barrier_merge(barrier_merge);
     let t0 = std::time::Instant::now();
     let report = world.run_world();
     (t0.elapsed().as_secs_f64(), report)
@@ -591,22 +599,26 @@ fn main() {
          ReservationConfig, where the subsystem must cost nothing.)"
     );
 
-    println!("\n== parallel tick: thread sweep (pooled vs scoped spawn) ==\n");
+    println!("\n== parallel tick: thread sweep (spawn × merge mode) ==\n");
     println!(
-        "{:<14} {:>8} {:>9} {:>8} {:>7} {:>8} {:>11} {:>9} {:>12}",
-        "scenario", "tenants", "machines", "threads", "spawn", "ticks", "µs/tick", "speedup", "merge share"
+        "{:<14} {:>8} {:>9} {:>8} {:>7} {:>10} {:>8} {:>11} {:>9} {:>12} {:>9}",
+        "scenario", "tenants", "machines", "threads", "spawn", "merge", "ticks", "µs/tick", "speedup", "merge share", "overlap"
     );
     let mut thread_rows: Vec<Json> = Vec::new();
     let thread_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     // (scenario, sites, per-site, tenants, jobs-per-tenant). Full mode is
     // the acceptance shape — 64 tenants on the 10,000-machine index-storm
-    // grid — plus a mega-grid-shaped world; quick is a CI thread smoke.
+    // grid — plus a mega-grid-shaped world and the world-storm shape (256
+    // small brokers on a 128-machine grid: maximum batch width, so the
+    // streaming commit queue's deepest reorder window); quick is a CI
+    // thread smoke.
     let storm_shapes: &[(&str, usize, usize, usize, usize)] = if quick {
         &[("index-storm", 4, 25, 8, 30)]
     } else {
         &[
             ("index-storm", 100, 100, 64, 400),
             ("mega-grid", 120, 45, 16, 400),
+            ("world-storm", 4, 32, 256, 6),
         ]
     };
     for &(scenario, sites, per_site, tenants, jobs) in storm_shapes {
@@ -614,38 +626,64 @@ fn main() {
         let machines = tb.resources.len();
         let mut base: Option<(f64, WorldReport)> = None;
         for &threads in thread_counts {
-            // At 1 thread both spawn modes are the same sequential
+            // At 1 thread every spawn/merge mode is the same sequential
             // reference path, so it gets one row; above that, the
-            // persistent pool and the per-batch scoped-spawn baseline it
-            // replaced run side by side on the identical world.
-            let spawns: &[&str] =
-                if threads == 1 { &["seq"] } else { &["pooled", "scoped"] };
-            for &spawn in spawns {
+            // persistent pool runs both merge modes (streaming commit
+            // queue and the barrier drain it pipelined away), and the
+            // per-batch scoped-spawn baseline rides along (barrier only —
+            // scoped spawns have no caller thread to stream commits on).
+            let modes: &[(&str, &str)] = if threads == 1 {
+                &[("seq", "streaming")]
+            } else {
+                &[
+                    ("pooled", "streaming"),
+                    ("pooled", "barrier"),
+                    ("scoped", "barrier"),
+                ]
+            };
+            for &(spawn, merge_mode) in modes {
                 let scoped = spawn == "scoped";
-                let (wall, wr) =
-                    storm_run(tb.clone(), tenants, jobs, threads, scoped);
+                let barrier = !scoped && merge_mode == "barrier";
+                let (wall, wr) = storm_run(
+                    tb.clone(),
+                    tenants,
+                    jobs,
+                    threads,
+                    scoped,
+                    barrier,
+                );
                 // Bit-exact replay across thread counts and spawn modes is
                 // the contract the whole parallel section rests on — verify
                 // it right here where the speedup numbers are minted.
                 if let Some((_, w1)) = &base {
                     assert_eq!(
                         w1.events, wr.events,
-                        "{scenario}: trace diverged at {threads} threads ({spawn})"
+                        "{scenario}: trace diverged at {threads} threads ({spawn}/{merge_mode})"
                     );
                     for (a, b) in w1.tenants.iter().zip(&wr.tenants) {
                         assert_eq!(
                             a.report.makespan_s.to_bits(),
                             b.report.makespan_s.to_bits(),
-                            "{scenario}/{}: timeline diverged at {threads} threads ({spawn})",
+                            "{scenario}/{}: timeline diverged at {threads} threads ({spawn}/{merge_mode})",
                             a.user
                         );
                         assert_eq!(
                             a.report.total_cost.to_bits(),
                             b.report.total_cost.to_bits(),
-                            "{scenario}/{}: spend diverged at {threads} threads ({spawn})",
+                            "{scenario}/{}: spend diverged at {threads} threads ({spawn}/{merge_mode})",
                             a.user
                         );
                     }
+                }
+                // A drained-after-barrier merge can never overlap the
+                // lanes; only the streaming commit queue may report
+                // overlapped commit nanoseconds.
+                if merge_mode == "barrier" {
+                    assert_eq!(
+                        wr.merge_overlap_ns, 0,
+                        "{scenario}: {spawn}/barrier at {threads} threads \
+                         reported overlapped commit time"
+                    );
                 }
                 // The mode under measurement must be the mode that ran.
                 if spawn == "pooled" {
@@ -677,10 +715,18 @@ fn main() {
                 } else {
                     0.0
                 };
+                // Fraction of total commit time the streaming merge hid
+                // under still-running shards (0 in barrier/seq rows).
+                let merge_overlap = if wr.merge_ns > 0 {
+                    wr.merge_overlap_ns as f64 / wr.merge_ns as f64
+                } else {
+                    0.0
+                };
                 println!(
-                    "{scenario:<14} {tenants:>8} {machines:>9} {threads:>8} {spawn:>7} {ticks:>8} {us_tick:>11.1} {:>8.2}x {:>11.1}%",
+                    "{scenario:<14} {tenants:>8} {machines:>9} {threads:>8} {spawn:>7} {merge_mode:>10} {ticks:>8} {us_tick:>11.1} {:>8.2}x {:>11.1}% {:>8.1}%",
                     speedup,
                     merge_share * 100.0,
+                    merge_overlap * 100.0,
                 );
                 thread_rows.push(Json::obj(vec![
                     ("scenario", Json::str(scenario)),
@@ -688,10 +734,12 @@ fn main() {
                     ("machines", Json::num(machines as f64)),
                     ("threads", Json::num(threads as f64)),
                     ("spawn", Json::str(spawn)),
+                    ("merge_mode", Json::str(merge_mode)),
                     ("ticks", Json::num(ticks as f64)),
                     ("us_per_tick", Json::num(us_tick)),
                     ("speedup_vs_1", Json::num(speedup)),
                     ("merge_share", Json::num(merge_share)),
+                    ("merge_overlap", Json::num(merge_overlap)),
                 ]));
                 if base.is_none() {
                     base = Some((wall, wr));
@@ -701,12 +749,13 @@ fn main() {
     }
     println!(
         "\n(speedup is whole-run wall time vs the same world at 1 thread — \
-         phases 1/3 and event processing stay sequential, so this is the \
+         phase 1 and event processing stay sequential, so this is the \
          Amdahl-limited figure; pooled rows reuse the persistent worker \
          pool, scoped rows pay a fresh std::thread::scope spawn per batch; \
-         merge share is the barrier's slice of the three-phase batched \
-         tick, slimmed by precomputing each submit's frozen half in \
-         phase 2.)"
+         merge share is the commit queue's slice of the three-phase \
+         batched tick, and overlap is how much of it the streaming merge \
+         hid under still-running shards — the barrier rows are the PR-9 \
+         drain-after-barrier baseline the pipeline retired.)"
     );
 
     // Machine-readable perf trajectory (archived by CI).

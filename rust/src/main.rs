@@ -187,7 +187,7 @@ fn run(args: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "nimrod — Nimrod/G grid resource management and scheduling\n\n\
-         usage:\n  nimrod run --plan FILE | --scenario NAME [--deadline-h H] [--budget G$]\n             [--policy NAME[?key=value]] [--seed S] [--scale X] [--user U]\n             [--journal FILE] [--csv DIR] [--threads N]\n  nimrod resume --journal FILE [--policy NAME] [--scale X] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod scenarios\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--seed S] [--workdir DIR]\n\n\
+         usage:\n  nimrod run --plan FILE | --scenario NAME [--deadline-h H] [--budget G$]\n             [--policy NAME[?key=value]] [--seed S] [--scale X] [--user U]\n             [--journal FILE] [--csv DIR] [--threads N] [--scoped-spawn]\n  nimrod resume --journal FILE [--policy NAME] [--scale X] [--csv DIR]\n  nimrod figure3 [--csv DIR] [--seed S]\n  nimrod testbed [--seed S] [--scale X]\n  nimrod policies\n  nimrod scenarios\n  nimrod live [--workers N] [--jobs N] [--policy NAME] [--seed S] [--workdir DIR]\n\n\
          global flags: --help (per subcommand), --verbose\n\n\
          multi-tenant: `nimrod run --scenario contested-gusto` puts N competing\n\
          brokers on one shared grid and reports per-tenant + fairness metrics;\n\
@@ -240,7 +240,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
         println!(
             "nimrod run — simulate an experiment on the GUSTO-like testbed\n\n\
              usage: nimrod run --plan FILE | --scenario NAME [flags]\n\n\
-             flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery (single-tenant)\n  --csv DIR          write timeline/per-resource CSVs\n  --threads N        worker threads for the batched multi-tenant tick\n                     (default 1 = the sequential reference path; replay\n                     is bit-exact at every thread count)\n\n\
+             flags:\n  --plan FILE        plan-language experiment description\n  --scenario NAME    start from a preset (see `nimrod scenarios`)\n  --deadline-h H     deadline in virtual hours (default 15)\n  --budget G$        budget (default unlimited)\n  --policy SPEC      scheduling policy, e.g. cost or cost?safety=0.9\n  --seed S           master RNG seed\n  --scale X          testbed machine-count scale (1.0 = ~70 machines)\n  --user U           grid identity to run as\n  --journal FILE     journal state for crash recovery (single-tenant)\n  --csv DIR          write timeline/per-resource CSVs\n  --threads N        worker threads for the batched multi-tenant tick\n                     (default 1 = the sequential reference path; replay\n                     is bit-exact at every thread count)\n  --scoped-spawn     fan batches out via per-batch scoped threads instead\n                     of the persistent worker pool (multi-tenant only;\n                     barrier merge, same bit-exact trace)\n\n\
              multi-tenant scenarios (N brokers on one shared grid, per-tenant\n\
              report + fairness/price metrics):\n  nimrod run --scenario contested-gusto\n  nimrod run --scenario auction-rush\n\
              GRACE tender/bid market scenarios (agreements + clearing prices):\n  nimrod run --scenario grace-auction\n  nimrod run --scenario grace-rush\n\
@@ -254,7 +254,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     }
     opts.expect_known(&[
         "plan", "scenario", "deadline-h", "budget", "policy", "seed", "scale",
-        "user", "journal", "csv", "threads",
+        "user", "journal", "csv", "threads", "scoped-spawn",
     ])?;
     let scenario = opts.str_opt("scenario")?;
     // The journal records only plan + seed + envelope, so `nimrod resume`
@@ -312,7 +312,10 @@ fn cmd_run(opts: &Opts) -> Result<()> {
                 );
             }
         }
-        let world = b.world()?;
+        let mut world = b.world()?;
+        if opts.bool("scoped-spawn")? {
+            world.set_scoped_spawn(true);
+        }
         println!(
             "world: {} tenants on {} resources / {} cpus across {} sites",
             world.tenant_count(),

@@ -240,9 +240,16 @@ pub struct WorldReport {
     /// (view refresh, index re-key, policy allocation), wall-clock across
     /// all workers, not summed per worker.
     pub parallel_ns: u64,
-    /// Wall nanoseconds of phase 3 — the deterministic merge barrier that
-    /// applies tenant deltas in ascending tenant order.
+    /// Wall nanoseconds of phase 3 — the deterministic ordered merge that
+    /// applies tenant deltas in ascending tenant order (streamed under
+    /// phase 2 by default, drained behind a barrier under
+    /// `set_barrier_merge`).
     pub merge_ns: u64,
+    /// The slice of `merge_ns` that ran while phase-2 shards were still
+    /// in flight — the merge wall-time the streaming commit queue hid
+    /// under the parallel phase. Always 0 in barrier-merge, scoped-spawn
+    /// and sequential worlds.
+    pub merge_overlap_ns: u64,
     /// Lanes of the persistent phase-2 worker pool (spawned workers plus
     /// the participating caller). 0 when no pool was ever built: a
     /// sequential world, a `set_scoped_spawn` bench run, or a world whose
@@ -265,6 +272,7 @@ impl Default for WorldReport {
             snapshot_ns: 0,
             parallel_ns: 0,
             merge_ns: 0,
+            merge_overlap_ns: 0,
             pool_workers: 0,
             pool_rounds: 0,
         }

@@ -113,6 +113,11 @@ pub fn service_rank_key_parts(measured: f64, planning_speed: f64) -> f64 {
     }
 }
 
+/// Width of one [`CandidateIndex::update_cols_bulk`] chunk: keys for a
+/// whole chunk are derived off the dense columns before any ranking set
+/// is touched.
+const BULK_CHUNK: usize = 16;
+
 /// The ranking keys one resource is currently filed under (so an update
 /// can remove the exact stale entries before re-inserting).
 #[derive(Debug, Clone, Copy)]
@@ -238,6 +243,52 @@ impl CandidateIndex {
                 service: service_rank_key_parts(cols.measured[i], speed),
             },
         );
+    }
+
+    /// [`CandidateIndex::update_cols`] over many resources at once — the
+    /// batch path a view refresh takes when a sweep dirties a large slice
+    /// of the table (MDS refresh, repricing sweeps, agreement expiry).
+    /// Keys for each fixed-width chunk are derived first, in tight
+    /// branch-light loops over the dense column arrays (no set is touched
+    /// mid-chunk, so the arithmetic auto-vectorizes), then the chunk is
+    /// filed. Every key goes through the same `_parts` helpers as the
+    /// per-entry path and filing stays per-resource, so the resulting
+    /// rankings are bit-identical to calling
+    /// [`CandidateIndex::update_cols`] once per id (unit-proven below) —
+    /// only the cache behaviour of the derive differs.
+    pub fn update_cols_bulk(&mut self, rids: &[u32], cols: &super::ViewColumns) {
+        let mut cost = [0.0f64; BULK_CHUNK];
+        let mut service = [0.0f64; BULK_CHUNK];
+        let mut eligible = [false; BULK_CHUNK];
+        for chunk in rids.chunks(BULK_CHUNK) {
+            // Derive pass: keys for the whole chunk straight off the four
+            // dense arrays.
+            for (k, &r) in chunk.iter().enumerate() {
+                let i = r as usize;
+                let speed = cols.speed[i];
+                eligible[k] = Self::is_eligible_parts(speed, cols.slots[i]);
+                cost[k] = cost_rank_key_parts(cols.rate[i], speed);
+                service[k] = service_rank_key_parts(cols.measured[i], speed);
+            }
+            // File pass: unfile stale entries and re-insert under the
+            // precomputed keys.
+            for (k, &r) in chunk.iter().enumerate() {
+                self.unfile(r);
+                if !eligible[k] {
+                    continue;
+                }
+                let i = r as usize;
+                self.file(
+                    r,
+                    RankKeys {
+                        cost: cost[k],
+                        speed: cols.speed[i],
+                        rate: cols.rate[i],
+                        service: service[k],
+                    },
+                );
+            }
+        }
     }
 
     /// Remove resource `r`'s stale entries (if ranked), growing the key
@@ -572,6 +623,73 @@ mod tests {
             ranked(via_cols.service_ranked())
         );
         assert!(via_cols.consistent_with(&views).is_ok());
+    }
+
+    #[test]
+    fn update_cols_bulk_matches_update_cols_bit_exactly() {
+        use super::super::ViewColumns;
+        // More ids than one BULK_CHUNK so the chunked derive spans a full
+        // chunk plus a ragged tail, with eligibility flips and history
+        // edge cases sprinkled through both.
+        let n = BULK_CHUNK * 2 + 7;
+        let mut views: Vec<_> = (0..n as u32)
+            .map(|i| {
+                view(
+                    i,
+                    (i % 5) as u32, // every 5th is saturated (slots 0)
+                    if i % 7 == 3 { 0.0 } else { 0.3 + 0.217 * i as f64 },
+                    0.05 + 1.31 * ((i * i) % 11) as f64,
+                )
+            })
+            .collect();
+        views[2].measured_jphps = Some(4.25);
+        views[9].measured_jphps = Some(0.0);
+        views[17].measured_jphps = Some(-3.0);
+        views[20].measured_jphps = Some(0.75);
+        let mut cols = ViewColumns::new(n);
+        for v in &views {
+            cols.set(v);
+        }
+        let rids: Vec<u32> = (0..n as u32).collect();
+        let mut per_entry = CandidateIndex::new(n);
+        for &r in &rids {
+            per_entry.update_cols(ResourceId(r), &cols);
+        }
+        let mut bulk = CandidateIndex::new(n);
+        bulk.update_cols_bulk(&rids, &cols);
+        assert_eq!(ranked(per_entry.cost_ranked()), ranked(bulk.cost_ranked()));
+        assert_eq!(ranked(per_entry.speed_ranked()), ranked(bulk.speed_ranked()));
+        assert_eq!(ranked(per_entry.rate_ranked()), ranked(bulk.rate_ranked()));
+        assert_eq!(
+            ranked(per_entry.service_ranked()),
+            ranked(bulk.service_ranked())
+        );
+        // The audit bit-compares stored keys against fresh AoS re-keys, so
+        // passing it proves the chunked keys match to the last bit.
+        assert!(bulk.consistent_with(&views).is_ok());
+        // Re-keying a dirty subset over a live index (the refresh shape):
+        // mutate some views, bulk-re-key just those ids on one index and
+        // per-entry re-key them on the other.
+        views[1].rate = 9.0;
+        views[5].slots = 4;
+        views[12].planning_speed = 0.0;
+        views[20].measured_jphps = Some(11.0);
+        let dirty: Vec<u32> = vec![1, 5, 12, 20];
+        for &r in &dirty {
+            cols.set(&views[r as usize]);
+        }
+        for &r in &dirty {
+            per_entry.update_cols(ResourceId(r), &cols);
+        }
+        bulk.update_cols_bulk(&dirty, &cols);
+        assert_eq!(ranked(per_entry.cost_ranked()), ranked(bulk.cost_ranked()));
+        assert_eq!(ranked(per_entry.speed_ranked()), ranked(bulk.speed_ranked()));
+        assert_eq!(ranked(per_entry.rate_ranked()), ranked(bulk.rate_ranked()));
+        assert_eq!(
+            ranked(per_entry.service_ranked()),
+            ranked(bulk.service_ranked())
+        );
+        assert!(bulk.consistent_with(&views).is_ok());
     }
 
     #[test]

@@ -7,8 +7,19 @@
 //! bounds the speedup exactly where parallelism matters most: many small
 //! batches. [`WorkerPool`] amortizes that cost across the whole run —
 //! workers are spawned once per [`crate::sim::GridWorld`], parked on a
-//! condvar between batches, and handed each batch through a shared
-//! claim counter ([`WorkerPool::scatter`]).
+//! condvar between batches, and handed each batch through per-lane claim
+//! ranges ([`WorkerPool::scatter`]).
+//!
+//! **Claim affinity.** By default every round hands each lane a
+//! deterministic contiguous range of the item slice (lane 0 — the caller
+//! — owns the lowest indices). A lane drains its own range first and only
+//! then helps stragglers by stealing from other lanes' ranges (lowest
+//! lane first), so the fallback shared claiming kicks in only at the tail
+//! of a round. Batch membership is stable across most rounds, so a
+//! tenant's shard keeps landing on the same lane and its views and index
+//! stay warm in one core's cache. `set_affinity(false)` restores the
+//! single shared claim counter of PR 9 for comparison; both modes visit
+//! every item exactly once, so traces are unaffected.
 //!
 //! **Determinism.** The pool moves *where* shard work runs, never *what*
 //! it computes: each slice element is claimed by exactly one worker,
@@ -18,6 +29,18 @@
 //! it (the `PAR-SHARED` lint rule statically rejects shared-state access
 //! in pool-run closures just as it does in `// lint:par-section` fns), so
 //! traces stay bit-exact at every worker count.
+//!
+//! **Streaming hand-off.** [`WorkerPool::scatter_streaming`] adds an
+//! in-order commit queue on top of the same claim protocol: the caller is
+//! the *sole* committer, applying `commit` to items in ascending index
+//! order as soon as each becomes the lowest finished-but-uncommitted item
+//! — while higher-indexed items are still running on the worker lanes.
+//! Workers never commit; they flag completion under the mutex and wake
+//! the caller. When the commit frontier is blocked on an item a worker is
+//! still running, the caller claims work itself instead of idling. The
+//! `overlapped` flag handed to `commit` records whether any item was
+//! still unfinished when that commit started — the merge-overlap
+//! telemetry the bench reports.
 //!
 //! **Lifetimes.** Long-lived workers cannot borrow the per-batch shards
 //! directly, so `scatter` erases the item type behind a raw base pointer
@@ -57,21 +80,113 @@ unsafe impl Send for Job {}
 struct State {
     /// Batch counter; workers run one claim loop per observed increment.
     round: u64,
-    /// Next unclaimed item index of the current round.
+    /// Next unclaimed item index of the current round (shared-counter
+    /// mode, i.e. affinity off).
     next: usize,
+    /// Per-lane contiguous claim ranges (affinity mode): lane `l` owns
+    /// `lane_next[l]..lane_hi[l]` and steals from other lanes only once
+    /// its own range is dry. Empty in shared-counter mode.
+    lane_next: Vec<usize>,
+    lane_hi: Vec<usize>,
     /// Workers that have not yet checked the current round in.
     remaining: usize,
+    /// Streaming rounds only: per-item completion flags (the commit
+    /// frontier advances over the ascending prefix of `true`s) and the
+    /// count of completed items (the `overlapped` signal).
+    done: Vec<bool>,
+    finished: usize,
+    /// Whether the current round streams commits through the caller.
+    streaming: bool,
     job: Option<Job>,
     /// First panic payload caught this round; resumed on the caller.
     panic: Option<Box<dyn Any + Send>>,
     shutdown: bool,
 }
 
+impl State {
+    /// Claim one item for `lane`: own contiguous range first, then steal
+    /// from other lanes ascending (lowest indices first — in streaming
+    /// rounds those gate the commit frontier), then the shared counter
+    /// (affinity off). Exactly-once is guaranteed by the enclosing mutex.
+    fn claim(&mut self, lane: usize) -> Option<usize> {
+        let len = self.job?.len;
+        if !self.lane_hi.is_empty() {
+            if let Some(i) = self.take_lane(lane) {
+                return Some(i);
+            }
+            for l in 0..self.lane_hi.len() {
+                if l != lane {
+                    if let Some(i) = self.take_lane(l) {
+                        return Some(i);
+                    }
+                }
+            }
+            return None;
+        }
+        if self.next >= len {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some(i)
+    }
+
+    fn take_lane(&mut self, l: usize) -> Option<usize> {
+        if self.lane_next[l] < self.lane_hi[l] {
+            let i = self.lane_next[l];
+            self.lane_next[l] += 1;
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    /// Publish the claim bookkeeping for a round of `len` items across
+    /// `lanes` lanes: contiguous per-lane ranges (affinity) or the shared
+    /// counter. Range sizes differ by at most one and lane 0 (the caller)
+    /// always owns the lowest indices.
+    fn publish_claims(&mut self, len: usize, lanes: usize, affinity: bool) {
+        self.next = 0;
+        self.lane_next.clear();
+        self.lane_hi.clear();
+        if affinity && lanes > 1 {
+            let base = len / lanes;
+            let rem = len % lanes;
+            let mut start = 0;
+            for l in 0..lanes {
+                let size = base + usize::from(l < rem);
+                self.lane_next.push(start);
+                self.lane_hi.push(start + size);
+                start += size;
+            }
+        }
+    }
+
+    /// Cancel every unclaimed item of the round (panic abort).
+    fn abort_claims(&mut self) {
+        if let Some(job) = self.job {
+            self.next = job.len;
+        }
+        for l in 0..self.lane_hi.len() {
+            self.lane_next[l] = self.lane_hi[l];
+        }
+    }
+
+    fn stash_panic(&mut self, payload: Box<dyn Any + Send>) {
+        self.abort_claims();
+        if self.panic.is_none() {
+            self.panic = Some(payload);
+        }
+    }
+}
+
 struct Shared {
     state: Mutex<State>,
     /// Workers park here between rounds.
     work_cv: Condvar,
-    /// The caller parks here until `remaining` hits zero.
+    /// The caller parks here until `remaining` hits zero; streaming
+    /// rounds also pulse it per completed item to advance the commit
+    /// frontier.
     done_cv: Condvar,
 }
 
@@ -83,6 +198,10 @@ impl Shared {
         // coherent — continue rather than double-panic.
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
+
+    fn wait_done<'a>(&'a self, st: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// A fixed-size pool of long-lived workers created once and reused for
@@ -90,6 +209,9 @@ impl Shared {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    /// Sticky lane affinity (default on): rounds are published as
+    /// contiguous per-lane ranges instead of one shared counter.
+    affinity: bool,
 }
 
 /// Typed context `scatter` publishes behind the erased [`Job`] pointer.
@@ -115,7 +237,12 @@ impl WorkerPool {
             state: Mutex::new(State {
                 round: 0,
                 next: 0,
+                lane_next: Vec::new(),
+                lane_hi: Vec::new(),
                 remaining: 0,
+                done: Vec::new(),
+                finished: 0,
+                streaming: false,
                 job: None,
                 panic: None,
                 shutdown: false,
@@ -124,17 +251,65 @@ impl WorkerPool {
             done_cv: Condvar::new(),
         });
         let handles = (1..workers.max(1))
-            .map(|_| {
+            .map(|lane| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(&shared, lane))
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool {
+            shared,
+            handles,
+            affinity: true,
+        }
     }
 
     /// Total parallel lanes (spawned workers + the participating caller).
     pub fn workers(&self) -> usize {
         self.handles.len() + 1
+    }
+
+    /// Toggle sticky lane affinity (see the module docs; default on).
+    /// Both claim modes visit every item exactly once, so this never
+    /// changes results — only cache behaviour.
+    pub fn set_affinity(&mut self, on: bool) {
+        self.affinity = on;
+    }
+
+    /// Whether rounds are published with per-lane claim ranges.
+    pub fn affinity(&self) -> bool {
+        self.affinity
+    }
+
+    /// Publish a round and wake the workers. Caller must hold no lock.
+    fn publish(&self, job: Job, streaming: bool) {
+        let mut st = self.shared.lock();
+        st.round = st.round.wrapping_add(1);
+        st.publish_claims(job.len, self.handles.len() + 1, self.affinity);
+        st.remaining = self.handles.len();
+        st.streaming = streaming;
+        st.finished = 0;
+        st.done.clear();
+        if streaming {
+            st.done.resize(job.len, false);
+        }
+        st.job = Some(job);
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Wait for every worker to check the round in, unpublish it and
+    /// re-raise the round's first panic (if any) on the caller.
+    fn barrier(&self) {
+        let mut st = self.shared.lock();
+        while st.remaining > 0 {
+            st = self.shared.wait_done(st);
+        }
+        st.job = None;
+        st.streaming = false;
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
     }
 
     /// Run `f` once on every element of `items`, fanned across the pool.
@@ -154,31 +329,21 @@ impl WorkerPool {
             }
             return;
         }
-        let len = items.len();
         let ctx = Ctx { base: items.as_mut_ptr(), f: &f };
         let job = Job {
             data: (&ctx as *const Ctx<T, F>).cast(),
             call: call_one::<T, F>,
-            len,
+            len: items.len(),
         };
-        {
-            let mut st = self.shared.lock();
-            st.round = st.round.wrapping_add(1);
-            st.next = 0;
-            st.remaining = self.handles.len();
-            st.job = Some(job);
-            self.shared.work_cv.notify_all();
-        }
+        self.publish(job, false);
         // Lane 0: the caller claims items alongside the woken workers.
         loop {
             let i = {
                 let mut st = self.shared.lock();
-                if st.next >= len {
-                    break;
+                match st.claim(0) {
+                    Some(i) => i,
+                    None => break,
                 }
-                let i = st.next;
-                st.next += 1;
-                i
             };
             // SAFETY: index `i` was claimed exclusively above and `ctx`
             // lives until the barrier below.
@@ -186,29 +351,102 @@ impl WorkerPool {
                 (job.call)(job.data, i)
             }));
             if let Err(payload) = hit {
-                let mut st = self.shared.lock();
-                st.next = len; // abort the round's remaining claims
-                if st.panic.is_none() {
-                    st.panic = Some(payload);
-                }
+                self.shared.lock().stash_panic(payload);
             }
         }
         // Barrier: `scatter` must not return (releasing the `items`
         // borrow) while any worker could still be inside an element.
+        self.barrier();
+    }
+
+    /// [`WorkerPool::scatter`] plus an in-order commit queue: `f` fans
+    /// out across the lanes exactly as in `scatter`, and the caller —
+    /// the sole committer — applies `commit` to each item in ascending
+    /// index order as soon as items `0..=i` have all finished `f`, while
+    /// higher-indexed items may still be running. `commit`'s second
+    /// argument reports whether any item was still unfinished when that
+    /// commit began (the overlap telemetry). When the frontier is blocked
+    /// the caller claims `f`-work itself rather than idling.
+    ///
+    /// Exclusivity: a worker never touches item `i` after flagging it
+    /// done, and only the caller runs `commit`, so the `&mut T` handed to
+    /// `commit` is unaliased even while other items are mid-`f`. Panics
+    /// in `f` or `commit` abort the round's remaining claims and re-raise
+    /// here after the barrier; items past the frontier then stay
+    /// uncommitted.
+    pub fn scatter_streaming<T, F, C>(&self, items: &mut [T], f: F, mut commit: C)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+        C: FnMut(&mut T, bool),
+    {
+        if self.handles.is_empty() || items.len() <= 1 {
+            // Degenerate pipeline: run and commit each item in order on
+            // the caller; nothing ever overlaps a commit.
+            for it in items.iter_mut() {
+                f(it);
+                commit(it, false);
+            }
+            return;
+        }
+        let len = items.len();
+        let base = items.as_mut_ptr();
+        let ctx = Ctx { base, f: &f };
+        let job = Job {
+            data: (&ctx as *const Ctx<T, F>).cast(),
+            call: call_one::<T, F>,
+            len,
+        };
+        self.publish(job, true);
+        let mut committed = 0usize;
         let mut st = self.shared.lock();
-        while st.remaining > 0 {
-            st = self
-                .shared
-                .done_cv
-                .wait(st)
-                .unwrap_or_else(|e| e.into_inner());
+        while committed < len {
+            if st.panic.is_some() {
+                st.abort_claims();
+                break;
+            }
+            if st.done[committed] {
+                // The frontier item is ready: commit it outside the lock.
+                let overlapped = st.finished < len;
+                drop(st);
+                // SAFETY: `done[committed]` means its exclusive claimant
+                // finished `f` and will never touch it again; the caller
+                // is the only committer, so the reference is unaliased.
+                let item = unsafe { &mut *base.add(committed) };
+                let hit =
+                    catch_unwind(AssertUnwindSafe(|| commit(item, overlapped)));
+                committed += 1;
+                st = self.shared.lock();
+                if let Err(payload) = hit {
+                    st.stash_panic(payload);
+                    break;
+                }
+                continue;
+            }
+            // Frontier not ready: help with phase work instead of idling.
+            if let Some(i) = st.claim(0) {
+                drop(st);
+                // SAFETY: exclusive claim of `i`; `ctx` lives until the
+                // barrier below.
+                let hit = catch_unwind(AssertUnwindSafe(|| unsafe {
+                    (job.call)(job.data, i)
+                }));
+                st = self.shared.lock();
+                match hit {
+                    Ok(()) => {
+                        st.done[i] = true;
+                        st.finished += 1;
+                    }
+                    Err(payload) => st.stash_panic(payload),
+                }
+                continue;
+            }
+            // Nothing to claim and the frontier item is still running on
+            // a worker: park until a completion (or check-in) pulse.
+            st = self.shared.wait_done(st);
         }
-        st.job = None;
-        let panic = st.panic.take();
         drop(st);
-        if let Some(payload) = panic {
-            std::panic::resume_unwind(payload);
-        }
+        self.barrier();
     }
 }
 
@@ -228,9 +466,12 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Body of one spawned worker: park until a new round (or shutdown),
-/// claim-and-run items until the round is dry, check in, repeat.
-fn worker_loop(shared: &Shared) {
+/// Body of one spawned worker (`lane` ≥ 1; lane 0 is the caller): park
+/// until a new round (or shutdown), claim-and-run items until the round
+/// is dry — own affinity range first — check in, repeat. Streaming
+/// rounds additionally flag each completed item and pulse the caller so
+/// the commit frontier can advance.
+fn worker_loop(shared: &Shared, lane: usize) {
     let mut seen: u64 = 0;
     let mut st = shared.lock();
     loop {
@@ -243,11 +484,10 @@ fn worker_loop(shared: &Shared) {
         seen = st.round;
         if let Some(job) = st.job {
             loop {
-                if st.next >= job.len {
-                    break;
-                }
-                let i = st.next;
-                st.next += 1;
+                let i = match st.claim(lane) {
+                    Some(i) => i,
+                    None => break,
+                };
                 drop(st);
                 // SAFETY: exclusive claim of `i`; the caller's barrier
                 // keeps the pointee alive until we check in below.
@@ -255,17 +495,28 @@ fn worker_loop(shared: &Shared) {
                     (job.call)(job.data, i)
                 }));
                 st = shared.lock();
-                if let Err(payload) = hit {
-                    st.next = job.len;
-                    if st.panic.is_none() {
-                        st.panic = Some(payload);
+                match hit {
+                    Ok(()) => {
+                        if st.streaming {
+                            st.done[i] = true;
+                            st.finished += 1;
+                            // Wake the committer: the frontier may now
+                            // include this item.
+                            shared.done_cv.notify_all();
+                        }
+                    }
+                    Err(payload) => {
+                        st.stash_panic(payload);
+                        if st.streaming {
+                            shared.done_cv.notify_all();
+                        }
                     }
                 }
             }
         }
         st.remaining -= 1;
         if st.remaining == 0 {
-            shared.done_cv.notify_one();
+            shared.done_cv.notify_all();
         }
     }
 }
@@ -279,6 +530,18 @@ mod tests {
     fn scatter_visits_every_item_exactly_once() {
         let pool = WorkerPool::new(4);
         for len in [0usize, 1, 2, 3, 4, 7, 64, 257] {
+            let mut items: Vec<u32> = vec![0; len];
+            pool.scatter(&mut items, |x| *x += 1);
+            assert!(items.iter().all(|&x| x == 1), "len {len}: {items:?}");
+        }
+    }
+
+    #[test]
+    fn shared_counter_mode_also_visits_every_item_exactly_once() {
+        let mut pool = WorkerPool::new(4);
+        pool.set_affinity(false);
+        assert!(!pool.affinity());
+        for len in [0usize, 1, 3, 7, 64, 257] {
             let mut items: Vec<u32> = vec![0; len];
             pool.scatter(&mut items, |x| *x += 1);
             assert!(items.iter().all(|&x| x == 1), "len {len}: {items:?}");
@@ -351,5 +614,105 @@ mod tests {
         let mut again = vec![0u32; 16];
         pool.scatter(&mut again, |x| *x = 7);
         assert!(again.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn streaming_commits_every_item_in_ascending_order() {
+        let pool = WorkerPool::new(4);
+        for len in [0usize, 1, 2, 3, 7, 64, 257] {
+            let mut items: Vec<u32> = vec![0; len];
+            let order = std::sync::Mutex::new(Vec::new());
+            pool.scatter_streaming(
+                &mut items,
+                |x| *x += 1,
+                |x, _overlapped| {
+                    *x += 10;
+                    order.lock().unwrap().push(*x);
+                },
+            );
+            assert!(items.iter().all(|&x| x == 11), "len {len}: {items:?}");
+            // Commits ran strictly in index order, exactly once each.
+            assert_eq!(order.into_inner().unwrap().len(), len);
+        }
+    }
+
+    #[test]
+    fn streaming_commit_sees_phase_work_of_its_item() {
+        // Commit index order is observable: stamp each item with its
+        // commit sequence number and check it matches its index.
+        let pool = WorkerPool::new(3);
+        let mut items: Vec<(u64, u64)> = (0..100).map(|i| (i, 0)).collect();
+        let mut seq = 0u64;
+        pool.scatter_streaming(
+            &mut items,
+            |it| it.1 = it.0 * 2,
+            |it, _| {
+                assert_eq!(it.1, it.0 * 2, "commit before f finished");
+                it.1 = seq;
+                seq += 1;
+            },
+        );
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(it.1, i as u64, "commit order broke at {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_single_lane_interleaves_inline() {
+        let pool = WorkerPool::new(1);
+        let mut items = vec![0u32; 9];
+        let mut commits = 0;
+        pool.scatter_streaming(
+            &mut items,
+            |x| *x = 5,
+            |x, overlapped| {
+                assert_eq!(*x, 5);
+                assert!(!overlapped, "inline path never overlaps");
+                commits += 1;
+            },
+        );
+        assert_eq!(commits, 9);
+    }
+
+    #[test]
+    fn streaming_panic_in_f_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u32> = (0..64).collect();
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter_streaming(
+                &mut items,
+                |x| {
+                    if *x == 13 {
+                        panic!("unlucky shard");
+                    }
+                },
+                |_x, _| {},
+            );
+        }));
+        assert!(boom.is_err(), "phase panic must surface on the caller");
+        let mut again = vec![0u32; 16];
+        pool.scatter_streaming(&mut again, |x| *x = 3, |x, _| *x += 1);
+        assert!(again.iter().all(|&x| x == 4));
+    }
+
+    #[test]
+    fn streaming_panic_in_commit_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u32> = (0..64).collect();
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter_streaming(
+                &mut items,
+                |_x| {},
+                |x, _| {
+                    if *x == 20 {
+                        panic!("unlucky commit");
+                    }
+                },
+            );
+        }));
+        assert!(boom.is_err(), "commit panic must surface on the caller");
+        let mut again = vec![0u32; 8];
+        pool.scatter(&mut again, |x| *x = 2);
+        assert!(again.iter().all(|&x| x == 2));
     }
 }

@@ -101,25 +101,42 @@
 //! [`MergeAction`] delta instead of mutating shared state (the
 //! `PAR-SHARED` lint rule rejects shared-state access in
 //! `lint:par-section` functions and in closures run through
-//! `WorkerPool::scatter`); (3) a **deterministic merge barrier** — now
-//! only the genuinely order-dependent work: deltas apply in ascending
-//! tenant order through a ground-truth capacity guard (snapshot decisions
-//! can collectively overbook a machine; deferred submits stay Ready and
-//! retry next tick, exactly like a refused budget commit), each admitted
-//! submit finishes its rate from the *live* demand signal
-//! ([`GridWorld::submit_prepared`] — demand premiums and reservation
+//! `WorkerPool::scatter`/`scatter_streaming`); (3) a **streaming ordered
+//! merge** — only the genuinely order-dependent work, run as an in-order
+//! commit queue instead of a hard barrier: tenant *t*'s delta applies
+//! (through [`MergeCtx`], the mutable slice of world state commits touch)
+//! as soon as shards `0..=t` have all finished phase 2, while
+//! higher-numbered shards are still running in the pool. Deltas still
+//! apply in ascending tenant order through a ground-truth capacity guard
+//! (snapshot decisions can collectively overbook a machine; deferred
+//! submits stay Ready and retry next tick, exactly like a refused budget
+//! commit), each admitted submit finishes its rate from the *live* demand
+//! signal ([`merge_submit_prepared`] — demand premiums and reservation
 //! holds move with earlier merge submits, so they cannot be precomputed),
-//! and the members' next ticks are rescheduled in the same order. No step
-//! depends on worker interleaving, so traces are bit-exact at **every**
-//! thread count: `threads(1)` runs the identical pipeline on the caller
-//! thread and is the reference path
+//! and the members' next ticks are rescheduled in the same order.
+//!
+//! **The streaming-merge invariant:** a commit must never change anything
+//! a still-running shard can read. Shards read the occupancy tallies
+//! through per-batch snapshot copies (`snap_in_flight`/`snap_reserved`),
+//! commits mutate the live arrays; the cross-tenant effects a commit
+//! *would* fan out — `mark_view_all` dirtying and GRAM cancel
+//! withdrawals — are deferred into commit-ordered buffers
+//! (`mark_buf`/`cancel_buf`) and replayed by `drain_merge_buffers` once
+//! every shard has dropped its `&mut Tenant`. The capacity guard reads
+//! only the live tallies (never the GRAM managers), so deferring the
+//! withdrawals is invisible to admission decisions. Streamed commits are
+//! therefore byte-identical to the PR-9 barrier
+//! ([`GridWorld::set_barrier_merge`] keeps that path selectable for the
+//! comparison), and no step depends on worker interleaving, so traces are
+//! bit-exact at **every** thread count and merge mode: `threads(1)` runs
+//! the identical pipeline on the caller thread and is the reference path
 //! (`rust/tests/parallel_equivalence.rs` replays contested, auction,
-//! reservation and 256-tenant worlds at 1/2/4/8 threads and compares
-//! `to_bits`). Batches of one — any single-tenant world — take the
-//! original sequential `on_tick` verbatim, which is what keeps
-//! [`super::GridSimulation`] byte-identical to the legacy driver: snapshot
-//! semantics and snapshot-vs-cascade differences only exist where two
-//! tenants actually share an instant.
+//! reservation and 256-tenant worlds at 1/2/4/8 threads under both merge
+//! modes and compares `to_bits`). Batches of one — any single-tenant
+//! world — take the original sequential `on_tick` verbatim, which is what
+//! keeps [`super::GridSimulation`] byte-identical to the legacy driver:
+//! snapshot semantics and snapshot-vs-cascade differences only exist
+//! where two tenants actually share an instant.
 
 use crate::broker::{ScheduleAdvisor, TickCtx};
 use crate::config::ExperimentConfig;
@@ -290,6 +307,15 @@ pub struct Tenant {
     failed_negotiations: u32,
     /// Advance-reservation holds (empty forever when the subsystem is off).
     rsv: ReservationStore,
+    /// Recycled action buffer for this tenant's [`TenantShard`]: taken at
+    /// shard construction, returned (drained, capacity intact) by the
+    /// merge commit — batched ticks stop allocating a delta Vec per
+    /// member per batch.
+    merge_scratch: Vec<MergeAction>,
+    /// Scratch for the bulk re-key path of `refresh_tenant_views`: the
+    /// rids popped off `dirty_queue` this refresh, in pop order, handed to
+    /// [`CandidateIndex::update_cols_bulk`] in one call.
+    refresh_buf: Vec<u32>,
 }
 
 impl Tenant {
@@ -385,12 +411,13 @@ struct WorldView<'w> {
 /// phase so the merge barrier only finishes the live half. Everything
 /// here is constant across the whole merge: posted quotes and competition
 /// premiums move only with marked events, agreements and effective speeds
-/// are untouched by merge submits, spec names are static, and the per-job
-/// work draw is a pure function of (sampler seed, job id). What *cannot*
-/// be precomputed — the demand premium (earlier merge submits raise
-/// utilization) and the committed-hold rate override (an earlier submit
-/// by the same tenant can consume the hold's last slot and close it) —
-/// stays in [`GridWorld::submit_prepared`].
+/// are untouched by merge submits, and the per-job work draw is a pure
+/// function of (sampler seed, job id). What *cannot* be precomputed — the
+/// demand premium (earlier merge submits raise utilization) and the
+/// committed-hold rate override (an earlier submit by the same tenant can
+/// consume the hold's last slot and close it) — stays in
+/// [`merge_submit_prepared`]. (Ledger-line spec names are borrowed from
+/// the testbed at commit time, so nothing here is heap-allocated.)
 struct PreparedSubmit {
     /// Posted per-user quote × background-competition premium; the live
     /// demand premium multiplies this at merge time, in the same
@@ -402,8 +429,6 @@ struct PreparedSubmit {
     /// Effective speed under current background load, floored like every
     /// cost estimate (`LoadUpdate` is a separate event, never mid-merge).
     speed: f64,
-    /// Spec name for ledger lines (static; cloned off the hot merge path).
-    name: String,
     /// The job's true work draw — pure in (sampler seed, job id).
     work_ref_h: f64,
 }
@@ -436,16 +461,29 @@ struct TenantShard<'t> {
     job_work: f64,
 }
 
+/// Dirty-queue size at which `refresh_tenant_views` switches from
+/// per-entry `update_cols` re-keys to one [`CandidateIndex::update_cols_bulk`]
+/// sweep over the collected rids. Below this, chunk setup costs more than
+/// it saves; at or above it (MDS refreshes, repricing sweeps, agreement
+/// expiries — anything that dirties many views at once), the bulk path's
+/// fixed-width column loops win. Keys are bit-identical either way (both
+/// paths share the `_parts` helpers), so this is purely a throughput knob.
+const BULK_REKEY_MIN: usize = 8;
+
 /// Rebuild every dirty view entry of one tenant from its sources: the
 /// (stale) MDS record, GRAM slots net of competition claims and other
 /// tenants' occupancy, the demand-adjusted quote, the tenant engine's
 /// in-flight count and its advisor's measured service rate. Every rebuilt
-/// entry is immediately re-keyed in the tenant's candidate index
-/// (O(log R)), keeping the ranked orderings policies allocate from in
-/// lockstep with the table. Cost is O(dirty · log R); the pre-incremental
-/// pipeline paid O(resources) here every tick. Reads shared state only
-/// through the frozen snapshot and writes only tenant-local state, so the
-/// parallel phase runs it on disjoint tenants concurrently.
+/// entry is re-keyed in the tenant's candidate index (O(log R)) — inline
+/// for small refreshes, deferred into one chunked
+/// [`CandidateIndex::update_cols_bulk`] sweep when ≥ [`BULK_REKEY_MIN`]
+/// entries are dirty (the rebuild loop never reads the index, so moving
+/// the re-keys after it is state-identical) — keeping the ranked
+/// orderings policies allocate from in lockstep with the table. Cost is
+/// O(dirty · log R); the pre-incremental pipeline paid O(resources) here
+/// every tick. Reads shared state only through the frozen snapshot and
+/// writes only tenant-local state, so the parallel phase runs it on
+/// disjoint tenants concurrently.
 // lint:par-section
 fn refresh_tenant_views(wv: &WorldView<'_>, tenant: &mut Tenant) {
     if wv.full_rebuild {
@@ -453,6 +491,10 @@ fn refresh_tenant_views(wv: &WorldView<'_>, tenant: &mut Tenant) {
         for i in 0..n {
             tenant.mark_view(ResourceId(i as u32));
         }
+    }
+    let bulk = tenant.dirty_queue.len() >= BULK_REKEY_MIN;
+    if bulk {
+        tenant.refresh_buf.clear();
     }
     let now = wv.now;
     while let Some(r) = tenant.dirty_queue.pop() {
@@ -523,10 +565,18 @@ fn refresh_tenant_views(wv: &WorldView<'_>, tenant: &mut Tenant) {
         // touch reads 25 contiguous-array bytes instead of striding the
         // view structs. Same keys to the last bit (`update_cols` shares
         // the `_parts` key helpers with `update`; unit-proven in
-        // scheduler::index and audited by `consistent_with` below).
+        // scheduler::index and audited by `consistent_with` below). Large
+        // refreshes collect their rids instead and re-key once, below.
         tenant.cols.set(&tenant.views[i]);
-        tenant.index.update_cols(rid, &tenant.cols);
+        if bulk {
+            tenant.refresh_buf.push(r);
+        } else {
+            tenant.index.update_cols(rid, &tenant.cols);
+        }
         tenant.report.view_refreshes += 1;
+    }
+    if bulk {
+        tenant.index.update_cols_bulk(&tenant.refresh_buf, &tenant.cols);
     }
 }
 
@@ -558,7 +608,6 @@ fn prepare_submit(
         posted_x_comp: quote * comp_premium,
         agreement_rate,
         speed: wv.dyns[i].effective_speed(spec).max(0.05),
-        name: spec.name.clone(),
         work_ref_h: tenant.sampler.work_ref_h(jid),
     }
 }
@@ -608,22 +657,261 @@ fn tick_tenant_shard(wv: &WorldView<'_>, shard: &mut TenantShard<'_>) {
     );
     tenant.report.alloc_ns += alloc_t0.elapsed().as_nanos() as u64;
     // Hoist the frozen-input half of every pending submit out of the
-    // merge barrier: pricing lookups, agreement checks, speed reads, name
-    // clones and work draws all run here, in parallel, leaving the
-    // barrier only the ordered capacity-guarded parts.
-    shard.actions = actions
-        .into_iter()
-        .map(|a| match a {
-            Action::Submit { job, rid } => MergeAction::Submit {
-                job,
-                rid,
-                prep: prepare_submit(wv, tenant, job, rid),
-            },
-            Action::CancelQueued { job, rid } => {
-                MergeAction::CancelQueued { job, rid }
+    // merge commit: pricing lookups, agreement checks, speed reads and
+    // work draws all run here, in parallel, leaving the commit queue only
+    // the ordered capacity-guarded parts. Extends the shard's recycled
+    // scratch buffer (taken from the tenant at shard construction, handed
+    // back by the commit) so steady-state batches allocate nothing here.
+    shard.actions.extend(actions.into_iter().map(|a| match a {
+        Action::Submit { job, rid } => MergeAction::Submit {
+            job,
+            rid,
+            prep: prepare_submit(wv, tenant, job, rid),
+        },
+        Action::CancelQueued { job, rid } => {
+            MergeAction::CancelQueued { job, rid }
+        }
+    }));
+}
+
+/// The mutable slice of world state a phase-3 commit touches, split out
+/// of [`GridWorld`] so the streaming ordered merge can apply deltas while
+/// phase-2 shards still hold `&mut` borrows of the *tenants* vector.
+/// Field borrows are disjoint by construction: commits mutate the live
+/// occupancy tallies, the billing transports and the event queue; shards
+/// own their single `Tenant` and read everything shared through the
+/// frozen [`WorldView`] (whose occupancy columns point at per-batch
+/// snapshot copies, not these live arrays). The two cross-tenant effects
+/// a commit cannot apply while shards run — `mark_view_all` dirtying and
+/// GRAM cancel withdrawals — are deferred into `marks`/`gram_cancels` in
+/// commit order and replayed by [`GridWorld::drain_merge_buffers`] after
+/// the shards drop.
+struct MergeCtx<'a> {
+    now: SimTime,
+    tb: &'a Testbed,
+    competition: Option<&'a Competition>,
+    total_in_flight: &'a mut Vec<u32>,
+    total_reserved: &'a mut Vec<u32>,
+    gass: &'a mut Gass,
+    proxy: &'a mut ClusterProxy,
+    q: &'a mut EventQueue<Ev>,
+    marks: &'a mut Vec<ResourceId>,
+    gram_cancels: &'a mut Vec<(ResourceId, JobId)>,
+}
+
+impl MergeCtx<'_> {
+    /// Live demand signal at commit time (mirrors
+    /// [`GridWorld::utilization`]) — earlier commits in the same batch
+    /// have already moved the tallies, which is exactly why the demand
+    /// premium cannot be precomputed in phase 2.
+    fn utilization(&self, rid: ResourceId) -> f64 {
+        let claimed =
+            self.competition.map(|c| c.claimed(rid)).unwrap_or(0);
+        utilization_of(
+            self.total_in_flight[rid.0 as usize],
+            claimed,
+            self.total_reserved[rid.0 as usize],
+            self.tb.spec(rid).cpus,
+        )
+    }
+
+    /// Mirrors [`GridWorld::dec_total_in_flight`] for merge commits.
+    fn dec_in_flight(&mut self, rid: ResourceId) {
+        let c = &mut self.total_in_flight[rid.0 as usize];
+        debug_assert!(*c > 0, "world in-flight underflow on {rid}");
+        *c = c.saturating_sub(1);
+    }
+}
+
+/// Merge-phase capacity guard. Batch members decide against the same
+/// frozen snapshot, so their combined submits can oversubscribe a machine
+/// that looked free to each of them individually. A submit is admitted
+/// when ground truth still has an unclaimed CPU — or when the tenant
+/// holds a live committed reservation slot there (dispatching consumes
+/// the hold, so occupancy is net unchanged). A deferred job stays Ready
+/// and is retried at the tenant's next tick, exactly like a refused
+/// budget commit. Earlier tenants win contended last slots — the same
+/// deterministic ascending-tenant order the sequential cascade always
+/// gave them; the commit queue preserves it whether commits stream under
+/// phase 2 or drain behind the barrier. Reads only the live tallies,
+/// never the GRAM managers — which is what makes deferring cancel
+/// withdrawals to the post-batch replay invisible to admission.
+fn merge_submit_ok(
+    ctx: &MergeCtx<'_>,
+    tenant: &Tenant,
+    rid: ResourceId,
+) -> bool {
+    let i = rid.0 as usize;
+    if let Some(r) = tenant.rsv.get(rid) {
+        if r.level == CommitLevel::Committed
+            && r.active(ctx.now)
+            && r.slots > 0
+        {
+            return true;
+        }
+    }
+    let claimed = ctx.competition.map(|c| c.claimed(rid)).unwrap_or(0);
+    ctx.total_in_flight[i] + claimed + ctx.total_reserved[i]
+        < ctx.tb.spec(rid).cpus
+}
+
+/// The live, order-dependent half of a submit — the only submit work left
+/// in the phase-3 commit. Finishes the effective rate from ground truth
+/// (committed-hold override, then the agreement the shard looked up, then
+/// posted × competition × *live* demand premium — earlier commits move
+/// utilization and can consume holds, which is exactly why these two
+/// reads cannot be hoisted), then commits budget, dispatches, and
+/// schedules stage-in. Cross-tenant view marks are deferred into
+/// `ctx.marks` (see [`MergeCtx`]).
+fn merge_submit_prepared(
+    ctx: &mut MergeCtx<'_>,
+    tenant: &mut Tenant,
+    tid: usize,
+    jid: JobId,
+    rid: ResourceId,
+    job_work: f64,
+    prep: PreparedSubmit,
+) {
+    let now = ctx.now;
+    // Budget commit against the expected cost here. Rate precedence
+    // matches `effective_rate`: committed hold, then agreement, then
+    // posted quote under the live demand premium.
+    let rate = match tenant.rsv.get(rid) {
+        Some(r) if r.level == CommitLevel::Committed && r.active(now) => {
+            r.rate
+        }
+        _ => match prep.agreement_rate {
+            Some(a) => a,
+            None => {
+                prep.posted_x_comp
+                    * ctx
+                        .tb
+                        .spec(rid)
+                        .price
+                        .demand_premium(ctx.utilization(rid))
             }
-        })
-        .collect();
+        },
+    };
+    let PreparedSubmit { speed, work_ref_h, .. } = prep;
+    let name = &ctx.tb.spec(rid).name;
+    let est_cost = rate * job_work / speed * 3600.0;
+    if !tenant.ledger.commit(jid, est_cost) {
+        return; // budget headroom exhausted: leave the job Ready
+    }
+    if tenant.exp.dispatch(jid, rid, now).is_err() {
+        tenant.ledger.release(jid, 0.0, name);
+        return;
+    }
+    if let Some(j) = &mut tenant.journal {
+        let _ = j.dispatched(jid, rid, now);
+    }
+    // Dispatching onto a machine the tenant holds a committed
+    // reservation on consumes one held slot at its locked rate; the
+    // rate rides the in-flight record so execution start still bills
+    // it after the hold itself has closed.
+    let mut locked_rate = None;
+    if let Some(c) = tenant.rsv.consume_slot(rid, now) {
+        locked_rate = Some(c.rate);
+        ctx.total_reserved[rid.0 as usize] =
+            ctx.total_reserved[rid.0 as usize].saturating_sub(1);
+        if c.closed {
+            // Every slot was used: refund the penalty envelope whole.
+            tenant.ledger.release(rsv_jid(rid), 0.0, name);
+            if let Some(j) = &mut tenant.journal {
+                let _ = j.reservation_closed(rid);
+            }
+        }
+    }
+    tenant.inflight.insert(
+        jid,
+        InFlight {
+            dispatched_at: now,
+            exec_started: None,
+            rate: 0.0,
+            work_ref_h,
+            cpu_s: 0.0,
+            locked_rate,
+        },
+    );
+    ctx.total_in_flight[rid.0 as usize] += 1;
+    ctx.marks.push(rid); // occupancy changed for everyone (replayed post-batch)
+    // Stage-in through GASS (and the cluster proxy if private).
+    let input_bytes = tenant.cfg.workload.input_bytes;
+    let t_stage =
+        ctx.proxy
+            .begin(ctx.gass, ctx.tb, ctx.tb.spec(rid), input_bytes);
+    ctx.q.schedule_in(
+        t_stage,
+        Ev::StagedIn {
+            tid: tid as u32,
+            rid,
+            jid,
+        },
+    );
+}
+
+/// Commit half of a queued-job cancellation. The GRAM withdrawal is
+/// deferred into `ctx.gram_cancels`: still-running shards read manager
+/// slot counts through the frozen snapshot semantics, and the capacity
+/// guard never consults managers, so replaying withdrawals post-batch (in
+/// commit order) leaves every admission decision and the end-of-batch
+/// manager state byte-identical to the inline call.
+fn merge_cancel_queued(
+    ctx: &mut MergeCtx<'_>,
+    tenant: &mut Tenant,
+    tid: usize,
+    jid: JobId,
+    rid: ResourceId,
+) {
+    // Withdraw from GRAM if it got there (deferred; see above) —
+    // mid-stage-in jobs are caught at their StagedIn event by the state
+    // check.
+    ctx.gram_cancels.push((rid, grid_jid(tid, jid)));
+    let name = &ctx.tb.spec(rid).name;
+    tenant.ledger.release(jid, 0.0, name);
+    if tenant.exp.release(jid).is_ok() {
+        if let Some(j) = &mut tenant.journal {
+            let _ = j.released(jid);
+        }
+        ctx.dec_in_flight(rid);
+        ctx.marks.push(rid); // occupancy changed for everyone
+    }
+    tenant.inflight.remove(&jid);
+}
+
+/// Apply one finished shard's delta — the commit-queue body shared by
+/// every phase-3 mode (streaming, barrier, sequential `threads(1)`):
+/// capacity-guarded submits and cancellations in action order, then the
+/// member's next tick rescheduled. Returns the drained action buffer to
+/// the tenant as recycled scratch for its next shard.
+fn commit_shard(ctx: &mut MergeCtx<'_>, shard: &mut TenantShard<'_>) {
+    let tid = shard.tid;
+    let job_work = shard.job_work;
+    for action in shard.actions.drain(..) {
+        match action {
+            MergeAction::Submit { job, rid, prep } => {
+                if merge_submit_ok(ctx, shard.tenant, rid) {
+                    merge_submit_prepared(
+                        ctx,
+                        shard.tenant,
+                        tid,
+                        job,
+                        rid,
+                        job_work,
+                        prep,
+                    );
+                }
+            }
+            MergeAction::CancelQueued { job, rid } => {
+                merge_cancel_queued(ctx, shard.tenant, tid, job, rid)
+            }
+        }
+    }
+    shard.tenant.merge_scratch = std::mem::take(&mut shard.actions);
+    if !shard.tenant.exp.finished() {
+        let period = shard.tenant.cfg.tick_period_s;
+        ctx.q.schedule_in(period, Ev::Tick { tid: tid as u32 });
+    }
 }
 
 /// One tenant's construction inputs for [`GridWorld::new`].
@@ -702,14 +990,40 @@ pub struct GridWorld {
     /// behaviour) instead of using the persistent pool. Bit-identical
     /// traces; only spawn overhead differs.
     scoped_spawn: bool,
+    /// Comparison baseline: drain the whole phase-3 commit queue behind a
+    /// hard barrier (the PR-9 behaviour) instead of streaming commits
+    /// under phase 2. Bit-identical traces; only overlap differs.
+    barrier_merge: bool,
     /// Wall-clock phase telemetry for the batched tick (see the
     /// [`crate::metrics::WorldReport`] fields of the same names): never
     /// read by the simulation, excluded from bit-exact comparisons.
     snapshot_ns: u64,
     parallel_ns: u64,
     merge_ns: u64,
+    /// Merge wall-time that ran while phase-2 shards were still in flight
+    /// (streaming mode only; always 0 under the barrier).
+    merge_overlap_ns: u64,
     /// Batches fanned out through the persistent pool (telemetry).
     pool_rounds: u64,
+    /// Per-batch scratch, reused across batches so the batched tick is
+    /// allocation-stable at steady state (`scratch_regrows` counts the
+    /// exceptions): frozen occupancy copies published to phase-2 shards
+    /// (`snap_*`), the live member list / flags / forked sub-RNGs, and
+    /// the commit-ordered deferred-effect buffers drained by
+    /// `drain_merge_buffers`.
+    snap_in_flight: Vec<u32>,
+    snap_reserved: Vec<u32>,
+    member_buf: Vec<usize>,
+    member_flag_buf: Vec<bool>,
+    rng_buf: Vec<Rng>,
+    mark_buf: Vec<ResourceId>,
+    cancel_buf: Vec<(ResourceId, JobId)>,
+    /// Times any per-batch scratch buffer grew past its previously
+    /// observed (nonzero) capacity — a debug-visible allocation-stability
+    /// counter; small after warm-up by construction.
+    scratch_regrows: u64,
+    /// Previously observed capacities of (member, mark, cancel) scratch.
+    scratch_caps: [usize; 3],
 }
 
 impl GridWorld {
@@ -831,6 +1145,8 @@ impl GridWorld {
                 deal_rounds: 0,
                 failed_negotiations: 0,
                 rsv: ReservationStore::new(n),
+                merge_scratch: Vec::new(),
+                refresh_buf: Vec::new(),
             });
         }
 
@@ -871,10 +1187,21 @@ impl GridWorld {
             threads: 1,
             pool: None,
             scoped_spawn: false,
+            barrier_merge: false,
             snapshot_ns: 0,
             parallel_ns: 0,
             merge_ns: 0,
+            merge_overlap_ns: 0,
             pool_rounds: 0,
+            snap_in_flight: Vec::new(),
+            snap_reserved: Vec::new(),
+            member_buf: Vec::new(),
+            member_flag_buf: Vec::new(),
+            rng_buf: Vec::new(),
+            mark_buf: Vec::new(),
+            cancel_buf: Vec::new(),
+            scratch_regrows: 0,
+            scratch_caps: [0; 3],
         };
         // Seed availability churn per resource.
         for i in 0..world.tb.resources.len() {
@@ -1019,6 +1346,27 @@ impl GridWorld {
         if on {
             self.pool = None;
         }
+    }
+
+    /// Comparison baseline: drain the phase-3 commit queue behind a hard
+    /// barrier — every shard finishes before the first delta applies (the
+    /// PR-9 behaviour) — instead of the default streaming ordered merge
+    /// that commits tenant *t* as soon as shards `0..=t` are done. Traces
+    /// are bit-identical: both modes apply the same deltas in the same
+    /// ascending tenant order against the same deferred-effect buffers,
+    /// only the wall-clock overlap with phase 2 differs. Exists for the
+    /// barrier-vs-streaming comparison in `benches/grid_scaling.rs` and
+    /// `rust/tests/parallel_equivalence.rs`. Mirrors
+    /// [`set_full_view_rebuild`](Self::set_full_view_rebuild).
+    pub fn set_barrier_merge(&mut self, on: bool) {
+        self.barrier_merge = on;
+    }
+
+    /// Times any per-batch scratch buffer grew past its previously
+    /// observed capacity (see `scratch_regrows` on the struct) — the
+    /// allocation-stability telemetry for the batched hot path.
+    pub fn scratch_regrows(&self) -> u64 {
+        self.scratch_regrows
     }
 
     /// Lanes of parallelism batched ticks actually use: the configured
@@ -1644,6 +1992,7 @@ impl GridWorld {
             snapshot_ns: self.snapshot_ns,
             parallel_ns: self.parallel_ns,
             merge_ns: self.merge_ns,
+            merge_overlap_ns: self.merge_overlap_ns,
             pool_workers: self.pool.as_ref().map(|p| p.workers()).unwrap_or(0)
                 as u32,
             pool_rounds: self.pool_rounds,
@@ -1909,12 +2258,16 @@ impl GridWorld {
     /// `threads`.
     fn on_tick_batch(&mut self, batch: &[usize]) {
         let now = self.q.now();
-        let members: Vec<usize> = batch
-            .iter()
-            .copied()
-            .filter(|&tid| !self.tenants[tid].exp.finished())
-            .collect();
+        let mut members = std::mem::take(&mut self.member_buf);
+        members.clear();
+        members.extend(
+            batch
+                .iter()
+                .copied()
+                .filter(|&tid| !self.tenants[tid].exp.finished()),
+        );
         if members.is_empty() {
+            self.member_buf = members;
             return; // nothing to do, nothing to reschedule
         }
         // -- phase 1: sequential snapshot ---------------------------------
@@ -1939,12 +2292,13 @@ impl GridWorld {
                 "slot conservation violated after batched reserve-ahead at t={now}"
             );
         }
-        let rngs: Vec<Rng> =
-            members.iter().map(|&tid| self.rng.fork(tid as u64)).collect();
+        let mut rngs = std::mem::take(&mut self.rng_buf);
+        rngs.clear();
+        rngs.extend(members.iter().map(|&tid| self.rng.fork(tid as u64)));
         self.snapshot_ns += snap_t0.elapsed().as_nanos() as u64;
-        // -- phase 2: parallel per-tenant work ----------------------------
+        // -- phases 2 + 3: parallel shards + streaming ordered merge ------
         // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
-        let par_t0 = std::time::Instant::now();
+        let pipe_t0 = std::time::Instant::now();
         // First batch that can actually fan out builds the persistent
         // pool, sized once to the effective lane count; every later batch
         // reuses it (workers park on a condvar in between).
@@ -1955,135 +2309,179 @@ impl GridWorld {
         {
             self.pool = Some(WorkerPool::new(self.effective_workers()));
         }
-        let mut member_flag = vec![false; self.tenants.len()];
+        let mut member_flag = std::mem::take(&mut self.member_flag_buf);
+        member_flag.clear();
+        member_flag.resize(self.tenants.len(), false);
         for &tid in &members {
             member_flag[tid] = true;
         }
-        let wv = WorldView {
-            now,
-            tb: &self.tb,
-            mds: &self.mds,
-            dyns: &self.dyns,
-            managers: &self.managers,
-            competition: self.competition.as_ref(),
-            total_in_flight: &self.total_in_flight,
-            total_reserved: &self.total_reserved,
-            start_utc_hour: self.start_utc_hour,
-            full_rebuild: self.full_rebuild,
-            full_alloc_sort: self.full_alloc_sort,
-        };
-        // iter_mut ascends tenant ids and `members` is ascending, so the
-        // zip pairs each member with the sub-RNG forked for it above.
-        let mut shards: Vec<TenantShard<'_>> = self
-            .tenants
-            .iter_mut()
-            .enumerate()
-            .filter(|(tid, _)| member_flag[*tid])
-            .zip(rngs)
-            .map(|((tid, tenant), rng)| TenantShard {
-                tid,
-                tenant,
-                rng,
-                actions: Vec::new(),
-                job_work: 0.0,
-            })
-            .collect();
-        let workers = self.threads.min(shards.len()).max(1);
-        match (workers, &self.pool) {
-            (1, _) => {
-                // The reference path: same pipeline, caller thread.
-                for shard in &mut shards {
-                    tick_tenant_shard(&wv, shard);
+        // Freeze the occupancy tallies into reusable snapshot buffers:
+        // streamed commits mutate the live arrays while phase-2 shards
+        // are still reading, so shards read these per-batch copies — the
+        // same phase-1 freeze barrier-mode shards always saw implicitly.
+        self.snap_in_flight.clear();
+        self.snap_in_flight.extend_from_slice(&self.total_in_flight);
+        self.snap_reserved.clear();
+        self.snap_reserved.extend_from_slice(&self.total_reserved);
+        let streaming = !self.barrier_merge && !self.scoped_spawn;
+        let (mut merge_acc, mut overlap_acc) = (0u64, 0u64);
+        {
+            let tb = &self.tb;
+            let competition = self.competition.as_ref();
+            let wv = WorldView {
+                now,
+                tb,
+                mds: &self.mds,
+                dyns: &self.dyns,
+                managers: &self.managers,
+                competition,
+                total_in_flight: &self.snap_in_flight,
+                total_reserved: &self.snap_reserved,
+                start_utc_hour: self.start_utc_hour,
+                full_rebuild: self.full_rebuild,
+                full_alloc_sort: self.full_alloc_sort,
+            };
+            let mut ctx = MergeCtx {
+                now,
+                tb,
+                competition,
+                total_in_flight: &mut self.total_in_flight,
+                total_reserved: &mut self.total_reserved,
+                gass: &mut self.gass,
+                proxy: &mut self.proxy,
+                q: &mut self.q,
+                marks: &mut self.mark_buf,
+                gram_cancels: &mut self.cancel_buf,
+            };
+            // iter_mut ascends tenant ids and `members` is ascending, so
+            // the zip pairs each member with the sub-RNG forked for it
+            // above. Action buffers are the tenants' recycled scratch.
+            let mut shards: Vec<TenantShard<'_>> = self
+                .tenants
+                .iter_mut()
+                .enumerate()
+                .filter(|(tid, _)| member_flag[*tid])
+                .zip(rngs.drain(..))
+                .map(|((tid, tenant), rng)| TenantShard {
+                    tid,
+                    actions: std::mem::take(&mut tenant.merge_scratch),
+                    tenant,
+                    rng,
+                    job_work: 0.0,
+                })
+                .collect();
+            let workers = self.threads.min(shards.len()).max(1);
+            // The commit-queue callback every phase-3 mode funnels
+            // through: applies one shard's delta via `commit_shard` and
+            // splits the wall time into merged-vs-overlapped telemetry.
+            let mut commit = |shard: &mut TenantShard<'_>, overlapped: bool| {
+                // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
+                let t0 = std::time::Instant::now();
+                commit_shard(&mut ctx, shard);
+                let dt = t0.elapsed().as_nanos() as u64;
+                merge_acc += dt;
+                if overlapped {
+                    overlap_acc += dt;
                 }
-            }
-            (_, Some(pool)) if !self.scoped_spawn => {
-                // Persistent pool: workers claim shards off a shared
-                // counter, so a batch smaller than the lane count just
-                // leaves the surplus workers parked.
-                pool.scatter(&mut shards, |shard| tick_tenant_shard(&wv, shard));
-                self.pool_rounds += 1;
-            }
-            _ => {
-                // Scoped-spawn baseline (set_scoped_spawn): fresh threads
-                // per batch over contiguous shard chunks — the PR-8 path
-                // the bench compares pool overhead against.
-                let chunk = shards.len().div_ceil(workers);
-                let wv = &wv;
-                std::thread::scope(|scope| {
-                    for slice in shards.chunks_mut(chunk) {
-                        scope.spawn(move || {
-                            for shard in slice {
-                                tick_tenant_shard(wv, shard);
-                            }
-                        });
-                    }
-                });
-            }
-        }
-        let deltas: Vec<(usize, Vec<MergeAction>, f64)> = shards
-            .into_iter()
-            .map(|s| (s.tid, s.actions, s.job_work))
-            .collect();
-        self.parallel_ns += par_t0.elapsed().as_nanos() as u64;
-        // -- phase 3: deterministic merge barrier -------------------------
-        // Only the order-dependent work is left here: the ground-truth
-        // capacity guard and the live half of each admitted submit. The
-        // frozen half (pricing lookups, agreement checks, speed reads,
-        // name clones, work draws) was precomputed per shard in phase 2.
-        // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
-        let merge_t0 = std::time::Instant::now();
-        for (tid, actions, job_work) in deltas {
-            for action in actions {
-                match action {
-                    MergeAction::Submit { job, rid, prep } => {
-                        if self.batch_submit_ok(tid, rid) {
-                            self.submit_prepared(tid, job, rid, job_work, prep);
+            };
+            match (workers, &self.pool) {
+                (1, _) => {
+                    // The reference path: same pipeline, caller thread.
+                    // Streaming interleaves each shard's commit behind its
+                    // phase-2 work — legal because commits only touch live
+                    // state later shards never read (see MergeCtx) — while
+                    // barrier mode drains the queue after all shards.
+                    if streaming {
+                        for shard in &mut shards {
+                            tick_tenant_shard(&wv, shard);
+                            commit(shard, false);
+                        }
+                    } else {
+                        for shard in &mut shards {
+                            tick_tenant_shard(&wv, shard);
+                        }
+                        for shard in &mut shards {
+                            commit(shard, false);
                         }
                     }
-                    MergeAction::CancelQueued { job, rid } => {
-                        self.cancel_queued(tid, job, rid)
+                }
+                (_, Some(pool)) if !self.scoped_spawn => {
+                    // Persistent pool: workers claim shards (own affinity
+                    // range first), so a batch smaller than the lane count
+                    // just leaves the surplus workers parked. Streaming
+                    // commits tenant t as soon as shards 0..=t are done,
+                    // while higher shards still run.
+                    if streaming {
+                        pool.scatter_streaming(
+                            &mut shards,
+                            |shard| tick_tenant_shard(&wv, shard),
+                            &mut commit,
+                        );
+                    } else {
+                        pool.scatter(&mut shards, |shard| {
+                            tick_tenant_shard(&wv, shard)
+                        });
+                        for shard in &mut shards {
+                            commit(shard, false);
+                        }
+                    }
+                    self.pool_rounds += 1;
+                }
+                _ => {
+                    // Scoped-spawn baseline (set_scoped_spawn): fresh
+                    // threads per batch over contiguous shard chunks — the
+                    // PR-8 path the bench compares pool overhead against.
+                    // Always barrier-merged: the commit queue needs the
+                    // pool's completion flags to stream safely.
+                    let chunk = shards.len().div_ceil(workers);
+                    let wv = &wv;
+                    std::thread::scope(|scope| {
+                        for slice in shards.chunks_mut(chunk) {
+                            scope.spawn(move || {
+                                for shard in slice {
+                                    tick_tenant_shard(wv, shard);
+                                }
+                            });
+                        }
+                    });
+                    for shard in &mut shards {
+                        commit(shard, false);
                     }
                 }
             }
-            if !self.tenants[tid].exp.finished() {
-                let period = self.tenants[tid].cfg.tick_period_s;
-                self.q.schedule_in(period, Ev::Tick { tid: tid as u32 });
-            }
         }
+        let pipe = pipe_t0.elapsed().as_nanos() as u64;
+        // Deferred cross-tenant effects (GRAM withdrawals, view-dirtying
+        // fan-out) replay once every shard has dropped its tenant borrow;
+        // commit order is preserved, so the dirty queues fill exactly as
+        // the old inline calls filled them.
+        // lint:allow(ND-CLOCK): phase nanos are wall-clock telemetry about the tick pipeline; they never feed sim state
+        let tail_t0 = std::time::Instant::now();
+        self.drain_merge_buffers();
         debug_assert!(
             self.slot_conservation_ok(),
             "slot conservation violated after batch merge at t={now}"
         );
-        self.merge_ns += merge_t0.elapsed().as_nanos() as u64;
-    }
-
-    /// Merge-phase capacity guard. Batch members decide against the same
-    /// frozen snapshot, so their combined submits can oversubscribe a
-    /// machine that looked free to each of them individually. A submit is
-    /// admitted when ground truth still has an unclaimed CPU — or when the
-    /// tenant holds a live committed reservation slot there (dispatching
-    /// consumes the hold, so occupancy is net unchanged). A deferred job
-    /// stays Ready and is retried at the tenant's next tick, exactly like
-    /// a refused budget commit. Earlier tenants win contended last slots —
-    /// the same deterministic ascending-tenant order the sequential
-    /// cascade always gave them.
-    fn batch_submit_ok(&self, tid: usize, rid: ResourceId) -> bool {
-        let i = rid.0 as usize;
-        if let Some(r) = self.tenants[tid].rsv.get(rid) {
-            if r.level == CommitLevel::Committed
-                && r.active(self.q.now())
-                && r.slots > 0
-            {
-                return true;
+        let tail = tail_t0.elapsed().as_nanos() as u64;
+        self.parallel_ns += pipe.saturating_sub(merge_acc);
+        self.merge_ns += merge_acc + tail;
+        self.merge_overlap_ns += overlap_acc;
+        // Return the per-batch scratch and count any regrowth (the
+        // allocation-stability telemetry `scratch_regrows()` reports).
+        self.member_buf = members;
+        self.rng_buf = rngs;
+        self.member_flag_buf = member_flag;
+        let caps = [
+            self.member_buf.capacity(),
+            self.mark_buf.capacity(),
+            self.cancel_buf.capacity(),
+        ];
+        for (prev, cap) in self.scratch_caps.iter_mut().zip(caps) {
+            if *prev != 0 && cap > *prev {
+                self.scratch_regrows += 1;
             }
+            *prev = cap;
         }
-        let claimed = self
-            .competition
-            .as_ref()
-            .map(|c| c.claimed(rid))
-            .unwrap_or(0);
-        self.total_in_flight[i] + claimed + self.total_reserved[i]
-            < self.tb.spec(rid).cpus
     }
 
     /// Sequential-path submit: pre-compute the frozen half here (at the
@@ -2109,14 +2507,11 @@ impl GridWorld {
         self.submit_prepared(tid, jid, rid, job_work, prep);
     }
 
-    /// The live, order-dependent half of a submit — the only submit work
-    /// left inside the merge barrier. Finishes the effective rate from
-    /// ground truth (committed-hold override, then the agreement the
-    /// shard looked up, then posted × competition × *live* demand
-    /// premium — earlier merge submits move utilization and can consume
-    /// holds, which is exactly why these two reads cannot be hoisted),
-    /// then commits budget, dispatches, and schedules stage-in.
-    // lint:allow(DIRTY-PAIR): dispatch marks are queued; refresh_dirty_views re-keys them at the next tick
+    /// Sequential entry point over [`merge_submit_prepared`], which holds
+    /// the actual commit logic in [`MergeCtx`] form so the streaming merge
+    /// can run it while later shards are still in flight. Drains the
+    /// deferred-effect buffers before returning, so the inline caller
+    /// observes exactly the old eager-mark behaviour.
     fn submit_prepared(
         &mut self,
         tid: usize,
@@ -2126,105 +2521,72 @@ impl GridWorld {
         prep: PreparedSubmit,
     ) {
         let now = self.q.now();
-        // Budget commit against the expected cost here. Rate precedence
-        // matches `effective_rate`: committed hold, then agreement, then
-        // posted quote under the live demand premium.
-        let rate = match self.tenants[tid].rsv.get(rid) {
-            Some(r) if r.level == CommitLevel::Committed && r.active(now) => {
-                r.rate
-            }
-            _ => match prep.agreement_rate {
-                Some(a) => a,
-                None => {
-                    prep.posted_x_comp
-                        * self
-                            .tb
-                            .spec(rid)
-                            .price
-                            .demand_premium(self.utilization(rid))
-                }
-            },
+        let mut ctx = MergeCtx {
+            now,
+            tb: &self.tb,
+            competition: self.competition.as_ref(),
+            total_in_flight: &mut self.total_in_flight,
+            total_reserved: &mut self.total_reserved,
+            gass: &mut self.gass,
+            proxy: &mut self.proxy,
+            q: &mut self.q,
+            marks: &mut self.mark_buf,
+            gram_cancels: &mut self.cancel_buf,
         };
-        let PreparedSubmit {
-            speed,
-            name,
-            work_ref_h,
-            ..
-        } = prep;
-        let est_cost = rate * job_work / speed * 3600.0;
-        let tenant = &mut self.tenants[tid];
-        if !tenant.ledger.commit(jid, est_cost) {
-            return; // budget headroom exhausted: leave the job Ready
-        }
-        if tenant.exp.dispatch(jid, rid, now).is_err() {
-            tenant.ledger.release(jid, 0.0, &name);
-            return;
-        }
-        if let Some(j) = &mut tenant.journal {
-            let _ = j.dispatched(jid, rid, now);
-        }
-        // Dispatching onto a machine the tenant holds a committed
-        // reservation on consumes one held slot at its locked rate; the
-        // rate rides the in-flight record so execution start still bills
-        // it after the hold itself has closed.
-        let mut locked_rate = None;
-        if let Some(c) = tenant.rsv.consume_slot(rid, now) {
-            locked_rate = Some(c.rate);
-            self.total_reserved[rid.0 as usize] =
-                self.total_reserved[rid.0 as usize].saturating_sub(1);
-            if c.closed {
-                // Every slot was used: refund the penalty envelope whole.
-                tenant.ledger.release(rsv_jid(rid), 0.0, &name);
-                if let Some(j) = &mut tenant.journal {
-                    let _ = j.reservation_closed(rid);
-                }
-            }
-        }
-        tenant.inflight.insert(
+        merge_submit_prepared(
+            &mut ctx,
+            &mut self.tenants[tid],
+            tid,
             jid,
-            InFlight {
-                dispatched_at: now,
-                exec_started: None,
-                rate: 0.0,
-                work_ref_h,
-                cpu_s: 0.0,
-                locked_rate,
-            },
+            rid,
+            job_work,
+            prep,
         );
-        self.total_in_flight[rid.0 as usize] += 1;
-        self.mark_view_all(rid); // occupancy changed for everyone
-        // Stage-in through GASS (and the cluster proxy if private).
-        let spec = self.tb.spec(rid).clone();
-        let input_bytes = self.tenants[tid].cfg.workload.input_bytes;
-        let t_stage =
-            self.proxy
-                .begin(&mut self.gass, &self.tb, &spec, input_bytes);
-        self.q.schedule_in(
-            t_stage,
-            Ev::StagedIn {
-                tid: tid as u32,
-                rid,
-                jid,
-            },
-        );
+        self.drain_merge_buffers();
     }
 
-    // lint:allow(DIRTY-PAIR): release marks are queued; refresh_dirty_views re-keys them at the next tick
+    /// Sequential entry point over [`merge_cancel_queued`] — same
+    /// wrapper-plus-drain shape as [`Self::submit_prepared`].
     fn cancel_queued(&mut self, tid: usize, jid: JobId, rid: ResourceId) {
-        // Withdraw from GRAM if it got there; mid-stage-in jobs are caught
-        // at their StagedIn event by the state check.
-        self.managers[rid.0 as usize].cancel(grid_jid(tid, jid));
-        let name = self.tb.spec(rid).name.clone();
-        let tenant = &mut self.tenants[tid];
-        tenant.ledger.release(jid, 0.0, &name);
-        if tenant.exp.release(jid).is_ok() {
-            if let Some(j) = &mut tenant.journal {
-                let _ = j.released(jid);
-            }
-            self.dec_total_in_flight(rid);
-            self.mark_view_all(rid); // occupancy changed for everyone
+        let now = self.q.now();
+        let mut ctx = MergeCtx {
+            now,
+            tb: &self.tb,
+            competition: self.competition.as_ref(),
+            total_in_flight: &mut self.total_in_flight,
+            total_reserved: &mut self.total_reserved,
+            gass: &mut self.gass,
+            proxy: &mut self.proxy,
+            q: &mut self.q,
+            marks: &mut self.mark_buf,
+            gram_cancels: &mut self.cancel_buf,
+        };
+        merge_cancel_queued(&mut ctx, &mut self.tenants[tid], tid, jid, rid);
+        self.drain_merge_buffers();
+    }
+
+    /// Replay the deferred cross-tenant effects of merge commits: GRAM
+    /// withdrawals first (each precedes the mark its cancellation
+    /// queued, matching the old inline order), then the view-dirtying
+    /// fan-out. Runs after the phase-2 shards of a streaming batch have
+    /// dropped their `&mut Tenant` borrows, or immediately after a
+    /// sequential commit (the wrappers above) — both replay in commit
+    /// order, so the dirty queues fill identically to the old inline
+    /// calls.
+    // lint:allow(DIRTY-PAIR): replays deferred merge marks — every queued entry is re-keyed by refresh_dirty_views at the owners' next ticks
+    fn drain_merge_buffers(&mut self) {
+        for k in 0..self.cancel_buf.len() {
+            let (rid, gid) = self.cancel_buf[k];
+            self.managers[rid.0 as usize].cancel(gid);
         }
-        self.tenants[tid].inflight.remove(&jid);
+        self.cancel_buf.clear();
+        let mut k = 0;
+        while k < self.mark_buf.len() {
+            let rid = self.mark_buf[k];
+            self.mark_view_all(rid); // occupancy changed for everyone
+            k += 1;
+        }
+        self.mark_buf.clear();
     }
 
     fn on_staged_in(&mut self, tid: usize, rid: ResourceId, jid: JobId) {
@@ -3285,6 +3647,88 @@ mod tests {
         assert_same_trace(&sequential, &resized, "resized-mid-run");
         assert_eq!(resized.pool_workers, 3, "report reflects the new width");
         assert!(resized.pool_rounds > early_rounds, "new pool kept running");
+    }
+
+    #[test]
+    fn streaming_and_barrier_merge_replay_the_sequential_trace() {
+        // The streaming ordered merge is a pure latency optimization: at
+        // every lane count, commits applied mid-flight (streaming) and
+        // commits drained after the barrier must replay the exact same
+        // world trace as the sequential reference.
+        let sequential = three_tenant_world(37).run_world();
+        for lanes in [2usize, 3] {
+            let mut streaming_world = three_tenant_world(37);
+            streaming_world.set_threads(lanes);
+            let streaming = streaming_world.run_world();
+            assert_same_trace(
+                &sequential,
+                &streaming,
+                &format!("streaming@{lanes}"),
+            );
+            let mut barrier_world = three_tenant_world(37);
+            barrier_world.set_threads(lanes);
+            barrier_world.set_barrier_merge(true);
+            let barrier = barrier_world.run_world();
+            assert_same_trace(&sequential, &barrier, &format!("barrier@{lanes}"));
+            // Overlap telemetry separates the modes: a barrier drain can
+            // never overlap the lanes, and the sequential world has no
+            // lanes to overlap with at all.
+            assert_eq!(barrier.merge_overlap_ns, 0, "barrier cannot overlap");
+        }
+        assert_eq!(sequential.merge_overlap_ns, 0);
+    }
+
+    #[test]
+    fn streaming_merge_matches_barrier_on_grace_auctions() {
+        // Grace auctions route agreement state through the tick path; the
+        // commit queue must defer its GRAM cancels and view marks exactly
+        // like the barrier drain did.
+        let market = GraceConfig::default();
+        let sequential = grace_world(13, market.clone()).run_world();
+        let mut streaming_world = grace_world(13, market.clone());
+        streaming_world.set_threads(2);
+        let streaming = streaming_world.run_world();
+        assert_same_trace(&sequential, &streaming, "grace-streaming");
+        let mut barrier_world = grace_world(13, market);
+        barrier_world.set_threads(2);
+        barrier_world.set_barrier_merge(true);
+        let barrier = barrier_world.run_world();
+        assert_same_trace(&sequential, &barrier, "grace-barrier");
+    }
+
+    #[test]
+    fn streaming_merge_matches_barrier_on_reservations() {
+        // Reserve-ahead worlds exercise the committed-hold fast path in
+        // the merge capacity guard.
+        let cfg = ReservationConfig::default();
+        let sequential = reservation_world(19, cfg.clone()).run_world();
+        let mut streaming_world = reservation_world(19, cfg.clone());
+        streaming_world.set_threads(2);
+        let streaming = streaming_world.run_world();
+        assert_same_trace(&sequential, &streaming, "resv-streaming");
+        let mut barrier_world = reservation_world(19, cfg);
+        barrier_world.set_threads(2);
+        barrier_world.set_barrier_merge(true);
+        let barrier = barrier_world.run_world();
+        assert_same_trace(&sequential, &barrier, "resv-barrier");
+    }
+
+    #[test]
+    fn batch_scratch_buffers_stop_regrowing_after_warmup() {
+        // Phase-2/3 scratch (member lists, forked RNGs, deferred mark and
+        // cancel queues, per-tenant action buffers) is reused across
+        // batches; after first-batch warmup the capacities must plateau.
+        // The counter only ticks when an already-warm buffer regrows, so a
+        // full run should see at most a handful of regrowth events.
+        let mut world = three_tenant_world(41);
+        world.set_threads(3);
+        world.run_until(SimTime::MAX);
+        assert!(world.pool_rounds() > 0, "pool should have fanned out");
+        assert!(
+            world.scratch_regrows() <= 16,
+            "batch scratch kept regrowing: {} regrowth events",
+            world.scratch_regrows()
+        );
     }
 
     #[test]

@@ -225,6 +225,40 @@ fn par_shared_pool_allowed_with_reason() {
     assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_POOL_ALLOWED, Rule::ParShared));
 }
 
+#[test]
+fn par_shared_fires_inside_streaming_commit_callbacks() {
+    // `scatter_streaming` runs its commit callback while later shards are
+    // still in flight, so the whole call statement — commit closure
+    // included — is parallel-section code with no marker required.
+    let diags = lint_source("sim/shard.rs", fixtures::PAR_SHARED_STREAM_FIRING);
+    let hits: Vec<_> = diags
+        .iter()
+        .filter(|d| d.rule == Rule::ParShared)
+        .collect();
+    assert!(
+        hits.iter().any(|d| d.message.contains("self.total_in_flight")),
+        "commit-callback occupancy write must fire: {hits:?}"
+    );
+    assert!(
+        hits.iter().any(|d| d.message.contains("self.rng")),
+        "commit-callback world-RNG draw must fire: {hits:?}"
+    );
+    // Call-driven, not path-scoped.
+    assert!(fires("sim/world.rs", fixtures::PAR_SHARED_STREAM_FIRING, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_streaming_discipline_ends_with_the_call() {
+    // Commits routed through a MergeCtx are clean, and the post-batch
+    // replay right after the call may touch shared state freely.
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_STREAM_CLEAN, Rule::ParShared));
+}
+
+#[test]
+fn par_shared_streaming_allowed_with_reason() {
+    assert!(!fires("sim/shard.rs", fixtures::PAR_SHARED_STREAM_ALLOWED, Rule::ParShared));
+}
+
 // -- ALLOW-REASON (escape-hatch hygiene) -------------------------------------
 
 #[test]

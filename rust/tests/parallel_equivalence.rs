@@ -5,7 +5,11 @@
 //! means shared state leaked into the parallel phase (the PAR-SHARED
 //! lint's runtime backstop, the way `determinism.rs` backstops ND-*).
 //! Multi-threaded runs go through the persistent `WorkerPool`, so this
-//! suite is also the pool's end-to-end determinism proof.
+//! suite is also the pool's end-to-end determinism proof — and since the
+//! pool path now defaults to the streaming ordered merge (commits applied
+//! in tenant order while later shards still run), it proves the commit
+//! queue too. `set_barrier_merge(true)` variants pin the PR-9 drain-after-
+//! barrier path to the same trace.
 //!
 //! Worlds and the bit-exact comparator come from `tests/common/mod.rs`.
 
@@ -28,6 +32,17 @@ fn contested(seed: u64, threads: usize) -> WorldReport {
         .run_world()
 }
 
+/// The contested world forced back onto the pre-pipelining barrier merge
+/// (phase 3 drains only after every shard has finished).
+fn contested_barrier(seed: u64, threads: usize) -> WorldReport {
+    let mut world = contested_builder(seed)
+        .threads(threads)
+        .world()
+        .expect("world builds");
+    world.set_barrier_merge(true);
+    world.run_world()
+}
+
 fn scenario(name: &str, seed: u64, threads: usize) -> WorldReport {
     Broker::scenario(name)
         .expect("known scenario")
@@ -35,6 +50,19 @@ fn scenario(name: &str, seed: u64, threads: usize) -> WorldReport {
         .threads(threads)
         .run_world()
         .expect("scenario runs")
+}
+
+/// A scenario preset run under the barrier merge instead of the default
+/// streaming ordered merge.
+fn scenario_barrier(name: &str, seed: u64, threads: usize) -> WorldReport {
+    let mut world = Broker::scenario(name)
+        .expect("known scenario")
+        .seed(seed)
+        .threads(threads)
+        .world()
+        .expect("world builds");
+    world.set_barrier_merge(true);
+    world.run_world()
 }
 
 #[test]
@@ -61,9 +89,40 @@ fn contested_world_is_bit_exact_across_thread_counts() {
 }
 
 #[test]
+fn contested_world_barrier_merge_matches_streaming_at_every_lane_count() {
+    // The streaming ordered merge (commits applied in tenant order while
+    // higher shards still run) and the PR-9 barrier merge (commits drained
+    // only after the whole batch lands) are the same trace by
+    // construction — prove it at every lane count, against the sequential
+    // reference and against each other.
+    let sequential = contested(7, 1);
+    for threads in [1, 2, 4, 8] {
+        let streaming = contested(7, threads);
+        let barrier = contested_barrier(7, threads);
+        assert_identical(
+            &sequential,
+            &streaming,
+            &format!("contested/streaming/threads{threads}"),
+        );
+        assert_identical(
+            &sequential,
+            &barrier,
+            &format!("contested/barrier/threads{threads}"),
+        );
+        // Overlap telemetry is the observable difference between the
+        // modes: a barrier drain can never overlap the lanes.
+        assert_eq!(
+            barrier.merge_overlap_ns, 0,
+            "barrier merge reported overlapped commit time at {threads} lanes"
+        );
+    }
+}
+
+#[test]
 fn grace_auction_world_is_bit_exact_across_thread_counts() {
     // Tender/bid negotiation, agreements and clearing prices all ride on
-    // the tick pipeline; the merge barrier must not reorder any of it.
+    // the tick pipeline; the streaming commit queue must not reorder any
+    // of it, and neither may the barrier fallback.
     let sequential = scenario("grace-auction", 11, 1);
     for threads in THREADS {
         let parallel = scenario("grace-auction", 11, threads);
@@ -73,6 +132,8 @@ fn grace_auction_world_is_bit_exact_across_thread_counts() {
             &format!("grace-auction/threads{threads}"),
         );
     }
+    let barrier = scenario_barrier("grace-auction", 11, 4);
+    assert_identical(&sequential, &barrier, "grace-auction/barrier/threads4");
 }
 
 #[test]
@@ -89,21 +150,36 @@ fn reserve_ahead_world_is_bit_exact_across_thread_counts() {
             &format!("reserve-ahead/threads{threads}"),
         );
     }
+    // The committed-hold fast path in the merge capacity guard must agree
+    // across merge modes too.
+    let barrier = scenario_barrier("reserve-ahead", 5, 4);
+    assert_identical(&sequential, &barrier, "reserve-ahead/barrier/threads4");
 }
 
 #[test]
-fn world_storm_replays_bit_exactly_on_eight_pool_lanes() {
+fn world_storm_replays_bit_exactly_at_every_lane_count_and_merge_mode() {
     // The 256-tenant population-stress preset: every tenant ticks on the
     // same period, so each tick is one 256-member batch fanned across the
     // pool — the widest scatter anything in-tree produces, and far more
-    // shards than lanes, so the claim counter is exercised hard.
+    // shards than lanes, so the claim counter (and the sticky per-lane
+    // affinity ranges under it) is exercised hard. The streaming commit
+    // queue sees its deepest reorder window here: lane counts far below
+    // the shard count keep the commit frontier trailing the fan-out.
     let sequential = scenario("world-storm", 7, 1);
     assert!(
         sequential.parallel_ns > 0,
         "world-storm: no tick batch ever coalesced"
     );
-    let pooled = scenario("world-storm", 7, 8);
-    assert_identical(&sequential, &pooled, "world-storm/threads8");
+    for threads in THREADS {
+        let pooled = scenario("world-storm", 7, threads);
+        assert_identical(
+            &sequential,
+            &pooled,
+            &format!("world-storm/threads{threads}"),
+        );
+    }
+    let barrier = scenario_barrier("world-storm", 7, 8);
+    assert_identical(&sequential, &barrier, "world-storm/barrier/threads8");
 }
 
 #[test]

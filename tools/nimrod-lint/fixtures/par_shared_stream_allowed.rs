@@ -1,0 +1,14 @@
+// Fixture: a reasoned allow inside a streaming-commit callback suppresses
+// PAR-SHARED (e.g. a commit-time debug audit that only reads the live
+// occupancy table the committer itself owns during the merge).
+fn on_tick_batch(&mut self) {
+    pool.scatter_streaming(
+        &mut shards,
+        |shard| tick_tenant_shard(&wv, shard),
+        |shard, _overlapped| {
+            // lint:allow(PAR-SHARED): commit queue is the sole writer of the live table; read-only audit here
+            debug_assert!(self.total_in_flight[shard.rid.0 as usize] <= cap);
+            commit_shard(&mut ctx, shard);
+        },
+    );
+}

@@ -1,0 +1,14 @@
+// Fixture: a streaming merge that routes every commit through a MergeCtx
+// (disjoint mutable slices handed in from outside the call) is clean, and
+// the discipline still ends with the call statement — the post-batch
+// replay right after it may touch shared state freely.
+fn on_tick_batch(&mut self) {
+    pool.scatter_streaming(
+        &mut shards,
+        |shard| tick_tenant_shard(&wv, shard),
+        |shard, overlapped| commit_shard(&mut ctx, shard, overlapped),
+    );
+    self.pool_rounds += 1;
+    self.drain_merge_buffers();
+    self.total_in_flight[0] += marks.len() as u32;
+}

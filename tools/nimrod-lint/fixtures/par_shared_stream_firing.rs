@@ -1,0 +1,16 @@
+// Fixture: PAR-SHARED fires on a `scatter_streaming` whose *commit*
+// callback touches shared world state. Streamed commits run while
+// higher-numbered shards are still in flight, so the whole call
+// statement — phase closure and commit closure alike — is parallel-
+// section code; mutating the live tables or drawing from the world RNG
+// there races the lanes exactly like doing it inside the phase closure.
+fn on_tick_batch(&mut self) {
+    pool.scatter_streaming(
+        &mut shards,
+        |shard| tick_tenant_shard(&wv, shard),
+        |shard, _overlapped| {
+            self.total_in_flight[shard.rid.0 as usize] += 1;
+            shard.jitter = self.rng.next_f64();
+        },
+    );
+}

@@ -37,5 +37,12 @@ pub const PAR_SHARED_POOL_FIRING: &str = include_str!("../fixtures/par_shared_po
 pub const PAR_SHARED_POOL_CLEAN: &str = include_str!("../fixtures/par_shared_pool_clean.rs");
 pub const PAR_SHARED_POOL_ALLOWED: &str = include_str!("../fixtures/par_shared_pool_allowed.rs");
 
+// Streaming-merge variant: `scatter_streaming`'s commit callback runs
+// while later shards are still in flight, so the whole call statement —
+// commit closure included — is scanned as parallel-section code.
+pub const PAR_SHARED_STREAM_FIRING: &str = include_str!("../fixtures/par_shared_stream_firing.rs");
+pub const PAR_SHARED_STREAM_CLEAN: &str = include_str!("../fixtures/par_shared_stream_clean.rs");
+pub const PAR_SHARED_STREAM_ALLOWED: &str = include_str!("../fixtures/par_shared_stream_allowed.rs");
+
 pub const ALLOW_NO_REASON: &str = include_str!("../fixtures/allow_no_reason.rs");
 pub const ALLOW_UNKNOWN_RULE: &str = include_str!("../fixtures/allow_unknown_rule.rs");

@@ -496,8 +496,17 @@ const FLOAT_TOKEN: &str = ".partial_cmp(";
 const DIRTY_TRIGGERS: [&str; 2] = ["mark_view", "mark_view_all"];
 
 /// Calls that re-key the CandidateIndex (or drain the dirty queue into it).
+/// `update_cols`/`update_cols_bulk` are the struct-of-arrays re-key paths
+/// (per-entry and chunked-bulk) — key-identical to `update` by the shared
+/// `_parts` helpers.
 const REKEY_CALLS: [&str; 1] = ["refresh_dirty_views"];
-const REKEY_SUBSTRINGS: [&str; 3] = ["index.update(", "index.rebuild_from(", "CandidateIndex::from_views("];
+const REKEY_SUBSTRINGS: [&str; 5] = [
+    "index.update(",
+    "index.update_cols(",
+    "index.update_cols_bulk(",
+    "index.rebuild_from(",
+    "CandidateIndex::from_views(",
+];
 
 /// Marker naming a fn that runs in the parallel per-tenant tick phase.
 const PAR_SECTION_MARKER: &str = "lint:par-section";
@@ -520,8 +529,12 @@ const PAR_FORBIDDEN_FIELDS: [&str; 3] =
 /// on the parallel lanes. The closure argument runs in phase 2 regardless
 /// of where the call site sits, so the line (and any multi-line closure
 /// body it opens) is held to the same par-section discipline as a fn
-/// marked with `lint:par-section`.
-const PAR_POOL_CALLS: [&str; 1] = ["scatter"];
+/// marked with `lint:par-section`. `scatter_streaming` additionally runs
+/// its commit callback *while later shards are still in flight*, so its
+/// whole call statement — commit closure included — is parallel-section
+/// code too (the token must be listed separately: `_` is an ident char,
+/// so a bare `scatter` token never matches `scatter_streaming(`).
+const PAR_POOL_CALLS: [&str; 2] = ["scatter", "scatter_streaming"];
 
 // ---------------------------------------------------------------------------
 // Linting
